@@ -1,0 +1,52 @@
+//! Ablation (DESIGN.md §6.3): Algorithm 1's load-aware admission vs the
+//! naive fixed-ratio policy, and the printed-vs-strict C1 variant.
+
+use adrenaline::config::{ModelSpec, OffloadPolicy};
+use adrenaline::sim::{run_ratio_sweep, ClusterSim, SimConfig};
+use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::workload::WorkloadKind;
+
+fn main() {
+    let m = ModelSpec::llama2_7b();
+    let rate = 24.0;
+
+    // Load-aware (Algorithm 1 as printed) and the strict-C1 variant.
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = 120.0;
+    let la = ClusterSim::new(cfg).run();
+    figure_row("ablation_admission", "load_aware_tput", 0.0, la.throughput);
+    figure_row("ablation_admission", "load_aware_tpot_s", 0.0, la.tpot.map(|s| s.mean).unwrap_or(f64::NAN));
+    figure_row("ablation_admission", "load_aware_offl_frac", 0.0, la.offloaded_fraction);
+
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = 120.0;
+    cfg.serving.offload = OffloadPolicy::LoadAwareStrict;
+    let strict = ClusterSim::new(cfg).run();
+    figure_row("ablation_admission", "strict_tput", 0.0, strict.throughput);
+    figure_row("ablation_admission", "strict_offl_frac", 0.0, strict.offloaded_fraction);
+
+    // Naive fixed ratios (what an operator would hand-tune offline).
+    let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &[0.3, 0.5, 0.7, 0.9], 120.0);
+    let mut best = f64::MIN;
+    for (ratio, r) in &pts {
+        figure_row("ablation_admission", "fixed_tput", *ratio, r.throughput);
+        best = best.max(r.throughput);
+    }
+    figure_row(
+        "ablation_admission",
+        "load_aware_vs_best_fixed",
+        0.0,
+        la.throughput / best,
+    );
+
+    // Over-offloading hurts: the 0.9 point should trail the best.
+    let worst = pts.iter().find(|(r, _)| *r == 0.9).map(|(_, r)| r.throughput).unwrap();
+    figure_row("ablation_admission", "overshoot_penalty_0.9", 0.9, worst / best);
+
+    Bench::new(1, 3).run("ablation_admission/load_aware_run", || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = 120.0;
+        cfg.serving.offload = OffloadPolicy::LoadAware;
+        let _ = ClusterSim::new(cfg).run();
+    });
+}

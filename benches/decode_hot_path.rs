@@ -1,0 +1,38 @@
+//! L3 hot-path bench on the REAL serving stack (needs `make artifacts`):
+//! decode-step latency for the fused fast path, the split layer-loop path,
+//! and the path with attention offloaded to the executor thread — the
+//! numbers behind EXPERIMENTS.md §Perf.
+
+use adrenaline::config::ServingConfig;
+use adrenaline::engine::Server;
+use adrenaline::runtime::Manifest;
+use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::workload::{TraceGenerator, WorkloadKind};
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("decode_hot_path: skipping (run `make artifacts`)");
+        return;
+    }
+
+    for (name, force_offload, fused) in [
+        ("fused_local", Some(false), true),
+        ("split_local", Some(false), false),
+        ("offloaded", Some(true), true),
+    ] {
+        let mut server = Server::start(&dir, ServingConfig::default()).expect("server");
+        server.set_fused_fast_path(fused);
+        let mut gen = TraceGenerator::new(WorkloadKind::Fixed { prompt: 16, output: 24 }, 100.0, 5);
+        let reqs = gen.take(4);
+        let reqs = gen.with_tokens(reqs, 256);
+
+        let stats = Bench::new(1, 8).run(&format!("decode_hot_path/{name}_b4_24steps"), || {
+            let report = server.run_requests(&reqs, force_offload).expect("serve");
+            assert_eq!(report.completions.len(), 4);
+        });
+        // Per-decode-step time: 24 steps of batch 4 per run (first token
+        // comes from prefill).
+        figure_row("perf_l3", &format!("{name}_step_ms"), 4.0, stats.p50_s / 23.0 * 1e3);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench + data for Fig 1: resource utilization of the disaggregated
+//! prefill (HBM bandwidth) and decode (compute) phases.
+
+use adrenaline::config::{GpuSpec, ModelSpec};
+use adrenaline::gpu_model::{KernelKind, PhaseKernels, Roofline};
+use adrenaline::util::bench::{black_box, figure_row, Bench};
+
+fn main() {
+    let rl = Roofline::whole(GpuSpec::a100_80g());
+    let pk = PhaseKernels::new(ModelSpec::llama2_7b());
+
+    // Data series.
+    for p in [256u64, 512, 1024, 2048, 4096] {
+        let mut cost = pk.prefill_cost(KernelKind::QkvProj, p);
+        for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
+            cost = cost.add(&pk.prefill_cost(k, p));
+        }
+        figure_row("fig1a", "prefill_hbm_bw_util", p as f64, rl.bw_utilization(cost));
+    }
+    for b in [1u64, 8, 16, 32, 64, 80, 128] {
+        let mut cost = pk.decode_cost(KernelKind::QkvProj, b, b * 1024);
+        for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
+            cost = cost.add(&pk.decode_cost(k, b, b * 1024));
+        }
+        figure_row("fig1b", "decode_compute_util", b as f64, rl.compute_utilization(cost));
+    }
+
+    // Microbench of the cost-model evaluation itself (it sits inside the
+    // simulator's per-step hot loop).
+    Bench::new(10, 100).run("fig01/cost_model_full_step_eval", || {
+        for b in 1..=64u64 {
+            let mut cost = pk.decode_cost(KernelKind::QkvProj, b, b * 1024);
+            for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
+                cost = cost.add(&pk.decode_cost(k, b, b * 1024));
+            }
+            black_box(rl.compute_utilization(cost));
+        }
+    });
+}

@@ -1,0 +1,40 @@
+//! Bench + data for Figs 2/16: HBM capacity utilization of the prefill and
+//! decode instances, baseline vs Adrenaline, from full simulation runs.
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::{ClusterSim, SimConfig};
+use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::workload::WorkloadKind;
+
+fn main() {
+    let m = ModelSpec::llama2_7b();
+    for (name, on) in [("vllm", false), ("adrenaline", true)] {
+        let mut cfg = if on {
+            SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0)
+        } else {
+            SimConfig::baseline(m, WorkloadKind::ShareGpt, 24.0)
+        };
+        cfg.duration_s = 120.0;
+        let r = ClusterSim::new(cfg).run();
+        figure_row("fig2", &format!("{name}_prefill_capacity_mean"), 0.0, r.prefill_hbm_capacity_util);
+        figure_row(
+            "fig2",
+            &format!("{name}_prefill_capacity_peak"),
+            0.0,
+            r.prefill_occupancy.max_value().unwrap_or(0.0),
+        );
+        figure_row(
+            "fig2",
+            &format!("{name}_decode_occupancy_peak"),
+            0.0,
+            r.decode_occupancy.max_value().unwrap_or(0.0),
+        );
+    }
+
+    // Bench the simulation run itself at this configuration.
+    Bench::new(1, 5).run("fig02/sim_sharegpt_24rps_120s", || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+        cfg.duration_s = 120.0;
+        let _ = ClusterSim::new(cfg).run();
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench + data for Fig 3: decode attention's share of per-layer execution
+//! time vs batch size (seq 1K). Paper anchor: 69.5% at batch 80.
+
+use adrenaline::config::{GpuSpec, ModelSpec};
+use adrenaline::gpu_model::{DecodeKernelTimes, Roofline};
+use adrenaline::util::bench::{black_box, figure_row, Bench};
+
+fn main() {
+    let rl = Roofline::whole(GpuSpec::a100_80g());
+    let m = ModelSpec::llama2_7b();
+    for b in [1u64, 8, 16, 32, 48, 64, 80, 96, 128] {
+        let t = DecodeKernelTimes::compute(&rl, &m, b, b * 1024);
+        figure_row("fig3", "attention_share", b as f64, t.attention_share());
+    }
+    let anchor = DecodeKernelTimes::compute(&rl, &m, 80, 80 * 1024).attention_share();
+    figure_row("fig3", "paper_anchor_b80 (paper: 0.695)", 80.0, anchor);
+
+    Bench::new(10, 200).run("fig03/decode_kernel_times_batch_sweep", || {
+        for b in [1u64, 8, 32, 80, 128] {
+            black_box(DecodeKernelTimes::compute(&rl, &m, b, b * 1024).total());
+        }
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench + data for Figs 9/10: the MPS SM-partition curves — superlinear
+//! attention bandwidth and sublinear prefill slowdown.
+
+use adrenaline::config::{GpuSpec, ModelSpec};
+use adrenaline::gpu_model::{bw_frac_of_sm_frac, prefill_slowdown, PrefillKernelTimes, Roofline};
+use adrenaline::util::bench::{black_box, figure_row, Bench};
+
+fn main() {
+    for i in 1..=10 {
+        let s = i as f64 / 10.0;
+        figure_row("fig9", "bw_frac", s, bw_frac_of_sm_frac(s));
+        if i >= 2 {
+            figure_row("fig10", "norm_prefill_tput", s, 1.0 / prefill_slowdown(s));
+        }
+    }
+    figure_row("fig9", "anchor_20pct_sms (paper: 0.60)", 0.2, bw_frac_of_sm_frac(0.2));
+
+    let rl = Roofline::whole(GpuSpec::a100_80g());
+    let m = ModelSpec::llama2_7b();
+    Bench::new(10, 200).run("fig09/partitioned_prefill_time_eval", || {
+        for i in 1..=10 {
+            let s = i as f64 / 10.0;
+            let base = PrefillKernelTimes::compute(&rl, &m, 2048).total();
+            black_box(base * prefill_slowdown(s));
+        }
+    });
+}

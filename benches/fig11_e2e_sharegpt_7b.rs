@@ -1,0 +1,35 @@
+//! Bench + data for Fig 11: the end-to-end ShareGPT + Llama-2 7B
+//! request-rate sweep, vLLM baseline vs Adrenaline (all four panels).
+
+use adrenaline::sim::{run_e2e, E2eConfig};
+use adrenaline::util::bench::{figure_row, Bench};
+
+fn main() {
+    let cfg = E2eConfig {
+        rates: vec![8.0, 12.0, 16.0, 20.0, 24.0, 28.0],
+        duration_s: 120.0,
+        ..E2eConfig::fig11()
+    };
+    let pts = run_e2e(&cfg);
+    for p in &pts {
+        figure_row("fig11a", &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
+        figure_row("fig11b", &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
+        figure_row("fig11c", &format!("{}_p99_tpot_s", p.system), p.rate, p.tpot_p99_s);
+        figure_row("fig11d", &format!("{}_tput_tok_s", p.system), p.rate, p.throughput_tok_s);
+    }
+    // Headline ratio at the saturating point.
+    let b = pts.iter().find(|p| p.rate == 24.0 && p.system == "vllm").unwrap();
+    let a = pts.iter().find(|p| p.rate == 24.0 && p.system == "adrenaline").unwrap();
+    figure_row(
+        "fig11d",
+        "speedup_at_saturation (paper: up to 1.47x)",
+        24.0,
+        a.throughput_tok_s / b.throughput_tok_s,
+    );
+
+    // Bench one sweep point end-to-end.
+    Bench::new(1, 5).run("fig11/e2e_pair_at_24rps_120s", || {
+        let cfg = E2eConfig { rates: vec![24.0], duration_s: 120.0, ..E2eConfig::fig11() };
+        let _ = run_e2e(&cfg);
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench + data for Figs 15/17: fixed offload-ratio sweep — throughput
+//! inflection and the resource-utilization panels.
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::run_ratio_sweep;
+use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::workload::WorkloadKind;
+
+fn main() {
+    let ratios = [0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+    for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
+        let rate = if m.name == "llama2-7b" { 24.0 } else { 16.0 };
+        let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &ratios, 120.0);
+        for (ratio, r) in &pts {
+            figure_row("fig15", &format!("{}_tput", m.name), *ratio, r.throughput);
+            figure_row(
+                "fig15",
+                &format!("{}_tpot_s", m.name),
+                *ratio,
+                r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
+            );
+            figure_row("fig17a", &format!("{}_prefill_bw", m.name), *ratio, r.prefill_hbm_bw_util);
+            figure_row(
+                "fig17b",
+                &format!("{}_decode_compute", m.name),
+                *ratio,
+                r.decode_compute_util,
+            );
+        }
+    }
+
+    Bench::new(1, 3).run("fig15/ratio_point_sharegpt_7b", || {
+        let _ = run_ratio_sweep(
+            ModelSpec::llama2_7b(),
+            WorkloadKind::ShareGpt,
+            24.0,
+            &[0.7],
+            120.0,
+        );
+    });
+}

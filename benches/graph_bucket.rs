@@ -1,0 +1,54 @@
+//! Ablation bench (DESIGN.md §6.2): the 2-D executable-bucket cache —
+//! selection cost and padding overhead vs bucket-interval configuration,
+//! the AOT analogue of the paper's 2-D CUDA-graph storage/overhead
+//! trade-off (§3.2.2).
+
+use adrenaline::coordinator::GraphCache;
+use adrenaline::util::bench::{black_box, figure_row, Bench};
+use adrenaline::util::rng::Rng;
+
+fn main() {
+    // Padding overhead vs grid granularity, under a realistic mixed load.
+    let grids: &[(&str, Vec<usize>)] = &[
+        ("pow2", vec![1, 2, 4, 8, 16, 32, 64, 128, 256]),
+        ("coarse", vec![1, 8, 64, 256]),
+        ("exact16", (1..=256).step_by(16).collect()),
+        ("dense", (1..=256).collect()),
+    ];
+    for (name, buckets) in grids {
+        let mut g = GraphCache::new(buckets, buckets, None);
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..100_000 {
+            let local = rng.range_usize(1, 200);
+            let offl = rng.range_usize(0, 120);
+            let _ = g.select(local, offl);
+        }
+        figure_row("graph_bucket", &format!("{name}_grid_size"), 0.0, g.grid_size() as f64);
+        figure_row("graph_bucket", &format!("{name}_padding_overhead"), 0.0, g.padding_overhead());
+    }
+
+    // Interval-limited grid (the paper's configurable cap).
+    let full: Vec<usize> = (1..=256).collect();
+    for limit in [32usize, 128, 1024] {
+        let mut g = GraphCache::new(&full, &full, Some(limit));
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..100_000 {
+            let _ = g.select(rng.range_usize(1, 200), rng.range_usize(0, 120));
+        }
+        figure_row(
+            "graph_bucket",
+            &format!("limit{limit}_padding_overhead"),
+            limit as f64,
+            g.padding_overhead(),
+        );
+    }
+
+    // Selection hot-path cost (runs once per decode step per instance).
+    let mut g = GraphCache::new(&[1, 2, 4, 8, 16, 32, 64, 128, 256], &[1, 2, 4, 8, 16, 32, 64, 128], None);
+    let mut rng = Rng::seed_from_u64(3);
+    Bench::new(10, 100).run("graph_bucket/select_10k", || {
+        for _ in 0..10_000 {
+            black_box(g.select(rng.range_usize(1, 250), rng.range_usize(0, 120)));
+        }
+    });
+}

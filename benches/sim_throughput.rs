@@ -1,0 +1,34 @@
+//! Simulator performance: events/s and simulated-vs-wall time ratio — the
+//! L3 substrate must stay fast enough that figure sweeps are interactive.
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::{ClusterSim, SimConfig};
+use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::workload::WorkloadKind;
+
+fn main() {
+    let m = ModelSpec::llama2_7b();
+
+    for (name, rate, dur) in [("light_4rps", 4.0, 120.0), ("saturated_32rps", 32.0, 120.0)] {
+        let mut tokens = 0usize;
+        let stats = Bench::new(1, 5).run(&format!("sim_throughput/{name}"), || {
+            let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+            cfg.duration_s = dur;
+            let r = ClusterSim::new(cfg).run();
+            tokens = r.finished;
+        });
+        figure_row(
+            "sim_perf",
+            &format!("{name}_sim_seconds_per_wall_second"),
+            rate,
+            dur / stats.p50_s,
+        );
+    }
+
+    // OpenThoughts generates ~10x the decode steps per request.
+    Bench::new(1, 3).run("sim_throughput/openthoughts_2rps_120s", || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::OpenThoughts, 2.0);
+        cfg.duration_s = 120.0;
+        let _ = ClusterSim::new(cfg).run();
+    });
+}

@@ -1,0 +1,47 @@
+//! ShareGPT serving at A100 scale (Fig 11): sweep request rates for the
+//! vLLM-style PD-disaggregation baseline and Adrenaline, print the four
+//! panels (TTFT / TPOT / P99 TPOT / output throughput).
+//!
+//!     cargo run --release --example sharegpt_serving
+
+use adrenaline::sim::{run_e2e, E2eConfig};
+
+fn main() {
+    let cfg = E2eConfig {
+        // This testbed's saturating range (the paper's stack saturates
+        // near 4 req/s; our roofline decode steps are faster, so the
+        // crossover lands at higher rates — shapes, not absolutes).
+        rates: vec![8.0, 12.0, 16.0, 20.0, 24.0, 28.0],
+        duration_s: 120.0,
+        ..E2eConfig::fig11()
+    };
+    println!("== Fig 11: ShareGPT + Llama-2 7B (one prefill + one decode A100) ==\n");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>14} {:>8} {:>9}",
+        "rate", "system", "TTFT(s)", "TPOT(ms)", "P99(ms)", "tput(tok/s)", "preempt", "offload"
+    );
+    let pts = run_e2e(&cfg);
+    for p in &pts {
+        println!(
+            "{:>6.1} {:>12} {:>12.3} {:>12.2} {:>12.2} {:>14.0} {:>8} {:>9.2}",
+            p.rate,
+            p.system,
+            p.ttft_mean_s,
+            p.tpot_mean_s * 1e3,
+            p.tpot_p99_s * 1e3,
+            p.throughput_tok_s,
+            p.preemptions,
+            p.offloaded_fraction
+        );
+    }
+
+    // Headline: the paper reports up to 1.47x output-token throughput for
+    // 7B ShareGPT. Print our measured max speedup across the sweep.
+    let mut best = 0.0f64;
+    for rate in cfg.rates {
+        let b = pts.iter().find(|p| p.rate == rate && p.system == "vllm").unwrap();
+        let a = pts.iter().find(|p| p.rate == rate && p.system == "adrenaline").unwrap();
+        best = best.max(a.throughput_tok_s / b.throughput_tok_s);
+    }
+    println!("\nmax throughput speedup across sweep: {best:.2}x (paper: up to 1.47x)");
+}

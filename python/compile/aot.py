@@ -1,0 +1,238 @@
+"""AOT pipeline: lower every (function, bucket) pair to HLO text + weights.
+
+This is the single build-time Python entrypoint (`make artifacts`). It emits
+into artifacts/:
+
+    manifest.json            model config + artifact/bucket inventory
+    weights.bin              all weight tensors (custom ADRW format, f32 LE)
+    <name>.hlo.txt           one HLO-text module per artifact
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Python never runs at serve time — the Rust binary is self-contained once
+this script has produced artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Batch buckets for the decode-step artifacts — the first dimension of the
+# paper's 2-D CUDA-graph grid (C_d x C_o). The Rust graph cache picks the
+# smallest (local, offload) bucket pair covering a step's two sub-batches.
+BATCH_BUCKETS = (1, 2, 4, 8)
+# Prompt-length buckets for the prefill artifact.
+PROMPT_BUCKETS = (16, 32, 64, 128)
+
+WEIGHTS_MAGIC = b"ADRW"
+WEIGHTS_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_weights(path: pathlib.Path, weights: dict[str, jnp.ndarray]) -> None:
+    """ADRW format: magic, version u32, count u32, then per tensor:
+    name_len u16 + name bytes, ndim u8, dims u32*, f32 LE data."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", WEIGHTS_VERSION, len(weights)))
+        for name in sorted(weights):
+            arr = np.asarray(weights[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_weights(path: pathlib.Path) -> dict[str, np.ndarray]:
+    """Inverse of save_weights (used by round-trip tests)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == WEIGHTS_MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", data, 4)
+    assert version == WEIGHTS_VERSION
+    off = 12
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode()
+        off += nlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(shape)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(shape)
+        off += 4 * n
+        out[name] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions: name -> (function, example-arg shapes)
+# ---------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs(cfg: M.ModelConfig) -> dict[str, tuple]:
+    """All (name -> (fn, arg_specs)) pairs to lower."""
+    d, h, dh, f, v, s, L = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.ffn_hidden,
+        cfg.vocab_size,
+        cfg.max_seq_len,
+        cfg.n_layers,
+    )
+    lw_specs = [  # per-layer weights, order = M.LAYER_WEIGHT_NAMES
+        f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+        f32(d), f32(d, f), f32(d, f), f32(f, d),
+    ]
+    stacked_lw_specs = [
+        jax.ShapeDtypeStruct((L, *spec.shape), spec.dtype) for spec in lw_specs
+    ]
+    specs: dict[str, tuple] = {}
+    for b in BATCH_BUCKETS:
+        specs[f"embed_b{b}"] = (M.embed, [i32(b), f32(v, d)])
+        specs[f"layer_pre_b{b}"] = (
+            functools.partial(M.layer_pre, cfg),
+            [f32(b, d), i32(b), *lw_specs[:4]],
+        )
+        specs[f"attn_b{b}"] = (
+            functools.partial(M.attention, cfg),
+            [f32(b, h, dh), f32(b, s, h, dh), f32(b, s, h, dh), i32(b)],
+        )
+        specs[f"layer_post_b{b}"] = (
+            functools.partial(M.layer_post, cfg),
+            [f32(b, d), f32(b, d), *lw_specs[4:]],
+        )
+        specs[f"head_b{b}"] = (
+            functools.partial(M.head, cfg),
+            [f32(b, d), f32(d), f32(v, d)],
+        )
+        specs[f"decode_fused_b{b}"] = (
+            functools.partial(M.decode_fused, cfg),
+            [
+                i32(b), i32(b),
+                f32(L, b, s, h, dh), f32(L, b, s, h, dh),
+                f32(v, d), f32(d),
+                *stacked_lw_specs,
+            ],
+        )
+    for p in PROMPT_BUCKETS:
+        specs[f"prefill_p{p}"] = (
+            functools.partial(M.prefill, cfg),
+            [i32(1, p), i32(1), f32(v, d), f32(d), *stacked_lw_specs],
+        )
+    return specs
+
+
+def build(out_dir: pathlib.Path, seed: int = 0, force: bool = False) -> None:
+    cfg = M.TINY
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+
+    specs = artifact_specs(cfg)
+    if manifest_path.exists() and not force:
+        # Incremental: only rebuild if the inventory changed (make handles
+        # source-file staleness).
+        existing = json.loads(manifest_path.read_text())
+        if set(existing.get("artifacts", [])) == set(specs) and (
+            out_dir / "weights.bin"
+        ).exists():
+            print(f"artifacts up to date in {out_dir}")
+            return
+
+    weights = M.init_weights(cfg, seed=seed)
+    save_weights(out_dir / "weights.bin", weights)
+    print(f"wrote weights.bin ({len(weights)} tensors)")
+
+    # Reference greedy generations: the Rust integration tests replay these
+    # prompts through the full serving stack (with and without attention
+    # offloading) and require token-exact agreement with the pure-jnp
+    # oracle — the strongest cross-layer correctness signal we have.
+    import numpy as _np
+
+    rng = _np.random.default_rng(seed + 1)
+    refs = []
+    for plen, steps in [(5, 12), (16, 10), (31, 8), (64, 6)]:
+        prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, plen)]
+        toks = M.reference_generate(cfg, weights, prompt, steps)
+        refs.append({"prompt": prompt, "expected": toks})
+    (out_dir / "reference_generations.json").write_text(json.dumps(refs))
+    print(f"wrote reference_generations.json ({len(refs)} cases)")
+
+    for name, (fn, arg_specs) in specs.items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    manifest = {
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_hidden": cfg.ffn_hidden,
+            "max_seq_len": cfg.max_seq_len,
+            "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+        },
+        "seed": seed,
+        "batch_buckets": list(BATCH_BUCKETS),
+        "prompt_buckets": list(PROMPT_BUCKETS),
+        "layer_weight_names": list(M.LAYER_WEIGHT_NAMES),
+        "global_weight_names": list(M.GLOBAL_WEIGHT_NAMES),
+        "artifacts": sorted(specs),
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest.json ({len(specs)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out).resolve(), seed=args.seed, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

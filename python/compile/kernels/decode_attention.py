@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: decode-phase attention over a padded KV cache.
+
+This is the paper's offloadable unit — the memory-bound attention kernel
+that Adrenaline disaggregates from the decoding instance and ships to the
+attention executor colocated with the prefill instance. The exact same
+lowered artifact is executed by BOTH the decode engine (local sub-batch)
+and the attention executor (offloaded sub-batch); only the batch bucket
+differs.
+
+Structure (TPU adaptation of GPU flash-decoding, see DESIGN.md
+§Hardware-Adaptation):
+
+  * grid over the batch dimension — one program per request;
+  * the KV sequence is streamed in BLOCK_S chunks (the HBM→VMEM schedule
+    a CUDA kernel would express with threadblocks / cp.async);
+  * an online-softmax running state (max, sum, acc) carried across chunks
+    in f32 — the flash-decoding split-K reduction;
+  * padding positions masked via iota-vs-seq_len comparison.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO. Real-TPU VMEM/MXU estimates
+are recorded in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV chunk streamed per online-softmax step. On a real TPU this bounds the
+# per-stage VMEM footprint: BLOCK_S * H * D * 4B (+ the running state),
+# double-buffered by the pipeline.
+DEFAULT_BLOCK_S = 32
+
+_NEG_INF = -1e30  # finite "minus infinity": keeps padded-row math NaN-free
+
+
+def _decode_attn_kernel(
+    len_ref,  # [1] int32 in SMEM-style prefetch position (valid KV length)
+    q_ref,  # [H, D]
+    k_ref,  # [S, H, D]
+    v_ref,  # [S, H, D]
+    o_ref,  # [H, D]
+    *,
+    block_s: int,
+):
+    h, d = q_ref.shape
+    s = k_ref.shape[0]
+    seq_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    q = q_ref[...].astype(jnp.float32) * scale  # [H, D]
+
+    n_blocks = pl.cdiv(s, block_s)
+
+    def body(blk, carry):
+        m_prev, l_prev, acc_prev = carry  # [H,1], [H,1], [H,D]
+        start = blk * block_s
+        k_blk = pl.load(k_ref, (pl.dslice(start, block_s), slice(None), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(start, block_s), slice(None), slice(None)))
+        k_blk = k_blk.astype(jnp.float32)  # [block_s, H, D]
+        v_blk = v_blk.astype(jnp.float32)
+
+        # scores[h, j] = q[h, :] . k_blk[j, h, :]
+        scores = jnp.einsum("hd,jhd->hj", q, k_blk)  # [H, block_s]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        mask = pos < seq_len  # [1, block_s]
+        scores = jnp.where(mask, scores, _NEG_INF)
+
+        m_blk = jnp.max(scores, axis=-1, keepdims=True)  # [H, 1]
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(scores - m_new)  # [H, block_s]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of the old accumulator
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jnp.einsum("hj,jhd->hd", p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((h, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+
+    # seq_len >= 1 is a caller invariant (the current token's KV is always
+    # written before attention), so l > 0.
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, D]
+    k_cache: jnp.ndarray,  # [B, S, H, D]
+    v_cache: jnp.ndarray,  # [B, S, H, D]
+    seq_lens: jnp.ndarray,  # [B] int32
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+) -> jnp.ndarray:  # [B, H, D]
+    """Decode attention: one query token per request against its KV cache."""
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    block_s = min(block_s, s)
+    kernel = functools.partial(_decode_attn_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),  # seq_lens
+            pl.BlockSpec((None, h, d), lambda i: (i, 0, 0)),  # q
+            pl.BlockSpec((None, s, h, d), lambda i: (i, 0, 0, 0)),  # k
+            pl.BlockSpec((None, s, h, d), lambda i: (i, 0, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(seq_lens, q, k_cache, v_cache)

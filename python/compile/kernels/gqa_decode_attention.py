@@ -1,0 +1,125 @@
+"""L1 extension: grouped-query-attention (GQA) decode kernel.
+
+The paper evaluates MHA models (Llama-2 7B/13B), but every serving
+framework built on this technique must also handle GQA (Llama-3, Mistral,
+Qwen): fewer KV heads than query heads means a *smaller* KV cache and a
+*higher* arithmetic intensity per KV byte — which shifts the paper's
+offloading arithmetic (the attention kernel stays memory-bound, but
+`OB_mem`'s per-token KV cost drops by the group factor).
+
+Same structure as decode_attention.py (grid over batch, online softmax,
+BLOCK_S-chunked KV streaming); the query heads are grouped so every KV
+head's block is loaded once and shared by its `group` query heads — the
+TPU analogue of GQA's warp-level KV reuse on GPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 32
+_NEG_INF = -1e30
+
+
+def _gqa_decode_kernel(
+    len_ref,  # [1] int32
+    q_ref,  # [Hq, D]
+    k_ref,  # [S, Hkv, D]
+    v_ref,  # [S, Hkv, D]
+    o_ref,  # [Hq, D]
+    *,
+    block_s: int,
+    group: int,
+):
+    hq, d = q_ref.shape
+    s, hkv, _ = k_ref.shape
+    seq_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    # Fold query heads into (Hkv, group, D): every KV head serves `group`
+    # query heads from one loaded block.
+    q = q_ref[...].astype(jnp.float32).reshape(hkv, group, d) * scale
+
+    n_blocks = pl.cdiv(s, block_s)
+
+    def body(blk, carry):
+        m_prev, l_prev, acc_prev = carry  # [Hkv, G, 1], [Hkv, G, 1], [Hkv, G, D]
+        start = blk * block_s
+        k_blk = pl.load(k_ref, (pl.dslice(start, block_s), slice(None), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(start, block_s), slice(None), slice(None)))
+        k_blk = k_blk.astype(jnp.float32)  # [block_s, Hkv, D]
+        v_blk = v_blk.astype(jnp.float32)
+
+        # scores[h, g, j] = q[h, g, :] . k_blk[j, h, :]
+        scores = jnp.einsum("hgd,jhd->hgj", q, k_blk)  # [Hkv, G, block_s]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_s), 2)
+        mask = pos < seq_len
+        scores = jnp.where(mask, scores, _NEG_INF)
+
+        m_blk = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(scores - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jnp.einsum("hgj,jhd->hgd", p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((hkv, group, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((hkv, group, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((hkv, group, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+
+    o_ref[...] = (acc / l).reshape(hq, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def gqa_decode_attention(
+    q: jnp.ndarray,  # [B, Hq, D]
+    k_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    v_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    seq_lens: jnp.ndarray,  # [B] int32
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+) -> jnp.ndarray:  # [B, Hq, D]
+    """GQA decode attention: Hq query heads share Hkv KV heads."""
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0, f"query heads {hq} must be a multiple of kv heads {hkv}"
+    group = hq // hkv
+    block_s = min(block_s, s)
+    kernel = functools.partial(_gqa_decode_kernel, block_s=block_s, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((None, hq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s, hkv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((None, s, hkv, d), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, hq, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=True,
+    )(seq_lens, q, k_cache, v_cache)
+
+
+def gqa_decode_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, D]
+    k_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    v_cache: jnp.ndarray,  # [B, S, Hkv, D]
+    seq_lens: jnp.ndarray,  # [B] int32
+) -> jnp.ndarray:
+    """Oracle: expand KV heads to query heads, then plain masked softmax."""
+    b, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    group = hq // hkv
+    k_full = jnp.repeat(k_cache, group, axis=2)  # [B, S, Hq, D]
+    v_full = jnp.repeat(v_cache, group, axis=2)
+    from compile.kernels.ref import decode_attention_ref
+
+    return decode_attention_ref(q, k_full, v_full, seq_lens)

@@ -1,0 +1,111 @@
+"""L1 performance model: VMEM footprint and MXU/roofline estimates for the
+Pallas kernels' block configurations.
+
+interpret=True wallclock on CPU is *not* a TPU proxy (DESIGN.md §9), so the
+kernel optimization loop is structural: pick block shapes whose staged VMEM
+footprint pipelines cleanly and whose contractions map onto the MXU, and
+verify the arithmetic-intensity regime matches the paper's premises (the
+decode kernel must stay memory-bound — that's what makes it offloadable).
+
+Used by python/tests/test_perf_model.py and the numbers quoted in
+EXPERIMENTS.md §Perf / DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# TPU v4-ish reference numbers (per core), for ratio estimates only.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+HBM_BW = 1.2e12  # B/s
+PEAK_BF16_FLOPS = 137.5e12
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeKernelConfig:
+    """One decode-attention kernel instantiation."""
+
+    batch: int
+    n_heads: int
+    head_dim: int
+    max_seq: int
+    block_s: int
+    dtype_bytes: int = 4  # f32 on the CPU path; 2 on real TPU
+
+    def vmem_per_stage(self) -> int:
+        """Bytes staged in VMEM per grid step (one batch element):
+        q + one (K, V) block + online-softmax state + accumulator."""
+        hd = self.n_heads * self.head_dim
+        q = hd * self.dtype_bytes
+        kv_block = 2 * self.block_s * hd * self.dtype_bytes
+        # m, l: [H, 1] f32; acc: [H, D] f32 (state is always f32).
+        state = self.n_heads * (1 + 1 + self.head_dim) * 4
+        return q + kv_block + state
+
+    def vmem_double_buffered(self) -> int:
+        """Pipelined footprint: two in-flight KV blocks."""
+        hd = self.n_heads * self.head_dim
+        return self.vmem_per_stage() + 2 * self.block_s * hd * self.dtype_bytes
+
+    def vmem_fraction(self) -> float:
+        return self.vmem_double_buffered() / VMEM_BYTES
+
+    def flops(self, seq_len: int) -> float:
+        """q·K^T + p·V over `seq_len` tokens, all heads."""
+        return 4.0 * seq_len * self.n_heads * self.head_dim
+
+    def hbm_bytes(self, seq_len: int) -> float:
+        """KV traffic dominates: K and V read once."""
+        return 2.0 * seq_len * self.n_heads * self.head_dim * self.dtype_bytes
+
+    def arithmetic_intensity(self, seq_len: int) -> float:
+        return self.flops(seq_len) / self.hbm_bytes(seq_len)
+
+    def memory_bound(self, seq_len: int) -> bool:
+        """The paper's premise: decode attention sits far left of the TPU
+        roofline ridge (ridge ≈ PEAK/HBM_BW ≈ 115 FLOP/B)."""
+        return self.arithmetic_intensity(seq_len) < PEAK_BF16_FLOPS / HBM_BW
+
+    def mxu_tiles(self) -> tuple[float, float]:
+        """How the two contractions tile onto the 128x128 MXU:
+        (contracting-dim fill, output-dim fill), each in (0, 1]."""
+        contracting = min(self.head_dim / MXU_DIM, 1.0)
+        # Batched heads fold into the non-contracting axis.
+        output = min(self.batch * self.n_heads / MXU_DIM, 1.0)
+        return contracting, output
+
+    def estimated_mxu_utilization(self) -> float:
+        """Upper bound from tile fill alone (the memory-bound ceiling is
+        far lower — see memory_bound)."""
+        c, o = self.mxu_tiles()
+        return c * o
+
+
+def tiny_model_config(block_s: int = 32) -> DecodeKernelConfig:
+    return DecodeKernelConfig(batch=8, n_heads=4, head_dim=16, max_seq=128, block_s=block_s)
+
+
+def llama7b_config(block_s: int = 128) -> DecodeKernelConfig:
+    return DecodeKernelConfig(
+        batch=64, n_heads=32, head_dim=128, max_seq=4096, block_s=block_s, dtype_bytes=2
+    )
+
+
+def report(cfg: DecodeKernelConfig, seq_len: int) -> dict:
+    return {
+        "vmem_per_stage_bytes": cfg.vmem_per_stage(),
+        "vmem_double_buffered_bytes": cfg.vmem_double_buffered(),
+        "vmem_fraction": cfg.vmem_fraction(),
+        "arithmetic_intensity": cfg.arithmetic_intensity(seq_len),
+        "memory_bound": cfg.memory_bound(seq_len),
+        "mxu_tile_fill": cfg.mxu_tiles(),
+        "mxu_utilization_bound": cfg.estimated_mxu_utilization(),
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print("tiny (CPU path):", json.dumps(report(tiny_model_config(), 128), indent=2))
+    print("llama-2 7B shape:", json.dumps(report(llama7b_config(), 1024), indent=2))

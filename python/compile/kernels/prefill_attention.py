@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: prefill-phase causal (flash) attention.
+
+The compute-bound half of the paper's workload split: all prompt tokens
+attend causally in parallel. Flash-attention structure adapted for TPU
+(DESIGN.md §Hardware-Adaptation):
+
+  * grid over (batch, head, query-row block) — the threadblock tiling of
+    the CUDA original becomes BlockSpec index maps;
+  * KV streamed in BLOCK_K chunks with an online-softmax running state;
+  * the causal structure prunes KV chunks entirely above the diagonal
+    (chunk start > query-block end ⇒ skipped by the fori_loop bound);
+  * padded keys (j >= prompt_len) masked; padded query rows forced to
+    attend to position 0 so outputs stay finite (callers discard them).
+
+interpret=True for CPU-PJRT execution (see decode_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+_NEG_INF = -1e30
+
+
+def _prefill_attn_kernel(
+    len_ref,  # [1] int32 (valid prompt length for this batch element)
+    q_ref,  # [BLOCK_Q, D]
+    k_ref,  # [P, D]
+    v_ref,  # [P, D]
+    o_ref,  # [BLOCK_Q, D]
+    *,
+    block_q: int,
+    block_k: int,
+    p_total: int,
+):
+    d = q_ref.shape[-1]
+    qblk = pl.program_id(2)
+    prompt_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    q = q_ref[...].astype(jnp.float32) * scale  # [BLOCK_Q, D]
+    q_pos = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    # Causality: query row i only sees keys j <= i, so KV chunks strictly
+    # beyond this query block's last row are pruned from the loop bound.
+    n_kv_blocks = jnp.minimum(
+        pl.cdiv(p_total, block_k),
+        pl.cdiv((qblk + 1) * block_q, block_k),
+    )
+
+    def body(blk, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = blk * block_k
+        k_blk = pl.load(k_ref, (pl.dslice(start, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(start, block_k), slice(None))).astype(jnp.float32)
+
+        scores = q @ k_blk.T  # [BLOCK_Q, BLOCK_K]
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = (k_pos <= q_pos) & (k_pos < prompt_len)
+        # Keep j == 0 open for every row: padded/degenerate rows stay finite.
+        mask = mask | (k_pos == 0)
+        scores = jnp.where(mask, scores, _NEG_INF)
+
+        m_blk = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(scores - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(
+    q: jnp.ndarray,  # [B, P, H, D]
+    k: jnp.ndarray,  # [B, P, H, D]
+    v: jnp.ndarray,  # [B, P, H, D]
+    prompt_lens: jnp.ndarray,  # [B] int32
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:  # [B, P, H, D]
+    """Causal prefill attention over a padded prompt batch."""
+    b, p, h, d = q.shape
+    block_q = min(block_q, p)
+    block_k = min(block_k, p)
+    kernel = functools.partial(
+        _prefill_attn_kernel, block_q=block_q, block_k=block_k, p_total=p
+    )
+    grid = (b, h, pl.cdiv(p, block_q))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),  # prompt_lens
+            pl.BlockSpec((None, block_q, None, d), lambda bi, hi, qi: (bi, qi, hi, 0)),
+            pl.BlockSpec((None, p, None, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+            pl.BlockSpec((None, p, None, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, block_q, None, d), lambda bi, hi, qi: (bi, qi, hi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, p, h, d), q.dtype),
+        interpret=True,
+    )(prompt_lens, q, k, v)

@@ -1,0 +1,91 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against:
+straightforward, numerically-stable softmax attention with explicit masking,
+written with no regard for performance. Anything the Pallas kernels (or the
+lowered HLO artifacts) produce must match these within tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, H, D]
+    k_cache: jnp.ndarray,  # [B, S, H, D]
+    v_cache: jnp.ndarray,  # [B, S, H, D]
+    seq_lens: jnp.ndarray,  # [B] int32, number of valid KV entries per request
+) -> jnp.ndarray:  # [B, H, D]
+    """Single-token decode attention over a (padded) KV cache.
+
+    Positions >= seq_lens[b] are padding and must not contribute.
+    """
+    b, s, h, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    # scores[b, h, s] = q[b, h, :] . k_cache[b, s, h, :]
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32))
+    scores = scores * scale
+    mask = jnp.arange(s)[None, None, :] < seq_lens[:, None, None]  # [B, 1, S]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # Stable softmax; rows with zero valid entries are undefined — callers
+    # must pass seq_lens >= 1 (a decode step always has at least the token
+    # written in this step).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    attn = p / denom
+    out = jnp.einsum("bhs,bshd->bhd", attn, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(
+    q: jnp.ndarray,  # [B, P, H, D]
+    k: jnp.ndarray,  # [B, P, H, D]
+    v: jnp.ndarray,  # [B, P, H, D]
+    prompt_lens: jnp.ndarray,  # [B] int32, valid prompt length per request
+) -> jnp.ndarray:  # [B, P, H, D]
+    """Causal self-attention over a (padded) prompt batch.
+
+    Token i attends to tokens j <= i, and only where j < prompt_lens[b].
+    Rows beyond prompt_lens produce garbage that callers discard, but they
+    must still be finite (we force them to attend to position 0).
+    """
+    b, p, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    i = jnp.arange(p)[:, None]
+    j = jnp.arange(p)[None, :]
+    causal = j <= i  # [P, P]
+    valid = jnp.arange(p)[None, :] < prompt_lens[:, None]  # [B, P] (keys)
+    mask = causal[None, None, :, :] & valid[:, None, None, :]
+    # Guarantee every row has at least one unmasked entry (j == 0) so padded
+    # rows stay finite.
+    mask = mask.at[:, :, :, 0].set(True)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    pexp = jnp.exp(scores - m)
+    pexp = jnp.where(mask, pexp, 0.0)
+    denom = jnp.sum(pexp, axis=-1, keepdims=True)
+    attn = pexp / denom
+    out = jnp.einsum("bhij,bjhd->bihd", attn, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def merge_attention_ref(
+    out_a: jnp.ndarray,  # [B, H, D] partial attention output over KV range A
+    lse_a: jnp.ndarray,  # [B, H] log-sum-exp of range A
+    out_b: jnp.ndarray,  # [B, H, D]
+    lse_b: jnp.ndarray,  # [B, H]
+) -> jnp.ndarray:
+    """Flash-decoding split-KV merge: combine two partial softmax results.
+
+    Used to validate the kernel's online-softmax chunk merge and (in the
+    serving system) the local/offloaded attention output merge semantics.
+    """
+    m = jnp.maximum(lse_a, lse_b)
+    wa = jnp.exp(lse_a - m)[..., None]
+    wb = jnp.exp(lse_b - m)[..., None]
+    return (out_a * wa + out_b * wb) / (wa + wb)

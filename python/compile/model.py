@@ -1,0 +1,367 @@
+"""L2: a Llama-architecture transformer, split at Adrenaline's boundaries.
+
+The forward pass is deliberately factored the way the paper disaggregates
+it, so the Rust coordinator (L3) can drive the per-layer loop and route the
+attention sub-batches:
+
+    embed        : token ids              -> hidden
+    layer_pre    : RMSNorm + QKV proj + RoPE        (per layer, weights as params)
+    attention    : decode_attention Pallas kernel   (THE offloadable unit)
+    layer_post   : O proj + residual + RMSNorm + SwiGLU FFN + residual
+    head         : final RMSNorm + tied-embedding logits + greedy argmax
+    prefill      : the whole prompt pass fused (scan over layers), emitting
+                   the first token plus the populated KV cache
+    decode_fused : the whole decode step fused — the no-offload fast path
+                   (ablation baseline; also how a vanilla PD system decodes)
+
+Weights are *parameters*, not baked constants: one lowered artifact per
+(function, batch-bucket) serves every layer; Rust passes the per-layer
+weight literals. All math in f32 (CPU PJRT).
+
+The model config here must stay in lock-step with rust/src/config/model.rs
+(TINY consts) and the manifest emitted by aot.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.prefill_attention import prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the served model (the tiny CPU-path model by default)."""
+
+    vocab_size: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 16
+    ffn_hidden: int = 128
+    max_seq_len: int = 128
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    def __post_init__(self) -> None:
+        assert self.n_heads * self.head_dim == self.d_model
+
+
+TINY = ModelConfig()
+
+# Layer-weight tensor names, in the order artifacts take them as parameters.
+LAYER_WEIGHT_NAMES = (
+    "ln_attn",  # [D]
+    "wq",  # [D, D]
+    "wk",  # [D, D]
+    "wv",  # [D, D]
+    "wo",  # [D, D]
+    "ln_ffn",  # [D]
+    "w_gate",  # [D, F]
+    "w_up",  # [D, F]
+    "w_down",  # [F, D]
+)
+GLOBAL_WEIGHT_NAMES = (
+    "embedding",  # [V, D]
+    "ln_final",  # [D]
+)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Deterministic small-scale weights (the model is random, not trained —
+    the serving system's correctness doesn't depend on sensible text)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, v = cfg.d_model, cfg.ffn_hidden, cfg.vocab_size
+    shapes = {
+        "ln_attn": (d,),
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "ln_ffn": (d,),
+        "w_gate": (d, f),
+        "w_up": (d, f),
+        "w_down": (f, d),
+    }
+    weights: dict[str, jnp.ndarray] = {}
+    key, sub = jax.random.split(key)
+    weights["embedding"] = jax.random.normal(sub, (v, d), jnp.float32) * 0.08
+    weights["ln_final"] = jnp.ones((d,), jnp.float32)
+    for layer in range(cfg.n_layers):
+        for name, shape in shapes.items():
+            full = f"layers.{layer}.{name}"
+            if name.startswith("ln_"):
+                weights[full] = jnp.ones(shape, jnp.float32)
+            else:
+                key, sub = jax.random.split(key)
+                fan_in = shape[0]
+                weights[full] = jax.random.normal(sub, shape, jnp.float32) * (
+                    0.8 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+                )
+    return weights
+
+
+def layer_weights(weights: dict[str, jnp.ndarray], layer: int) -> list[jnp.ndarray]:
+    return [weights[f"layers.{layer}.{n}"] for n in LAYER_WEIGHT_NAMES]
+
+
+def stacked_layer_weights(
+    cfg: ModelConfig, weights: dict[str, jnp.ndarray]
+) -> list[jnp.ndarray]:
+    """Stack each layer weight along a leading L axis (for scan-based paths)."""
+    return [
+        jnp.stack([weights[f"layers.{l}.{n}"] for l in range(cfg.n_layers)])
+        for n in LAYER_WEIGHT_NAMES
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [..., H, D]; positions: x.shape[:-2]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = positions[..., None, None].astype(jnp.float32) * freq  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated decode-step pieces (each becomes one artifact per bucket)
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jnp.ndarray, embedding: jnp.ndarray):
+    """tokens [B] int32 -> hidden [B, D]."""
+    return (jnp.take(embedding, tokens, axis=0),)
+
+
+def layer_pre(
+    cfg: ModelConfig,
+    hidden: jnp.ndarray,  # [B, D]
+    positions: jnp.ndarray,  # [B] int32 (0-based position of this token)
+    ln_attn, wq, wk, wv,  # layer weights (subset)
+):
+    """RMSNorm + QKV projection + RoPE -> q, k, v each [B, H, Dh].
+
+    k/v are the *new* cache entries for this step; L3 writes them into its
+    KV pool at `positions` before (or while) running attention.
+    """
+    b = hidden.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = rms_norm(hidden, ln_attn, cfg.rms_eps)
+    q = (x @ wq).reshape(b, h, dh)
+    k = (x @ wk).reshape(b, h, dh)
+    v = (x @ wv).reshape(b, h, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(
+    cfg: ModelConfig,
+    q: jnp.ndarray,  # [B, H, Dh]
+    k_cache: jnp.ndarray,  # [B, S, H, Dh]
+    v_cache: jnp.ndarray,  # [B, S, H, Dh]
+    seq_lens: jnp.ndarray,  # [B] int32
+):
+    """The offloadable unit: the Pallas decode-attention kernel, flattened
+    back to [B, D] for the O projection."""
+    b = q.shape[0]
+    out = decode_attention(q, k_cache, v_cache, seq_lens)
+    return (out.reshape(b, cfg.d_model),)
+
+
+def layer_post(
+    cfg: ModelConfig,
+    hidden: jnp.ndarray,  # [B, D] residual stream input to the layer
+    attn_out: jnp.ndarray,  # [B, D] merged attention output
+    wo, ln_ffn, w_gate, w_up, w_down,
+):
+    """O projection + residual + FFN block -> next hidden [B, D]."""
+    hidden = hidden + attn_out @ wo
+    x = rms_norm(hidden, ln_ffn, cfg.rms_eps)
+    hidden = hidden + swiglu(x, w_gate, w_up, w_down)
+    return (hidden,)
+
+
+def head(cfg: ModelConfig, hidden: jnp.ndarray, ln_final, embedding):
+    """Final norm + tied-embedding logits + greedy next token."""
+    x = rms_norm(hidden, ln_final, cfg.rms_eps)
+    logits = x @ embedding.T  # [B, V]
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, logits
+
+
+# ---------------------------------------------------------------------------
+# Fused paths
+# ---------------------------------------------------------------------------
+
+
+def decode_fused(
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B] int32
+    positions: jnp.ndarray,  # [B] int32 position of this token
+    k_cache: jnp.ndarray,  # [L, B, S, H, Dh]
+    v_cache: jnp.ndarray,  # [L, B, S, H, Dh]
+    embedding, ln_final,
+    *stacked_lw,  # 9 tensors, each [L, ...]
+):
+    """Whole decode step in one artifact — the no-offload fast path.
+
+    Returns (next_token [B], k_new [L,B,H,Dh], v_new [L,B,H,Dh]); L3 writes
+    k_new/v_new into its KV pool (the artifact does NOT return the whole
+    cache, keeping the output transfer small).
+    """
+    b = tokens.shape[0]
+    (hidden,) = embed(tokens, embedding)
+    seq_lens = positions + 1
+    bidx = jnp.arange(b)
+
+    def step(hidden, per_layer):
+        kc, vc, (ln_attn, wq, wk, wv, wo, ln_ffn, w_gate, w_up, w_down) = per_layer
+        q, k_new, v_new = layer_pre(cfg, hidden, positions, ln_attn, wq, wk, wv)
+        kc = kc.at[bidx, positions].set(k_new)
+        vc = vc.at[bidx, positions].set(v_new)
+        (attn_out,) = attention(cfg, q, kc, vc, seq_lens)
+        (hidden,) = layer_post(
+            cfg, hidden, attn_out, wo, ln_ffn, w_gate, w_up, w_down
+        )
+        return hidden, (k_new, v_new)
+
+    hidden, (k_news, v_news) = jax.lax.scan(
+        step, hidden, (k_cache, v_cache, tuple(stacked_lw))
+    )
+    next_tok, _logits = head(cfg, hidden, ln_final, embedding)
+    return next_tok, k_news, v_news
+
+
+def prefill(
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B, P] int32, padded with 0
+    prompt_lens: jnp.ndarray,  # [B] int32
+    embedding, ln_final,
+    *stacked_lw,  # 9 tensors, each [L, ...]
+):
+    """Full prefill pass: first output token + populated KV cache.
+
+    Returns (first_token [B], k_cache [L,B,P,H,Dh], v_cache [L,B,P,H,Dh]).
+    """
+    b, p = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    hidden = jnp.take(embedding, tokens, axis=0)  # [B, P, D]
+    positions = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (b, p))
+
+    def step(hidden, lw):
+        ln_attn, wq, wk, wv, wo, ln_ffn, w_gate, w_up, w_down = lw
+        x = rms_norm(hidden, ln_attn, cfg.rms_eps)
+        q = (x @ wq).reshape(b, p, h, dh)
+        k = (x @ wk).reshape(b, p, h, dh)
+        v = (x @ wv).reshape(b, p, h, dh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = prefill_attention(q, k, v, prompt_lens)  # [B, P, H, Dh]
+        hidden = hidden + attn.reshape(b, p, cfg.d_model) @ wo
+        x = rms_norm(hidden, ln_ffn, cfg.rms_eps)
+        hidden = hidden + swiglu(x, w_gate, w_up, w_down)
+        return hidden, (k, v)
+
+    hidden, (k_cache, v_cache) = jax.lax.scan(step, hidden, tuple(stacked_lw))
+    # Last *valid* token's hidden state produces the first output token.
+    last = jnp.maximum(prompt_lens - 1, 0)  # [B]
+    final_hidden = hidden[jnp.arange(b), last]  # [B, D]
+    first_tok, _logits = head(cfg, final_hidden, ln_final, embedding)
+    return first_tok, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference decode (oracle for the full pipeline, incl. fused/split
+# equivalence). Mirrors decode_fused but uses ref attention math.
+# ---------------------------------------------------------------------------
+
+
+def reference_generate(
+    cfg: ModelConfig,
+    weights: dict[str, jnp.ndarray],
+    prompt: list[int],
+    n_steps: int,
+) -> list[int]:
+    """Greedy generation with plain-python orchestration and jnp math only.
+
+    Slow; used by tests as the end-to-end ground truth for the Rust serving
+    path (same prompt => identical greedy tokens).
+    """
+    from compile.kernels.ref import decode_attention_ref, prefill_attention_ref
+
+    emb = weights["embedding"]
+    ln_f = weights["ln_final"]
+    p = len(prompt)
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]  # [1, P]
+    hidden = jnp.take(emb, toks, axis=0)
+    positions = jnp.arange(p, dtype=jnp.int32)[None, :]
+    plens = jnp.asarray([p], jnp.int32)
+
+    k_caches, v_caches = [], []
+    for l in range(cfg.n_layers):
+        lw = {n: weights[f"layers.{l}.{n}"] for n in LAYER_WEIGHT_NAMES}
+        x = rms_norm(hidden, lw["ln_attn"], cfg.rms_eps)
+        q = (x @ lw["wq"]).reshape(1, p, cfg.n_heads, cfg.head_dim)
+        k = (x @ lw["wk"]).reshape(1, p, cfg.n_heads, cfg.head_dim)
+        v = (x @ lw["wv"]).reshape(1, p, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = prefill_attention_ref(q, k, v, plens)
+        hidden = hidden + attn.reshape(1, p, cfg.d_model) @ lw["wo"]
+        x = rms_norm(hidden, lw["ln_ffn"], cfg.rms_eps)
+        hidden = hidden + swiglu(x, lw["w_gate"], lw["w_up"], lw["w_down"])
+        # Pad cache to max_seq_len.
+        pad = cfg.max_seq_len - p
+        k_caches.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    x = rms_norm(hidden[:, p - 1], ln_f, cfg.rms_eps)
+    tok = int(jnp.argmax(x @ emb.T, axis=-1)[0])
+    out = [tok]
+
+    for step in range(n_steps - 1):
+        pos = p + step
+        if pos >= cfg.max_seq_len:
+            break
+        hid = jnp.take(emb, jnp.asarray([tok], jnp.int32), axis=0)  # [1, D]
+        posarr = jnp.asarray([pos], jnp.int32)
+        slens = jnp.asarray([pos + 1], jnp.int32)
+        for l in range(cfg.n_layers):
+            lw = {n: weights[f"layers.{l}.{n}"] for n in LAYER_WEIGHT_NAMES}
+            q, k_new, v_new = layer_pre(
+                cfg, hid, posarr, lw["ln_attn"], lw["wq"], lw["wk"], lw["wv"]
+            )
+            k_caches[l] = k_caches[l].at[0, pos].set(k_new[0])
+            v_caches[l] = v_caches[l].at[0, pos].set(v_new[0])
+            attn_out = decode_attention_ref(q, k_caches[l], v_caches[l], slens)
+            attn_out = attn_out.reshape(1, cfg.d_model)
+            (hid,) = layer_post(
+                cfg, hid, attn_out,
+                lw["wo"], lw["ln_ffn"], lw["w_gate"], lw["w_up"], lw["w_down"],
+            )
+        x = rms_norm(hid, ln_f, cfg.rms_eps)
+        tok = int(jnp.argmax(x @ emb.T, axis=-1)[0])
+        out.append(tok)
+    return out

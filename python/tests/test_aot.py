@@ -1,0 +1,95 @@
+"""AOT pipeline: weights serialization round-trip, manifest consistency,
+and HLO-text artifact sanity (parseable structure, right entry shapes)."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_weights_roundtrip(tmp_path):
+    w = M.init_weights(M.TINY, seed=3)
+    path = tmp_path / "w.bin"
+    aot.save_weights(path, w)
+    back = aot.load_weights(path)
+    assert set(back) == set(w)
+    for name in w:
+        np.testing.assert_array_equal(np.asarray(w[name], np.float32), back[name])
+
+
+def test_weights_format_header(tmp_path):
+    w = {"a": jnp.ones((2, 3), jnp.float32)}
+    path = tmp_path / "w.bin"
+    aot.save_weights(path, w)
+    data = path.read_bytes()
+    assert data[:4] == b"ADRW"
+    # version 1, count 1
+    assert int.from_bytes(data[4:8], "little") == 1
+    assert int.from_bytes(data[8:12], "little") == 1
+
+
+def test_artifact_specs_cover_all_buckets():
+    specs = aot.artifact_specs(M.TINY)
+    for b in aot.BATCH_BUCKETS:
+        for stem in ("embed", "layer_pre", "attn", "layer_post", "head", "decode_fused"):
+            assert f"{stem}_b{b}" in specs
+    for p in aot.PROMPT_BUCKETS:
+        assert f"prefill_p{p}" in specs
+
+
+def test_lowering_produces_hlo_text():
+    specs = aot.artifact_specs(M.TINY)
+    fn, args = specs["attn_b1"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestBuiltArtifacts:
+    def test_manifest_matches_specs(self):
+        manifest = json.loads((ART / "manifest.json").read_text())
+        specs = aot.artifact_specs(M.TINY)
+        assert set(manifest["artifacts"]) == set(specs)
+        assert manifest["batch_buckets"] == list(aot.BATCH_BUCKETS)
+        assert manifest["prompt_buckets"] == list(aot.PROMPT_BUCKETS)
+        mc = manifest["model"]
+        assert mc["d_model"] == M.TINY.d_model
+        assert mc["n_layers"] == M.TINY.n_layers
+        assert mc["max_seq_len"] == M.TINY.max_seq_len
+
+    def test_all_artifacts_exist_and_parse(self):
+        manifest = json.loads((ART / "manifest.json").read_text())
+        for name in manifest["artifacts"]:
+            text = (ART / f"{name}.hlo.txt").read_text()
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+
+    def test_weights_bin_loadable(self):
+        w = aot.load_weights(ART / "weights.bin")
+        assert "embedding" in w and "ln_final" in w
+        for l in range(M.TINY.n_layers):
+            for n in M.LAYER_WEIGHT_NAMES:
+                assert f"layers.{l}.{n}" in w
+        assert w["embedding"].shape == (M.TINY.vocab_size, M.TINY.d_model)
+
+    def test_weights_match_seeded_init(self):
+        manifest = json.loads((ART / "manifest.json").read_text())
+        w_disk = aot.load_weights(ART / "weights.bin")
+        w_init = M.init_weights(M.TINY, seed=manifest["seed"])
+        for name in w_init:
+            np.testing.assert_array_equal(
+                w_disk[name], np.asarray(w_init[name], np.float32)
+            )
+
+    def test_incremental_build_is_noop(self, capsys):
+        aot.build(ART)  # manifest exists + same inventory -> no rebuild
+        out = capsys.readouterr().out
+        assert "up to date" in out

@@ -1,0 +1,159 @@
+"""Pallas decode-attention kernel vs the pure-jnp oracle.
+
+This is the CORE L1 correctness signal: the exact kernel that both the
+decode engine and the attention executor run (as part of attn_b*.hlo.txt)
+must match `ref.decode_attention_ref` for every shape/length combination.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import decode_attention_ref, merge_attention_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def make_inputs(b, s, h, d, dtype=jnp.float32, rng=RNG):
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    lens = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    return q, k, v, lens
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+@pytest.mark.parametrize("s", [32, 128])
+def test_matches_ref_basic(b, s):
+    q, k, v, lens = make_inputs(b, s, h=4, d=16)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_seq_len_one():
+    """A decode step always has >= 1 valid KV entry; the degenerate case is
+    attention over exactly the current token => output == v[:, 0]."""
+    q, k, v, _ = make_inputs(3, 64, 4, 16)
+    lens = jnp.ones((3,), jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out, v[:, 0], rtol=1e-5, atol=1e-6)
+
+
+def test_full_cache():
+    q, k, v, _ = make_inputs(2, 128, 4, 16)
+    lens = jnp.full((2,), 128, jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_padding_is_ignored():
+    """Garbage in padded KV positions must not change the result."""
+    q, k, v, _ = make_inputs(2, 64, 4, 16)
+    lens = jnp.asarray([10, 33], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    k2 = k.at[0, 10:].set(1e6).at[1, 33:].set(-1e6)
+    v2 = v.at[0, 10:].set(1e6).at[1, 33:].set(-1e6)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_block_size_invariance():
+    """Online-softmax chunking must not affect the math."""
+    q, k, v, lens = make_inputs(4, 128, 4, 16)
+    outs = [decode_attention(q, k, v, lens, block_s=bs) for bs in (8, 16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+def test_bfloat16_tolerance():
+    q, k, v, lens = make_inputs(2, 64, 4, 16, dtype=jnp.bfloat16)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_batch_rows_independent():
+    """Each batch row's output depends only on its own q/kv/len — the property
+    that makes attention disaggregation across sub-batches valid at all."""
+    q, k, v, lens = make_inputs(4, 64, 4, 16)
+    full = decode_attention(q, k, v, lens)
+    for i in range(4):
+        solo = decode_attention(q[i : i + 1], k[i : i + 1], v[i : i + 1], lens[i : i + 1])
+        np.testing.assert_allclose(full[i], solo[0], rtol=1e-5, atol=1e-6)
+
+
+def test_split_batch_equals_full_batch():
+    """Local/offloaded sub-batch split (the serving system's core move) is a
+    pure partition: running rows in two kernel calls == one call."""
+    q, k, v, lens = make_inputs(8, 128, 4, 16)
+    full = decode_attention(q, k, v, lens)
+    a = decode_attention(q[:3], k[:3], v[:3], lens[:3])
+    b = decode_attention(q[3:], k[3:], v[3:], lens[3:])
+    np.testing.assert_allclose(jnp.concatenate([a, b]), full, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    s=st.sampled_from([16, 32, 64, 128, 160]),
+    h=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(b, s, h, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = make_inputs(b, s, h, d, rng=rng)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    b=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_dtypes(dtype, b, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = make_inputs(b, 64, 4, 16, dtype=dtype, rng=rng)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol
+    )
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+def test_merge_ref_is_exact_split():
+    """Flash-decoding split-KV merge: attending over [0, s1) and [s1, s)
+    separately then merging == attending over [0, s)."""
+    b, s, h, d = 2, 64, 4, 16
+    q, k, v, _ = make_inputs(b, s, h, d)
+    lens = jnp.full((b,), s, jnp.int32)
+    full = decode_attention_ref(q, k, v, lens)
+
+    def part(ks, vs):
+        sl = jnp.full((b,), ks.shape[1], jnp.int32)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+        scores = jnp.einsum("bhd,bshd->bhs", q, ks) * scale
+        m = jnp.max(scores, axis=-1)
+        p = jnp.exp(scores - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        out = jnp.einsum("bhs,bshd->bhd", p / l[..., None], vs)
+        return out, m + jnp.log(l)
+
+    s1 = 24
+    oa, la = part(k[:, :s1], v[:, :s1])
+    ob, lb = part(k[:, s1:], v[:, s1:])
+    merged = merge_attention_ref(oa, la, ob, lb)
+    np.testing.assert_allclose(merged, full, rtol=1e-5, atol=1e-5)

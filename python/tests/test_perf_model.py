@@ -1,0 +1,69 @@
+"""L1 perf-model invariants: the structural properties the kernel's block
+configuration must satisfy on real TPU hardware."""
+
+import pytest
+
+from compile.kernels.perf_model import (
+    DecodeKernelConfig,
+    llama7b_config,
+    tiny_model_config,
+    HBM_BW,
+    PEAK_BF16_FLOPS,
+    VMEM_BYTES,
+)
+
+
+def test_tiny_config_fits_vmem_easily():
+    cfg = tiny_model_config()
+    assert cfg.vmem_fraction() < 0.01, "tiny model uses <1% of VMEM"
+
+
+def test_7b_config_pipelines_in_vmem():
+    cfg = llama7b_config()
+    # Double-buffered KV staging must leave plenty of VMEM for the rest of
+    # the layer (the practical budget is ~50%).
+    assert cfg.vmem_fraction() < 0.5, f"fraction = {cfg.vmem_fraction():.3f}"
+    assert cfg.vmem_double_buffered() > cfg.vmem_per_stage()
+
+
+def test_decode_attention_memory_bound_at_all_context_lengths():
+    # The paper's core premise (Figs 3/9): decode attention is memory-bound
+    # — that's exactly why offloading it to idle bandwidth works.
+    cfg = llama7b_config()
+    for seq in [128, 1024, 4096]:
+        assert cfg.memory_bound(seq), f"seq {seq} must be memory-bound"
+        # Intensity is constant in seq (both flops and bytes are linear).
+        assert cfg.arithmetic_intensity(seq) == pytest.approx(
+            cfg.arithmetic_intensity(128)
+        )
+
+
+def test_intensity_well_below_ridge():
+    cfg = llama7b_config()
+    ridge = PEAK_BF16_FLOPS / HBM_BW
+    assert cfg.arithmetic_intensity(1024) < ridge / 50, (
+        "decode attention sits far left of the roofline ridge"
+    )
+
+
+def test_mxu_tiling_improves_with_head_dim_and_batch():
+    small = DecodeKernelConfig(batch=1, n_heads=4, head_dim=16, max_seq=128, block_s=32)
+    big = llama7b_config()
+    assert big.estimated_mxu_utilization() > small.estimated_mxu_utilization()
+    c, o = big.mxu_tiles()
+    assert c == 1.0, "7B head_dim 128 fills the contracting MXU axis"
+    assert o == 1.0, "batch*heads >= 128 fills the output axis"
+
+
+def test_block_s_tradeoff():
+    # Larger KV blocks stage more VMEM but don't change intensity.
+    small = llama7b_config(block_s=64)
+    mid = llama7b_config(block_s=128)
+    large = llama7b_config(block_s=512)
+    assert large.vmem_double_buffered() > small.vmem_double_buffered()
+    assert large.arithmetic_intensity(1024) == small.arithmetic_intensity(1024)
+    # The design constraint the default BLOCK_S=128 encodes: with all 32
+    # heads staged per batch element, 128-token blocks pipeline within the
+    # VMEM budget but 512-token blocks do NOT — the block sweep's finding.
+    assert mid.vmem_double_buffered() < VMEM_BYTES / 2
+    assert large.vmem_double_buffered() > VMEM_BYTES / 2

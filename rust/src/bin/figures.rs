@@ -1,0 +1,351 @@
+//! Regenerate the data series behind every figure in the paper's
+//! evaluation (DESIGN.md §4 maps each to its modules).
+//!
+//! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
+//!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|all]`
+//!
+//! Output rows are stable and grep-able:
+//!     figure=ID series=NAME x=X y=Y
+//! so `figures all | tee figures.txt` is the full evaluation dump.
+//! Simulated panels run at this testbed's saturating rates — see
+//! EXPERIMENTS.md for the paper-vs-measured mapping.
+
+use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, SloConfig};
+use adrenaline::coordinator::OffloadBounds;
+use adrenaline::gpu_model::{
+    bw_frac_of_sm_frac, prefill_slowdown, DecodeKernelTimes, HbmUsage, KernelKind, PhaseKernels,
+    PrefillKernelTimes, Roofline,
+};
+use adrenaline::sim::{run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig};
+use adrenaline::util::bench::figure_row;
+use adrenaline::workload::WorkloadKind;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    let all = which == "all";
+    if all || which == "fig1" {
+        fig1();
+    }
+    if all || which == "fig2" {
+        fig2();
+    }
+    if all || which == "fig3" {
+        fig3();
+    }
+    if all || which == "fig5" {
+        fig5();
+    }
+    if all || which == "fig6" {
+        fig6();
+    }
+    if all || which == "fig9" {
+        fig9();
+    }
+    if all || which == "fig10" {
+        fig10();
+    }
+    if all || which == "fig11" {
+        e2e("fig11", scaled(E2eConfig::fig11()));
+    }
+    if all || which == "fig12" {
+        e2e("fig12", scaled(E2eConfig::fig12()));
+    }
+    if all || which == "fig13" {
+        e2e("fig13", E2eConfig::fig13());
+    }
+    if all || which == "fig14" {
+        e2e("fig14", E2eConfig::fig14());
+    }
+    if all || which == "fig15" {
+        fig15();
+    }
+    if all || which == "fig16" {
+        fig16();
+    }
+    if all || which == "fig17" {
+        fig17();
+    }
+    if all || which == "fig18" {
+        fig18();
+    }
+    if all || which == "launch" {
+        launch();
+    }
+    if all || which == "scaling" {
+        scaling();
+    }
+}
+
+/// ShareGPT panels run at this testbed's saturating rates (the paper's
+/// stack saturates near 4 req/s; our roofline decode is faster, so the
+/// crossover lands at higher absolute rates — shape over absolutes).
+fn scaled(mut cfg: E2eConfig) -> E2eConfig {
+    cfg.rates = vec![8.0, 12.0, 16.0, 20.0, 24.0, 28.0];
+    cfg.duration_s = 120.0;
+    cfg
+}
+
+fn setup() -> (Roofline, ModelSpec) {
+    (Roofline::whole(GpuSpec::a100_80g()), ModelSpec::llama2_7b())
+}
+
+/// Fig 1: (a) prefill HBM-bw utilization vs prompt length; (b) decode
+/// compute utilization vs batch size.
+fn fig1() {
+    let (rl, m) = setup();
+    let pk = PhaseKernels::new(m);
+    for p in [256u64, 512, 1024, 2048, 4096] {
+        let mut cost = pk.prefill_cost(KernelKind::QkvProj, p);
+        for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
+            cost = cost.add(&pk.prefill_cost(k, p));
+        }
+        figure_row("fig1a", "prefill_hbm_bw_util", p as f64, rl.bw_utilization(cost));
+    }
+    for b in [1u64, 8, 16, 32, 64, 80, 128] {
+        let ctx = b * 1024;
+        let mut cost = pk.decode_cost(KernelKind::QkvProj, b, ctx);
+        for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
+            cost = cost.add(&pk.decode_cost(k, b, ctx));
+        }
+        figure_row("fig1b", "decode_compute_util", b as f64, rl.compute_utilization(cost));
+    }
+}
+
+/// Fig 2: HBM capacity utilization of prefill vs decode instances.
+fn fig2() {
+    let c = ClusterSpec::paper_default();
+    let m = ModelSpec::llama2_7b();
+    let prefill = HbmUsage::for_instance(&c, &m, 0);
+    figure_row("fig2", "prefill_capacity_util", 0.0, prefill.utilization());
+    let budget = HbmUsage::kv_token_budget(&c, &m);
+    let decode = HbmUsage::for_instance(&c, &m, budget);
+    figure_row("fig2", "decode_capacity_util", 0.0, decode.utilization());
+    figure_row("fig2", "decode_kv_share", 0.0, decode.kv_share());
+}
+
+/// Fig 3: decode attention share of layer time vs batch (seq 1K).
+fn fig3() {
+    let (rl, m) = setup();
+    for b in [1u64, 8, 16, 32, 48, 64, 80, 96, 128] {
+        let t = DecodeKernelTimes::compute(&rl, &m, b, b * 1024);
+        figure_row("fig3", "attention_share", b as f64, t.attention_share());
+    }
+}
+
+/// Fig 5: prefill per-kernel compute & bandwidth utilization vs prompt len.
+fn fig5() {
+    let (rl, m) = setup();
+    let pk = PhaseKernels::new(m);
+    for p in [256u64, 1024, 4096] {
+        for k in KernelKind::ALL {
+            let cost = pk.prefill_cost(k, p);
+            figure_row(
+                "fig5a",
+                &format!("{}_compute", k.name()),
+                p as f64,
+                rl.compute_utilization(cost),
+            );
+            figure_row("fig5b", &format!("{}_bw", k.name()), p as f64, rl.bw_utilization(cost));
+        }
+    }
+}
+
+/// Fig 6: decode per-kernel compute & bandwidth utilization vs batch.
+fn fig6() {
+    let (rl, m) = setup();
+    let pk = PhaseKernels::new(m);
+    for b in [8u64, 32, 80, 128] {
+        let ctx = b * 1024;
+        for k in KernelKind::ALL {
+            let cost = pk.decode_cost(k, b, ctx);
+            figure_row(
+                "fig6a",
+                &format!("{}_compute", k.name()),
+                b as f64,
+                rl.compute_utilization(cost),
+            );
+            figure_row("fig6b", &format!("{}_bw", k.name()), b as f64, rl.bw_utilization(cost));
+        }
+    }
+}
+
+/// Fig 9: attention-kernel bandwidth vs SM fraction (superlinear).
+fn fig9() {
+    for i in 1..=10 {
+        let s = i as f64 / 10.0;
+        figure_row("fig9", "bw_frac", s, bw_frac_of_sm_frac(s));
+    }
+    figure_row("fig9", "bw_frac_anchor", 0.2, bw_frac_of_sm_frac(0.2));
+}
+
+/// Fig 10: normalized prefill throughput vs SM fraction (sublinear).
+fn fig10() {
+    let (rl, m) = setup();
+    for p in [1024u64, 4096] {
+        let base = PrefillKernelTimes::compute(&rl, &m, p).total();
+        for i in 2..=10 {
+            let s = i as f64 / 10.0;
+            let t = base * prefill_slowdown(s);
+            figure_row("fig10", &format!("norm_tput_p{p}"), s, base / t);
+        }
+    }
+}
+
+/// Figs 11–14: TTFT / TPOT / P99 TPOT / throughput vs request rate for
+/// both systems.
+fn e2e(fig: &str, cfg: E2eConfig) {
+    for p in run_e2e(&cfg) {
+        figure_row(&format!("{fig}a"), &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
+        figure_row(&format!("{fig}b"), &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
+        figure_row(
+            &format!("{fig}c"),
+            &format!("{}_p99_tpot_s", p.system),
+            p.rate,
+            p.tpot_p99_s,
+        );
+        figure_row(
+            &format!("{fig}d"),
+            &format!("{}_tput_tok_s", p.system),
+            p.rate,
+            p.throughput_tok_s,
+        );
+        figure_row(
+            &format!("{fig}x"),
+            &format!("{}_preemptions", p.system),
+            p.rate,
+            p.preemptions as f64,
+        );
+    }
+}
+
+/// Fig 15: E2E performance vs (fixed) offload ratio.
+fn fig15() {
+    let pts = run_ratio_sweep(
+        ModelSpec::llama2_7b(),
+        WorkloadKind::ShareGpt,
+        24.0,
+        &[0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+        120.0,
+    );
+    for (ratio, r) in &pts {
+        figure_row("fig15", "tput_tok_s", *ratio, r.throughput);
+        figure_row("fig15", "tpot_s", *ratio, r.tpot.map(|s| s.mean).unwrap_or(f64::NAN));
+        figure_row("fig15", "ttft_s", *ratio, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
+    }
+}
+
+/// Fig 16: prefill-instance HBM capacity over the run.
+fn fig16() {
+    for (name, on) in [("vllm", false), ("adrenaline", true)] {
+        let m = ModelSpec::llama2_7b();
+        let mut cfg = if on {
+            SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0)
+        } else {
+            SimConfig::baseline(m, WorkloadKind::ShareGpt, 24.0)
+        };
+        cfg.duration_s = 120.0;
+        let r = ClusterSim::new(cfg).run();
+        let pts = r.prefill_occupancy.points();
+        let stride = (pts.len() / 20).max(1);
+        for (t, v) in pts.iter().step_by(stride) {
+            figure_row("fig16", &format!("{name}_capacity_util"), *t, *v);
+        }
+        figure_row("fig16", &format!("{name}_mean"), 0.0, r.prefill_hbm_capacity_util);
+    }
+}
+
+/// Fig 17: prefill bandwidth & decode compute utilization vs offload ratio,
+/// both models.
+fn fig17() {
+    for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
+        let rate = if m.name == "llama2-7b" { 24.0 } else { 16.0 };
+        let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &[0.0, 0.4, 0.6, 0.8], 120.0);
+        for (ratio, r) in &pts {
+            figure_row(
+                "fig17a",
+                &format!("{}_prefill_bw_util", m.name),
+                *ratio,
+                r.prefill_hbm_bw_util,
+            );
+            figure_row(
+                "fig17b",
+                &format!("{}_decode_compute_util", m.name),
+                *ratio,
+                r.decode_compute_util,
+            );
+        }
+    }
+}
+
+/// Fig 18: (a) prefill bandwidth with executor on/off + duty cycle;
+/// (b) non-attention kernel compute growth vs offload ratio.
+fn fig18() {
+    let m = ModelSpec::llama2_7b();
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 120.0;
+    let r = ClusterSim::new(cfg).run();
+    figure_row("fig18a", "attn_on_bw_util", 0.0, r.executor_bw_util);
+    figure_row("fig18a", "attn_off_bw_util", 0.0, 0.25); // prefill-only draw (Fig 1a)
+    figure_row("fig18a", "executor_duty", 0.0, r.executor_duty);
+
+    // (b) per-kernel decode compute at growing total batch (the effect of
+    // offload ratios 0 / 0.4 / 0.8 on the non-attention kernels).
+    let (rl, m) = setup();
+    let pk = PhaseKernels::new(m);
+    let b_local = 92u64; // B_TPOT-scale local batch
+    for ratio in [0.0f64, 0.4, 0.8] {
+        let b_total = (b_local as f64 * (1.0 + ratio)) as u64;
+        for k in [KernelKind::QkvProj, KernelKind::OutProj, KernelKind::Ffn] {
+            let cost = pk.decode_cost(k, b_total, b_total * 1024);
+            figure_row(
+                "fig18b",
+                &format!("{}_compute_util", k.name()),
+                ratio,
+                rl.compute_utilization(cost),
+            );
+        }
+    }
+}
+
+/// §3.2.2 ablation: decode TPOT with and without the executable-grid
+/// (CUDA-graph analogue) launch batching, plus the computed offload bounds.
+fn launch() {
+    let m = ModelSpec::llama2_7b();
+    for (name, eager) in [("graphed", 0.0), ("eager", 0.76e-3 * 32.0)] {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 16.0);
+        cfg.duration_s = 60.0;
+        cfg.eager_launch_overhead_s = eager;
+        let r = ClusterSim::new(cfg).run();
+        figure_row(
+            "launch",
+            &format!("{name}_tpot_s"),
+            0.0,
+            r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
+        );
+        figure_row("launch", &format!("{name}_tput"), 0.0, r.throughput);
+    }
+    let b = OffloadBounds::compute(
+        &ClusterSpec::paper_default(),
+        &ModelSpec::llama2_7b(),
+        &SloConfig::default(),
+        1024,
+    );
+    figure_row("launch", "ob_mem", 0.0, b.ob_mem);
+    figure_row("launch", "ob", 0.0, b.ob());
+}
+
+/// §3.4.2 flexibility: prefill-pool scaling. Eq 1's OB_mem is linear in
+/// n (prefill instances per decode instance); more executors ⇒ more
+/// offload capacity ⇒ higher saturated throughput.
+fn scaling() {
+    let m = ModelSpec::llama2_7b();
+    for n in [1u32, 2, 3] {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 28.0);
+        cfg.duration_s = 120.0;
+        cfg.cluster.n_prefill = n;
+        let r = ClusterSim::new(cfg).run();
+        figure_row("scaling", "tput_tok_s", n as f64, r.throughput);
+        figure_row("scaling", "offloaded_fraction", n as f64, r.offloaded_fraction);
+        figure_row("scaling", "ttft_s", n as f64, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
+    }
+}

@@ -1,0 +1,124 @@
+//! GPU hardware specs and cluster topology.
+
+/// A single accelerator's capabilities. Defaults model the paper's testbed
+/// (NVIDIA A100-80GB SXM).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense fp16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth, B/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: f64,
+    /// Streaming multiprocessors (the MPS partitioning unit).
+    pub num_sms: u32,
+    /// Inter-GPU interconnect bandwidth (NVLink), B/s.
+    pub interconnect_bw: f64,
+    /// Achievable fraction of peak FLOPs for large GEMMs (cuBLAS-class).
+    pub compute_eff: f64,
+    /// Achievable fraction of peak bandwidth for streaming kernels
+    /// (calibrated to the paper's Fig 18: the attention executor reaches
+    /// 83% of the bandwidth capacity limit).
+    pub bw_eff: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-80GB SXM, the paper's testbed GPU.
+    pub const fn a100_80g() -> Self {
+        GpuSpec {
+            name: "A100-80GB-SXM",
+            peak_flops: 312e12,
+            hbm_bw: 2.0e12,
+            hbm_capacity: 80e9,
+            num_sms: 108,
+            interconnect_bw: 600e9,
+            compute_eff: 0.62,
+            bw_eff: 0.83,
+        }
+    }
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        Self::a100_80g()
+    }
+}
+
+/// Cluster topology for a PD-disaggregated deployment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    /// Number of prefill instances (GPU groups running prefill).
+    pub n_prefill: u32,
+    /// Number of decoding instances.
+    pub n_decode: u32,
+    /// Fraction of HBM usable for model state (vLLM's
+    /// `gpu_memory_utilization`; the paper uses 0.8).
+    pub memory_utilization: f64,
+    /// SM fraction granted to the attention executor on prefill GPUs
+    /// (Adrenaline's configurable MPS knob, §3.3.2).
+    ///
+    /// Calibration: Fig 18a reports the executor sustaining 83 % of the
+    /// bandwidth-capacity limit while active, which on the Fig 9 curve
+    /// requires roughly half the SMs (bw_frac(0.5) ≈ 0.80); Fig 10 shows
+    /// prefill tolerating that reservation. 0.5 reproduces both panels.
+    pub attn_executor_sm_frac: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's end-to-end configuration: one prefill + one decode
+    /// instance per pair (n = 1 in Eq. 1).
+    pub fn paper_default() -> Self {
+        ClusterSpec {
+            gpu: GpuSpec::a100_80g(),
+            n_prefill: 1,
+            n_decode: 1,
+            memory_utilization: 0.8,
+            attn_executor_sm_frac: 0.5,
+        }
+    }
+
+    /// Average prefill instances per decode instance (the `n` in Eq. 1).
+    pub fn prefill_per_decode(&self) -> f64 {
+        self.n_prefill as f64 / self.n_decode as f64
+    }
+
+    /// Usable HBM for KV + weights on one instance, bytes.
+    pub fn usable_hbm(&self) -> f64 {
+        self.gpu.hbm_capacity * self.memory_utilization
+    }
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_numbers() {
+        let g = GpuSpec::a100_80g();
+        assert_eq!(g.num_sms, 108);
+        assert!(g.hbm_capacity > 79e9);
+        assert!(g.peak_flops > 3e14);
+    }
+
+    #[test]
+    fn usable_hbm_honors_utilization() {
+        let c = ClusterSpec::paper_default();
+        assert!((c.usable_hbm() - 64e9).abs() < 1e9);
+    }
+
+    #[test]
+    fn prefill_per_decode_ratio() {
+        let mut c = ClusterSpec::paper_default();
+        c.n_prefill = 3;
+        c.n_decode = 2;
+        assert!((c.prefill_per_decode() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Configuration system: model dimension tables, GPU/cluster topology, and
+//! serving policy (SLOs, offloading, batching).
+//!
+//! Three layers of configuration compose a deployment:
+//!
+//! * [`ModelSpec`] — transformer dimensions (the tiny CPU-path model and the
+//!   Llama-2 7B/13B tables used by the A100-scale simulator), plus derived
+//!   per-kernel FLOP/byte counts that feed the [`crate::gpu_model`]
+//!   roofline.
+//! * [`GpuSpec`] / [`ClusterSpec`] — hardware and topology.
+//! * [`ServingConfig`] — SLOs, the offload policy, batching and bucket
+//!   parameters. Loadable from JSON and overridable from the CLI.
+
+mod cluster;
+mod model;
+mod serving;
+
+pub use cluster::{ClusterSpec, GpuSpec};
+pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
+pub use serving::{OffloadPolicy, ServingConfig, SloConfig};

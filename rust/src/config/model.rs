@@ -1,0 +1,274 @@
+//! Transformer dimension tables and derived per-kernel cost inputs.
+//!
+//! The FLOP/byte formulas here are the single source of truth for the
+//! roofline model ([`crate::gpu_model`]) and for the figure harnesses; they
+//! follow the standard decomposition of a Llama-style decoder layer into
+//! the four kernels the paper profiles (Figs 5/6): QKV projection,
+//! attention, output projection, FFN.
+
+/// Bytes per element for the serving dtype (paper: fp16).
+pub const DTYPE_BYTES_F16: f64 = 2.0;
+/// Bytes per element for the CPU-path tiny model (f32).
+pub const DTYPE_BYTES_F32: f64 = 4.0;
+
+/// Model architecture dimensions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub vocab_size: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub head_dim: u64,
+    pub ffn_hidden: u64,
+    pub max_seq_len: u64,
+    /// Bytes per parameter / activation element (2 = fp16, 4 = f32).
+    pub dtype_bytes: f64,
+}
+
+impl ModelSpec {
+    /// The tiny CPU-path model. MUST match python/compile/model.py::TINY and
+    /// artifacts/manifest.json (checked at runtime by the artifact loader).
+    pub const fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny",
+            vocab_size: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 16,
+            ffn_hidden: 128,
+            max_seq_len: 128,
+            dtype_bytes: DTYPE_BYTES_F32,
+        }
+    }
+
+    /// Llama-2 7B (fp16) — the paper's primary evaluation model.
+    pub const fn llama2_7b() -> Self {
+        ModelSpec {
+            name: "llama2-7b",
+            vocab_size: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            head_dim: 128,
+            ffn_hidden: 11008,
+            max_seq_len: 4096,
+            dtype_bytes: DTYPE_BYTES_F16,
+        }
+    }
+
+    /// Llama-2 13B (fp16).
+    pub const fn llama2_13b() -> Self {
+        ModelSpec {
+            name: "llama2-13b",
+            vocab_size: 32000,
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            head_dim: 128,
+            ffn_hidden: 13824,
+            max_seq_len: 4096,
+            dtype_bytes: DTYPE_BYTES_F16,
+        }
+    }
+
+    /// Total parameter count (Llama architecture, tied-embedding variant for
+    /// the tiny model; untied lm_head for 7B/13B — matches published counts
+    /// to within ~1%).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model;
+        let f = self.ffn_hidden;
+        let per_layer = 4 * d * d          // wq wk wv wo
+            + 3 * d * f                    // gate up down
+            + 2 * d; // two RMSNorm gains
+        let embed = self.vocab_size * d;
+        let head = if self.name == "tiny" { 0 } else { self.vocab_size * d };
+        embed + head + self.n_layers * per_layer + d
+    }
+
+    /// Bytes of HBM the weights occupy.
+    pub fn weight_bytes(&self) -> f64 {
+        self.param_count() as f64 * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token (all layers, K + V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        // MHA: per layer K and V each hold d_model elements per token.
+        (2 * self.n_layers * self.n_heads * self.head_dim) as f64 * self.dtype_bytes
+    }
+
+    // ----- per-kernel FLOP / HBM-byte counts, decode step -----------------
+    // One decode step over a batch of `b` requests whose context lengths sum
+    // to `ctx_total` tokens. All counts are whole-model (× n_layers).
+
+    /// QKV projection: GEMM [b, d] x [d, 3d].
+    pub fn decode_qkv_flops(&self, b: u64) -> f64 {
+        (2 * b * self.d_model * 3 * self.d_model * self.n_layers) as f64
+    }
+    pub fn decode_qkv_bytes(&self, b: u64) -> f64 {
+        // Weight-dominated: 3·d² weights per layer + activations.
+        ((3 * self.d_model * self.d_model + 4 * b * self.d_model) * self.n_layers) as f64
+            * self.dtype_bytes
+    }
+
+    /// Decode attention: q·K^T and p·V over the whole context.
+    pub fn decode_attn_flops(&self, ctx_total: u64) -> f64 {
+        (4 * ctx_total * self.d_model * self.n_layers) as f64
+    }
+    /// The KV-cache read is the attention kernel's (dominant) traffic.
+    pub fn decode_attn_bytes(&self, ctx_total: u64) -> f64 {
+        ctx_total as f64 * self.kv_bytes_per_token()
+    }
+
+    /// Output projection: GEMM [b, d] x [d, d].
+    pub fn decode_oproj_flops(&self, b: u64) -> f64 {
+        (2 * b * self.d_model * self.d_model * self.n_layers) as f64
+    }
+    pub fn decode_oproj_bytes(&self, b: u64) -> f64 {
+        ((self.d_model * self.d_model + 2 * b * self.d_model) * self.n_layers) as f64
+            * self.dtype_bytes
+    }
+
+    /// SwiGLU FFN: three GEMMs [b, d] x [d, f] / [f, d].
+    pub fn decode_ffn_flops(&self, b: u64) -> f64 {
+        (2 * b * 3 * self.d_model * self.ffn_hidden * self.n_layers) as f64
+    }
+    pub fn decode_ffn_bytes(&self, b: u64) -> f64 {
+        ((3 * self.d_model * self.ffn_hidden + 2 * b * (self.d_model + self.ffn_hidden))
+            * self.n_layers) as f64
+            * self.dtype_bytes
+    }
+
+    /// LM head (+ final norm): GEMM [b, d] x [d, V]. Charged once, not per
+    /// layer.
+    pub fn decode_head_flops(&self, b: u64) -> f64 {
+        (2 * b * self.d_model * self.vocab_size) as f64
+    }
+    pub fn decode_head_bytes(&self, b: u64) -> f64 {
+        (self.d_model * self.vocab_size + b * self.vocab_size) as f64 * self.dtype_bytes
+    }
+
+    /// Whole decode step (all kernels).
+    pub fn decode_step_flops(&self, b: u64, ctx_total: u64) -> f64 {
+        self.decode_qkv_flops(b)
+            + self.decode_attn_flops(ctx_total)
+            + self.decode_oproj_flops(b)
+            + self.decode_ffn_flops(b)
+            + self.decode_head_flops(b)
+    }
+    pub fn decode_step_bytes(&self, b: u64, ctx_total: u64) -> f64 {
+        self.decode_qkv_bytes(b)
+            + self.decode_attn_bytes(ctx_total)
+            + self.decode_oproj_bytes(b)
+            + self.decode_ffn_bytes(b)
+            + self.decode_head_bytes(b)
+    }
+
+    // ----- prefill (prompt of p tokens, batch folded into p) --------------
+
+    pub fn prefill_qkv_flops(&self, p: u64) -> f64 {
+        self.decode_qkv_flops(p)
+    }
+    /// Prefill causal attention: ~p²·d MACs per layer (causal halves it).
+    pub fn prefill_attn_flops(&self, p: u64) -> f64 {
+        (2 * p * p * self.d_model * self.n_layers) as f64
+    }
+    pub fn prefill_attn_bytes(&self, p: u64) -> f64 {
+        // Flash attention streams K/V once per q-block; approximate one full
+        // KV pass plus q/o traffic.
+        (p as f64 * self.kv_bytes_per_token())
+            + (2 * p * self.d_model * self.n_layers) as f64 * self.dtype_bytes
+    }
+    pub fn prefill_oproj_flops(&self, p: u64) -> f64 {
+        self.decode_oproj_flops(p)
+    }
+    pub fn prefill_ffn_flops(&self, p: u64) -> f64 {
+        self.decode_ffn_flops(p)
+    }
+
+    /// Total prefill FLOPs for a prompt of `p` tokens (the standard ≈2·N·p
+    /// plus quadratic attention).
+    pub fn prefill_flops(&self, p: u64) -> f64 {
+        self.prefill_qkv_flops(p)
+            + self.prefill_attn_flops(p)
+            + self.prefill_oproj_flops(p)
+            + self.prefill_ffn_flops(p)
+            + self.decode_head_flops(1)
+    }
+
+    /// HBM traffic of a prefill: one weights pass (compute-bound ⇒ weights
+    /// are re-read per layer, activations stay resident) plus KV writes.
+    pub fn prefill_bytes(&self, p: u64) -> f64 {
+        self.weight_bytes() + p as f64 * self.kv_bytes_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published() {
+        // Llama-2 7B: 6.74e9 params; 13B: 13.0e9. Allow 2%.
+        let p7 = ModelSpec::llama2_7b().param_count() as f64;
+        assert!((p7 - 6.74e9).abs() / 6.74e9 < 0.02, "7B params = {p7:.3e}");
+        let p13 = ModelSpec::llama2_13b().param_count() as f64;
+        assert!((p13 - 13.0e9).abs() / 13.0e9 < 0.02, "13B params = {p13:.3e}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_7b() {
+        // Published: 0.5 MiB/token for Llama-2 7B fp16.
+        let kv = ModelSpec::llama2_7b().kv_bytes_per_token();
+        assert_eq!(kv, 2.0 * 32.0 * 4096.0 * 2.0);
+        assert!((kv - 524288.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn tiny_matches_manifest_dims() {
+        let t = ModelSpec::tiny();
+        assert_eq!(t.d_model, t.n_heads * t.head_dim);
+        assert_eq!(t.max_seq_len, 128);
+        assert_eq!(t.n_layers, 2);
+    }
+
+    #[test]
+    fn decode_attn_dominates_bytes_at_long_context() {
+        // The paper's Fig 3 premise: attention's KV read dominates decode
+        // traffic as batch·seq grows.
+        let m = ModelSpec::llama2_7b();
+        let b = 80;
+        let ctx = b * 1024;
+        let attn = m.decode_attn_bytes(ctx);
+        let rest = m.decode_step_bytes(b, ctx) - attn;
+        assert!(attn > 2.0 * rest, "attn={attn:.3e} rest={rest:.3e}");
+    }
+
+    #[test]
+    fn prefill_flops_scale_quadratically_eventually() {
+        let m = ModelSpec::llama2_7b();
+        let f1 = m.prefill_flops(1024);
+        let f2 = m.prefill_flops(2048);
+        // Doubling p more than doubles FLOPs (linear + quadratic terms).
+        assert!(f2 > 2.0 * f1);
+        assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn decode_step_flops_monotone_in_batch() {
+        let m = ModelSpec::llama2_13b();
+        let mut prev = 0.0;
+        for b in [1u64, 2, 8, 32, 128] {
+            let f = m.decode_step_flops(b, b * 512);
+            assert!(f > prev);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn weight_bytes_fit_a100() {
+        assert!(ModelSpec::llama2_7b().weight_bytes() < 80e9 * 0.2);
+        assert!(ModelSpec::llama2_13b().weight_bytes() < 80e9 * 0.4);
+    }
+}

@@ -1,0 +1,251 @@
+//! Serving policy: SLOs, offload policy, batching and bucketing parameters.
+
+/// Latency service-level objectives (the paper's TTFT / TPOT targets).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Time-to-first-token target, seconds.
+    pub ttft_s: f64,
+    /// Time-per-output-token target, seconds.
+    pub tpot_s: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        // Interactive chatbot targets commonly used by PD-disaggregation
+        // papers (DistServe-style): 1 s TTFT, 100 ms TPOT.
+        SloConfig { ttft_s: 1.0, tpot_s: 0.1 }
+    }
+}
+
+/// How the proxy decides which requests offload their decode attention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OffloadPolicy {
+    /// Vanilla PD disaggregation (the vLLM baseline): never offload.
+    Disabled,
+    /// Offload a fixed fraction of requests round-robin — the naive
+    /// strategy Fig 15 sweeps and DESIGN.md ablation 3 compares against.
+    FixedRatio(f64),
+    /// The paper's Algorithm 1: admit offloads while within the
+    /// load-derived upper bound OB(n, B_max), conditions C1/C2.
+    LoadAware,
+    /// Algorithm 1 with the stricter C1 (Σ max_token based — see the
+    /// scheduler's fidelity note). More conservative admissions; compared
+    /// in `benches/ablation_admission.rs`.
+    LoadAwareStrict,
+}
+
+impl OffloadPolicy {
+    pub fn is_enabled(&self) -> bool {
+        !matches!(self, OffloadPolicy::Disabled)
+            && !matches!(self, OffloadPolicy::FixedRatio(r) if *r <= 0.0)
+    }
+}
+
+/// Full serving configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub slo: SloConfig,
+    pub offload: OffloadPolicy,
+    /// Max requests per decode batch (scheduler cap; HBM may bind earlier).
+    pub max_batch: usize,
+    /// Max prompt tokens batched into one prefill step.
+    pub max_prefill_tokens: usize,
+    /// KV block size in tokens (vLLM uses 16).
+    pub kv_block_tokens: usize,
+    /// Batch-bucket sizes captured for the decode path — the first
+    /// dimension (C_d) of the paper's 2-D CUDA-graph grid. Must be a
+    /// subset of the buckets in artifacts/manifest.json when running the
+    /// real CPU path.
+    pub decode_buckets: Vec<usize>,
+    /// Bucket sizes for the offloaded-attention dimension (C_o).
+    pub offload_buckets: Vec<usize>,
+    /// Offline-profiled `B_max`: largest batch for which the non-attention
+    /// kernels stay memory-bound (Eq. 2). `None` ⇒ derive from the GPU
+    /// model at startup.
+    pub b_max_override: Option<usize>,
+    /// Token capacity of the attention executor's offload KV pool on the
+    /// real path (`HBM_pi` in Eq 1). `None` = unbounded (the tiny model
+    /// never fills host memory); tests use small budgets to exercise the
+    /// admission fallback.
+    pub executor_kv_capacity_tokens: Option<usize>,
+    /// Token capacity of the decode instance's local KV pool (`HBM_d`).
+    pub decode_kv_capacity_tokens: Option<usize>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            slo: SloConfig::default(),
+            offload: OffloadPolicy::LoadAware,
+            max_batch: 256,
+            max_prefill_tokens: 8192,
+            kv_block_tokens: 16,
+            decode_buckets: vec![1, 2, 4, 8],
+            offload_buckets: vec![1, 2, 4, 8],
+            b_max_override: None,
+            executor_kv_capacity_tokens: None,
+            decode_kv_capacity_tokens: None,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Baseline (vLLM-style PD disaggregation, no offloading).
+    pub fn baseline() -> Self {
+        ServingConfig { offload: OffloadPolicy::Disabled, ..Default::default() }
+    }
+
+    /// Load from a JSON file (hand-rolled parser; see `util::json`).
+    pub fn from_json_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        use crate::util::json::Json;
+        let v = Json::parse(text)?;
+        let mut cfg = ServingConfig::default();
+        if let Some(slo) = v.get("slo") {
+            if let Some(t) = slo.get("ttft_s").and_then(Json::as_f64) {
+                cfg.slo.ttft_s = t;
+            }
+            if let Some(t) = slo.get("tpot_s").and_then(Json::as_f64) {
+                cfg.slo.tpot_s = t;
+            }
+        }
+        if let Some(off) = v.get("offload") {
+            cfg.offload = match off {
+                Json::Str(s) if s == "disabled" => OffloadPolicy::Disabled,
+                Json::Str(s) if s == "load_aware" => OffloadPolicy::LoadAware,
+                Json::Str(s) if s == "load_aware_strict" => OffloadPolicy::LoadAwareStrict,
+                Json::Num(r) => OffloadPolicy::FixedRatio(*r),
+                other => anyhow::bail!("bad offload policy: {other}"),
+            };
+        }
+        let usize_field = |key: &str, out: &mut usize| {
+            if let Some(n) = v.get(key).and_then(Json::as_u64) {
+                *out = n as usize;
+            }
+        };
+        usize_field("max_batch", &mut cfg.max_batch);
+        usize_field("max_prefill_tokens", &mut cfg.max_prefill_tokens);
+        usize_field("kv_block_tokens", &mut cfg.kv_block_tokens);
+        let bucket_field = |key: &str, out: &mut Vec<usize>| -> crate::Result<()> {
+            if let Some(arr) = v.get(key).and_then(Json::as_arr) {
+                *out = arr
+                    .iter()
+                    .map(|b| {
+                        b.as_u64()
+                            .map(|n| n as usize)
+                            .ok_or_else(|| anyhow::anyhow!("bad bucket in {key}"))
+                    })
+                    .collect::<crate::Result<_>>()?;
+            }
+            Ok(())
+        };
+        bucket_field("decode_buckets", &mut cfg.decode_buckets)?;
+        bucket_field("offload_buckets", &mut cfg.offload_buckets)?;
+        if let Some(n) = v.get("b_max").and_then(Json::as_u64) {
+            cfg.b_max_override = Some(n as usize);
+        }
+        if let Some(n) = v.get("executor_kv_tokens").and_then(Json::as_u64) {
+            cfg.executor_kv_capacity_tokens = Some(n as usize);
+        }
+        if let Some(n) = v.get("decode_kv_tokens").and_then(Json::as_u64) {
+            cfg.decode_kv_capacity_tokens = Some(n as usize);
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        let mut slo = BTreeMap::new();
+        slo.insert("ttft_s".into(), Json::Num(self.slo.ttft_s));
+        slo.insert("tpot_s".into(), Json::Num(self.slo.tpot_s));
+        o.insert("slo".into(), Json::Obj(slo));
+        o.insert(
+            "offload".into(),
+            match self.offload {
+                OffloadPolicy::Disabled => Json::Str("disabled".into()),
+                OffloadPolicy::LoadAware => Json::Str("load_aware".into()),
+                OffloadPolicy::LoadAwareStrict => Json::Str("load_aware_strict".into()),
+                OffloadPolicy::FixedRatio(r) => Json::Num(r),
+            },
+        );
+        o.insert("max_batch".into(), Json::Num(self.max_batch as f64));
+        o.insert("max_prefill_tokens".into(), Json::Num(self.max_prefill_tokens as f64));
+        o.insert("kv_block_tokens".into(), Json::Num(self.kv_block_tokens as f64));
+        o.insert(
+            "decode_buckets".into(),
+            Json::Arr(self.decode_buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        o.insert(
+            "offload_buckets".into(),
+            Json::Arr(self.offload_buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        if let Some(b) = self.b_max_override {
+            o.insert("b_max".into(), Json::Num(b as f64));
+        }
+        if let Some(n) = self.executor_kv_capacity_tokens {
+            o.insert("executor_kv_tokens".into(), Json::Num(n as f64));
+        }
+        if let Some(n) = self.decode_kv_capacity_tokens {
+            o.insert("decode_kv_tokens".into(), Json::Num(n as f64));
+        }
+        Json::Obj(o).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_load_aware() {
+        assert_eq!(ServingConfig::default().offload, OffloadPolicy::LoadAware);
+        assert!(ServingConfig::default().offload.is_enabled());
+    }
+
+    #[test]
+    fn baseline_disables_offload() {
+        assert!(!ServingConfig::baseline().offload.is_enabled());
+    }
+
+    #[test]
+    fn fixed_zero_ratio_counts_as_disabled() {
+        assert!(!OffloadPolicy::FixedRatio(0.0).is_enabled());
+        assert!(OffloadPolicy::FixedRatio(0.7).is_enabled());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            ServingConfig::default(),
+            ServingConfig::baseline(),
+            ServingConfig { offload: OffloadPolicy::FixedRatio(0.7), ..Default::default() },
+        ] {
+            let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn json_partial_overrides_defaults() {
+        let cfg = ServingConfig::from_json(r#"{"max_batch": 32, "offload": 0.5}"#).unwrap();
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.offload, OffloadPolicy::FixedRatio(0.5));
+        assert_eq!(cfg.kv_block_tokens, ServingConfig::default().kv_block_tokens);
+    }
+
+    #[test]
+    fn json_file_load(){
+        let dir = std::env::temp_dir().join("adrenaline_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, ServingConfig::baseline().to_json()).unwrap();
+        let cfg = ServingConfig::from_json_file(&path).unwrap();
+        assert_eq!(cfg.offload, OffloadPolicy::Disabled);
+    }
+}

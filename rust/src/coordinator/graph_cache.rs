@@ -1,0 +1,204 @@
+//! The 2-D executable-bucket cache — the paper's two-dimensional CUDA
+//! graph (§3.2.2), re-expressed for the AOT/PJRT runtime.
+//!
+//! The paper captures CUDA graphs over a grid `(C_d, C_o)` of (local decode
+//! batch, offloaded attention batch) capacities, limits the grid with
+//! configurable intervals to bound storage, and per step selects the
+//! smallest captured graph covering both sub-batches. Here each "graph" is
+//! the pair of AOT-compiled executables `attn_b{C_d}` / `attn_b{C_o}` plus
+//! the bucket-sized non-attention executables — the selection problem and
+//! the storage trade-off are identical.
+
+/// A selected bucket pair: the step runs local attention padded to
+/// `local`, offloaded attention padded to `offload`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BucketPair {
+    pub local: usize,
+    pub offload: usize,
+}
+
+/// Statistics for observability/ablation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GraphCacheStats {
+    pub selections: u64,
+    /// Padded slots summed over selections (the cost of bucketing).
+    pub padded_slots: u64,
+    /// Requested slots summed over selections.
+    pub used_slots: u64,
+}
+
+/// The capture grid + selector.
+#[derive(Debug, Clone)]
+pub struct GraphCache {
+    /// Captured capacities for the local dimension (C_d), ascending.
+    local_buckets: Vec<usize>,
+    /// Captured capacities for the offload dimension (C_o), ascending.
+    /// Always includes 0 (steps with nothing offloaded).
+    offload_buckets: Vec<usize>,
+    stats: GraphCacheStats,
+}
+
+impl GraphCache {
+    /// Build from the configured bucket lists. `interval_limit` caps the
+    /// total number of captured pairs (the paper's configurable interval):
+    /// when `|C_d| * |C_o|` exceeds it, coarser grids are used (every k-th
+    /// bucket kept, largest always retained).
+    pub fn new(
+        local_buckets: &[usize],
+        offload_buckets: &[usize],
+        interval_limit: Option<usize>,
+    ) -> Self {
+        assert!(!local_buckets.is_empty(), "need at least one local bucket");
+        // Both dimensions include 0: a step may have nothing offloaded, or
+        // (at high offload ratios) nothing local.
+        let mut local: Vec<usize> = local_buckets.to_vec();
+        local.push(0);
+        local.sort_unstable();
+        local.dedup();
+        let mut offload: Vec<usize> = offload_buckets.to_vec();
+        offload.push(0);
+        offload.sort_unstable();
+        offload.dedup();
+
+        if let Some(limit) = interval_limit {
+            assert!(limit >= 2, "interval limit must allow at least a 2x1 grid");
+            while local.len() * offload.len() > limit {
+                // Thin the larger dimension, keeping first and last.
+                let v = if local.len() >= offload.len() { &mut local } else { &mut offload };
+                if v.len() <= 2 {
+                    break;
+                }
+                let keep_last = *v.last().unwrap();
+                let thinned: Vec<usize> =
+                    v.iter().copied().step_by(2).chain(std::iter::once(keep_last)).collect();
+                *v = thinned;
+                v.sort_unstable();
+                v.dedup();
+            }
+        }
+        GraphCache { local_buckets: local, offload_buckets: offload, stats: Default::default() }
+    }
+
+    pub fn grid_size(&self) -> usize {
+        self.local_buckets.len() * self.offload_buckets.len()
+    }
+
+    pub fn local_buckets(&self) -> &[usize] {
+        &self.local_buckets
+    }
+
+    pub fn offload_buckets(&self) -> &[usize] {
+        &self.offload_buckets
+    }
+
+    pub fn stats(&self) -> GraphCacheStats {
+        self.stats
+    }
+
+    pub fn max_local(&self) -> usize {
+        *self.local_buckets.last().unwrap()
+    }
+
+    pub fn max_offload(&self) -> usize {
+        *self.offload_buckets.last().unwrap()
+    }
+
+    /// Select the smallest captured pair covering `(local, offload)`
+    /// (§3.2.2: "the smallest two-dimensional CUDA graph that accommodates
+    /// both local and remote attention batches"). Returns `None` if either
+    /// dimension exceeds the grid (the scheduler must split the step).
+    pub fn select(&mut self, local: usize, offload: usize) -> Option<BucketPair> {
+        let l = *self.local_buckets.iter().find(|&&b| b >= local)?;
+        let o = *self.offload_buckets.iter().find(|&&b| b >= offload)?;
+        self.stats.selections += 1;
+        self.stats.used_slots += (local + offload) as u64;
+        self.stats.padded_slots += ((l - local) + (o - offload)) as u64;
+        Some(BucketPair { local: l, offload: o })
+    }
+
+    /// Fraction of compute wasted to padding so far (ablation metric for
+    /// bucket-interval choices).
+    pub fn padding_overhead(&self) -> f64 {
+        let total = self.stats.used_slots + self.stats.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.padded_slots as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_smallest_covering_pair() {
+        let mut g = GraphCache::new(&[1, 2, 4, 8], &[1, 2, 4, 8], None);
+        assert_eq!(g.select(3, 1), Some(BucketPair { local: 4, offload: 1 }));
+        assert_eq!(g.select(1, 0), Some(BucketPair { local: 1, offload: 0 }));
+        assert_eq!(g.select(8, 8), Some(BucketPair { local: 8, offload: 8 }));
+        assert_eq!(g.select(5, 5), Some(BucketPair { local: 8, offload: 8 }));
+    }
+
+    #[test]
+    fn oversize_returns_none() {
+        let mut g = GraphCache::new(&[1, 2, 4], &[1, 2], None);
+        assert_eq!(g.select(5, 0), None);
+        assert_eq!(g.select(1, 3), None);
+    }
+
+    #[test]
+    fn zero_offload_bucket_always_present() {
+        let g = GraphCache::new(&[1], &[4], None);
+        assert!(g.offload_buckets().contains(&0));
+    }
+
+    #[test]
+    fn interval_limit_thins_grid_keeping_extremes() {
+        let g = GraphCache::new(
+            &[1, 2, 3, 4, 5, 6, 7, 8],
+            &[1, 2, 3, 4, 5, 6, 7, 8],
+            Some(20),
+        );
+        assert!(g.grid_size() <= 20, "grid = {}", g.grid_size());
+        assert_eq!(g.max_local(), 8, "largest bucket must survive thinning");
+        assert_eq!(g.max_offload(), 8);
+        assert!(g.local_buckets().contains(&0), "smallest bucket survives");
+    }
+
+    #[test]
+    fn padding_accounting() {
+        let mut g = GraphCache::new(&[4], &[4], None);
+        g.select(3, 2).unwrap(); // 5 used, 3 padded
+        assert_eq!(g.stats().used_slots, 5);
+        assert_eq!(g.stats().padded_slots, 3);
+        assert!((g.padding_overhead() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padding_zero_on_exact_hits() {
+        let mut g = GraphCache::new(&[1, 2, 4], &[1, 2, 4], None);
+        g.select(2, 4).unwrap();
+        assert_eq!(g.padding_overhead(), 0.0);
+    }
+
+    #[test]
+    fn property_selection_covers_and_is_minimal() {
+        crate::util::prop::check("graph_cache_minimal_cover", 200, |rng| {
+            let mut g = GraphCache::new(&[1, 2, 4, 8, 16], &[1, 2, 4, 8, 16], None);
+            let local = rng.range_usize(1, 17);
+            let offload = rng.range_usize(0, 17);
+            let pair = g.select(local, offload).unwrap();
+            // Covers.
+            assert!(pair.local >= local && pair.offload >= offload);
+            // Minimal: no captured bucket strictly between need and choice.
+            for &b in g.local_buckets() {
+                assert!(!(b >= local && b < pair.local), "non-minimal local bucket {b}");
+            }
+            for &b in g.offload_buckets() {
+                assert!(!(b >= offload && b < pair.offload), "non-minimal offload bucket {b}");
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's system contribution: routing, load-aware offload
+//! scheduling (Algorithm 1), batching, and the 2-D executable-bucket
+//! cache. Populated incrementally; see DESIGN.md §3 (S12, S16).
+
+pub mod bounds;
+pub mod graph_cache;
+pub mod proxy;
+pub mod scheduler;
+
+pub use bounds::OffloadBounds;
+pub use graph_cache::GraphCache;
+pub use proxy::{Proxy, RouteDecision};
+pub use scheduler::{OffloadScheduler, RuntimeMetadata};

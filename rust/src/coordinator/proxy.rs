@@ -1,0 +1,258 @@
+//! The proxy: global request router + the home of the load-aware
+//! offloading scheduler (§3.4.2).
+//!
+//! The proxy sees every request and response, so it can cheaply maintain
+//! the runtime metadata (active requests, sequence lengths) that
+//! Algorithm 1 consumes, track `B_TPOT` online, and rescale `OB_mem`
+//! whenever prefill instances join or leave.
+
+use crate::config::OffloadPolicy;
+use crate::workload::{Request, RequestId};
+
+use super::bounds::OffloadBounds;
+use super::scheduler::{OffloadDecision, OffloadScheduler, ReqMeta, RuntimeMetadata};
+
+/// Routing outcome for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    /// Which prefill instance runs the prompt.
+    pub prefill_instance: usize,
+    /// Which decode instance owns the request.
+    pub decode_instance: usize,
+    /// Whether (and why) its decode attention is offloaded.
+    pub offload: OffloadDecision,
+}
+
+/// The global proxy/scheduler.
+#[derive(Debug)]
+pub struct Proxy {
+    scheduler: OffloadScheduler,
+    /// Per-decode-instance runtime metadata.
+    meta: Vec<RuntimeMetadata>,
+    n_prefill: usize,
+    rr_prefill: usize,
+    /// Decision counters: (c1, c2, local).
+    pub decision_counts: (u64, u64, u64),
+}
+
+impl Proxy {
+    pub fn new(policy: OffloadPolicy, bounds: OffloadBounds, n_prefill: usize, n_decode: usize) -> Self {
+        assert!(n_prefill >= 1 && n_decode >= 1);
+        Proxy {
+            scheduler: OffloadScheduler::new(policy, bounds),
+            meta: vec![RuntimeMetadata::new(); n_decode],
+            n_prefill,
+            rr_prefill: 0,
+            decision_counts: (0, 0, 0),
+        }
+    }
+
+    pub fn n_decode(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn n_prefill(&self) -> usize {
+        self.n_prefill
+    }
+
+    pub fn bounds(&self) -> &OffloadBounds {
+        &self.scheduler.bounds
+    }
+
+    pub fn metadata(&self, decode_instance: usize) -> &RuntimeMetadata {
+        &self.meta[decode_instance]
+    }
+
+    /// Route a new request: prefill round-robin, decode to the
+    /// least-loaded instance (by resident tokens), offload per Algorithm 1
+    /// against that instance's metadata. The request is admitted into the
+    /// metadata immediately (the §3.2.1 "hint": the attention executor
+    /// learns about offloaded requests before their first decode step).
+    pub fn route(&mut self, req: &Request) -> RouteDecision {
+        let prefill_instance = self.rr_prefill;
+        self.rr_prefill = (self.rr_prefill + 1) % self.n_prefill;
+
+        let decode_instance = self
+            .meta
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, m)| m.decode_used_tokens() + m.attn_used_tokens())
+            .map(|(i, _)| i)
+            .expect("at least one decode instance");
+
+        let rm = ReqMeta { used_token: req.prompt_len, max_token: req.max_token() };
+        let offload = self.scheduler.need_offload(rm, &self.meta[decode_instance]);
+        match offload {
+            OffloadDecision::C1 => self.decision_counts.0 += 1,
+            OffloadDecision::C2 => self.decision_counts.1 += 1,
+            OffloadDecision::Local => self.decision_counts.2 += 1,
+        }
+        self.meta[decode_instance].admit(req.id, rm, offload.offloaded());
+        RouteDecision { prefill_instance, decode_instance, offload }
+    }
+
+    /// A decode step emitted one token for `id` on `instance`.
+    pub fn on_token(&mut self, instance: usize, id: RequestId) {
+        self.meta[instance].on_token(id);
+    }
+
+    /// Request finished (or was cancelled): drop its metadata.
+    pub fn on_finished(&mut self, instance: usize, id: RequestId) {
+        self.meta[instance].remove(id);
+    }
+
+    /// A request was preempted on the decode instance: it leaves the
+    /// running set until re-admitted (recompute path re-routes it).
+    pub fn on_preempted(&mut self, instance: usize, id: RequestId) {
+        self.meta[instance].remove(id);
+    }
+
+    /// Online B_TPOT refresh (§3.4.2): the proxy watches observed decode
+    /// batch sizes that met the TPOT SLO and feeds the max back in.
+    pub fn observe_b_tpot(&mut self, b_tpot: usize) {
+        self.scheduler.bounds.set_b_tpot(b_tpot);
+    }
+
+    /// Prefill pool grew/shrank: rescale OB_mem (Eq 1 is linear in n).
+    pub fn set_prefill_instances(&mut self, n: usize) {
+        assert!(n >= 1);
+        let old = self.n_prefill as f64;
+        self.n_prefill = n;
+        self.rr_prefill %= n;
+        self.scheduler.bounds.rescale_ob_mem(old, n as f64);
+    }
+
+    /// Offloaded fraction among currently-running requests (Fig 15's knob,
+    /// observed).
+    pub fn offloaded_fraction(&self) -> f64 {
+        let (mut offl, mut total) = (0usize, 0usize);
+        for m in &self.meta {
+            offl += m.offloaded_count();
+            total += m.total_count();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            offl as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn bounds() -> OffloadBounds {
+        OffloadBounds { ob_mem: 0.7, b_max: 160, b_tpot: 80 }
+    }
+
+    fn req(id: u64, prompt: usize, output: usize) -> Request {
+        Request::new(id, 0.0, prompt, output)
+    }
+
+    #[test]
+    fn round_robin_prefill_assignment() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 3, 1);
+        let picks: Vec<usize> =
+            (0..6).map(|i| p.route(&req(i, 10, 10)).prefill_instance).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn decode_goes_to_least_loaded() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 2);
+        let d0 = p.route(&req(0, 1000, 10)).decode_instance;
+        let d1 = p.route(&req(1, 10, 10)).decode_instance;
+        assert_ne!(d0, d1, "second request must avoid the loaded instance");
+        // Third: instance with the 10-token request is lighter.
+        let d2 = p.route(&req(2, 10, 10)).decode_instance;
+        assert_eq!(d2, d1);
+    }
+
+    #[test]
+    fn offload_decisions_tracked_in_metadata() {
+        let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 1, 1);
+        // Seed local load so the budget is meaningful.
+        let r0 = p.route(&req(0, 500, 100));
+        assert_eq!(r0.offload, OffloadDecision::Local, "empty decode => no budget");
+        let r1 = p.route(&req(1, 50, 50));
+        assert!(r1.offload.offloaded(), "small request under 0.7*500 budget");
+        assert!(p.metadata(0).is_offloaded(1));
+        assert_eq!(p.offloaded_fraction(), 0.5);
+    }
+
+    #[test]
+    fn finish_and_preempt_clear_metadata() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 1);
+        p.route(&req(0, 10, 10));
+        p.route(&req(1, 10, 10));
+        p.on_token(0, 0);
+        assert_eq!(p.metadata(0).decode_used_tokens(), 21);
+        p.on_finished(0, 0);
+        p.on_preempted(0, 1);
+        assert_eq!(p.metadata(0).total_count(), 0);
+    }
+
+    #[test]
+    fn prefill_scaling_rescales_ob_mem() {
+        let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 2, 1);
+        let before = p.bounds().ob_mem;
+        p.set_prefill_instances(4);
+        assert!((p.bounds().ob_mem / before - 2.0).abs() < 1e-9);
+        assert_eq!(p.n_prefill(), 4);
+    }
+
+    #[test]
+    fn property_requests_conserved() {
+        prop::check("proxy_conserves_requests", 50, |rng| {
+            let n_decode = rng.range_usize(1, 4);
+            let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 1, n_decode);
+            let n = rng.range_usize(1, 40);
+            let mut homes = Vec::new();
+            for id in 0..n as u64 {
+                let r = req(id, rng.range_usize(1, 500), rng.range_usize(1, 500));
+                homes.push(p.route(&r).decode_instance);
+            }
+            let total: usize = (0..n_decode).map(|i| p.metadata(i).total_count()).sum();
+            assert_eq!(total, n, "every routed request is tracked exactly once");
+            // Finish them all; metadata must drain to zero.
+            for (id, &home) in homes.iter().enumerate() {
+                p.on_finished(home, id as u64);
+            }
+            let total: usize = (0..n_decode).map(|i| p.metadata(i).total_count()).sum();
+            assert_eq!(total, 0);
+        });
+    }
+
+    #[test]
+    fn property_offload_never_without_budget() {
+        prop::check("offload_respects_bound", 100, |rng| {
+            let ob_mem = rng.f64();
+            let b = OffloadBounds {
+                ob_mem,
+                b_max: 100 + rng.range_usize(0, 100),
+                b_tpot: 1 + rng.range_usize(0, 99),
+            };
+            let mut p = Proxy::new(OffloadPolicy::LoadAware, b, 1, 1);
+            for id in 0..30u64 {
+                let r = req(id, rng.range_usize(1, 300), rng.range_usize(1, 300));
+                let d = p.route(&r);
+                if d.offload.offloaded() {
+                    // Invariant: after admission the offloaded token share
+                    // is within OB (C1) or the batch-count ratio is (C2).
+                    let m = p.metadata(0);
+                    let ob = p.bounds().ob();
+                    let within_tokens = (m.attn_used_tokens() as f64)
+                        <= (m.decode_used_tokens() as f64) * ob + 1e-9;
+                    let within_counts = (m.offloaded_count() as f64)
+                        <= (m.local_count() as f64) * ob + 1.0;
+                    assert!(
+                        within_tokens || within_counts,
+                        "offload admitted beyond both bounds (ob={ob})"
+                    );
+                }
+            }
+        });
+    }
+}

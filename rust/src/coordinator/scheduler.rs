@@ -1,0 +1,315 @@
+//! Load-aware offloading scheduling — the paper's Algorithm 1 plus the
+//! runtime metadata it consumes (§3.4.2–§3.4.3).
+//!
+//! The proxy tracks, per decode instance, the set of locally-running
+//! requests (`LR`) and the set whose attention is offloaded (`OR`), with
+//! each request's `used_token` (current sequence length) and `max_token`
+//! (prompt + max output). A new request's attention is offloaded iff
+//! condition C1 or C2 holds, keeping the offloaded share within
+//! `OB(n, B_max)`.
+//!
+//! Fidelity note: Algorithm 1's listing computes `attn_max_tokens`
+//! (line 2) but tests `attn_used_tokens + req.max_token` in C1 (line 5).
+//! We implement the listing as printed; `attn_max_tokens` is still
+//! tracked and exposed for the stricter variant (ablation
+//! `ablation_admission` compares both).
+
+use std::collections::HashMap;
+
+use crate::config::OffloadPolicy;
+use crate::workload::RequestId;
+
+use super::bounds::OffloadBounds;
+
+/// Per-request runtime metadata the proxy keeps (§3.4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReqMeta {
+    /// Current sequence length (prompt + generated so far).
+    pub used_token: usize,
+    /// Prompt + maximum output length.
+    pub max_token: usize,
+}
+
+/// Runtime metadata for one decode instance and its attention executor.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeMetadata {
+    /// Locally-running requests (attention on the decode instance).
+    local: HashMap<RequestId, ReqMeta>,
+    /// Requests whose attention is offloaded.
+    offloaded: HashMap<RequestId, ReqMeta>,
+}
+
+impl RuntimeMetadata {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn local_count(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn offloaded_count(&self) -> usize {
+        self.offloaded.len()
+    }
+
+    pub fn total_count(&self) -> usize {
+        self.local.len() + self.offloaded.len()
+    }
+
+    /// Σ used_token over locally-running requests.
+    pub fn decode_used_tokens(&self) -> usize {
+        self.local.values().map(|m| m.used_token).sum()
+    }
+
+    /// Σ used_token over offloaded requests.
+    pub fn attn_used_tokens(&self) -> usize {
+        self.offloaded.values().map(|m| m.used_token).sum()
+    }
+
+    /// Σ max_token over offloaded requests (Algorithm 1 line 2).
+    pub fn attn_max_tokens(&self) -> usize {
+        self.offloaded.values().map(|m| m.max_token).sum()
+    }
+
+    pub fn is_offloaded(&self, id: RequestId) -> bool {
+        self.offloaded.contains_key(&id)
+    }
+
+    pub fn admit(&mut self, id: RequestId, meta: ReqMeta, offloaded: bool) {
+        debug_assert!(!self.local.contains_key(&id) && !self.offloaded.contains_key(&id));
+        if offloaded {
+            self.offloaded.insert(id, meta);
+        } else {
+            self.local.insert(id, meta);
+        }
+    }
+
+    /// A decode step produced one token for `id`.
+    pub fn on_token(&mut self, id: RequestId) {
+        if let Some(m) = self.local.get_mut(&id).or_else(|| self.offloaded.get_mut(&id)) {
+            m.used_token += 1;
+        }
+    }
+
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        self.local.remove(&id).is_some() || self.offloaded.remove(&id).is_some()
+    }
+
+    pub fn local_ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.local.keys().copied()
+    }
+
+    pub fn offloaded_ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.offloaded.keys().copied()
+    }
+}
+
+/// Why the scheduler admitted (or refused) an offload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadDecision {
+    /// Offload admitted by condition C1 (worst-case length fits the bound).
+    C1,
+    /// Offload admitted by condition C2 (current lengths + batch ratio fit).
+    C2,
+    /// Keep attention local.
+    Local,
+}
+
+impl OffloadDecision {
+    pub fn offloaded(&self) -> bool {
+        !matches!(self, OffloadDecision::Local)
+    }
+}
+
+/// The load-aware offloading scheduler (Algorithm 1).
+#[derive(Debug)]
+pub struct OffloadScheduler {
+    pub policy: OffloadPolicy,
+    pub bounds: OffloadBounds,
+    /// Round-robin counter for the FixedRatio fallback policy.
+    fixed_acc: f64,
+}
+
+impl OffloadScheduler {
+    pub fn new(policy: OffloadPolicy, bounds: OffloadBounds) -> Self {
+        OffloadScheduler { policy, bounds, fixed_acc: 0.0 }
+    }
+
+    /// Decide whether `req`'s decode attention should be offloaded, given
+    /// the decode instance's current runtime metadata.
+    pub fn need_offload(&mut self, req: ReqMeta, meta: &RuntimeMetadata) -> OffloadDecision {
+        match self.policy {
+            OffloadPolicy::Disabled => OffloadDecision::Local,
+            OffloadPolicy::FixedRatio(r) => {
+                // Deterministic round-robin at ratio r (the naive baseline
+                // Fig 15 sweeps): offload whenever the accumulated quota
+                // crosses 1.
+                self.fixed_acc += r.clamp(0.0, 1.0);
+                if self.fixed_acc >= 1.0 {
+                    self.fixed_acc -= 1.0;
+                    OffloadDecision::C1
+                } else {
+                    OffloadDecision::Local
+                }
+            }
+            OffloadPolicy::LoadAware => self.algorithm1(req, meta),
+            OffloadPolicy::LoadAwareStrict => self.algorithm1_strict(req, meta),
+        }
+    }
+
+    /// Algorithm 1, as printed in the paper.
+    fn algorithm1(&self, req: ReqMeta, meta: &RuntimeMetadata) -> OffloadDecision {
+        let ob = self.bounds.ob();
+        if ob <= 0.0 {
+            return OffloadDecision::Local;
+        }
+        let attn_used = meta.attn_used_tokens() as f64;
+        let decode_used = meta.decode_used_tokens() as f64;
+        let budget = decode_used * ob;
+
+        // C1: even the request's maximal length fits within the bound.
+        if attn_used + (req.max_token as f64) < budget {
+            return OffloadDecision::C1;
+        }
+        // C2: current lengths fit AND the attention batch ratio stays
+        // within the bound.
+        let or_count = meta.offloaded_count() as f64;
+        let lr_count = meta.local_count() as f64;
+        if attn_used + (req.used_token as f64) < budget && or_count + 1.0 < lr_count * ob {
+            return OffloadDecision::C2;
+        }
+        OffloadDecision::Local
+    }
+
+    /// The stricter C1 variant using Σ max_token (see module docs).
+    pub fn algorithm1_strict(&self, req: ReqMeta, meta: &RuntimeMetadata) -> OffloadDecision {
+        let ob = self.bounds.ob();
+        if ob <= 0.0 {
+            return OffloadDecision::Local;
+        }
+        let budget = meta.decode_used_tokens() as f64 * ob;
+        if ((meta.attn_max_tokens() + req.max_token) as f64) < budget {
+            return OffloadDecision::C1;
+        }
+        let or_count = meta.offloaded_count() as f64;
+        let lr_count = meta.local_count() as f64;
+        if ((meta.attn_used_tokens() + req.used_token) as f64) < budget
+            && or_count + 1.0 < lr_count * ob
+        {
+            return OffloadDecision::C2;
+        }
+        OffloadDecision::Local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds(ob_mem: f64, b_max: usize, b_tpot: usize) -> OffloadBounds {
+        OffloadBounds { ob_mem, b_max, b_tpot }
+    }
+
+    fn meta_with(local: &[(u64, usize, usize)], offl: &[(u64, usize, usize)]) -> RuntimeMetadata {
+        let mut m = RuntimeMetadata::new();
+        for &(id, used, max) in local {
+            m.admit(id, ReqMeta { used_token: used, max_token: max }, false);
+        }
+        for &(id, used, max) in offl {
+            m.admit(id, ReqMeta { used_token: used, max_token: max }, true);
+        }
+        m
+    }
+
+    #[test]
+    fn c1_admits_small_request_under_empty_executor() {
+        // OB = min(0.7, (160-80)/80 = 1.0) = 0.7; budget = 1000*0.7 = 700.
+        let mut s = OffloadScheduler::new(OffloadPolicy::LoadAware, bounds(0.7, 160, 80));
+        let meta = meta_with(&[(1, 500, 600), (2, 500, 600)], &[]);
+        let req = ReqMeta { used_token: 100, max_token: 300 };
+        assert_eq!(s.need_offload(req, &meta), OffloadDecision::C1);
+    }
+
+    #[test]
+    fn refuses_when_bound_exhausted() {
+        let mut s = OffloadScheduler::new(OffloadPolicy::LoadAware, bounds(0.5, 160, 80));
+        // decode_used = 400 => budget 200; attn already holds 190.
+        let meta = meta_with(&[(1, 400, 500)], &[(2, 190, 200)]);
+        let req = ReqMeta { used_token: 50, max_token: 120 };
+        assert_eq!(s.need_offload(req, &meta), OffloadDecision::Local);
+    }
+
+    #[test]
+    fn c2_admits_when_current_fits_but_max_does_not() {
+        // budget = 1000*0.7 = 700. attn_used=300. req.max_token=500 =>
+        // C1 fails (300+500=800 >= 700); C2: 300+100=400 < 700 and
+        // |OR|+1 = 2 < |LR|*0.7 = 3*... need |LR| >= 5 => use 5 locals.
+        let mut s = OffloadScheduler::new(OffloadPolicy::LoadAware, bounds(0.7, 160, 80));
+        let meta = meta_with(
+            &[(1, 200, 300), (2, 200, 300), (3, 200, 300), (4, 200, 300), (5, 200, 300)],
+            &[(10, 300, 400)],
+        );
+        let req = ReqMeta { used_token: 100, max_token: 500 };
+        assert_eq!(s.need_offload(req, &meta), OffloadDecision::C2);
+    }
+
+    #[test]
+    fn zero_ob_never_offloads() {
+        let mut s = OffloadScheduler::new(OffloadPolicy::LoadAware, bounds(0.0, 100, 100));
+        let meta = meta_with(&[(1, 1000, 2000)], &[]);
+        let req = ReqMeta { used_token: 1, max_token: 2 };
+        assert_eq!(s.need_offload(req, &meta), OffloadDecision::Local);
+    }
+
+    #[test]
+    fn disabled_policy_never_offloads() {
+        let mut s = OffloadScheduler::new(OffloadPolicy::Disabled, bounds(1.0, 1000, 10));
+        let meta = meta_with(&[(1, 10, 20)], &[]);
+        assert_eq!(
+            s.need_offload(ReqMeta { used_token: 1, max_token: 2 }, &meta),
+            OffloadDecision::Local
+        );
+    }
+
+    #[test]
+    fn fixed_ratio_hits_exact_fraction() {
+        let mut s = OffloadScheduler::new(OffloadPolicy::FixedRatio(0.7), bounds(1.0, 100, 10));
+        let meta = RuntimeMetadata::new();
+        let req = ReqMeta { used_token: 1, max_token: 2 };
+        let n = 1000;
+        let offl = (0..n)
+            .filter(|_| s.need_offload(req, &meta).offloaded())
+            .count();
+        // f64 quota accumulation: allow one round-off on either side.
+        assert!((699..=701).contains(&offl), "offloaded {offl}/1000 at ratio 0.7");
+    }
+
+    #[test]
+    fn metadata_tracks_tokens_and_removal() {
+        let mut m = meta_with(&[(1, 10, 20)], &[(2, 30, 40)]);
+        assert_eq!(m.decode_used_tokens(), 10);
+        assert_eq!(m.attn_used_tokens(), 30);
+        assert_eq!(m.attn_max_tokens(), 40);
+        m.on_token(1);
+        m.on_token(2);
+        assert_eq!(m.decode_used_tokens(), 11);
+        assert_eq!(m.attn_used_tokens(), 31);
+        assert!(m.is_offloaded(2));
+        assert!(!m.is_offloaded(1));
+        assert!(m.remove(2));
+        assert!(!m.remove(2));
+        assert_eq!(m.offloaded_count(), 0);
+    }
+
+    #[test]
+    fn strict_variant_is_no_weaker() {
+        // Anywhere strict admits C1, the printed variant must too
+        // (attn_used <= attn_max).
+        let s = OffloadScheduler::new(OffloadPolicy::LoadAware, bounds(0.8, 160, 80));
+        let meta = meta_with(&[(1, 900, 1000)], &[(2, 100, 150)]);
+        let req = ReqMeta { used_token: 50, max_token: 200 };
+        if s.algorithm1_strict(req, &meta) == OffloadDecision::C1 {
+            assert_eq!(s.algorithm1(req, &meta), OffloadDecision::C1);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Decode engine: continuous-batched decode steps with per-layer
+//! attention disaggregation (§3.2, Fig 8b).
+//!
+//! Per step, the batch is partitioned into *local* rows (KV resident here)
+//! and *offloaded* rows (KV resident in the attention executor on the
+//! prefill instance). The layer loop then:
+//!
+//! 1. runs `layer_pre` (RMSNorm + QKV + RoPE) for the whole batch;
+//! 2. **sends** the offloaded rows' packed qkv to the executor (one
+//!    aggregated message, §3.2.1 ②) — *before* doing local work, so the
+//!    remote attention overlaps the local attention (③);
+//! 3. appends local rows' k/v to the local KV slab and runs the local
+//!    attention kernel;
+//! 4. receives the remote output, merges the two by row, and runs
+//!    `layer_post`.
+//!
+//! When nothing in the batch is offloaded the engine takes the fused
+//! decode artifact instead (one PJRT call for the whole step) — the
+//! no-offload fast path and ablation baseline (DESIGN.md §6.1).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::GraphCache;
+use crate::kv::slab::{KvShape, KvSlab};
+use crate::kv::SeqId;
+use crate::runtime::ModelRuntime;
+use crate::Result;
+
+use super::attention_executor::{AttnRequest, ExecutorHandle, ExecutorMsg};
+
+/// Per-sequence decode state.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqState {
+    /// Last emitted token (input to the next step).
+    pub token: i32,
+    /// Position the next token's KV will occupy (= current length).
+    pub position: usize,
+    /// Attention offloaded to the prefill instance?
+    pub offloaded: bool,
+}
+
+/// Outcome of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    /// (sequence, next token) in the step's row order.
+    pub tokens: Vec<(SeqId, i32)>,
+    pub step_s: f64,
+    /// Local attention kernel time within the step.
+    pub local_attn_s: f64,
+    /// Time spent blocked on the executor *after* local work finished —
+    /// the synchronization stall the paper's overlap minimizes.
+    pub remote_stall_s: f64,
+    pub used_fused: bool,
+}
+
+/// Aggregate decode statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStats {
+    pub steps: u64,
+    pub fused_steps: u64,
+    pub offloaded_row_steps: u64,
+    pub local_row_steps: u64,
+    pub total_stall_s: f64,
+}
+
+/// The decode instance.
+pub struct DecodeEngine {
+    pub runtime: ModelRuntime,
+    kv: KvSlab,
+    graph: GraphCache,
+    seqs: HashMap<SeqId, SeqState>,
+    pub stats: DecodeStats,
+    /// Take the fused artifact when no row is offloaded (default on).
+    pub use_fused_fast_path: bool,
+    // Reused scratch (hot path stays allocation-free after warmup).
+    k_scratch: Vec<f32>,
+    v_scratch: Vec<f32>,
+}
+
+impl DecodeEngine {
+    pub fn new(runtime: ModelRuntime, graph: GraphCache) -> Self {
+        let shape = KvShape {
+            n_layers: runtime.n_layers(),
+            max_seq: runtime.max_seq_len(),
+            n_heads: runtime.n_heads(),
+            head_dim: runtime.head_dim(),
+        };
+        DecodeEngine {
+            runtime,
+            kv: KvSlab::new(shape),
+            graph,
+            seqs: HashMap::new(),
+            stats: DecodeStats::default(),
+            use_fused_fast_path: true,
+            k_scratch: Vec::new(),
+            v_scratch: Vec::new(),
+        }
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn seq(&self, id: SeqId) -> Option<&SeqState> {
+        self.seqs.get(&id)
+    }
+
+    pub fn graph_cache(&self) -> &GraphCache {
+        &self.graph
+    }
+
+    /// Admit a local request: install its prefill KV here.
+    pub fn admit_local(
+        &mut self,
+        id: SeqId,
+        first_token: i32,
+        prompt_len: usize,
+        k: &[f32],
+        v: &[f32],
+        bucket_seq: usize,
+    ) {
+        self.kv.insert_from_prefill(id, k, v, bucket_seq, prompt_len);
+        self.seqs.insert(id, SeqState { token: first_token, position: prompt_len, offloaded: false });
+    }
+
+    /// Admit an offloaded request: only control state lives here; the KV
+    /// stays with the attention executor (it never crossed instances).
+    pub fn admit_offloaded(&mut self, id: SeqId, first_token: i32, prompt_len: usize) {
+        self.seqs.insert(id, SeqState { token: first_token, position: prompt_len, offloaded: true });
+    }
+
+    /// Drop a finished/preempted request. Returns whether it was offloaded
+    /// (caller must then `Release` it at the executor).
+    pub fn release(&mut self, id: SeqId) -> Option<bool> {
+        let state = self.seqs.remove(&id)?;
+        if !state.offloaded {
+            self.kv.remove(id);
+        }
+        Some(state.offloaded)
+    }
+
+    /// Sequences that can still grow (position < max_seq_len).
+    pub fn runnable(&self) -> Vec<SeqId> {
+        let max = self.runtime.max_seq_len();
+        let mut ids: Vec<SeqId> =
+            self.seqs.iter().filter(|(_, s)| s.position < max).map(|(&id, _)| id).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Run one decode step over `ids`. `executor` must be `Some` whenever
+    /// any of the rows is offloaded.
+    pub fn step(
+        &mut self,
+        ids: &[SeqId],
+        executor: Option<&ExecutorHandle>,
+    ) -> Result<DecodeOutcome> {
+        anyhow::ensure!(!ids.is_empty(), "empty decode step");
+        let t0 = Instant::now();
+
+        // Partition: local rows first, then offloaded (fixed row order).
+        let mut rows: Vec<SeqId> = Vec::with_capacity(ids.len());
+        let mut n_local = 0usize;
+        for &id in ids {
+            let s = self.seqs.get(&id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
+            anyhow::ensure!(
+                s.position < self.runtime.max_seq_len(),
+                "seq {id} is at max_seq_len; must be retired"
+            );
+            if !s.offloaded {
+                rows.insert(n_local, id);
+                n_local += 1;
+            } else {
+                rows.push(id);
+            }
+        }
+        let n_offl = rows.len() - n_local;
+        anyhow::ensure!(n_offl == 0 || executor.is_some(), "offloaded rows need an executor");
+
+        let outcome = if n_offl == 0 && self.use_fused_fast_path {
+            self.step_fused(&rows, t0)?
+        } else {
+            self.step_split(&rows, n_local, executor, t0)?
+        };
+
+        // Advance per-sequence state.
+        for &(id, token) in &outcome.tokens {
+            let s = self.seqs.get_mut(&id).expect("stepped seq exists");
+            s.token = token;
+            s.position += 1;
+        }
+        self.stats.steps += 1;
+        self.stats.local_row_steps += n_local as u64;
+        self.stats.offloaded_row_steps += n_offl as u64;
+        Ok(outcome)
+    }
+
+    /// The fused fast path (whole step = one artifact call).
+    fn step_fused(&mut self, rows: &[SeqId], t0: Instant) -> Result<DecodeOutcome> {
+        let n = rows.len();
+        let bucket = self.runtime.batch_bucket_for(n)?;
+        let (l, _s) = (self.runtime.n_layers(), self.runtime.max_seq_len());
+        let hd = self.runtime.n_heads() * self.runtime.head_dim();
+        let plane = self.runtime.kv_plane();
+
+        let mut tokens = vec![0i32; bucket];
+        let mut positions = vec![0i32; bucket];
+        for (i, &id) in rows.iter().enumerate() {
+            let st = self.seqs[&id];
+            tokens[i] = st.token;
+            positions[i] = st.position as i32;
+        }
+
+        // Gather [L, bucket, S, H, D] caches (padding rows stay zero).
+        // §Perf iteration 3: no per-step zeroing — rows beyond each
+        // sequence's length (and padded batch rows) are masked by seq_lens
+        // inside the attention kernel, so stale scratch bytes are inert.
+        let total = l * bucket * plane;
+        if self.k_scratch.len() != total {
+            self.k_scratch.resize(total, 0.0);
+            self.v_scratch.resize(total, 0.0);
+        }
+        for layer in 0..l {
+            let base = layer * bucket * plane;
+            self.kv.gather_layer(
+                rows,
+                layer,
+                &mut self.k_scratch[base..base + n * plane],
+                &mut self.v_scratch[base..base + n * plane],
+            );
+        }
+
+        let (next, k_new, v_new) = self.runtime.decode_fused(
+            &tokens,
+            &positions,
+            &self.k_scratch,
+            &self.v_scratch,
+            bucket,
+        )?;
+
+        // Scatter the new KV rows back into the slab.
+        for layer in 0..l {
+            for (i, &id) in rows.iter().enumerate() {
+                let off = (layer * bucket + i) * hd;
+                let pos = positions[i] as usize;
+                self.kv.write_token(id, layer, pos, &k_new[off..off + hd], &v_new[off..off + hd]);
+            }
+        }
+
+        self.stats.fused_steps += 1;
+        Ok(DecodeOutcome {
+            tokens: rows.iter().enumerate().map(|(i, &id)| (id, next[i])).collect(),
+            step_s: t0.elapsed().as_secs_f64(),
+            local_attn_s: 0.0,
+            remote_stall_s: 0.0,
+            used_fused: true,
+        })
+    }
+
+    /// The disaggregated path: layer loop in Rust, attention split
+    /// local/remote.
+    fn step_split(
+        &mut self,
+        rows: &[SeqId],
+        n_local: usize,
+        executor: Option<&ExecutorHandle>,
+        t0: Instant,
+    ) -> Result<DecodeOutcome> {
+        let n = rows.len();
+        let n_offl = n - n_local;
+        let bucket = self.runtime.batch_bucket_for(n)?;
+        let pair = self
+            .graph
+            .select(n_local, n_offl)
+            .ok_or_else(|| anyhow::anyhow!("batch ({n_local},{n_offl}) exceeds bucket grid"))?;
+        let hd = self.runtime.n_heads() * self.runtime.head_dim();
+        let plane = self.runtime.kv_plane();
+        let d = self.runtime.d_model();
+        let n_layers = self.runtime.n_layers();
+
+        let mut tokens = vec![0i32; bucket];
+        let mut positions = vec![0i32; bucket];
+        for (i, &id) in rows.iter().enumerate() {
+            let st = self.seqs[&id];
+            tokens[i] = st.token;
+            positions[i] = st.position as i32;
+        }
+
+        let mut hidden = self.runtime.embed(&tokens, bucket)?;
+        let mut local_attn_s = 0.0f64;
+        let mut remote_stall_s = 0.0f64;
+
+        for layer in 0..n_layers {
+            let (q, k_new, v_new) = self.runtime.layer_pre(&hidden, &positions, layer, bucket)?;
+
+            // ② + ③: one packed message, sent before local attention runs.
+            if n_offl > 0 {
+                let ex = executor.expect("checked by step()");
+                let mut qkv = Vec::with_capacity(n_offl * 3 * hd);
+                let mut offl_pos = Vec::with_capacity(n_offl);
+                for row in n_local..n {
+                    qkv.extend_from_slice(&q[row * hd..(row + 1) * hd]);
+                    qkv.extend_from_slice(&k_new[row * hd..(row + 1) * hd]);
+                    qkv.extend_from_slice(&v_new[row * hd..(row + 1) * hd]);
+                    offl_pos.push(positions[row]);
+                }
+                ex.tx
+                    .send(ExecutorMsg::Attn(AttnRequest {
+                        layer,
+                        ids: rows[n_local..].to_vec(),
+                        qkv,
+                        positions: offl_pos,
+                        bucket: pair.offload.max(n_offl),
+                    }))
+                    .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+            }
+
+            // Local attention over the local sub-batch.
+            let mut attn_out = vec![0.0f32; bucket * d];
+            if n_local > 0 {
+                let lb = pair.local.max(n_local);
+                for (i, &id) in rows[..n_local].iter().enumerate() {
+                    let pos = positions[i] as usize;
+                    self.kv.write_token(
+                        id,
+                        layer,
+                        pos,
+                        &k_new[i * hd..(i + 1) * hd],
+                        &v_new[i * hd..(i + 1) * hd],
+                    );
+                }
+                if self.k_scratch.len() != lb * plane {
+                    self.k_scratch.resize(lb * plane, 0.0);
+                    self.v_scratch.resize(lb * plane, 0.0);
+                }
+                self.kv.gather_layer(
+                    &rows[..n_local],
+                    layer,
+                    &mut self.k_scratch[..n_local * plane],
+                    &mut self.v_scratch[..n_local * plane],
+                );
+                let mut ql = vec![0.0f32; lb * hd];
+                ql[..n_local * hd].copy_from_slice(&q[..n_local * hd]);
+                let mut lens = vec![1i32; lb];
+                for i in 0..n_local {
+                    lens[i] = positions[i] + 1;
+                }
+                let ta = Instant::now();
+                let local_out =
+                    self.runtime.attention(&ql, &self.k_scratch, &self.v_scratch, &lens, lb)?;
+                local_attn_s += ta.elapsed().as_secs_f64();
+                attn_out[..n_local * d].copy_from_slice(&local_out[..n_local * d]);
+            }
+
+            // Merge the remote output (blocking only if it hasn't landed).
+            if n_offl > 0 {
+                let ex = executor.expect("checked");
+                let tw = Instant::now();
+                let resp = ex
+                    .attn_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("executor response channel closed"))?;
+                remote_stall_s += tw.elapsed().as_secs_f64();
+                anyhow::ensure!(resp.layer == layer, "layer mismatch: {} != {layer}", resp.layer);
+                for (j, row) in (n_local..n).enumerate() {
+                    attn_out[row * d..(row + 1) * d]
+                        .copy_from_slice(&resp.attn_out[j * d..(j + 1) * d]);
+                }
+            }
+
+            hidden = self.runtime.layer_post(&hidden, &attn_out, layer, bucket)?;
+        }
+
+        let next = self.runtime.head(&hidden, bucket)?;
+        self.stats.total_stall_s += remote_stall_s;
+        Ok(DecodeOutcome {
+            tokens: rows.iter().enumerate().map(|(i, &id)| (id, next[i])).collect(),
+            step_s: t0.elapsed().as_secs_f64(),
+            local_attn_s,
+            remote_stall_s,
+            used_fused: false,
+        })
+    }
+}

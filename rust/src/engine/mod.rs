@@ -1,0 +1,15 @@
+//! Serving engines for the real (CPU PJRT) path: the prefill engine, the
+//! decode engine with per-layer attention offloading, and the attention
+//! executor colocated with prefill. Each engine owns its own
+//! [`crate::runtime::ModelRuntime`] (= its own PJRT client = its own GPU).
+
+pub mod attention_executor;
+pub mod decode;
+pub mod prefill;
+pub mod recovery;
+pub mod server;
+
+pub use attention_executor::{AttnRequest, AttnResponse, AttentionExecutor, ExecutorHandle};
+pub use decode::{DecodeEngine, DecodeOutcome};
+pub use prefill::{PrefillEngine, PrefillResult};
+pub use server::{Completion, ServeReport, Server};

@@ -1,0 +1,72 @@
+//! Prefill engine: run a prompt through the fused prefill artifact and
+//! hand the populated KV cache to its consumer — the decode instance for
+//! local requests, or (zero-copy, colocated) the attention executor for
+//! offloaded ones.
+
+use std::time::Instant;
+
+use crate::runtime::ModelRuntime;
+use crate::workload::RequestId;
+use crate::Result;
+
+/// Output of one prefill execution.
+#[derive(Debug, Clone)]
+pub struct PrefillResult {
+    pub id: RequestId,
+    pub first_token: i32,
+    /// `[L, P_bucket, H, D]` flattened.
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    /// Prompt bucket used (leading seq dim of the caches).
+    pub bucket: usize,
+    /// Valid prompt tokens within the bucket.
+    pub prompt_len: usize,
+    /// Prefill execution wall time, seconds.
+    pub latency_s: f64,
+}
+
+/// Stateless executor for prefill steps (the state — the PJRT client and
+/// compiled artifacts — lives in the shared [`ModelRuntime`]).
+#[derive(Debug, Default)]
+pub struct PrefillEngine {
+    /// Prompts processed (observability).
+    pub completed: u64,
+    /// Total prompt tokens processed.
+    pub total_tokens: u64,
+}
+
+impl PrefillEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run one prompt. `runtime` is the prefill instance's runtime (shared
+    /// with the colocated attention executor).
+    pub fn run(
+        &mut self,
+        runtime: &mut ModelRuntime,
+        id: RequestId,
+        prompt: &[i32],
+    ) -> Result<PrefillResult> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt for request {id}");
+        anyhow::ensure!(
+            prompt.len() <= runtime.max_seq_len(),
+            "prompt of {} exceeds max_seq_len {}",
+            prompt.len(),
+            runtime.max_seq_len()
+        );
+        let t0 = Instant::now();
+        let out = runtime.prefill(prompt)?;
+        self.completed += 1;
+        self.total_tokens += prompt.len() as u64;
+        Ok(PrefillResult {
+            id,
+            first_token: out.first_token,
+            k_cache: out.k_cache,
+            v_cache: out.v_cache,
+            bucket: out.bucket,
+            prompt_len: prompt.len(),
+            latency_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

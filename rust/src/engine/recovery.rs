@@ -1,0 +1,69 @@
+//! Executor-failure recovery: when the attention executor (or its whole
+//! prefill instance) dies mid-flight, the offloaded requests' KV is gone —
+//! it lived in that instance's HBM. The recovery path mirrors preemption:
+//! re-prefill the affected requests *locally* (prompt + already-generated
+//! tokens) and continue decoding with local attention.
+//!
+//! This is deliberately the same mechanism vLLM uses for preempted
+//! requests (recompute), so the decode engine needs no new state: the
+//! server drives it (see `Server::run_requests`' failure arm and the
+//! `executor_failure` integration test).
+
+use crate::workload::RequestId;
+
+/// What the server must do for each in-flight request after an executor
+/// failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Request was local: untouched, keeps decoding.
+    KeepLocal,
+    /// Request was offloaded: KV lost; re-prefill `prompt ++ generated`
+    /// and re-admit as local.
+    RecomputeLocal,
+}
+
+/// Recovery plan for a batch.
+#[derive(Debug, Default)]
+pub struct RecoveryPlan {
+    pub keep: Vec<RequestId>,
+    pub recompute: Vec<RequestId>,
+}
+
+impl RecoveryPlan {
+    /// Classify the active set by offload status.
+    pub fn classify(active: impl IntoIterator<Item = (RequestId, bool)>) -> RecoveryPlan {
+        let mut plan = RecoveryPlan::default();
+        for (id, offloaded) in active {
+            if offloaded {
+                plan.recompute.push(id);
+            } else {
+                plan.keep.push(id);
+            }
+        }
+        plan
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recompute.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_splits_by_offload() {
+        let plan =
+            RecoveryPlan::classify([(1, false), (2, true), (3, true), (4, false)]);
+        assert_eq!(plan.keep, vec![1, 4]);
+        assert_eq!(plan.recompute, vec![2, 3]);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn all_local_is_empty_plan() {
+        let plan = RecoveryPlan::classify([(1, false)]);
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,414 @@
+//! The full real-path serving stack: proxy + prefill instance (with
+//! colocated attention executor) on its own thread + decode engine, wired
+//! with channels — Fig 7's topology with PJRT CPU clients standing in for
+//! the GPUs.
+//!
+//! Python is nowhere in this path: the server loads `artifacts/` and runs
+//! entirely from Rust.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
+use crate::coordinator::{GraphCache, OffloadBounds, Proxy};
+use crate::metrics::MetricsRecorder;
+use crate::runtime::ModelRuntime;
+use crate::workload::{Request, RequestId};
+use crate::Result;
+
+use super::attention_executor::{run_prefill_instance, ExecutorHandle, ExecutorMsg};
+use super::decode::DecodeEngine;
+use super::prefill::PrefillResult;
+use super::recovery::RecoveryPlan;
+
+/// A finished request's output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Completion {
+    pub id: RequestId,
+    /// Greedy output tokens (first token from prefill included).
+    pub tokens: Vec<i32>,
+    pub offloaded: bool,
+}
+
+/// End-of-run statistics.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub metrics: MetricsRecorder,
+    pub offloaded_requests: usize,
+    pub decode_steps: u64,
+    pub fused_steps: u64,
+    pub wall_s: f64,
+}
+
+struct Active {
+    id: RequestId,
+    offloaded: bool,
+    produced: usize,
+    target: usize,
+    tokens: Vec<i32>,
+    /// Original prompt (kept for executor-failure recompute).
+    prompt: Vec<i32>,
+}
+
+/// The serving stack.
+pub struct Server {
+    executor: ExecutorHandle,
+    prefill_thread: Option<JoinHandle<Result<()>>>,
+    decode: DecodeEngine,
+    proxy: Proxy,
+    cfg: ServingConfig,
+    /// Cleared when the prefill instance / executor stops responding; the
+    /// server then degrades to local-only serving (DESIGN.md §7 failure
+    /// injection).
+    executor_alive: bool,
+    /// Executor-failure recoveries performed (observability/tests).
+    pub recoveries: u64,
+}
+
+impl Server {
+    /// Stand up the two instances from an artifact directory. Each
+    /// instance thread loads its own runtime (its own PJRT client — the
+    /// process analogue of its own GPU).
+    pub fn start(artifact_dir: &std::path::Path, cfg: ServingConfig) -> Result<Server> {
+        let mut decode_rt = ModelRuntime::load(artifact_dir)?;
+        decode_rt.warmup()?;
+
+        let graph = GraphCache::new(&cfg.decode_buckets, &cfg.offload_buckets, None);
+        let decode = DecodeEngine::new(decode_rt, graph);
+
+        // Offload bounds for the CPU testbed: OB_mem comes from the
+        // cluster's bandwidth/capacity ratios (Eq 1); the compute-side
+        // profile is the executable grid itself — the decode instance
+        // comfortably meets TPOT at half the largest bucket (B_TPOT) and
+        // the grid caps the batch at the largest bucket (B_max).
+        let max_bucket = decode.runtime.manifest.batch_buckets.iter().copied().max().unwrap();
+        let mut bounds = OffloadBounds::compute(
+            &ClusterSpec::paper_default(),
+            &ModelSpec::tiny(),
+            &cfg.slo,
+            64,
+        );
+        bounds.b_max = max_bucket;
+        bounds.set_b_tpot(cfg.b_max_override.unwrap_or(max_bucket / 2));
+        let proxy = Proxy::new(cfg.offload, bounds, 1, 1);
+
+        let (tx, rx) = channel::<ExecutorMsg>();
+        let (attn_tx, attn_rx) = channel();
+        let (ready_tx, ready_rx) = channel();
+        let dir = artifact_dir.to_path_buf();
+        let prefill_thread =
+            std::thread::spawn(move || run_prefill_instance(dir, rx, attn_tx, ready_tx));
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("prefill instance died during startup"))??;
+
+        Ok(Server {
+            executor: ExecutorHandle { tx: tx.clone(), attn_rx },
+            prefill_thread: Some(prefill_thread),
+            decode,
+            proxy,
+            cfg,
+            executor_alive: true,
+            recoveries: 0,
+        })
+    }
+
+    /// Deliberately stop the prefill-instance thread (failure injection
+    /// for tests: the server must recover by re-prefilling offloaded
+    /// requests locally).
+    pub fn kill_executor(&mut self) {
+        let _ = self.tx().send(ExecutorMsg::Shutdown);
+        if let Some(h) = self.prefill_thread.take() {
+            let _ = h.join();
+        }
+        self.executor_alive = false;
+    }
+
+    pub fn executor_alive(&self) -> bool {
+        self.executor_alive
+    }
+
+    fn tx(&self) -> &Sender<ExecutorMsg> {
+        &self.executor.tx
+    }
+
+    /// Serve a list of requests to completion with continuous batching.
+    /// `force_offload` overrides the proxy for tests (None = Algorithm 1 /
+    /// configured policy).
+    pub fn run_requests(
+        &mut self,
+        requests: &[Request],
+        force_offload: Option<bool>,
+    ) -> Result<ServeReport> {
+        let wall0 = Instant::now();
+        // Drop any stale attention responses from a previous (possibly
+        // aborted) run before reusing the channel.
+        while self.executor.attn_rx.try_recv().is_ok() {}
+        let mut metrics = MetricsRecorder::new();
+        let mut pending: std::collections::VecDeque<&Request> = requests.iter().collect();
+        let mut active: Vec<Active> = Vec::new();
+        let mut completions = Vec::new();
+        let max_batch = self.decode.runtime.manifest.batch_buckets.iter().copied().max().unwrap();
+        let max_seq = self.decode.runtime.max_seq_len();
+        let mut offloaded_requests = 0usize;
+
+        // Capacity accounting for this run (Eq 1's HBM_pi / HBM_d on the
+        // real path): reserved = prompt + target output per resident
+        // request; requests that don't fit the executor pool fall back to
+        // local, requests that don't fit the local pool wait.
+        let mut executor_resident = 0usize;
+        let mut local_resident = 0usize;
+
+        while !pending.is_empty() || !active.is_empty() {
+            // Admit while there is batch room.
+            while active.len() < max_batch && !pending.is_empty() {
+                let req = *pending.front().unwrap();
+                let reserve = (req.prompt_len + req.output_len).min(max_seq);
+                let local_fits = self
+                    .cfg
+                    .decode_kv_capacity_tokens
+                    .is_none_or(|cap| local_resident + reserve <= cap);
+                let executor_fits = self
+                    .cfg
+                    .executor_kv_capacity_tokens
+                    .is_none_or(|cap| executor_resident + reserve <= cap);
+
+                let route = self.proxy.route(req);
+                let mut offloaded = self.executor_alive
+                    && force_offload.unwrap_or(route.offload.offloaded());
+                if offloaded && !executor_fits {
+                    offloaded = false; // executor pool full: serve locally
+                }
+                if !offloaded && !local_fits {
+                    anyhow::ensure!(
+                        !active.is_empty(),
+                        "request {} ({} tokens) exceeds the decode KV capacity",
+                        req.id,
+                        reserve
+                    );
+                    break; // wait for the batch to drain
+                }
+                pending.pop_front();
+                metrics.on_arrival(req.id, wall0.elapsed().as_secs_f64());
+                anyhow::ensure!(
+                    !req.prompt_tokens.is_empty(),
+                    "real-path requests need prompt tokens (use with_tokens)"
+                );
+                if offloaded {
+                    executor_resident += reserve;
+                } else {
+                    local_resident += reserve;
+                }
+                let prompt: Vec<i32> =
+                    req.prompt_tokens.iter().map(|&t| t as i32).collect();
+
+                let pr: PrefillResult = if self.executor_alive {
+                    if offloaded {
+                        // ① hint before the prefill (metadata init off the
+                        // critical path).
+                        self.tx()
+                            .send(ExecutorMsg::Hint { id: req.id, prompt_len: prompt.len() })
+                            .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                    }
+                    let (rtx, rrx) = channel();
+                    self.tx()
+                        .send(ExecutorMsg::Prefill {
+                            id: req.id,
+                            prompt: prompt.clone(),
+                            reply: rtx,
+                        })
+                        .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                    rrx.recv().map_err(|_| anyhow::anyhow!("prefill reply lost"))??
+                } else {
+                    // Degraded mode: the prefill instance is gone; run the
+                    // prompt on the decode instance (colocated-prefill
+                    // fallback).
+                    let out = self.decode.runtime.prefill(&prompt)?;
+                    PrefillResult {
+                        id: req.id,
+                        first_token: out.first_token,
+                        k_cache: out.k_cache,
+                        v_cache: out.v_cache,
+                        bucket: out.bucket,
+                        prompt_len: prompt.len(),
+                        latency_s: 0.0,
+                    }
+                };
+                metrics.on_first_token(req.id, wall0.elapsed().as_secs_f64());
+
+                if offloaded {
+                    offloaded_requests += 1;
+                    // KV stays colocated with the executor.
+                    self.tx()
+                        .send(ExecutorMsg::AdmitKv {
+                            id: req.id,
+                            k: pr.k_cache,
+                            v: pr.v_cache,
+                            bucket_seq: pr.bucket,
+                            tokens: pr.prompt_len,
+                        })
+                        .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                    self.decode.admit_offloaded(req.id, pr.first_token, pr.prompt_len);
+                } else {
+                    // KV "transfers" to the decode instance.
+                    self.decode.admit_local(
+                        req.id,
+                        pr.first_token,
+                        pr.prompt_len,
+                        &pr.k_cache,
+                        &pr.v_cache,
+                        pr.bucket,
+                    );
+                }
+                let target = req.output_len.min(max_seq - req.prompt_len);
+                active.push(Active {
+                    id: req.id,
+                    offloaded,
+                    produced: 1,
+                    target: target.max(1),
+                    tokens: vec![pr.first_token],
+                    prompt,
+                });
+            }
+
+            if active.is_empty() {
+                continue;
+            }
+
+            // Retire sequences that already met their target (e.g. 1-token
+            // outputs) before stepping.
+            let mut still: Vec<Active> = Vec::new();
+            for a in active.drain(..) {
+                if a.produced >= a.target {
+                    self.retire(
+                        &a,
+                        &mut metrics,
+                        wall0,
+                        &mut completions,
+                        &mut executor_resident,
+                        &mut local_resident,
+                        max_seq,
+                    )?;
+                } else {
+                    still.push(a);
+                }
+            }
+            active = still;
+            if active.is_empty() {
+                continue;
+            }
+
+            // One decode step over the whole active batch.
+            let ids: Vec<u64> = active.iter().map(|a| a.id).collect();
+            let outcome = match self.decode.step(&ids, Some(&self.executor)) {
+                Ok(o) => o,
+                Err(e) => {
+                    let plan = RecoveryPlan::classify(
+                        active.iter().map(|a| (a.id, a.offloaded)),
+                    );
+                    if plan.is_empty() {
+                        return Err(e); // not an executor failure; propagate
+                    }
+                    // Executor failure: its KV is gone. Re-prefill the
+                    // offloaded requests locally (recompute, like vLLM
+                    // preemption) and continue in degraded mode.
+                    self.executor_alive = false;
+                    while self.executor.attn_rx.try_recv().is_ok() {}
+                    for a in active.iter_mut().filter(|a| a.offloaded) {
+                        self.decode.release(a.id);
+                        let mut new_prompt = a.prompt.clone();
+                        new_prompt.extend_from_slice(&a.tokens);
+                        if new_prompt.len() >= max_seq {
+                            a.target = a.produced; // retire next pass
+                            a.offloaded = false;
+                            continue;
+                        }
+                        let out = self.decode.runtime.prefill(&new_prompt)?;
+                        self.decode.admit_local(
+                            a.id,
+                            out.first_token,
+                            new_prompt.len(),
+                            &out.k_cache,
+                            &out.v_cache,
+                            out.bucket,
+                        );
+                        a.tokens.push(out.first_token);
+                        a.produced += 1;
+                        a.offloaded = false;
+                        metrics.on_token(a.id, wall0.elapsed().as_secs_f64());
+                        self.recoveries += 1;
+                    }
+                    continue;
+                }
+            };
+            let now = wall0.elapsed().as_secs_f64();
+            for (id, tok) in outcome.tokens {
+                if let Some(a) = active.iter_mut().find(|a| a.id == id) {
+                    a.tokens.push(tok);
+                    a.produced += 1;
+                    metrics.on_token(id, now);
+                    self.proxy.on_token(0, id);
+                }
+            }
+        }
+
+        Ok(ServeReport {
+            completions,
+            metrics,
+            offloaded_requests,
+            decode_steps: self.decode.stats.steps,
+            fused_steps: self.decode.stats.fused_steps,
+            wall_s: wall0.elapsed().as_secs_f64(),
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn retire(
+        &mut self,
+        a: &Active,
+        metrics: &mut MetricsRecorder,
+        wall0: Instant,
+        completions: &mut Vec<Completion>,
+        executor_resident: &mut usize,
+        local_resident: &mut usize,
+        max_seq: usize,
+    ) -> Result<()> {
+        let reserve = (a.prompt.len() + a.target).min(max_seq);
+        if a.offloaded {
+            *executor_resident = executor_resident.saturating_sub(reserve);
+        } else {
+            *local_resident = local_resident.saturating_sub(reserve);
+        }
+        metrics.on_finished(a.id, wall0.elapsed().as_secs_f64());
+        self.proxy.on_finished(0, a.id);
+        if let Some(was_offloaded) = self.decode.release(a.id) {
+            if was_offloaded {
+                self.tx()
+                    .send(ExecutorMsg::Release { id: a.id })
+                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
+            }
+        }
+        completions.push(Completion {
+            id: a.id,
+            tokens: a.tokens.clone(),
+            offloaded: a.offloaded,
+        });
+        Ok(())
+    }
+
+    /// Toggle the fused no-offload fast path (ablation).
+    pub fn set_fused_fast_path(&mut self, on: bool) {
+        self.decode.use_fused_fast_path = on;
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx().send(ExecutorMsg::Shutdown);
+        if let Some(h) = self.prefill_thread.take() {
+            let _ = h.join();
+        }
+    }
+}

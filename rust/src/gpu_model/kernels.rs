@@ -1,0 +1,255 @@
+//! Per-kernel cost & timing for the two phases — the four kernels the
+//! paper profiles (Figs 3, 5, 6, 18b): QKV projection, attention, output
+//! projection, FFN.
+
+use super::roofline::{KernelCost, Roofline};
+use crate::config::ModelSpec;
+
+/// The four profiled kernel families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    QkvProj,
+    Attention,
+    OutProj,
+    Ffn,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 4] =
+        [KernelKind::QkvProj, KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::QkvProj => "qkv_proj",
+            KernelKind::Attention => "attention",
+            KernelKind::OutProj => "out_proj",
+            KernelKind::Ffn => "ffn",
+        }
+    }
+}
+
+/// Cost builder for one phase of one model.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseKernels {
+    pub model: ModelSpec,
+}
+
+impl PhaseKernels {
+    pub fn new(model: ModelSpec) -> Self {
+        PhaseKernels { model }
+    }
+
+    /// Decode-step cost of one kernel for batch `b` with total context
+    /// `ctx_total` tokens (sum of sequence lengths across the batch).
+    pub fn decode_cost(&self, kind: KernelKind, b: u64, ctx_total: u64) -> KernelCost {
+        let m = &self.model;
+        match kind {
+            KernelKind::QkvProj => KernelCost::new(m.decode_qkv_flops(b), m.decode_qkv_bytes(b)),
+            KernelKind::Attention => {
+                KernelCost::new(m.decode_attn_flops(ctx_total), m.decode_attn_bytes(ctx_total))
+            }
+            KernelKind::OutProj => {
+                KernelCost::new(m.decode_oproj_flops(b), m.decode_oproj_bytes(b))
+            }
+            KernelKind::Ffn => KernelCost::new(m.decode_ffn_flops(b), m.decode_ffn_bytes(b)),
+        }
+    }
+
+    /// Prefill cost of one kernel for a prompt batch totalling `p` tokens.
+    pub fn prefill_cost(&self, kind: KernelKind, p: u64) -> KernelCost {
+        let m = &self.model;
+        match kind {
+            KernelKind::QkvProj => KernelCost::new(m.prefill_qkv_flops(p), m.decode_qkv_bytes(p)),
+            KernelKind::Attention => {
+                KernelCost::new(m.prefill_attn_flops(p), m.prefill_attn_bytes(p))
+            }
+            KernelKind::OutProj => {
+                KernelCost::new(m.prefill_oproj_flops(p), m.decode_oproj_bytes(p))
+            }
+            KernelKind::Ffn => KernelCost::new(m.prefill_ffn_flops(p), m.decode_ffn_bytes(p)),
+        }
+    }
+}
+
+/// Timed breakdown of one decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeKernelTimes {
+    pub qkv: f64,
+    pub attention: f64,
+    pub out_proj: f64,
+    pub ffn: f64,
+    pub head: f64,
+}
+
+impl DecodeKernelTimes {
+    /// Time a full decode step on `rl` (batch `b`, total context
+    /// `ctx_total`).
+    pub fn compute(rl: &Roofline, model: &ModelSpec, b: u64, ctx_total: u64) -> Self {
+        let pk = PhaseKernels::new(*model);
+        let head =
+            KernelCost::new(model.decode_head_flops(b), model.decode_head_bytes(b));
+        DecodeKernelTimes {
+            qkv: rl.time(pk.decode_cost(KernelKind::QkvProj, b, ctx_total)),
+            attention: rl.time(pk.decode_cost(KernelKind::Attention, b, ctx_total)),
+            out_proj: rl.time(pk.decode_cost(KernelKind::OutProj, b, ctx_total)),
+            ffn: rl.time(pk.decode_cost(KernelKind::Ffn, b, ctx_total)),
+            head: rl.time(head),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.qkv + self.attention + self.out_proj + self.ffn + self.head
+    }
+
+    /// Time of the step's non-attention portion (what stays on the decode
+    /// instance at 100 % offload).
+    pub fn non_attention(&self) -> f64 {
+        self.total() - self.attention
+    }
+
+    /// Fraction of per-layer time spent in attention — Fig 3's metric
+    /// (head excluded: the paper plots per-transformer-layer shares).
+    pub fn attention_share(&self) -> f64 {
+        let layer = self.qkv + self.attention + self.out_proj + self.ffn;
+        if layer <= 0.0 {
+            0.0
+        } else {
+            self.attention / layer
+        }
+    }
+}
+
+/// Timed breakdown of one prefill step.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillKernelTimes {
+    pub qkv: f64,
+    pub attention: f64,
+    pub out_proj: f64,
+    pub ffn: f64,
+}
+
+impl PrefillKernelTimes {
+    pub fn compute(rl: &Roofline, model: &ModelSpec, p: u64) -> Self {
+        let pk = PhaseKernels::new(*model);
+        PrefillKernelTimes {
+            qkv: rl.time(pk.prefill_cost(KernelKind::QkvProj, p)),
+            attention: rl.time(pk.prefill_cost(KernelKind::Attention, p)),
+            out_proj: rl.time(pk.prefill_cost(KernelKind::OutProj, p)),
+            ffn: rl.time(pk.prefill_cost(KernelKind::Ffn, p)),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.qkv + self.attention + self.out_proj + self.ffn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    fn setup() -> (Roofline, ModelSpec) {
+        (Roofline::whole(GpuSpec::a100_80g()), ModelSpec::llama2_7b())
+    }
+
+    #[test]
+    fn fig3_attention_share_grows_with_batch() {
+        // Fig 3: attention share of the decode layer grows with batch size
+        // and reaches ~69.5% at batch 80, seq 1K.
+        let (rl, m) = setup();
+        let mut prev = 0.0;
+        for b in [8u64, 16, 32, 64, 80] {
+            let t = DecodeKernelTimes::compute(&rl, &m, b, b * 1024);
+            let share = t.attention_share();
+            assert!(share > prev, "share must grow: b={b} share={share}");
+            prev = share;
+        }
+        let t80 = DecodeKernelTimes::compute(&rl, &m, 80, 80 * 1024);
+        let share = t80.attention_share();
+        assert!((0.60..0.80).contains(&share), "Fig 3 anchor: share(80) = {share:.3}");
+    }
+
+    #[test]
+    fn fig1b_decode_compute_utilization_low() {
+        // Fig 1b: decode compute utilization < 26% across batch sizes.
+        let (rl, m) = setup();
+        let pk = PhaseKernels::new(m);
+        for b in [1u64, 8, 32, 80, 128] {
+            let ctx = b * 1024;
+            let mut cost = KernelCost::new(0.0, 0.0);
+            for k in KernelKind::ALL {
+                cost = cost.add(&pk.decode_cost(k, b, ctx));
+            }
+            let util = rl.compute_utilization(cost);
+            assert!(util < 0.26, "decode compute util at b={b} is {util:.3}");
+        }
+    }
+
+    #[test]
+    fn fig1a_prefill_bw_utilization_low() {
+        // Fig 1a: prefill HBM bandwidth utilization < 30%.
+        let (rl, m) = setup();
+        let pk = PhaseKernels::new(m);
+        for p in [512u64, 1024, 2048, 4096] {
+            let mut cost = KernelCost::new(0.0, 0.0);
+            for k in KernelKind::ALL {
+                cost = cost.add(&pk.prefill_cost(k, p));
+            }
+            let util = rl.bw_utilization(cost);
+            assert!(util < 0.30, "prefill bw util at p={p} is {util:.3}");
+        }
+    }
+
+    #[test]
+    fn fig5_prefill_kernels_compute_bound() {
+        let (rl, m) = setup();
+        let pk = PhaseKernels::new(m);
+        for k in KernelKind::ALL {
+            assert!(
+                !rl.memory_bound(pk.prefill_cost(k, 2048)),
+                "{} should be compute-bound in prefill",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_decode_kernels_memory_bound_small_batch() {
+        let (rl, m) = setup();
+        let pk = PhaseKernels::new(m);
+        for k in KernelKind::ALL {
+            assert!(
+                rl.memory_bound(pk.decode_cost(k, 8, 8 * 1024)),
+                "{} should be memory-bound in decode at b=8",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_attention_time_scales_with_context() {
+        let (rl, m) = setup();
+        let t1 = DecodeKernelTimes::compute(&rl, &m, 32, 32 * 512).attention;
+        let t2 = DecodeKernelTimes::compute(&rl, &m, 32, 32 * 1024).attention;
+        assert!((t2 / t1 - 2.0).abs() < 0.05, "attention ~linear in context");
+    }
+
+    #[test]
+    fn non_attention_time_stable_while_memory_bound() {
+        // Eq 2's premise: while non-attention kernels stay memory-bound,
+        // their time barely moves with batch size (weights dominate bytes).
+        let (rl, m) = setup();
+        let t8 = DecodeKernelTimes::compute(&rl, &m, 8, 8 * 1024).non_attention();
+        let t64 = DecodeKernelTimes::compute(&rl, &m, 64, 64 * 1024).non_attention();
+        assert!(t64 / t8 < 1.25, "non-attn time should be ~flat: {}", t64 / t8);
+    }
+
+    #[test]
+    fn prefill_time_grows_with_prompt() {
+        let (rl, m) = setup();
+        let t1 = PrefillKernelTimes::compute(&rl, &m, 512).total();
+        let t2 = PrefillKernelTimes::compute(&rl, &m, 2048).total();
+        assert!(t2 > 3.5 * t1);
+    }
+}

@@ -1,0 +1,118 @@
+//! HBM capacity accounting for one instance (Figs 2 and 16).
+
+use crate::config::{ClusterSpec, ModelSpec};
+
+/// Snapshot of HBM usage on one GPU instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HbmUsage {
+    /// Model weights, bytes.
+    pub weights: f64,
+    /// Peak activation workspace, bytes.
+    pub activations: f64,
+    /// KV-cache bytes currently allocated.
+    pub kv_cache: f64,
+    /// Total HBM capacity, bytes.
+    pub capacity: f64,
+}
+
+impl HbmUsage {
+    /// Usage for an instance serving `model` with `kv_tokens` of KV resident.
+    pub fn for_instance(cluster: &ClusterSpec, model: &ModelSpec, kv_tokens: u64) -> Self {
+        HbmUsage {
+            weights: model.weight_bytes(),
+            activations: Self::activation_workspace(model),
+            kv_cache: kv_tokens as f64 * model.kv_bytes_per_token(),
+            capacity: cluster.gpu.hbm_capacity,
+        }
+    }
+
+    /// Peak activation workspace: a few full hidden-state buffers for the
+    /// largest batch plus the FFN intermediate. Small next to weights/KV;
+    /// modeled as 6 buffers of max_batch_tokens × max(d, ffn) elements.
+    pub fn activation_workspace(model: &ModelSpec) -> f64 {
+        let max_tokens = 8192.0; // scheduler's max_prefill_tokens default
+        let widest = model.d_model.max(model.ffn_hidden) as f64;
+        6.0 * max_tokens * widest * model.dtype_bytes
+    }
+
+    pub fn total_used(&self) -> f64 {
+        self.weights + self.activations + self.kv_cache
+    }
+
+    /// HBM capacity utilization in [0, 1] — the Fig 2/16 metric.
+    pub fn utilization(&self) -> f64 {
+        (self.total_used() / self.capacity).min(1.0)
+    }
+
+    /// KV cache's share of capacity (the paper reports 57.3 % for the
+    /// decode instance).
+    pub fn kv_share(&self) -> f64 {
+        self.kv_cache / self.capacity
+    }
+
+    /// KV tokens that fit in the remaining budget given vLLM-style
+    /// `memory_utilization` head-room.
+    pub fn kv_token_budget(
+        cluster: &ClusterSpec,
+        model: &ModelSpec,
+    ) -> u64 {
+        let budget = cluster.usable_hbm()
+            - model.weight_bytes()
+            - Self::activation_workspace(model);
+        (budget.max(0.0) / model.kv_bytes_per_token()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, ModelSpec};
+
+    #[test]
+    fn fig2_prefill_instance_utilization_low() {
+        // Fig 2: prefill instance sits around 20% capacity (weights +
+        // workspace only — KV leaves immediately after transfer).
+        let c = ClusterSpec::paper_default();
+        let m = ModelSpec::llama2_7b();
+        let u = HbmUsage::for_instance(&c, &m, 0);
+        assert!((0.15..0.25).contains(&u.utilization()), "util = {}", u.utilization());
+    }
+
+    #[test]
+    fn fig2_decode_instance_utilization_high() {
+        // Fig 2: decode instance ~75.5% after warmup with KV at 57.3%.
+        let c = ClusterSpec::paper_default();
+        let m = ModelSpec::llama2_7b();
+        let budget = HbmUsage::kv_token_budget(&c, &m);
+        let u = HbmUsage::for_instance(&c, &m, budget);
+        assert!((0.70..0.82).contains(&u.utilization()), "util = {}", u.utilization());
+        assert!((0.50..0.62).contains(&u.kv_share()), "kv share = {}", u.kv_share());
+    }
+
+    #[test]
+    fn kv_budget_positive_and_sane() {
+        let c = ClusterSpec::paper_default();
+        for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
+            let budget = HbmUsage::kv_token_budget(&c, &m);
+            assert!(budget > 10_000, "{}: budget = {budget}", m.name);
+            assert!(budget < 1_000_000);
+        }
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let c = ClusterSpec::paper_default();
+        let m = ModelSpec::llama2_7b();
+        let u = HbmUsage::for_instance(&c, &m, u64::MAX / 1024);
+        assert!(u.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn more_kv_more_utilization() {
+        let c = ClusterSpec::paper_default();
+        let m = ModelSpec::llama2_13b();
+        let u1 = HbmUsage::for_instance(&c, &m, 10_000);
+        let u2 = HbmUsage::for_instance(&c, &m, 50_000);
+        assert!(u2.utilization() > u1.utilization());
+    }
+}

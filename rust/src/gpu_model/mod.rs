@@ -1,0 +1,34 @@
+//! Analytical A100 performance model.
+//!
+//! The paper's claims rest on resource-utilization arithmetic measured on
+//! real A100s. With no GPU available (DESIGN.md §1), this module encodes
+//! that arithmetic directly:
+//!
+//! * [`roofline`] — kernel execution time = max(compute time, memory time)
+//!   with calibrated efficiency factors;
+//! * [`kernels`] — the four profiled kernels (QKV proj / attention /
+//!   O proj / FFN) for both phases, built on the FLOP/byte tables in
+//!   [`crate::config::ModelSpec`];
+//! * [`partition`] — the MPS SM-partitioning curves: superlinear bandwidth
+//!   vs SM fraction (Fig 9) and sublinear prefill slowdown (Fig 10), plus
+//!   the colocation interference model;
+//! * [`memory`] — HBM capacity accounting (weights, activations, KV).
+//!
+//! Calibration anchors (unit-tested against the paper's numbers):
+//!   Fig 1a: prefill HBM-bw utilization < 30 %;
+//!   Fig 1b: decode compute utilization < 26 %;
+//!   Fig 3: attention = 69.5 % of decode layer time at batch 80, seq 1K;
+//!   Fig 9: 20 % SMs ⇒ ~60 % of peak bandwidth;
+//!   Fig 18a: attention executor sustains ~83 % of the bandwidth cap.
+
+pub mod kernels;
+pub mod memory;
+pub mod partition;
+pub mod profile;
+pub mod roofline;
+
+pub use kernels::{DecodeKernelTimes, KernelKind, PhaseKernels, PrefillKernelTimes};
+pub use memory::HbmUsage;
+pub use partition::{bw_frac_of_sm_frac, prefill_slowdown, InterferenceModel};
+pub use profile::{PrefillProfile, ProfileEntry};
+pub use roofline::{KernelCost, Roofline};

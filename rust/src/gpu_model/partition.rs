@@ -1,0 +1,173 @@
+//! MPS SM-partitioning curves and the colocation interference model.
+//!
+//! §3.3.1's two observations, fitted as closed-form curves and anchored to
+//! the paper's measurements:
+//!
+//! 1. *Bandwidth vs SMs is superlinear* (Fig 9): "20% SMs obtain 60% of
+//!    A100's HBM bandwidth". We model `bw_frac = sm_frac^ALPHA_BW` with
+//!    `ALPHA_BW` chosen so bw_frac(0.2) ≈ 0.60.
+//! 2. *Prefill latency vs SMs is sublinear* (Fig 10): compute shrinks with
+//!    SMs but a fraction of the prefill step (routing, scheduling, KV
+//!    transfer, launch overhead) does not use SMs at all.
+
+/// Exponent of the bandwidth-vs-SM-fraction power law. 0.2^0.317 ≈ 0.60.
+pub const ALPHA_BW: f64 = 0.317;
+
+/// Fraction of the prefill step that does not consume SMs (CPU-side
+/// scheduling, KV-transfer issue, launch gaps). Calibrated so that 50 % of
+/// SMs keeps ≈ 63 % of prefill throughput, matching Fig 10's sublinear
+/// shape.
+pub const PREFILL_NON_GPU_FRAC: f64 = 0.12;
+
+/// Mild superlinearity of GEMM efficiency in SM count: fewer SMs lose some
+/// tiling efficiency. Exponent slightly below 1 keeps the slowdown
+/// sublinear overall (Fig 10).
+pub const ALPHA_PREFILL_COMPUTE: f64 = 0.93;
+
+/// Fraction of peak HBM bandwidth reachable with `sm_frac` of the SMs
+/// (Fig 9's curve). Clamped to [0, 1].
+pub fn bw_frac_of_sm_frac(sm_frac: f64) -> f64 {
+    if sm_frac <= 0.0 {
+        return 0.0;
+    }
+    sm_frac.min(1.0).powf(ALPHA_BW)
+}
+
+/// Prefill latency multiplier when the prefill engine is restricted to
+/// `sm_frac` of the SMs (Fig 10's curve, inverted: > 1 means slower).
+pub fn prefill_slowdown(sm_frac: f64) -> f64 {
+    assert!(sm_frac > 0.0 && sm_frac <= 1.0);
+    let gpu_part = (1.0 - PREFILL_NON_GPU_FRAC) / sm_frac.powf(ALPHA_PREFILL_COMPUTE);
+    gpu_part + PREFILL_NON_GPU_FRAC
+}
+
+/// Colocation interference between the prefill engine and the attention
+/// executor sharing one GPU under an MPS split (§3.3.2).
+#[derive(Debug, Clone, Copy)]
+pub struct InterferenceModel {
+    /// SM fraction reserved for the attention executor.
+    pub attn_sm_frac: f64,
+}
+
+impl InterferenceModel {
+    pub fn new(attn_sm_frac: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&attn_sm_frac),
+            "attention executor needs [0,1) of the SMs, got {attn_sm_frac}"
+        );
+        InterferenceModel { attn_sm_frac }
+    }
+
+    /// SM fraction left for the prefill engine.
+    pub fn prefill_sm_frac(&self) -> f64 {
+        1.0 - self.attn_sm_frac
+    }
+
+    /// Prefill latency multiplier while the attention executor is *idle*
+    /// (MPS reservation alone).
+    pub fn prefill_slowdown_idle(&self) -> f64 {
+        prefill_slowdown(self.prefill_sm_frac())
+    }
+
+    /// Prefill latency multiplier while the attention executor is actively
+    /// streaming KV. On top of the SM reservation, the executor consumes
+    /// HBM bandwidth; prefill is compute-bound (Fig 5) so it only stalls to
+    /// the extent its own (small) bandwidth demand exceeds what is left.
+    ///
+    /// `prefill_bw_frac`: the bandwidth fraction the prefill kernels would
+    /// use unconstrained (< 0.30 per Fig 1a); `attn_bw_frac`: what the
+    /// executor is drawing (up to ~0.83 per Fig 18a).
+    pub fn prefill_slowdown_active(&self, prefill_bw_frac: f64, attn_bw_frac: f64) -> f64 {
+        let base = self.prefill_slowdown_idle();
+        let available = (1.0 - attn_bw_frac).max(1e-3);
+        if prefill_bw_frac <= available {
+            base
+        } else {
+            // Bandwidth-starved: the memory-traffic part of prefill dilates.
+            base * (prefill_bw_frac / available)
+        }
+    }
+
+    /// Bandwidth fraction (of the whole GPU's peak) the attention executor
+    /// can sustain with its SM share.
+    pub fn attn_bw_cap(&self, bw_eff: f64) -> f64 {
+        bw_eff * bw_frac_of_sm_frac(self.attn_sm_frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_anchor_20pct_sms_60pct_bw() {
+        let f = bw_frac_of_sm_frac(0.2);
+        assert!((f - 0.60).abs() < 0.02, "bw_frac(0.2) = {f}");
+    }
+
+    #[test]
+    fn bw_frac_monotone_and_bounded() {
+        let mut prev = 0.0;
+        for i in 1..=20 {
+            let f = bw_frac_of_sm_frac(i as f64 / 20.0);
+            assert!(f >= prev);
+            assert!(f <= 1.0);
+            prev = f;
+        }
+        assert!((bw_frac_of_sm_frac(1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(bw_frac_of_sm_frac(0.0), 0.0);
+    }
+
+    #[test]
+    fn bw_frac_superlinear() {
+        // Superlinear in the Fig 9 sense: frac of bandwidth > frac of SMs.
+        for s in [0.1, 0.2, 0.4, 0.6, 0.8] {
+            assert!(bw_frac_of_sm_frac(s) > s);
+        }
+    }
+
+    #[test]
+    fn fig10_sublinear_slowdown() {
+        // Halving SMs must cost less than 2x latency (sublinear).
+        let s = prefill_slowdown(0.5);
+        assert!(s < 2.0, "slowdown(0.5) = {s}");
+        assert!(s > 1.3);
+        // Full SMs ⇒ no slowdown.
+        assert!((prefill_slowdown(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowdown_monotone_decreasing_in_sms() {
+        let mut prev = f64::INFINITY;
+        for i in 1..=10 {
+            let s = prefill_slowdown(i as f64 / 10.0);
+            assert!(s <= prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn interference_idle_vs_active() {
+        let m = InterferenceModel::new(0.2);
+        assert!((m.prefill_sm_frac() - 0.8).abs() < 1e-12);
+        let idle = m.prefill_slowdown_idle();
+        // Prefill draws 25% bw, executor draws 50%: still fits -> no extra.
+        assert_eq!(m.prefill_slowdown_active(0.25, 0.50), idle);
+        // Executor draws 83%: prefill's 25% no longer fits -> dilation.
+        assert!(m.prefill_slowdown_active(0.25, 0.83) > idle);
+    }
+
+    #[test]
+    fn attn_bw_cap_at_20pct_sms() {
+        let m = InterferenceModel::new(0.2);
+        // 83% ceiling × 60% partition curve ≈ 50% of peak.
+        let cap = m.attn_bw_cap(0.83);
+        assert!((0.45..0.55).contains(&cap), "cap = {cap}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_gpu_for_executor_rejected() {
+        let _ = InterferenceModel::new(1.0);
+    }
+}

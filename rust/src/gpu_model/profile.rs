@@ -1,0 +1,246 @@
+//! Offline profiling + adaptive SM partition — §3.3.2.
+//!
+//! The paper's two-stage scheme:
+//!
+//! 1. **Offline profiling**: measure prefill latency across (SM fraction,
+//!    prompt length) with the kernel profiler. Here the "profiler" is the
+//!    roofline + the Fig 10 slowdown curve; the table is serializable so a
+//!    deployment can ship real measurements instead.
+//! 2. **Online serving**: given the TTFT SLO and the workload's prompt
+//!    statistics, pick the *minimal* SM fraction that keeps prefill within
+//!    SLO, and hand the complement to the attention executor.
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::util::json::Json;
+
+use super::kernels::PrefillKernelTimes;
+use super::partition::prefill_slowdown;
+use super::roofline::Roofline;
+
+/// One measured point: prefill latency at (sm_frac, prompt tokens).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfileEntry {
+    pub sm_frac: f64,
+    pub prompt_tokens: u64,
+    pub latency_s: f64,
+}
+
+/// The offline-profiling table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefillProfile {
+    entries: Vec<ProfileEntry>,
+}
+
+impl PrefillProfile {
+    /// Build the table from the GPU model (stands in for the paper's
+    /// kernel profiler; a deployment would load real measurements via
+    /// [`PrefillProfile::from_json`]).
+    pub fn measure(gpu: &GpuSpec, model: &ModelSpec, sm_fracs: &[f64], prompts: &[u64]) -> Self {
+        let rl = Roofline::whole(*gpu);
+        let mut entries = Vec::with_capacity(sm_fracs.len() * prompts.len());
+        for &p in prompts {
+            let base = PrefillKernelTimes::compute(&rl, model, p).total();
+            for &s in sm_fracs {
+                assert!(s > 0.0 && s <= 1.0, "sm_frac in (0,1]");
+                entries.push(ProfileEntry {
+                    sm_frac: s,
+                    prompt_tokens: p,
+                    latency_s: base * prefill_slowdown(s),
+                });
+            }
+        }
+        PrefillProfile { entries }
+    }
+
+    /// Default grid: 10 SM steps × the paper's prompt-length range.
+    pub fn default_grid(gpu: &GpuSpec, model: &ModelSpec) -> Self {
+        let fracs: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        Self::measure(gpu, model, &fracs, &[256, 512, 1024, 2048, 4096])
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Interpolated prefill latency at (sm_frac, tokens): nearest profiled
+    /// SM fraction at or below `sm_frac`, linear interpolation in tokens
+    /// (prefill time is ~linear+quadratic in p; piecewise-linear between
+    /// grid points is within a few percent).
+    pub fn latency(&self, sm_frac: f64, tokens: u64) -> Option<f64> {
+        let frac = self
+            .entries
+            .iter()
+            .map(|e| e.sm_frac)
+            .filter(|&s| s <= sm_frac + 1e-12)
+            .fold(None::<f64>, |acc, s| Some(acc.map_or(s, |a| a.max(s))))?;
+        let mut at_frac: Vec<&ProfileEntry> =
+            self.entries.iter().filter(|e| (e.sm_frac - frac).abs() < 1e-12).collect();
+        at_frac.sort_by_key(|e| e.prompt_tokens);
+        match at_frac.binary_search_by_key(&tokens, |e| e.prompt_tokens) {
+            Ok(i) => Some(at_frac[i].latency_s),
+            Err(0) => {
+                // Below the grid: scale the smallest point linearly.
+                let e = at_frac.first()?;
+                Some(e.latency_s * tokens as f64 / e.prompt_tokens as f64)
+            }
+            Err(i) if i >= at_frac.len() => {
+                // Above the grid: scale the largest point quadratically
+                // (attention-dominated regime).
+                let e = at_frac.last()?;
+                let r = tokens as f64 / e.prompt_tokens as f64;
+                Some(e.latency_s * r * r)
+            }
+            Err(i) => {
+                let (lo, hi) = (at_frac[i - 1], at_frac[i]);
+                let w = (tokens - lo.prompt_tokens) as f64
+                    / (hi.prompt_tokens - lo.prompt_tokens) as f64;
+                Some(lo.latency_s * (1.0 - w) + hi.latency_s * w)
+            }
+        }
+    }
+
+    /// §3.3.2 online stage: the minimal profiled SM fraction whose prefill
+    /// latency for `tokens`-token prompts stays within `ttft_slo_s`
+    /// (queueing headroom is the caller's concern). `None` if even the
+    /// whole GPU misses the SLO.
+    pub fn min_prefill_sm_frac(&self, tokens: u64, ttft_slo_s: f64) -> Option<f64> {
+        let mut fracs: Vec<f64> = self.entries.iter().map(|e| e.sm_frac).collect();
+        fracs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        fracs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        fracs
+            .into_iter()
+            .find(|&s| self.latency(s, tokens).is_some_and(|l| l <= ttft_slo_s))
+    }
+
+    /// The SM fraction left for the attention executor after reserving the
+    /// minimal prefill share (clamped to leave the executor something only
+    /// when the SLO allows it).
+    pub fn executor_sm_frac(&self, tokens: u64, ttft_slo_s: f64) -> f64 {
+        match self.min_prefill_sm_frac(tokens, ttft_slo_s) {
+            Some(s) => (1.0 - s).max(0.0),
+            None => 0.0, // SLO needs the whole GPU: no executor share
+        }
+    }
+
+    // ----- serialization (ship real profiler output) ------------------------
+
+    pub fn to_json(&self) -> String {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("sm".into(), Json::Num(e.sm_frac));
+                    o.insert("tokens".into(), Json::Num(e.prompt_tokens as f64));
+                    o.insert("latency_s".into(), Json::Num(e.latency_s));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let entries = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("profile must be an array"))?
+            .iter()
+            .map(|e| {
+                Ok(ProfileEntry {
+                    sm_frac: e
+                        .get("sm")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("missing sm"))?,
+                    prompt_tokens: e
+                        .get("tokens")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| anyhow::anyhow!("missing tokens"))?,
+                    latency_s: e
+                        .get("latency_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("missing latency_s"))?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(PrefillProfile { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+
+    fn profile() -> PrefillProfile {
+        PrefillProfile::default_grid(&GpuSpec::a100_80g(), &ModelSpec::llama2_7b())
+    }
+
+    #[test]
+    fn latency_monotone_in_both_axes() {
+        let p = profile();
+        // More SMs -> faster.
+        let slow = p.latency(0.3, 1024).unwrap();
+        let fast = p.latency(0.9, 1024).unwrap();
+        assert!(fast < slow);
+        // Longer prompts -> slower.
+        assert!(p.latency(0.5, 2048).unwrap() > p.latency(0.5, 512).unwrap());
+    }
+
+    #[test]
+    fn interpolation_between_grid_points() {
+        let p = profile();
+        let lo = p.latency(0.5, 1024).unwrap();
+        let hi = p.latency(0.5, 2048).unwrap();
+        let mid = p.latency(0.5, 1536).unwrap();
+        assert!(lo < mid && mid < hi);
+    }
+
+    #[test]
+    fn min_sm_frac_meets_slo() {
+        let p = profile();
+        // 7B prefill of 1024 tokens on a full A100 takes ~20 ms — a 200 ms
+        // TTFT SLO leaves a lot of SM headroom.
+        let s = p.min_prefill_sm_frac(1024, 0.2).unwrap();
+        assert!(s < 0.5, "loose SLO needs few SMs: {s}");
+        assert!(p.latency(s, 1024).unwrap() <= 0.2);
+        // A brutal SLO needs everything (or is unreachable).
+        let tight = p.min_prefill_sm_frac(4096, 1e-4);
+        assert!(tight.is_none());
+    }
+
+    #[test]
+    fn executor_gets_the_complement() {
+        let p = profile();
+        let s = p.min_prefill_sm_frac(1024, 0.2).unwrap();
+        assert!((p.executor_sm_frac(1024, 0.2) - (1.0 - s)).abs() < 1e-12);
+        assert_eq!(p.executor_sm_frac(4096, 1e-4), 0.0);
+    }
+
+    #[test]
+    fn tighter_slo_reserves_more_sms() {
+        let p = profile();
+        let loose = p.min_prefill_sm_frac(2048, 1.0).unwrap();
+        let tight = p.min_prefill_sm_frac(2048, 0.25).unwrap();
+        assert!(tight >= loose, "tight {tight} vs loose {loose}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = profile();
+        let back = PrefillProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn out_of_grid_extrapolation_finite() {
+        let p = profile();
+        assert!(p.latency(0.5, 64).unwrap() > 0.0);
+        assert!(p.latency(0.5, 16384).unwrap() > p.latency(0.5, 4096).unwrap());
+        assert!(p.latency(0.05, 1024).is_none(), "below smallest profiled frac");
+    }
+}

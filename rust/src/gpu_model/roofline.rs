@@ -1,0 +1,155 @@
+//! Roofline kernel timing: t = max(flops / F_eff, bytes / B_eff).
+
+use crate::config::GpuSpec;
+
+/// FLOP and HBM-byte cost of one kernel invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl KernelCost {
+    pub fn new(flops: f64, bytes: f64) -> Self {
+        KernelCost { flops, bytes }
+    }
+
+    /// Arithmetic intensity, FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+
+    pub fn add(&self, other: &KernelCost) -> KernelCost {
+        KernelCost { flops: self.flops + other.flops, bytes: self.bytes + other.bytes }
+    }
+}
+
+/// Roofline evaluator for one GPU (optionally a fractional MPS partition).
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub gpu: GpuSpec,
+    /// SM fraction available to this partition (1.0 = whole GPU).
+    pub sm_frac: f64,
+}
+
+impl Roofline {
+    pub fn whole(gpu: GpuSpec) -> Self {
+        Roofline { gpu, sm_frac: 1.0 }
+    }
+
+    pub fn partition(gpu: GpuSpec, sm_frac: f64) -> Self {
+        assert!(sm_frac > 0.0 && sm_frac <= 1.0, "sm_frac in (0,1], got {sm_frac}");
+        Roofline { gpu, sm_frac }
+    }
+
+    /// Effective compute throughput for this partition, FLOP/s. Compute
+    /// scales ~linearly with SMs (each SM carries its own tensor cores).
+    pub fn effective_flops(&self) -> f64 {
+        self.gpu.peak_flops * self.gpu.compute_eff * self.sm_frac
+    }
+
+    /// Effective memory bandwidth for this partition, B/s. Bandwidth scales
+    /// *superlinearly* with SM fraction (Fig 9): a small number of SMs can
+    /// keep most of HBM busy because each SM sustains many outstanding
+    /// loads.
+    pub fn effective_bw(&self) -> f64 {
+        self.gpu.hbm_bw * self.gpu.bw_eff * super::partition::bw_frac_of_sm_frac(self.sm_frac)
+    }
+
+    /// Kernel execution time, seconds.
+    pub fn time(&self, cost: KernelCost) -> f64 {
+        let tc = cost.flops / self.effective_flops();
+        let tm = cost.bytes / self.effective_bw();
+        tc.max(tm)
+    }
+
+    /// True if the kernel is memory-bound on this partition.
+    pub fn memory_bound(&self, cost: KernelCost) -> bool {
+        cost.bytes / self.effective_bw() >= cost.flops / self.effective_flops()
+    }
+
+    /// Compute utilization achieved by this kernel: fraction of the *whole
+    /// GPU's* peak FLOPs actually used (the metric Figs 1b/5a/6a/17b plot).
+    pub fn compute_utilization(&self, cost: KernelCost) -> f64 {
+        let t = self.time(cost);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        (cost.flops / t) / self.gpu.peak_flops
+    }
+
+    /// HBM bandwidth utilization achieved by this kernel: fraction of the
+    /// whole GPU's peak bandwidth (Figs 1a/5b/6b/17a).
+    pub fn bw_utilization(&self, cost: KernelCost) -> f64 {
+        let t = self.time(cost);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        (cost.bytes / t) / self.gpu.hbm_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    fn rl() -> Roofline {
+        Roofline::whole(GpuSpec::a100_80g())
+    }
+
+    #[test]
+    fn compute_bound_kernel_times_by_flops() {
+        let r = rl();
+        // Huge intensity => compute-bound.
+        let c = KernelCost::new(1e15, 1e6);
+        assert!(!r.memory_bound(c));
+        let expected = 1e15 / r.effective_flops();
+        assert!((r.time(c) - expected).abs() / expected < 1e-12);
+    }
+
+    #[test]
+    fn memory_bound_kernel_times_by_bytes() {
+        let r = rl();
+        let c = KernelCost::new(1e6, 1e12);
+        assert!(r.memory_bound(c));
+        let expected = 1e12 / r.effective_bw();
+        assert!((r.time(c) - expected).abs() / expected < 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounded_by_efficiency() {
+        let r = rl();
+        for (f, b) in [(1e15, 1e9), (1e12, 1e12), (1e9, 1e12)] {
+            let c = KernelCost::new(f, b);
+            assert!(r.compute_utilization(c) <= r.gpu.compute_eff + 1e-9);
+            assert!(r.bw_utilization(c) <= r.gpu.bw_eff + 1e-9);
+        }
+    }
+
+    #[test]
+    fn partition_scales_compute_linearly() {
+        let g = GpuSpec::a100_80g();
+        let half = Roofline::partition(g, 0.5);
+        assert!((half.effective_flops() / Roofline::whole(g).effective_flops() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partition_bw_superlinear() {
+        let g = GpuSpec::a100_80g();
+        // 20% of SMs must give ~60% of bandwidth (Fig 9 anchor).
+        let frac = Roofline::partition(g, 0.2).effective_bw() / Roofline::whole(g).effective_bw();
+        assert!((0.55..0.65).contains(&frac), "got {frac}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_partition_rejected() {
+        let _ = Roofline::partition(GpuSpec::a100_80g(), 0.0);
+    }
+
+    #[test]
+    fn intensity() {
+        assert!((KernelCost::new(100.0, 50.0).intensity() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Fixed-size KV block allocator with a free list.
+
+/// Index of a KV block within the pool.
+pub type BlockId = u32;
+
+/// Allocator over `num_blocks` blocks of `block_tokens` tokens each.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    num_blocks: usize,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        assert!(num_blocks <= BlockId::MAX as usize);
+        // LIFO free list: most-recently-freed block is reused first (cache
+        // friendliness in the slab path).
+        let free = (0..num_blocks as BlockId).rev().collect();
+        BlockAllocator { block_tokens, num_blocks, free }
+    }
+
+    /// Capacity sized from a byte budget (how deployments configure it).
+    pub fn from_bytes(budget_bytes: f64, bytes_per_token: f64, block_tokens: usize) -> Self {
+        let tokens = (budget_bytes / bytes_per_token).max(0.0) as usize;
+        Self::new(tokens / block_tokens, block_tokens)
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    /// Tokens representable by the currently-free blocks.
+    pub fn free_token_capacity(&self) -> usize {
+        self.free_blocks() * self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Allocate one block. `None` when exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        self.free.pop()
+    }
+
+    /// Allocate `n` blocks atomically: all or none.
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free.len() < n {
+            return None;
+        }
+        Some(self.free.split_off(self.free.len() - n))
+    }
+
+    /// Return a block to the pool.
+    ///
+    /// Double-free is a logic bug upstream; debug builds assert.
+    pub fn free(&mut self, id: BlockId) {
+        debug_assert!((id as usize) < self.num_blocks, "block id out of range");
+        debug_assert!(!self.free.contains(&id), "double free of block {id}");
+        self.free.push(id);
+    }
+
+    pub fn free_all(&mut self, ids: impl IntoIterator<Item = BlockId>) {
+        for id in ids {
+            self.free(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_until_exhausted() {
+        let mut a = BlockAllocator::new(4, 16);
+        let mut got = vec![];
+        while let Some(b) = a.alloc() {
+            got.push(b);
+        }
+        assert_eq!(got.len(), 4);
+        assert_eq!(a.free_blocks(), 0);
+        assert_eq!(a.used_blocks(), 4);
+        // All distinct.
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn free_returns_capacity() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b0 = a.alloc().unwrap();
+        assert_eq!(a.free_blocks(), 1);
+        a.free(b0);
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn alloc_n_is_atomic() {
+        let mut a = BlockAllocator::new(3, 16);
+        assert!(a.alloc_n(4).is_none());
+        assert_eq!(a.free_blocks(), 3, "failed alloc_n must not leak");
+        let blocks = a.alloc_n(3).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = BlockAllocator::new(10, 16);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn from_bytes_capacity() {
+        // 1 MiB budget, 512 B/token, 16-token blocks -> 2048 tokens -> 128 blocks.
+        let a = BlockAllocator::from_bytes(1048576.0, 512.0, 16);
+        assert_eq!(a.num_blocks(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_block_tokens_rejected() {
+        let _ = BlockAllocator::new(4, 0);
+    }
+}

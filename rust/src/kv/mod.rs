@@ -1,0 +1,21 @@
+//! Paged KV-cache management (vLLM-style PagedAttention block tables).
+//!
+//! Two cooperating pieces:
+//!
+//! * [`BlockAllocator`] — fixed-size token blocks over a bounded pool with
+//!   a free list; the unit of HBM accounting on both decode instances and
+//!   the attention executor's offload pool.
+//! * [`KvPool`] — per-sequence block tables on top of the allocator:
+//!   append tokens, query capacity, pick preemption victims when the pool
+//!   saturates (the event behind the paper's OpenThoughts TPOT spikes),
+//!   and release on completion.
+//!
+//! The *real* CPU serving path additionally stores tensor data per slot
+//! ([`slab::KvSlab`]); the simulator only needs the accounting.
+
+mod block;
+mod pool;
+pub mod slab;
+
+pub use block::{BlockAllocator, BlockId};
+pub use pool::{KvPool, SeqId, SeqKv};

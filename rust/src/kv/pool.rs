@@ -1,0 +1,244 @@
+//! Per-sequence block tables over the [`BlockAllocator`], with preemption.
+
+use std::collections::HashMap;
+
+use super::block::{BlockAllocator, BlockId};
+
+/// Opaque sequence (request) identifier.
+pub type SeqId = u64;
+
+/// One sequence's KV state: its block table and logical token length.
+#[derive(Debug, Clone)]
+pub struct SeqKv {
+    pub blocks: Vec<BlockId>,
+    pub tokens: usize,
+}
+
+impl SeqKv {
+    /// Token capacity of the currently-held blocks.
+    fn capacity(&self, block_tokens: usize) -> usize {
+        self.blocks.len() * block_tokens
+    }
+}
+
+/// KV pool: sequences → block tables, growth, and preemption.
+#[derive(Debug)]
+pub struct KvPool {
+    alloc: BlockAllocator,
+    seqs: HashMap<SeqId, SeqKv>,
+    /// Admission order, for vLLM-style last-come-first-preempted victims.
+    order: Vec<SeqId>,
+}
+
+impl KvPool {
+    pub fn new(alloc: BlockAllocator) -> Self {
+        KvPool { alloc, seqs: HashMap::new(), order: Vec::new() }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.alloc.block_tokens()
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.alloc.num_blocks()
+    }
+
+    /// Total tokens resident across all sequences.
+    pub fn resident_tokens(&self) -> usize {
+        self.seqs.values().map(|s| s.tokens).sum()
+    }
+
+    /// Pool saturation in [0, 1] (block granularity).
+    pub fn occupancy(&self) -> f64 {
+        if self.alloc.num_blocks() == 0 {
+            return 1.0;
+        }
+        self.alloc.used_blocks() as f64 / self.alloc.num_blocks() as f64
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    pub fn seq(&self, id: SeqId) -> Option<&SeqKv> {
+        self.seqs.get(&id)
+    }
+
+    /// Can a new sequence of `tokens` tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.alloc.free_blocks() >= self.alloc.blocks_for(tokens)
+    }
+
+    /// Admit a sequence with `tokens` already present (its prefill KV).
+    /// Fails (without side effects) when blocks are unavailable.
+    pub fn admit(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&id) {
+            return Err(KvError::DuplicateSeq(id));
+        }
+        let need = self.alloc.blocks_for(tokens.max(1));
+        let blocks = self.alloc.alloc_n(need).ok_or(KvError::OutOfBlocks {
+            requested: need,
+            available: self.alloc.free_blocks(),
+        })?;
+        self.seqs.insert(id, SeqKv { blocks, tokens });
+        self.order.push(id);
+        Ok(())
+    }
+
+    /// Append one generated token to a sequence, growing its table by a
+    /// block when it crosses a boundary.
+    pub fn append_token(&mut self, id: SeqId) -> Result<(), KvError> {
+        let block_tokens = self.alloc.block_tokens();
+        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        if seq.tokens + 1 > seq.capacity(block_tokens) {
+            let blk = self.alloc.alloc().ok_or(KvError::OutOfBlocks {
+                requested: 1,
+                available: 0,
+            })?;
+            seq.blocks.push(blk);
+        }
+        seq.tokens += 1;
+        Ok(())
+    }
+
+    /// Release a sequence, returning its blocks to the pool.
+    pub fn release(&mut self, id: SeqId) -> Result<usize, KvError> {
+        let seq = self.seqs.remove(&id).ok_or(KvError::UnknownSeq(id))?;
+        let n = seq.blocks.len();
+        self.alloc.free_all(seq.blocks);
+        self.order.retain(|&s| s != id);
+        Ok(n)
+    }
+
+    /// Pick the preemption victim: the most recently admitted sequence
+    /// (vLLM's recompute-preemption order — newest requests have the least
+    /// sunk decode work).
+    pub fn preemption_victim(&self) -> Option<SeqId> {
+        self.order.last().copied()
+    }
+
+    /// Preempt (evict) the victim, freeing its blocks. Returns the evicted
+    /// sequence's id and token count so the scheduler can re-queue it for
+    /// recompute.
+    pub fn preempt(&mut self) -> Option<(SeqId, usize)> {
+        let victim = self.preemption_victim()?;
+        let tokens = self.seqs[&victim].tokens;
+        self.release(victim).expect("victim exists");
+        Some((victim, tokens))
+    }
+
+    pub fn seq_ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.order.iter().copied()
+    }
+}
+
+/// KV pool errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("sequence {0} already admitted")]
+    DuplicateSeq(SeqId),
+    #[error("sequence {0} not found")]
+    UnknownSeq(SeqId),
+    #[error("out of KV blocks: requested {requested}, available {available}")]
+    OutOfBlocks { requested: usize, available: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(blocks: usize) -> KvPool {
+        KvPool::new(BlockAllocator::new(blocks, 16))
+    }
+
+    #[test]
+    fn admit_grow_release_cycle() {
+        let mut p = pool(8);
+        p.admit(1, 30).unwrap(); // 2 blocks
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.resident_tokens(), 30);
+        // 31st and 32nd tokens fit in block 2; 33rd allocates block 3.
+        p.append_token(1).unwrap();
+        p.append_token(1).unwrap();
+        assert_eq!(p.used_blocks(), 2);
+        p.append_token(1).unwrap();
+        assert_eq!(p.used_blocks(), 3);
+        assert_eq!(p.release(1).unwrap(), 3);
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn admit_fails_cleanly_when_full() {
+        let mut p = pool(2);
+        p.admit(1, 32).unwrap();
+        let err = p.admit(2, 1).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        assert_eq!(p.num_seqs(), 1);
+        assert!(!p.contains(2));
+    }
+
+    #[test]
+    fn duplicate_admit_rejected() {
+        let mut p = pool(4);
+        p.admit(7, 1).unwrap();
+        assert_eq!(p.admit(7, 1).unwrap_err(), KvError::DuplicateSeq(7));
+    }
+
+    #[test]
+    fn preemption_is_lifo() {
+        let mut p = pool(6);
+        p.admit(1, 16).unwrap();
+        p.admit(2, 16).unwrap();
+        p.admit(3, 16).unwrap();
+        assert_eq!(p.preemption_victim(), Some(3));
+        let (victim, tokens) = p.preempt().unwrap();
+        assert_eq!((victim, tokens), (3, 16));
+        assert_eq!(p.preemption_victim(), Some(2));
+        assert!(!p.contains(3));
+    }
+
+    #[test]
+    fn release_unknown_errors() {
+        let mut p = pool(2);
+        assert_eq!(p.release(9).unwrap_err(), KvError::UnknownSeq(9));
+        assert_eq!(p.append_token(9).unwrap_err(), KvError::UnknownSeq(9));
+    }
+
+    #[test]
+    fn occupancy_tracks_blocks() {
+        let mut p = pool(4);
+        assert_eq!(p.occupancy(), 0.0);
+        p.admit(1, 32).unwrap();
+        assert!((p.occupancy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn can_admit_matches_admit() {
+        let mut p = pool(2);
+        assert!(p.can_admit(32));
+        assert!(!p.can_admit(33));
+        p.admit(1, 32).unwrap();
+        assert!(!p.can_admit(1));
+    }
+
+    #[test]
+    fn append_when_full_errors_and_preserves_state() {
+        let mut p = pool(1);
+        p.admit(1, 16).unwrap();
+        let err = p.append_token(1).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        assert_eq!(p.seq(1).unwrap().tokens, 16, "failed append must not mutate");
+    }
+}

@@ -1,0 +1,269 @@
+//! Tensor-carrying KV storage for the real (CPU PJRT) serving path.
+//!
+//! Each sequence owns a contiguous f32 slab laid out `[L, S, H, D]` for K
+//! and V. The decode engine gathers per-layer, per-batch views into the
+//! `[B, S, H, D]` input buffers of the attention artifact, and scatters the
+//! `layer_pre` outputs back at the step position. (The A100-scale simulator
+//! never touches this module — it only needs the block accounting.)
+
+use std::collections::HashMap;
+
+use super::pool::SeqId;
+
+/// Shape metadata for a KV slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvShape {
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvShape {
+    pub fn per_token(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn per_layer(&self) -> usize {
+        self.max_seq * self.per_token()
+    }
+
+    pub fn total(&self) -> usize {
+        self.n_layers * self.per_layer()
+    }
+}
+
+/// One sequence's K and V tensors.
+#[derive(Debug, Clone)]
+pub struct SeqSlab {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid tokens written so far.
+    pub len: usize,
+}
+
+/// KV tensor store keyed by sequence.
+#[derive(Debug)]
+pub struct KvSlab {
+    shape: KvShape,
+    seqs: HashMap<SeqId, SeqSlab>,
+}
+
+impl KvSlab {
+    pub fn new(shape: KvShape) -> Self {
+        KvSlab { shape, seqs: HashMap::new() }
+    }
+
+    pub fn shape(&self) -> KvShape {
+        self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Insert a sequence from prefill output. `k`/`v` are `[L, P, H, D]`
+    /// (prompt-bucket leading dims) with `tokens` valid positions.
+    pub fn insert_from_prefill(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        bucket_seq: usize,
+        tokens: usize,
+    ) {
+        let sh = self.shape;
+        assert!(tokens <= bucket_seq && tokens <= sh.max_seq);
+        assert_eq!(k.len(), sh.n_layers * bucket_seq * sh.per_token());
+        assert_eq!(v.len(), k.len());
+        let mut slab = SeqSlab {
+            k: vec![0.0; sh.total()],
+            v: vec![0.0; sh.total()],
+            len: tokens,
+        };
+        let pt = sh.per_token();
+        for l in 0..sh.n_layers {
+            let src = l * bucket_seq * pt;
+            let dst = l * sh.per_layer();
+            slab.k[dst..dst + tokens * pt].copy_from_slice(&k[src..src + tokens * pt]);
+            slab.v[dst..dst + tokens * pt].copy_from_slice(&v[src..src + tokens * pt]);
+        }
+        self.seqs.insert(id, slab);
+    }
+
+    /// Write one new token's K/V rows for a single layer at `pos`.
+    /// `k_row`/`v_row` are `[H, D]`.
+    pub fn write_token(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let sh = self.shape;
+        let pt = sh.per_token();
+        assert_eq!(k_row.len(), pt);
+        assert_eq!(v_row.len(), pt);
+        assert!(pos < sh.max_seq, "pos {pos} >= max_seq {}", sh.max_seq);
+        let slab = self.seqs.get_mut(&id).expect("unknown sequence");
+        let off = layer * sh.per_layer() + pos * pt;
+        slab.k[off..off + pt].copy_from_slice(k_row);
+        slab.v[off..off + pt].copy_from_slice(v_row);
+        // Advance the valid length immediately: the per-layer decode loop
+        // writes layer l's new row and then gathers layer l for attention,
+        // so the row written *this* call must be visible to the very next
+        // gather. (Rows for layers > l at this position are written before
+        // their own gathers — the call order guarantees it.)
+        slab.len = slab.len.max(pos + 1);
+    }
+
+    /// Gather one layer of a batch of sequences into `[B, S, H, D]` output
+    /// buffers (the attention artifact's kv inputs). Buffers must be
+    /// `batch.len() * per_layer()` long; rows beyond each sequence's length
+    /// are left as-is (callers pass zeroed or reused scratch — masked by
+    /// seq_lens in the kernel).
+    pub fn gather_layer(
+        &self,
+        batch: &[SeqId],
+        layer: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let sh = self.shape;
+        let per_layer = sh.per_layer();
+        assert_eq!(k_out.len(), batch.len() * per_layer);
+        assert_eq!(v_out.len(), k_out.len());
+        let pt = sh.per_token();
+        for (bi, id) in batch.iter().enumerate() {
+            let slab = self.seqs.get(id).expect("unknown sequence");
+            let src = layer * per_layer;
+            let n = slab.len * pt;
+            let dst = bi * per_layer;
+            k_out[dst..dst + n].copy_from_slice(&slab.k[src..src + n]);
+            v_out[dst..dst + n].copy_from_slice(&slab.v[src..src + n]);
+        }
+    }
+
+    pub fn remove(&mut self, id: SeqId) -> bool {
+        self.seqs.remove(&id).is_some()
+    }
+
+    /// Extract a sequence's full slab (for KV transfer decode → executor,
+    /// or executor hand-back).
+    pub fn extract(&mut self, id: SeqId) -> Option<SeqSlab> {
+        self.seqs.remove(&id)
+    }
+
+    /// Insert a previously-extracted slab (the receiving side of a KV
+    /// transfer).
+    pub fn insert_slab(&mut self, id: SeqId, slab: SeqSlab) {
+        assert_eq!(slab.k.len(), self.shape.total());
+        self.seqs.insert(id, slab);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> KvShape {
+        KvShape { n_layers: 2, max_seq: 8, n_heads: 2, head_dim: 4 }
+    }
+
+    #[test]
+    fn shape_arithmetic() {
+        let sh = shape();
+        assert_eq!(sh.per_token(), 8);
+        assert_eq!(sh.per_layer(), 64);
+        assert_eq!(sh.total(), 128);
+    }
+
+    #[test]
+    fn prefill_insert_then_gather() {
+        let sh = shape();
+        let mut slab = KvSlab::new(sh);
+        let bucket = 4;
+        let tokens = 3;
+        // Distinct values per (layer, pos): k = 100*l + 10*pos + i
+        let mut k = vec![0.0; sh.n_layers * bucket * sh.per_token()];
+        for l in 0..sh.n_layers {
+            for p in 0..bucket {
+                for i in 0..sh.per_token() {
+                    k[(l * bucket + p) * sh.per_token() + i] =
+                        (100 * l + 10 * p + i) as f32;
+                }
+            }
+        }
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        slab.insert_from_prefill(1, &k, &v, bucket, tokens);
+        assert_eq!(slab.seq_len(1), Some(3));
+
+        let mut k_out = vec![0.0; sh.per_layer()];
+        let mut v_out = vec![0.0; sh.per_layer()];
+        slab.gather_layer(&[1], 1, &mut k_out, &mut v_out);
+        // Layer 1, pos 2, elem 5 => 100 + 20 + 5.
+        assert_eq!(k_out[2 * sh.per_token() + 5], 125.0);
+        assert_eq!(v_out[2 * sh.per_token() + 5], -125.0);
+        // Beyond len: zero (scratch was zeroed).
+        assert_eq!(k_out[3 * sh.per_token()], 0.0);
+    }
+
+    #[test]
+    fn write_token_advances_len_immediately() {
+        let sh = shape();
+        let mut slab = KvSlab::new(sh);
+        slab.insert_from_prefill(5, &vec![0.0; 128], &vec![0.0; 128], sh.max_seq, 2);
+        let row = vec![7.0; sh.per_token()];
+        slab.write_token(5, 0, 2, &row, &row);
+        assert_eq!(slab.seq_len(5), Some(3), "len advances on first write at pos");
+        slab.write_token(5, 1, 2, &row, &row);
+        assert_eq!(slab.seq_len(5), Some(3));
+        let mut k_out = vec![0.0; sh.per_layer()];
+        let mut v_out = vec![0.0; sh.per_layer()];
+        slab.gather_layer(&[5], 1, &mut k_out, &mut v_out);
+        assert_eq!(k_out[2 * sh.per_token()], 7.0);
+    }
+
+    #[test]
+    fn extract_and_reinsert_roundtrip() {
+        let sh = shape();
+        let mut a = KvSlab::new(sh);
+        let mut b = KvSlab::new(sh);
+        a.insert_from_prefill(9, &vec![1.5; 128], &vec![2.5; 128], sh.max_seq, 4);
+        let s = a.extract(9).unwrap();
+        assert!(!a.contains(9));
+        b.insert_slab(9, s);
+        assert_eq!(b.seq_len(9), Some(4));
+        let mut k_out = vec![0.0; sh.per_layer()];
+        let mut v_out = vec![0.0; sh.per_layer()];
+        b.gather_layer(&[9], 0, &mut k_out, &mut v_out);
+        assert_eq!(k_out[0], 1.5);
+        assert_eq!(v_out[0], 2.5);
+    }
+
+    #[test]
+    fn gather_multi_sequence_batch() {
+        let sh = shape();
+        let mut slab = KvSlab::new(sh);
+        slab.insert_from_prefill(1, &vec![1.0; 128], &vec![1.0; 128], sh.max_seq, 2);
+        slab.insert_from_prefill(2, &vec![2.0; 128], &vec![2.0; 128], sh.max_seq, 5);
+        let mut k_out = vec![0.0; 2 * sh.per_layer()];
+        let mut v_out = vec![0.0; 2 * sh.per_layer()];
+        slab.gather_layer(&[2, 1], 0, &mut k_out, &mut v_out);
+        assert_eq!(k_out[0], 2.0); // first row of seq 2
+        assert_eq!(k_out[sh.per_layer()], 1.0); // first row of seq 1
+    }
+}

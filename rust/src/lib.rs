@@ -1,0 +1,40 @@
+//! # Adrenaline — attention disaggregation for PD-disaggregated LLM serving
+//!
+//! A Rust + JAX + Pallas reproduction of *"Injecting Adrenaline into LLM
+//! Serving: Boosting Resource Utilization and Throughput via Attention
+//! Disaggregation"* (CS.DC 2025).
+//!
+//! The system is a three-layer stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: proxy/router, the
+//!   load-aware offloading scheduler (the paper's Algorithm 1), continuous
+//!   batching, paged KV-cache management, the prefill/decode engines and the
+//!   attention executor, plus the PJRT runtime that executes AOT-compiled
+//!   artifacts. Python never runs on the request path.
+//! * **L2 (python/compile/model.py)** — the transformer forward pass, split
+//!   at exactly the boundaries the paper disaggregates (pre-attention /
+//!   attention / post-attention), lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas decode-attention kernel:
+//!   the memory-bound, offloadable unit of work.
+//!
+//! Because the paper's testbed (8×A100, Llama-2 7B/13B) is unavailable, the
+//! A100-scale evaluation runs on [`gpu_model`] (an analytical roofline +
+//! MPS-partition model calibrated to the paper's own measurements) driven by
+//! the [`sim`] discrete-event cluster simulator, while the *real* serving
+//! path ([`engine`], [`runtime`]) executes a tiny Llama-architecture model
+//! end-to-end on the CPU PJRT client. See DESIGN.md for the substitution
+//! table and the per-figure experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gpu_model;
+pub mod kv;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

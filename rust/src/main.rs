@@ -1,0 +1,213 @@
+//! `adrenaline` — leader entrypoint and CLI.
+//!
+//! Subcommands (argument parsing is hand-rolled; the offline vendor set
+//! has no clap):
+//!
+//!   serve     Run the REAL serving path: tiny Llama over PJRT CPU with
+//!             the full proxy / prefill+executor / decode topology.
+//!   simulate  One A100-scale cluster simulation; prints the SimReport.
+//!   bounds    Print the offload bounds (Eqs 1–3) for a model/SLO.
+//!   figures   Hint: use the dedicated `figures` binary.
+//!
+//! Examples:
+//!   adrenaline serve --requests 12 --offload load_aware
+//!   adrenaline simulate --model 7b --workload sharegpt --rate 24 \
+//!       --duration 120 --offload disabled
+//!   adrenaline bounds --model 13b --avg-seq 1024
+
+use adrenaline::config::{ClusterSpec, ModelSpec, OffloadPolicy, ServingConfig, SloConfig};
+use adrenaline::coordinator::OffloadBounds;
+use adrenaline::engine::Server;
+use adrenaline::runtime::Manifest;
+use adrenaline::sim::{ClusterSim, SimConfig};
+use adrenaline::workload::{TraceGenerator, WorkloadKind};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn model(&self) -> ModelSpec {
+        match self.get("model").unwrap_or("7b") {
+            "13b" => ModelSpec::llama2_13b(),
+            "tiny" => ModelSpec::tiny(),
+            _ => ModelSpec::llama2_7b(),
+        }
+    }
+
+    fn workload(&self) -> WorkloadKind {
+        match self.get("workload").unwrap_or("sharegpt") {
+            "openthoughts" => WorkloadKind::OpenThoughts,
+            _ => WorkloadKind::ShareGpt,
+        }
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        match self.get("offload").unwrap_or("load_aware") {
+            "disabled" => OffloadPolicy::Disabled,
+            "load_aware" => OffloadPolicy::LoadAware,
+            "load_aware_strict" => OffloadPolicy::LoadAwareStrict,
+            r => OffloadPolicy::FixedRatio(r.parse().unwrap_or(0.7)),
+        }
+    }
+}
+
+fn main() -> adrenaline::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "serve" => serve(&args),
+        "simulate" => simulate(&args),
+        "bounds" => bounds(&args),
+        "figures" => {
+            println!("use the dedicated binary: cargo run --release --bin figures [fig..|all]");
+            Ok(())
+        }
+        _ => {
+            println!(
+                "adrenaline — attention disaggregation for PD-disaggregated LLM serving\n\
+                 \n\
+                 USAGE: adrenaline <serve|simulate|bounds> [--key value ...]\n\
+                 \n\
+                 serve     --requests N --offload <disabled|load_aware|RATIO> --seed S\n\
+                 simulate  --model <7b|13b> --workload <sharegpt|openthoughts>\n\
+                 \x20          --rate R --duration D --offload <...> --seed S\n\
+                 \x20          [--prefill-instances N] [--adaptive-partition 1]\n\
+                 \x20          [--save-trace FILE]\n\
+                 bounds    --model <7b|13b> --avg-seq TOKENS --tpot-slo S"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// The real CPU-PJRT serving path on the tiny model.
+fn serve(args: &Args) -> adrenaline::Result<()> {
+    let n = args.usize("requests", 8);
+    let seed = args.f64("seed", 7.0) as u64;
+    let cfg = ServingConfig { offload: args.offload(), ..Default::default() };
+
+    println!("loading artifacts from {} ...", Manifest::default_dir().display());
+    let mut server = Server::start(&Manifest::default_dir(), cfg)?;
+
+    let mut gen = TraceGenerator::new(WorkloadKind::ShareGpt, 4.0, seed).with_clip((4, 48), (1, 48));
+    let reqs = gen.take(n);
+    let reqs = gen.with_tokens(reqs, 256);
+    println!("serving {n} requests ...");
+    let report = server.run_requests(&reqs, None)?;
+
+    for c in &report.completions {
+        println!(
+            "request {:>3}  offloaded={:<5}  {} tokens: {:?}",
+            c.id,
+            c.offloaded,
+            c.tokens.len(),
+            &c.tokens[..c.tokens.len().min(8)]
+        );
+    }
+    let ttft = report.metrics.ttft_stats();
+    let tpot = report.metrics.tpot_stats();
+    println!(
+        "\nserved {} requests in {:.2}s  ({} offloaded, {} decode steps, {} fused)",
+        report.completions.len(),
+        report.wall_s,
+        report.offloaded_requests,
+        report.decode_steps,
+        report.fused_steps
+    );
+    if let (Some(t1), Some(t2)) = (ttft, tpot) {
+        println!(
+            "TTFT mean {:.1} ms   TPOT mean {:.1} ms p99 {:.1} ms   throughput {:.1} tok/s",
+            t1.mean * 1e3,
+            t2.mean * 1e3,
+            t2.p99 * 1e3,
+            report.metrics.total_output_tokens() as f64 / report.wall_s
+        );
+    }
+    Ok(())
+}
+
+/// One A100-scale simulation run.
+fn simulate(args: &Args) -> adrenaline::Result<()> {
+    let mut cfg = SimConfig::paper_default(args.model(), args.workload(), args.f64("rate", 24.0));
+    cfg.duration_s = args.f64("duration", 120.0);
+    cfg.seed = args.f64("seed", 42.0) as u64;
+    cfg.serving.offload = args.offload();
+    cfg.cluster.n_prefill = args.usize("prefill-instances", 1) as u32;
+    cfg.cluster.n_decode = args.usize("decode-instances", 1) as u32;
+    if args.get("adaptive-partition").is_some() {
+        cfg = cfg.with_adaptive_partition(args.f64("avg-prompt", 512.0) as u64);
+        println!("adaptive partition: executor SM share = {:.2}", cfg.cluster.attn_executor_sm_frac);
+    }
+    if let Some(path) = args.get("save-trace") {
+        use adrenaline::workload::{save_trace, TraceGenerator};
+        let mut g = TraceGenerator::new(cfg.workload, cfg.rate, cfg.seed);
+        let reqs = g.trace(cfg.duration_s);
+        save_trace(std::path::Path::new(path), &reqs)?;
+        println!("saved {} requests to {path}", reqs.len());
+    }
+    let r = ClusterSim::new(cfg).run();
+    println!("arrived            {}", r.arrived);
+    println!("finished           {}", r.finished);
+    println!("preemptions        {}", r.preemptions);
+    println!("offloaded fraction {:.3}", r.offloaded_fraction);
+    if let Some(t) = r.ttft {
+        println!("TTFT  mean {:.3} s  p99 {:.3} s", t.mean, t.p99);
+    }
+    if let Some(t) = r.tpot {
+        println!("TPOT  mean {:.4} s  p99 {:.4} s", t.mean, t.p99);
+    }
+    println!("throughput         {:.1} tok/s (stable window)", r.throughput);
+    println!("prefill HBM cap    {:.3}", r.prefill_hbm_capacity_util);
+    println!("prefill HBM bw     {:.3}", r.prefill_hbm_bw_util);
+    println!("decode compute     {:.3}", r.decode_compute_util);
+    println!("executor duty      {:.3}", r.executor_duty);
+    Ok(())
+}
+
+/// Print the computed offload bounds (Eqs 1–3).
+fn bounds(args: &Args) -> adrenaline::Result<()> {
+    let slo = SloConfig { tpot_s: args.f64("tpot-slo", 0.1), ttft_s: args.f64("ttft-slo", 1.0) };
+    let b = OffloadBounds::compute(
+        &ClusterSpec::paper_default(),
+        &args.model(),
+        &slo,
+        args.f64("avg-seq", 1024.0) as u64,
+    );
+    println!("OB_mem  = {:.3}   (Eq 1)", b.ob_mem);
+    println!("B_max   = {}", b.b_max);
+    println!("B_TPOT  = {}", b.b_tpot);
+    println!("OB_comp = {:.3}   (Eq 2)", b.ob_comp());
+    println!("OB      = {:.3}   (Eq 3)", b.ob());
+    Ok(())
+}

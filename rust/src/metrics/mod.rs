@@ -1,0 +1,16 @@
+//! Serving metrics: latency recorders, stable-window throughput, and
+//! utilization timelines — the measurement conventions of §4.1.
+//!
+//! * TTFT — request arrival → first output token (includes queueing and,
+//!   in PD disaggregation, the prefill→decode KV transfer).
+//! * TPOT — per-token gap during decode (mean and P99).
+//! * Output token throughput — decode tokens per second measured over the
+//!   *stable equilibrium window*: between the first and last instants the
+//!   decode instance's HBM is saturated, or (if never saturated) while the
+//!   decode batch is ≥ 80 % of its peak (the paper's §4.1 definition).
+
+mod recorder;
+mod timeline;
+
+pub use recorder::{LatencyStats, MetricsRecorder, RequestMetrics};
+pub use timeline::{StableWindow, Timeline};

@@ -1,0 +1,217 @@
+//! Per-request latency bookkeeping and aggregate statistics.
+
+use std::collections::HashMap;
+
+use crate::workload::RequestId;
+
+/// Aggregated latency distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> Option<Self> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("no NaN latencies"));
+        let sum: f64 = sorted.iter().sum();
+        Some(LatencyStats {
+            count: sorted.len(),
+            mean: sum / sorted.len() as f64,
+            p50: percentile(&sorted, 0.50),
+            p99: percentile(&sorted, 0.99),
+            max: *sorted.last().unwrap(),
+        })
+    }
+}
+
+/// Nearest-rank percentile on a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// One request's lifecycle timestamps.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub arrival_s: f64,
+    pub first_token_s: Option<f64>,
+    pub token_times_s: Vec<f64>,
+    pub finished_s: Option<f64>,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    /// TPOT samples: gaps between consecutive decode tokens (the paper's
+    /// per-output-token latency; first token belongs to TTFT).
+    pub fn tpot_samples(&self) -> Vec<f64> {
+        let mut all = Vec::with_capacity(self.token_times_s.len());
+        if let Some(first) = self.first_token_s {
+            let mut prev = first;
+            for &t in &self.token_times_s {
+                all.push(t - prev);
+                prev = t;
+            }
+        }
+        all
+    }
+
+    pub fn output_tokens(&self) -> usize {
+        // first token + subsequent decode tokens
+        usize::from(self.first_token_s.is_some()) + self.token_times_s.len()
+    }
+}
+
+/// Collects lifecycle events for all requests in a run.
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    requests: HashMap<RequestId, RequestMetrics>,
+    /// (time, tokens) decode-token completion events for throughput.
+    token_events: Vec<(f64, usize)>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, id: RequestId, t: f64) {
+        self.requests.entry(id).or_default().arrival_s = t;
+    }
+
+    pub fn on_first_token(&mut self, id: RequestId, t: f64) {
+        let r = self.requests.entry(id).or_default();
+        debug_assert!(r.first_token_s.is_none(), "duplicate first token for {id}");
+        r.first_token_s = Some(t);
+        self.token_events.push((t, 1));
+    }
+
+    pub fn on_token(&mut self, id: RequestId, t: f64) {
+        self.requests.entry(id).or_default().token_times_s.push(t);
+        self.token_events.push((t, 1));
+    }
+
+    pub fn on_finished(&mut self, id: RequestId, t: f64) {
+        self.requests.entry(id).or_default().finished_s = Some(t);
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&RequestMetrics> {
+        self.requests.get(&id)
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn n_finished(&self) -> usize {
+        self.requests.values().filter(|r| r.finished_s.is_some()).count()
+    }
+
+    pub fn total_output_tokens(&self) -> usize {
+        self.requests.values().map(|r| r.output_tokens()).sum()
+    }
+
+    pub fn ttft_stats(&self) -> Option<LatencyStats> {
+        let samples: Vec<f64> = self.requests.values().filter_map(|r| r.ttft()).collect();
+        LatencyStats::from_samples(&samples)
+    }
+
+    pub fn tpot_stats(&self) -> Option<LatencyStats> {
+        let samples: Vec<f64> =
+            self.requests.values().flat_map(|r| r.tpot_samples()).collect();
+        LatencyStats::from_samples(&samples)
+    }
+
+    /// Output-token throughput (tokens/s) within [start, end].
+    pub fn throughput_in_window(&self, start: f64, end: f64) -> f64 {
+        if end <= start {
+            return 0.0;
+        }
+        let tokens: usize = self
+            .token_events
+            .iter()
+            .filter(|(t, _)| (start..=end).contains(t))
+            .map(|(_, n)| n)
+            .sum();
+        tokens as f64 / (end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[5.0], 0.99), 5.0);
+    }
+
+    #[test]
+    fn ttft_and_tpot() {
+        let mut m = MetricsRecorder::new();
+        m.on_arrival(1, 10.0);
+        m.on_first_token(1, 10.5);
+        m.on_token(1, 10.6);
+        m.on_token(1, 10.8);
+        m.on_finished(1, 10.8);
+        let r = m.request(1).unwrap();
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        let tpot = r.tpot_samples();
+        assert_eq!(tpot.len(), 2);
+        assert!((tpot[0] - 0.1).abs() < 1e-12);
+        assert!((tpot[1] - 0.2).abs() < 1e-12);
+        assert_eq!(r.output_tokens(), 3);
+    }
+
+    #[test]
+    fn aggregate_stats() {
+        let mut m = MetricsRecorder::new();
+        for (id, arrive, first) in [(1u64, 0.0, 1.0), (2, 0.0, 2.0), (3, 0.0, 3.0)] {
+            m.on_arrival(id, arrive);
+            m.on_first_token(id, first);
+        }
+        let s = m.ttft_stats().unwrap();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn throughput_window() {
+        let mut m = MetricsRecorder::new();
+        m.on_arrival(1, 0.0);
+        m.on_first_token(1, 1.0);
+        for i in 0..10 {
+            m.on_token(1, 1.0 + 0.1 * (i + 1) as f64);
+        }
+        // Window [1, 2]: 11 tokens over 1s.
+        let tput = m.throughput_in_window(1.0, 2.0);
+        assert!((tput - 11.0).abs() < 1e-9, "tput = {tput}");
+        assert_eq!(m.throughput_in_window(5.0, 6.0), 0.0);
+        assert_eq!(m.throughput_in_window(2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn empty_stats_are_none() {
+        let m = MetricsRecorder::new();
+        assert!(m.ttft_stats().is_none());
+        assert!(m.tpot_stats().is_none());
+    }
+}

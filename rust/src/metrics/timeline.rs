@@ -1,0 +1,196 @@
+//! Time-series utilization tracking and the §4.1 stable-window detector.
+
+/// Append-only (time, value) series, e.g. HBM occupancy or batch size over
+/// a run (Figs 2/16's x-axis is exactly this).
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    points: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(
+            self.points.last().map_or(true, |&(pt, _)| t >= pt),
+            "timeline must be pushed in time order"
+        );
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    pub fn max_value(&self) -> Option<f64> {
+        self.points.iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+
+    /// Time-weighted mean value over [start, end] (step interpolation).
+    pub fn time_weighted_mean(&self, start: f64, end: f64) -> Option<f64> {
+        if end <= start || self.points.is_empty() {
+            return None;
+        }
+        let mut acc = 0.0;
+        let mut cur_val: Option<f64> = None;
+        let mut cur_t = start;
+        for &(t, v) in &self.points {
+            if t < start {
+                cur_val = Some(v);
+                continue;
+            }
+            if t > end {
+                break;
+            }
+            if let Some(cv) = cur_val {
+                acc += cv * (t - cur_t);
+            }
+            cur_t = t;
+            cur_val = Some(v);
+        }
+        let cv = cur_val?;
+        acc += cv * (end - cur_t);
+        Some(acc / (end - start))
+    }
+
+    /// First and last time the series is at/above `threshold` — the §4.1
+    /// saturation window.
+    pub fn window_at_or_above(&self, threshold: f64) -> Option<(f64, f64)> {
+        let first = self.points.iter().find(|&&(_, v)| v >= threshold)?.0;
+        let last = self.points.iter().rev().find(|&&(_, v)| v >= threshold)?.0;
+        (last > first).then_some((first, last))
+    }
+}
+
+/// The paper's stable-equilibrium measurement window (§4.1): the span where
+/// decode HBM is saturated; if saturation never happens, the span where the
+/// decode batch is ≥ 80 % of its peak.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StableWindow {
+    pub start: f64,
+    pub end: f64,
+    /// Which rule fired.
+    pub saturated: bool,
+}
+
+impl StableWindow {
+    /// `occupancy`: KV-pool occupancy timeline in `[0, 1]`; `batch`: decode
+    /// batch-size timeline.
+    ///
+    /// A saturation window shorter than `MIN_SATURATED_S` is a transient
+    /// spike, not an equilibrium — measuring throughput inside it inflates
+    /// the number arbitrarily, so such windows fall through to the
+    /// batch-size rule.
+    pub fn detect(occupancy: &Timeline, batch: &Timeline) -> Option<StableWindow> {
+        const MIN_SATURATED_S: f64 = 5.0;
+        // "Saturated" = occupancy reaches ~1 (block granularity: >= 0.98).
+        if let Some((s, e)) = occupancy.window_at_or_above(0.98) {
+            if e - s >= MIN_SATURATED_S {
+                return Some(StableWindow { start: s, end: e, saturated: true });
+            }
+        }
+        let peak = batch.max_value()?;
+        if peak <= 0.0 {
+            return None;
+        }
+        let (s, e) = batch.window_at_or_above(0.8 * peak)?;
+        Some(StableWindow { start: s, end: e, saturated: false })
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_weighted_mean_step() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        tl.push(1.0, 3.0);
+        // [0,2]: 1.0 for 1s, 3.0 for 1s -> mean 2.0
+        assert!((tl.time_weighted_mean(0.0, 2.0).unwrap() - 2.0).abs() < 1e-12);
+        // [0.5, 1.5]: 1.0 for 0.5s, 3.0 for 0.5s -> 2.0
+        assert!((tl.time_weighted_mean(0.5, 1.5).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_detection() {
+        let mut tl = Timeline::new();
+        for (t, v) in [(0.0, 0.2), (1.0, 0.99), (2.0, 1.0), (3.0, 0.5), (4.0, 0.99), (5.0, 0.3)] {
+            tl.push(t, v);
+        }
+        assert_eq!(tl.window_at_or_above(0.98), Some((1.0, 4.0)));
+        assert_eq!(tl.window_at_or_above(2.0), None);
+    }
+
+    #[test]
+    fn stable_window_prefers_saturation() {
+        let mut occ = Timeline::new();
+        let mut batch = Timeline::new();
+        for t in 0..10 {
+            occ.push(t as f64, if (2..=8).contains(&t) { 1.0 } else { 0.5 });
+            batch.push(t as f64, 10.0);
+        }
+        let w = StableWindow::detect(&occ, &batch).unwrap();
+        assert!(w.saturated);
+        assert_eq!((w.start, w.end), (2.0, 8.0));
+    }
+
+    #[test]
+    fn transient_saturation_spike_ignored() {
+        // A sub-5s saturation blip must not become the measurement window.
+        let mut occ = Timeline::new();
+        let mut batch = Timeline::new();
+        for t in 0..20 {
+            // 0.5 s saturation blip around t = 10 only.
+            occ.push(t as f64, if t == 10 { 1.0 } else { 0.5 });
+            if t == 10 {
+                occ.push(10.5, 1.0);
+            }
+            batch.push(t as f64, if (4..=16).contains(&t) { 10.0 } else { 2.0 });
+        }
+        let w = StableWindow::detect(&occ, &batch).unwrap();
+        assert!(!w.saturated, "spike must fall through to the batch rule");
+        assert!(w.duration() > 5.0);
+    }
+
+    #[test]
+    fn stable_window_falls_back_to_batch_rule() {
+        let mut occ = Timeline::new();
+        let mut batch = Timeline::new();
+        for t in 0..10 {
+            occ.push(t as f64, 0.4);
+            let b = match t {
+                0..=1 => 2.0,
+                2..=7 => 10.0,
+                _ => 9.0, // still >= 80% of peak
+            };
+            batch.push(t as f64, b);
+        }
+        let w = StableWindow::detect(&occ, &batch).unwrap();
+        assert!(!w.saturated);
+        assert_eq!((w.start, w.end), (2.0, 9.0));
+        assert!((w.duration() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_timelines_no_window() {
+        assert!(StableWindow::detect(&Timeline::new(), &Timeline::new()).is_none());
+    }
+}

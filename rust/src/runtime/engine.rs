@@ -1,0 +1,408 @@
+//! Typed execution entry points over the compiled artifact set.
+//!
+//! One [`ModelRuntime`] owns one PJRT client — the process-level analogue
+//! of one GPU. The prefill instance (with its colocated attention
+//! executor) and the decode instance each own a separate `ModelRuntime`,
+//! mirroring the paper's separate GPU pools.
+//!
+//! Executables compile lazily per `(kind, bucket)` and are cached for the
+//! life of the runtime; `warmup()` pre-compiles the full grid (the
+//! CUDA-graph capture pass). Inputs must already be padded to the bucket
+//! size — the engines own the scratch buffers so the hot path stays
+//! allocation-free.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::weights::{Tensor, Weights};
+use crate::Result;
+
+/// Per-layer weight names in artifact parameter order (must match
+/// python/compile/model.py::LAYER_WEIGHT_NAMES).
+const LAYER_WEIGHT_NAMES: [&str; 9] =
+    ["ln_attn", "wq", "wk", "wv", "wo", "ln_ffn", "w_gate", "w_up", "w_down"];
+
+/// Artifact families (the columns of the executable-bucket grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Embed,
+    LayerPre,
+    Attn,
+    LayerPost,
+    Head,
+    DecodeFused,
+    Prefill,
+}
+
+impl ArtifactKind {
+    fn file_name(&self, bucket: usize) -> String {
+        match self {
+            ArtifactKind::Embed => format!("embed_b{bucket}"),
+            ArtifactKind::LayerPre => format!("layer_pre_b{bucket}"),
+            ArtifactKind::Attn => format!("attn_b{bucket}"),
+            ArtifactKind::LayerPost => format!("layer_post_b{bucket}"),
+            ArtifactKind::Head => format!("head_b{bucket}"),
+            ArtifactKind::DecodeFused => format!("decode_fused_b{bucket}"),
+            ArtifactKind::Prefill => format!("prefill_p{bucket}"),
+        }
+    }
+}
+
+/// Output of a prefill execution.
+#[derive(Debug, Clone)]
+pub struct PrefillOutput {
+    pub first_token: i32,
+    /// `[L, P_bucket, H, D]` flattened (batch dim of 1 squeezed).
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    /// The prompt bucket the prefill ran under.
+    pub bucket: usize,
+}
+
+/// PJRT-backed model runtime for the tiny CPU-path model.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    pub weights: Weights,
+    executables: HashMap<(ArtifactKind, usize), PjRtLoadedExecutable>,
+    // Cached weight literals (built once; reused every call).
+    lit_embedding: Literal,
+    lit_ln_final: Literal,
+    /// Per layer, the 9 weight literals in parameter order.
+    lit_layers: Vec<Vec<Literal>>,
+    /// The 9 stacked `[L, ...]` literals (fused prefill/decode paths).
+    lit_stacked: Vec<Literal>,
+    /// Executions performed, by kind (observability/tests).
+    exec_counts: RefCell<HashMap<ArtifactKind, u64>>,
+}
+
+// Single-copy literal construction (§Perf iteration 2):
+// `Literal::vec1(..).reshape(..)` copies the host data twice (once into the
+// rank-1 literal, once in `literal_reshape`); building straight from the
+// shaped bytes halves the upload cost of the per-step kv/q tensors.
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {dims:?} != data len {}", data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {dims:?} != data len {}", data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)?)
+}
+
+fn lit_of_tensor(t: &Tensor) -> Result<Literal> {
+    lit_f32(&t.data, &t.shape)
+}
+
+impl ModelRuntime {
+    /// Load manifest + weights from `dir` and stand up a CPU PJRT client.
+    pub fn load(dir: &std::path::Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(&manifest.weights_path())?;
+        let client = PjRtClient::cpu()?;
+
+        let n_layers = manifest.model.n_layers as usize;
+        let lit_embedding = lit_of_tensor(weights.get("embedding")?)?;
+        let lit_ln_final = lit_of_tensor(weights.get("ln_final")?)?;
+        let mut lit_layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let mut lits = Vec::with_capacity(9);
+            for name in LAYER_WEIGHT_NAMES {
+                lits.push(lit_of_tensor(weights.layer(l, name)?)?);
+            }
+            lit_layers.push(lits);
+        }
+        let mut lit_stacked = Vec::with_capacity(9);
+        for name in LAYER_WEIGHT_NAMES {
+            lit_stacked.push(lit_of_tensor(&weights.stacked_layer(n_layers, name)?)?);
+        }
+
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            weights,
+            executables: HashMap::new(),
+            lit_embedding,
+            lit_ln_final,
+            lit_layers,
+            lit_stacked,
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the repo-default artifacts/ directory.
+    pub fn load_default() -> Result<ModelRuntime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    // ----- bucket selection -------------------------------------------------
+
+    /// Smallest batch bucket that fits `n` requests.
+    pub fn batch_bucket_for(&self, n: usize) -> Result<usize> {
+        self.manifest
+            .batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow::anyhow!("batch {n} exceeds largest bucket"))
+    }
+
+    /// Smallest prompt bucket that fits `p` tokens.
+    pub fn prompt_bucket_for(&self, p: usize) -> Result<usize> {
+        self.manifest
+            .prompt_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= p)
+            .ok_or_else(|| anyhow::anyhow!("prompt of {p} tokens exceeds largest bucket"))
+    }
+
+    // ----- compilation ------------------------------------------------------
+
+    /// Compile (and cache) the executable for `(kind, bucket)`.
+    fn ensure_compiled(&mut self, kind: ArtifactKind, bucket: usize) -> Result<()> {
+        if !self.executables.contains_key(&(kind, bucket)) {
+            let name = kind.file_name(bucket);
+            let path = self.manifest.hlo_path(&name);
+            let proto = HloModuleProto::from_text_file(&path)?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert((kind, bucket), exe);
+        }
+        Ok(())
+    }
+
+    /// Pre-compile the whole executable grid (the paper's graph-capture
+    /// warmup). Returns the number of executables compiled.
+    pub fn warmup(&mut self) -> Result<usize> {
+        let batch: Vec<usize> = self.manifest.batch_buckets.clone();
+        let prompt: Vec<usize> = self.manifest.prompt_buckets.clone();
+        let mut n = 0;
+        for &b in &batch {
+            for kind in [
+                ArtifactKind::Embed,
+                ArtifactKind::LayerPre,
+                ArtifactKind::Attn,
+                ArtifactKind::LayerPost,
+                ArtifactKind::Head,
+                ArtifactKind::DecodeFused,
+            ] {
+                self.ensure_compiled(kind, b)?;
+                n += 1;
+            }
+        }
+        for &p in &prompt {
+            self.ensure_compiled(ArtifactKind::Prefill, p)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute a pre-compiled artifact with borrowed argument literals —
+    /// zero host-side copies (the xla crate's `Literal::clone` is a deep
+    /// `literal_clone`; avoiding it was the first §Perf win, see
+    /// EXPERIMENTS.md).
+    fn exec(&self, kind: ArtifactKind, bucket: usize, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executables.get(&(kind, bucket)).expect("ensure_compiled first");
+        *self.exec_counts.borrow_mut().entry(kind).or_insert(0) += 1;
+        let out = exe.execute::<&Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Executions performed for `kind` (observability/tests).
+    pub fn exec_count(&self, kind: ArtifactKind) -> u64 {
+        self.exec_counts.borrow().get(&kind).copied().unwrap_or(0)
+    }
+
+    // ----- model dims -------------------------------------------------------
+
+    pub fn d_model(&self) -> usize {
+        self.manifest.model.d_model as usize
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.manifest.model.n_layers as usize
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.manifest.model.n_heads as usize
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.manifest.model.head_dim as usize
+    }
+
+    pub fn max_seq_len(&self) -> usize {
+        self.manifest.model.max_seq_len as usize
+    }
+
+    /// Elements of one `[S, H, D]` per-request KV plane.
+    pub fn kv_plane(&self) -> usize {
+        self.max_seq_len() * self.n_heads() * self.head_dim()
+    }
+
+    // ----- typed execution --------------------------------------------------
+    // All batch-shaped inputs must be padded to `bucket` length by the
+    // caller; outputs come back bucket-sized too.
+
+    /// tokens `[bucket]` → hidden `[bucket, D]`.
+    pub fn embed(&mut self, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+        self.ensure_compiled(ArtifactKind::Embed, bucket)?;
+        let toks = lit_i32(tokens, &[bucket])?;
+        let out = self.exec(ArtifactKind::Embed, bucket, &[&toks, &self.lit_embedding])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// hidden `[bucket, D]`, positions `[bucket]` → (q, k, v) each
+    /// `[bucket, H, D]`.
+    pub fn layer_pre(
+        &mut self,
+        hidden: &[f32],
+        positions: &[i32],
+        layer: usize,
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.ensure_compiled(ArtifactKind::LayerPre, bucket)?;
+        let h = lit_f32(hidden, &[bucket, self.d_model()])?;
+        let pos = lit_i32(positions, &[bucket])?;
+        let args: Vec<&Literal> =
+            [&h, &pos].into_iter().chain(self.lit_layers[layer][..4].iter()).collect();
+        let out = self.exec(ArtifactKind::LayerPre, bucket, &args)?;
+        Ok((out[0].to_vec()?, out[1].to_vec()?, out[2].to_vec()?))
+    }
+
+    /// THE offloadable unit. q `[bucket, H, D]`, caches `[bucket, S, H, D]`,
+    /// seq_lens `[bucket]` → attn_out `[bucket, D]`.
+    pub fn attention(
+        &mut self,
+        q: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        seq_lens: &[i32],
+        bucket: usize,
+    ) -> Result<Vec<f32>> {
+        self.ensure_compiled(ArtifactKind::Attn, bucket)?;
+        let (h, d, s) = (self.n_heads(), self.head_dim(), self.max_seq_len());
+        let ql = lit_f32(q, &[bucket, h, d])?;
+        let kl = lit_f32(k_cache, &[bucket, s, h, d])?;
+        let vl = lit_f32(v_cache, &[bucket, s, h, d])?;
+        let sl = lit_i32(seq_lens, &[bucket])?;
+        let out = self.exec(ArtifactKind::Attn, bucket, &[&ql, &kl, &vl, &sl])?;
+        Ok(out[0].to_vec()?)
+    }
+
+    /// hidden + attn_out `[bucket, D]` → next hidden `[bucket, D]`.
+    pub fn layer_post(
+        &mut self,
+        hidden: &[f32],
+        attn_out: &[f32],
+        layer: usize,
+        bucket: usize,
+    ) -> Result<Vec<f32>> {
+        self.ensure_compiled(ArtifactKind::LayerPost, bucket)?;
+        let h = lit_f32(hidden, &[bucket, self.d_model()])?;
+        let a = lit_f32(attn_out, &[bucket, self.d_model()])?;
+        let args: Vec<&Literal> =
+            [&h, &a].into_iter().chain(self.lit_layers[layer][4..].iter()).collect();
+        let out = self.exec(ArtifactKind::LayerPost, bucket, &args)?;
+        Ok(out[0].to_vec()?)
+    }
+
+    /// hidden `[bucket, D]` → greedy next tokens `[bucket]`.
+    pub fn head(&mut self, hidden: &[f32], bucket: usize) -> Result<Vec<i32>> {
+        self.ensure_compiled(ArtifactKind::Head, bucket)?;
+        let h = lit_f32(hidden, &[bucket, self.d_model()])?;
+        let out = self.exec(
+            ArtifactKind::Head,
+            bucket,
+            &[&h, &self.lit_ln_final, &self.lit_embedding],
+        )?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+
+    /// Run prefill for one prompt. Returns the first token and the
+    /// populated KV cache (`[L, bucket, H, D]` per position, batch
+    /// squeezed).
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let p = prompt.len();
+        let bucket = self.prompt_bucket_for(p)?;
+        let mut padded = vec![0i32; bucket];
+        padded[..p].copy_from_slice(prompt);
+        self.ensure_compiled(ArtifactKind::Prefill, bucket)?;
+        let toks = lit_i32(&padded, &[1, bucket])?;
+        let lens = lit_i32(&[p as i32], &[1])?;
+        let args: Vec<&Literal> = [&toks, &lens, &self.lit_embedding, &self.lit_ln_final]
+            .into_iter()
+            .chain(self.lit_stacked.iter())
+            .collect();
+        let out = self.exec(ArtifactKind::Prefill, bucket, &args)?;
+        Ok(PrefillOutput {
+            first_token: out[0].to_vec::<i32>()?[0],
+            k_cache: out[1].to_vec()?,
+            v_cache: out[2].to_vec()?,
+            bucket,
+        })
+    }
+
+    /// Fused decode step (the no-offload fast path). Caches are
+    /// `[L, bucket, S, H, D]`; returns (next_tokens `[bucket]`,
+    /// k_new `[L, bucket, H, D]`, v_new `[L, bucket, H, D]`).
+    pub fn decode_fused(
+        &mut self,
+        tokens: &[i32],
+        positions: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        bucket: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let (l, s, h, d) =
+            (self.n_layers(), self.max_seq_len(), self.n_heads(), self.head_dim());
+        self.ensure_compiled(ArtifactKind::DecodeFused, bucket)?;
+        let toks = lit_i32(tokens, &[bucket])?;
+        let pos = lit_i32(positions, &[bucket])?;
+        let kl = lit_f32(k_cache, &[l, bucket, s, h, d])?;
+        let vl = lit_f32(v_cache, &[l, bucket, s, h, d])?;
+        let args: Vec<&Literal> =
+            [&toks, &pos, &kl, &vl, &self.lit_embedding, &self.lit_ln_final]
+                .into_iter()
+                .chain(self.lit_stacked.iter())
+                .collect();
+        let out = self.exec(ArtifactKind::DecodeFused, bucket, &args)?;
+        Ok((out[0].to_vec()?, out[1].to_vec()?, out[2].to_vec()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_file_names() {
+        assert_eq!(ArtifactKind::Attn.file_name(4), "attn_b4");
+        assert_eq!(ArtifactKind::Prefill.file_name(64), "prefill_p64");
+        assert_eq!(ArtifactKind::DecodeFused.file_name(1), "decode_fused_b1");
+    }
+
+    #[test]
+    fn literal_shape_checks() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(lit_i32(&[1, 2], &[2]).is_ok());
+    }
+}

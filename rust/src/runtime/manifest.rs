@@ -1,0 +1,160 @@
+//! artifacts/manifest.json loader + consistency checks against the crate's
+//! compiled-in model table.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelSpec;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Parsed artifact manifest (written by python/compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub batch_buckets: Vec<usize>,
+    pub prompt_buckets: Vec<usize>,
+    pub artifacts: Vec<String>,
+    pub layer_weight_names: Vec<String>,
+    /// Model dims parsed from the manifest (must equal `ModelSpec::tiny()`).
+    pub model: ModelSpec,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text)?;
+
+        let m = v.require("model")?;
+        let dim = |k: &str| -> Result<u64> {
+            m.require(k)?
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("manifest model.{k} not a u64"))
+        };
+        let tiny = ModelSpec::tiny();
+        let model = ModelSpec {
+            name: "tiny",
+            vocab_size: dim("vocab_size")?,
+            d_model: dim("d_model")?,
+            n_layers: dim("n_layers")?,
+            n_heads: dim("n_heads")?,
+            head_dim: dim("head_dim")?,
+            ffn_hidden: dim("ffn_hidden")?,
+            max_seq_len: dim("max_seq_len")?,
+            dtype_bytes: tiny.dtype_bytes,
+        };
+        anyhow::ensure!(
+            model == tiny,
+            "artifact manifest dims {model:?} do not match compiled-in ModelSpec::tiny() \
+             {tiny:?}; re-run `make artifacts` after syncing python/compile/model.py"
+        );
+
+        let u64_arr = |key: &str| -> Result<Vec<usize>> {
+            v.require(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("manifest {key} not an array"))?
+                .iter()
+                .map(|b| {
+                    b.as_u64()
+                        .map(|n| n as usize)
+                        .ok_or_else(|| anyhow::anyhow!("manifest {key} entry not a u64"))
+                })
+                .collect()
+        };
+        let str_arr = |key: &str| -> Result<Vec<String>> {
+            v.require(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("manifest {key} not an array"))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("manifest {key} entry not a string"))
+                })
+                .collect()
+        };
+
+        let manifest = Manifest {
+            dir: dir.to_path_buf(),
+            seed: v.require("seed")?.as_u64().unwrap_or(0),
+            batch_buckets: u64_arr("batch_buckets")?,
+            prompt_buckets: u64_arr("prompt_buckets")?,
+            artifacts: str_arr("artifacts")?,
+            layer_weight_names: str_arr("layer_weight_names")?,
+            model,
+        };
+        anyhow::ensure!(!manifest.batch_buckets.is_empty(), "no batch buckets");
+        anyhow::ensure!(!manifest.prompt_buckets.is_empty(), "no prompt buckets");
+        for name in &manifest.artifacts {
+            let p = manifest.hlo_path(name);
+            anyhow::ensure!(p.exists(), "artifact listed but missing: {}", p.display());
+        }
+        Ok(manifest)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.bin")
+    }
+
+    /// Repo-default artifact location (next to Cargo.toml).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration-level manifest tests live in rust/tests/ (they need
+    // `make artifacts`); here we test the failure paths with synthetic
+    // manifests.
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent/zzz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("adrenaline_manifest_bad_dims");
+        write_manifest(
+            &dir,
+            r#"{"model": {"vocab_size": 999, "d_model": 64, "n_layers": 2,
+                "n_heads": 4, "head_dim": 16, "ffn_hidden": 128,
+                "max_seq_len": 128},
+               "seed": 0, "batch_buckets": [1], "prompt_buckets": [16],
+               "artifacts": [], "layer_weight_names": [],
+               "global_weight_names": []}"#,
+        );
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("do not match"), "{err}");
+    }
+
+    #[test]
+    fn missing_listed_artifact_rejected() {
+        let dir = std::env::temp_dir().join("adrenaline_manifest_missing_art");
+        write_manifest(
+            &dir,
+            r#"{"model": {"vocab_size": 256, "d_model": 64, "n_layers": 2,
+                "n_heads": 4, "head_dim": 16, "ffn_hidden": 128,
+                "max_seq_len": 128},
+               "seed": 0, "batch_buckets": [1], "prompt_buckets": [16],
+               "artifacts": ["ghost_b1"], "layer_weight_names": []}"#,
+        );
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("ghost_b1"), "{err}");
+    }
+}

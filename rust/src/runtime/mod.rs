@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile them on the CPU
+//! PJRT client, and expose typed execution entry points to the engines.
+//!
+//! This is the only place the `xla` crate is touched. The flow mirrors
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format (see python/compile/aot.py for
+//! why serialized protos are rejected by xla_extension 0.5.1).
+//!
+//! Executables are compiled per (artifact-kind, bucket) and cached — the
+//! runtime analogue of the paper's 2-D CUDA-graph capture grid: selecting
+//! a `(C_d, C_o)` graph pair becomes selecting the `attn_b{C_d}` and
+//! `attn_b{C_o}` executables.
+
+mod engine;
+mod manifest;
+mod weights;
+
+pub use engine::{ArtifactKind, ModelRuntime, PrefillOutput};
+pub use manifest::Manifest;
+pub use weights::Weights;

@@ -1,0 +1,196 @@
+//! ADRW weights loader (inverse of python/compile/aot.py::save_weights).
+//!
+//! Format: `b"ADRW"`, version u32 LE, count u32 LE, then per tensor:
+//! name_len u16 LE + name bytes, ndim u8, dims u32 LE each, f32 LE data.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::Result;
+
+/// One weight tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All model weights, by name.
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let data = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Weights> {
+        anyhow::ensure!(data.len() >= 12 && &data[..4] == b"ADRW", "bad weights magic");
+        let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+        anyhow::ensure!(version == 1, "unsupported weights version {version}");
+        let count = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        let mut off = 12usize;
+        let mut tensors = HashMap::with_capacity(count);
+
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            anyhow::ensure!(*off + n <= data.len(), "truncated weights file");
+            let s = &data[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+            let name = std::str::from_utf8(take(&mut off, nlen)?)?.to_string();
+            let ndim = take(&mut off, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut off, numel * 4)?;
+            let mut values = Vec::with_capacity(numel);
+            for chunk in raw.chunks_exact(4) {
+                values.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            tensors.insert(name, Tensor { shape, data: values });
+        }
+        anyhow::ensure!(off == data.len(), "trailing bytes in weights file");
+        Ok(Weights { tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight tensor `{name}` not found"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(String::as_str)
+    }
+
+    /// Per-layer weight tensor, e.g. `layer_weight(0, "wq")`.
+    pub fn layer(&self, layer: usize, name: &str) -> Result<&Tensor> {
+        self.get(&format!("layers.{layer}.{name}"))
+    }
+
+    /// Stack a per-layer weight along a new leading L axis (the layout the
+    /// fused prefill/decode artifacts take).
+    pub fn stacked_layer(&self, n_layers: usize, name: &str) -> Result<Tensor> {
+        let first = self.layer(0, name)?;
+        let mut shape = vec![n_layers];
+        shape.extend_from_slice(&first.shape);
+        let mut data = Vec::with_capacity(n_layers * first.numel());
+        for l in 0..n_layers {
+            let t = self.layer(l, name)?;
+            anyhow::ensure!(t.shape == first.shape, "inconsistent shapes for {name}");
+            data.extend_from_slice(&t.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an ADRW blob in-memory (mirrors aot.save_weights).
+    fn adrw(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"ADRW");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(shape.len() as u8);
+            for &d in *shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let blob = adrw(&[
+            ("a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("layers.0.wq", &[2], &[7.0, 8.0]),
+            ("layers.1.wq", &[2], &[9.0, 10.0]),
+        ]);
+        let w = Weights::parse(&blob).unwrap();
+        assert_eq!(w.len(), 3);
+        let a = w.get("a").unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.data[4], 5.0);
+        assert_eq!(w.layer(1, "wq").unwrap().data, vec![9.0, 10.0]);
+    }
+
+    #[test]
+    fn stacked_layer_concatenates() {
+        let blob = adrw(&[
+            ("layers.0.wq", &[2], &[1.0, 2.0]),
+            ("layers.1.wq", &[2], &[3.0, 4.0]),
+        ]);
+        let w = Weights::parse(&blob).unwrap();
+        let s = w.stacked_layer(2, "wq").unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Weights::parse(b"NOPE").is_err());
+        assert!(Weights::parse(b"").is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut blob = adrw(&[("a", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        blob.truncate(blob.len() - 3);
+        assert!(Weights::parse(&blob).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut blob = adrw(&[("a", &[1], &[1.0])]);
+        blob.push(0);
+        assert!(Weights::parse(&blob).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let w = Weights::parse(&adrw(&[])).unwrap();
+        let err = w.get("embedding").unwrap_err();
+        assert!(err.to_string().contains("embedding"));
+    }
+
+    #[test]
+    fn scalar_tensor_ok() {
+        let blob = adrw(&[("s", &[], &[42.0])]);
+        let w = Weights::parse(&blob).unwrap();
+        assert_eq!(w.get("s").unwrap().data, vec![42.0]);
+        assert_eq!(w.get("s").unwrap().numel(), 1);
+    }
+}

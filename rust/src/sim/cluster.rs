@@ -1,0 +1,926 @@
+//! Discrete-event simulation of a PD-disaggregated serving cluster on
+//! A100-class hardware — the testbed substitute for the paper's §4
+//! evaluation (DESIGN.md §1).
+//!
+//! Fidelity choices, mapped to the paper:
+//!
+//! * **Phases.** Requests route through the proxy (Algorithm 1 decides
+//!   offloading at admission), queue for prefill, prefill at roofline
+//!   speed (SM-partition slowdown when an attention executor is
+//!   reserved/active), transfer KV to the decode instance over NVLink
+//!   (local requests only — offloaded KV stays colocated with the
+//!   executor), then decode step-by-step under continuous batching.
+//! * **Decode step time.** `non_attention(batch)` + `max(local attention,
+//!   remote attention + per-layer sync)`: the paper's overlap model
+//!   (Fig 8b). Remote attention runs on the executor's SM share with the
+//!   superlinear-bandwidth curve (Fig 9).
+//! * **Memory.** Decode KV pool and per-prefill-instance executor pools
+//!   sized from HBM budgets; exhaustion causes LIFO preemption with
+//!   recompute (vLLM semantics), the effect behind the OpenThoughts TPOT
+//!   spikes (Figs 13/14).
+//! * **Dispatch gating.** A prompt is only dispatched to prefill when its
+//!   KV has a home (decode pool for local, executor pool for offloaded) —
+//!   queueing at high rate is what blows up vLLM's TTFT in Fig 11a.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
+use crate::coordinator::{OffloadBounds, Proxy};
+use crate::kv::{BlockAllocator, KvPool};
+use crate::gpu_model::{
+    DecodeKernelTimes, HbmUsage, InterferenceModel, KernelCost, PrefillKernelTimes, Roofline,
+};
+use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
+use crate::workload::{Request, RequestId, TraceGenerator, WorkloadKind};
+
+use super::events::EventQueue;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cluster: ClusterSpec,
+    pub model: ModelSpec,
+    pub serving: ServingConfig,
+    pub workload: WorkloadKind,
+    /// Mean request rate, req/s.
+    pub rate: f64,
+    /// Trace duration, seconds (drain continues afterwards).
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Per-layer decode↔executor synchronization overhead (the residual
+    /// after graph-based launch batching; §3.2.2).
+    pub sync_overhead_s: f64,
+    /// Extra CPU launch overhead per decode step when the executable
+    /// grid / CUDA-graph analogue is disabled (ablation; §3.2.2 measures
+    /// ~0.76 ms/layer wasted without graphs).
+    pub eager_launch_overhead_s: f64,
+}
+
+impl SimConfig {
+    pub fn paper_default(model: ModelSpec, workload: WorkloadKind, rate: f64) -> Self {
+        SimConfig {
+            cluster: ClusterSpec::paper_default(),
+            model,
+            serving: ServingConfig::default(),
+            workload,
+            rate,
+            duration_s: 300.0,
+            seed: 42,
+            // ~15 µs per layer of channel+merge overhead with graphs on.
+            sync_overhead_s: 15e-6,
+            eager_launch_overhead_s: 0.0,
+        }
+    }
+
+    pub fn baseline(model: ModelSpec, workload: WorkloadKind, rate: f64) -> Self {
+        SimConfig {
+            serving: ServingConfig::baseline(),
+            ..Self::paper_default(model, workload, rate)
+        }
+    }
+
+    /// §3.3.2 online stage: derive the attention executor's SM share from
+    /// the offline prefill profile — the minimal prefill reservation that
+    /// keeps `avg_prompt`-token prompts within the TTFT SLO, executor gets
+    /// the complement (capped at 0.5: the executor never starves prefill
+    /// past the Fig 10 sweet spot).
+    pub fn with_adaptive_partition(mut self, avg_prompt: u64) -> Self {
+        use crate::gpu_model::PrefillProfile;
+        let profile = PrefillProfile::default_grid(&self.cluster.gpu, &self.model);
+        // Leave queueing headroom: prefill must fit in half the TTFT SLO.
+        let exec = profile.executor_sm_frac(avg_prompt.max(1), self.serving.slo.ttft_s * 0.5);
+        self.cluster.attn_executor_sm_frac = exec.clamp(0.05, 0.5);
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    WaitingDispatch,
+    Prefilling,
+    Transferring,
+    Decoding,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct SimReq {
+    req: Request,
+    phase: Phase,
+    /// Output tokens generated so far.
+    generated: usize,
+    /// Tokens of KV this request holds (prompt + generated, after prefill).
+    kv_tokens: usize,
+    offloaded: bool,
+    prefill_instance: usize,
+    decode_instance: usize,
+    /// Re-prefill length after preemption (prompt + generated).
+    effective_prompt: usize,
+    preemptions: u32,
+}
+
+#[derive(Debug)]
+struct PrefillInst {
+    busy_until: f64,
+    queue: VecDeque<RequestId>,
+    /// Offloaded KV tokens resident in this instance's executor pool.
+    executor_kv_tokens: usize,
+    executor_kv_budget: usize,
+    /// Reserved (dispatched but not yet admitted) executor tokens.
+    executor_reserved: usize,
+    /// Accumulated busy seconds (prefill compute).
+    prefill_busy_s: f64,
+    /// Accumulated executor-active seconds.
+    executor_busy_s: f64,
+}
+
+#[derive(Debug)]
+struct DecodeInst {
+    /// Running batch (request ids).
+    running: Vec<RequestId>,
+    /// Prefilled requests waiting for KV admission.
+    waiting: VecDeque<RequestId>,
+    /// Paged KV pool (vLLM block tables; block granularity makes the
+    /// occupancy/preemption dynamics faithful to the real allocator).
+    kv: KvPool,
+    /// Reserved (dispatched) tokens not yet admitted.
+    reserved: usize,
+    step_in_flight: bool,
+    /// Accumulated (flops, seconds) for compute-utilization accounting.
+    flops_done: f64,
+    busy_s: f64,
+}
+
+impl DecodeInst {
+    fn kv_tokens(&self) -> usize {
+        self.kv.resident_tokens()
+    }
+
+    fn kv_budget(&self) -> usize {
+        self.kv.total_blocks() * self.kv.block_tokens()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival(RequestId),
+    PrefillDone { inst: usize, id: RequestId },
+    TransferDone { id: RequestId },
+    DecodeStepEnd { inst: usize },
+}
+
+/// Post-run report.
+#[derive(Debug)]
+pub struct SimReport {
+    pub ttft: Option<LatencyStats>,
+    pub tpot: Option<LatencyStats>,
+    /// Output tokens/s over the §4.1 stable window (falls back to the
+    /// whole run if no window is detected).
+    pub throughput: f64,
+    pub window: Option<StableWindow>,
+    pub arrived: usize,
+    pub finished: usize,
+    pub preemptions: u64,
+    /// Fraction of finished requests whose attention was offloaded.
+    pub offloaded_fraction: f64,
+    /// Mean prefill-instance HBM capacity utilization (Fig 16).
+    pub prefill_hbm_capacity_util: f64,
+    /// Mean prefill-instance HBM bandwidth utilization (Fig 17a).
+    pub prefill_hbm_bw_util: f64,
+    /// Executor-active bandwidth utilization (Fig 18a "Attn on").
+    pub executor_bw_util: f64,
+    /// Executor duty cycle (fraction of wall time active).
+    pub executor_duty: f64,
+    /// Mean decode compute utilization (Fig 17b).
+    pub decode_compute_util: f64,
+    /// Fraction of finished requests whose TTFT met the SLO.
+    pub ttft_slo_attainment: f64,
+    /// Fraction of finished requests whose *mean* TPOT met the SLO.
+    pub tpot_slo_attainment: f64,
+    /// Goodput: output tokens/s counting only requests that met BOTH SLOs
+    /// (the DistServe-style metric; same stable window as `throughput`).
+    pub goodput: f64,
+    /// Timelines for Figs 2/16.
+    pub decode_occupancy: Timeline,
+    pub prefill_occupancy: Timeline,
+    pub batch_size: Timeline,
+    pub sim_end_s: f64,
+}
+
+/// The cluster simulator.
+pub struct ClusterSim {
+    cfg: SimConfig,
+    reqs: HashMap<RequestId, SimReq>,
+    prefill: Vec<PrefillInst>,
+    decode: Vec<DecodeInst>,
+    proxy: Proxy,
+    events: EventQueue<Ev>,
+    metrics: MetricsRecorder,
+    decode_occupancy: Timeline,
+    prefill_occupancy: Timeline,
+    batch_size: Timeline,
+    preemptions: u64,
+    rl_whole: Roofline,
+    rl_executor: Roofline,
+    interference: InterferenceModel,
+    /// Pending arrivals not yet injected (sorted by time).
+    trace: VecDeque<Request>,
+    finished_offloaded: usize,
+    finished_total: usize,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut gen = TraceGenerator::new(cfg.workload, cfg.rate, cfg.seed);
+        let trace: VecDeque<Request> = gen.trace(cfg.duration_s).into();
+
+        let avg_seq = if trace.is_empty() {
+            1024
+        } else {
+            (trace.iter().map(|r| r.total_tokens()).sum::<usize>() / trace.len().max(1)) as u64
+        };
+        let mut bounds =
+            OffloadBounds::compute(&cfg.cluster, &cfg.model, &cfg.serving.slo, avg_seq.max(1));
+        if let Some(b) = cfg.serving.b_max_override {
+            bounds.b_max = b;
+        }
+        let proxy = Proxy::new(
+            cfg.serving.offload,
+            bounds,
+            cfg.cluster.n_prefill as usize,
+            cfg.cluster.n_decode as usize,
+        );
+
+        let kv_budget = HbmUsage::kv_token_budget(&cfg.cluster, &cfg.model) as usize;
+        let executor_budget = if cfg.serving.offload.is_enabled() { kv_budget } else { 0 };
+
+        let prefill = (0..cfg.cluster.n_prefill)
+            .map(|_| PrefillInst {
+                busy_until: 0.0,
+                queue: VecDeque::new(),
+                executor_kv_tokens: 0,
+                executor_kv_budget: executor_budget,
+                executor_reserved: 0,
+                prefill_busy_s: 0.0,
+                executor_busy_s: 0.0,
+            })
+            .collect();
+        let block_tokens = cfg.serving.kv_block_tokens.max(1);
+        let decode = (0..cfg.cluster.n_decode)
+            .map(|_| DecodeInst {
+                running: Vec::new(),
+                waiting: VecDeque::new(),
+                kv: KvPool::new(BlockAllocator::new(kv_budget / block_tokens, block_tokens)),
+                reserved: 0,
+                step_in_flight: false,
+                flops_done: 0.0,
+                busy_s: 0.0,
+            })
+            .collect();
+
+        let rl_whole = Roofline::whole(cfg.cluster.gpu);
+        let interference = InterferenceModel::new(cfg.cluster.attn_executor_sm_frac);
+        let rl_executor = Roofline::partition(
+            cfg.cluster.gpu,
+            cfg.cluster.attn_executor_sm_frac.max(1e-3),
+        );
+
+        ClusterSim {
+            cfg,
+            reqs: HashMap::new(),
+            prefill,
+            decode,
+            proxy,
+            events: EventQueue::new(),
+            metrics: MetricsRecorder::new(),
+            decode_occupancy: Timeline::new(),
+            prefill_occupancy: Timeline::new(),
+            batch_size: Timeline::new(),
+            preemptions: 0,
+            rl_whole,
+            rl_executor,
+            interference,
+            trace,
+            finished_offloaded: 0,
+            finished_total: 0,
+        }
+    }
+
+    /// Run to completion (trace drained and all requests finished or the
+    /// hard cap hit) and report.
+    pub fn run(mut self) -> SimReport {
+        // Seed arrival events.
+        let arrivals: Vec<(f64, RequestId)> =
+            self.trace.iter().map(|r| (r.arrival_s, r.id)).collect();
+        for (t, _) in &arrivals {
+            let req = self.trace.pop_front().unwrap();
+            let id = req.id;
+            self.reqs.insert(
+                id,
+                SimReq {
+                    effective_prompt: req.prompt_len,
+                    req,
+                    phase: Phase::WaitingDispatch,
+                    generated: 0,
+                    kv_tokens: 0,
+                    offloaded: false,
+                    prefill_instance: 0,
+                    decode_instance: 0,
+                    preemptions: 0,
+                },
+            );
+            self.events.push(*t, Ev::Arrival(id));
+        }
+
+        let hard_stop = self.cfg.duration_s * 20.0 + 3600.0;
+        while let Some((t, ev)) = self.events.pop() {
+            if t > hard_stop {
+                break;
+            }
+            match ev {
+                Ev::Arrival(id) => self.on_arrival(t, id),
+                Ev::PrefillDone { inst, id } => self.on_prefill_done(t, inst, id),
+                Ev::TransferDone { id } => self.on_transfer_done(t, id),
+                Ev::DecodeStepEnd { inst } => self.on_decode_step_end(t, inst),
+            }
+            // Global scheduling pass after every event.
+            self.dispatch_prefills(t);
+            for d in 0..self.decode.len() {
+                self.admit_waiters(t, d);
+                self.maybe_start_step(t, d);
+            }
+        }
+        self.report()
+    }
+
+    // ----- event handlers ---------------------------------------------------
+
+    fn on_arrival(&mut self, t: f64, id: RequestId) {
+        self.metrics.on_arrival(id, t);
+        let (route, prompt_len) = {
+            let sr = &self.reqs[&id];
+            (self.proxy.route(&sr.req), sr.req.prompt_len)
+        };
+        let _ = prompt_len;
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.offloaded = route.offload.offloaded();
+        sr.prefill_instance = route.prefill_instance;
+        sr.decode_instance = route.decode_instance;
+        self.prefill[route.prefill_instance].queue.push_back(id);
+    }
+
+    fn on_prefill_done(&mut self, t: f64, inst: usize, id: RequestId) {
+        // First token exists as soon as prefill completes.
+        let was_preempted = self.reqs[&id].preemptions > 0;
+        if !was_preempted || self.reqs[&id].generated == 0 {
+            if self.metrics.request(id).and_then(|r| r.first_token_s).is_none() {
+                self.metrics.on_first_token(id, t);
+                let sr = self.reqs.get_mut(&id).unwrap();
+                sr.generated = 1;
+                self.proxy.on_token(sr.decode_instance, id);
+            }
+        }
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.kv_tokens = sr.effective_prompt;
+        if sr.offloaded {
+            // KV stays on this instance (executor pool): reservation
+            // becomes residency, no transfer.
+            let p = &mut self.prefill[inst];
+            p.executor_reserved = p.executor_reserved.saturating_sub(sr.kv_tokens);
+            p.executor_kv_tokens += sr.kv_tokens;
+            sr.phase = Phase::Decoding;
+            let d = sr.decode_instance;
+            self.decode[d].waiting.push_back(id);
+            self.record_prefill_occupancy(t);
+        } else {
+            // NVLink transfer to the decode instance.
+            sr.phase = Phase::Transferring;
+            let bytes = sr.kv_tokens as f64 * self.cfg.model.kv_bytes_per_token();
+            let xfer = bytes / self.cfg.cluster.gpu.interconnect_bw;
+            self.events.push(t + xfer, Ev::TransferDone { id });
+        }
+    }
+
+    fn on_transfer_done(&mut self, t: f64, id: RequestId) {
+        let _ = t;
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.phase = Phase::Decoding;
+        let d = sr.decode_instance;
+        self.decode[d].waiting.push_back(id);
+    }
+
+    fn on_decode_step_end(&mut self, t: f64, inst: usize) {
+        self.decode[inst].step_in_flight = false;
+        let running = self.decode[inst].running.clone();
+        if running.is_empty() {
+            return;
+        }
+
+        // Every running request gains one token.
+        let mut to_finish = Vec::new();
+        let mut overflow = Vec::new();
+        let mut executor_appends: HashMap<usize, usize> = HashMap::new();
+        for &id in &running {
+            let sr = self.reqs.get_mut(&id).unwrap();
+            sr.generated += 1;
+            sr.kv_tokens += 1;
+            if sr.offloaded {
+                *executor_appends.entry(sr.prefill_instance).or_insert(0) += 1;
+            } else {
+                // Paged append: a failed block allocation marks this
+                // sequence for the preemption pass below (vLLM appends the
+                // token after evicting a victim; we evict-then-retry at
+                // the same position via recompute, which is equivalent in
+                // token accounting).
+                if self.decode[inst].kv.append_token(id).is_err() {
+                    overflow.push(id);
+                }
+            }
+            self.metrics.on_token(id, t);
+            self.proxy.on_token(inst, id);
+            if sr.generated >= sr.req.output_len {
+                to_finish.push(id);
+            }
+        }
+        for (pi, n) in executor_appends {
+            self.prefill[pi].executor_kv_tokens += n;
+        }
+
+        // Retire finished requests.
+        for id in to_finish {
+            self.finish(t, inst, id);
+        }
+
+        // Preempt (LIFO, newest first) until every overflowed append fits.
+        for id in overflow {
+            if !self.decode[inst].running.contains(&id) {
+                continue; // finished this step
+            }
+            loop {
+                let victim = self.decode[inst]
+                    .running
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|v| !self.reqs[v].offloaded && self.decode[inst].kv.contains(*v));
+                match victim {
+                    Some(v) if v == id => {
+                        // The overflowing sequence is itself the newest:
+                        // preempt it (its token accounting rolls back via
+                        // recompute).
+                        self.preempt(t, inst, v);
+                        break;
+                    }
+                    Some(v) => {
+                        self.preempt(t, inst, v);
+                        if self.decode[inst].kv.append_token(id).is_ok() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Executor pools can also overflow (offloaded requests growing).
+        for pi in 0..self.prefill.len() {
+            while self.prefill[pi].executor_kv_tokens > self.prefill[pi].executor_kv_budget {
+                let victim = self.decode[inst]
+                    .running
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|id| self.reqs[id].offloaded && self.reqs[id].prefill_instance == pi);
+                match victim {
+                    Some(v) => self.preempt(t, inst, v),
+                    None => break,
+                }
+            }
+        }
+
+        self.record_decode_occupancy(t, inst);
+    }
+
+    // ----- actions ----------------------------------------------------------
+
+    fn finish(&mut self, t: f64, inst: usize, id: RequestId) {
+        self.metrics.on_finished(id, t);
+        self.proxy.on_finished(inst, id);
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.phase = Phase::Done;
+        self.finished_total += 1;
+        if sr.offloaded {
+            self.finished_offloaded += 1;
+            self.prefill[sr.prefill_instance].executor_kv_tokens =
+                self.prefill[sr.prefill_instance].executor_kv_tokens.saturating_sub(sr.kv_tokens);
+        } else {
+            let _ = self.decode[inst].kv.release(id);
+        }
+        sr.kv_tokens = 0;
+        self.decode[inst].running.retain(|&r| r != id);
+        // Occupancy is recorded by the step-end handler *after* the
+        // preemption pass — recording here would capture the transient
+        // overshoot between token appends and preemption.
+        self.record_prefill_occupancy(t);
+    }
+
+    fn preempt(&mut self, _t: f64, inst: usize, id: RequestId) {
+        self.preemptions += 1;
+        self.proxy.on_preempted(inst, id);
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.preemptions += 1;
+        if sr.offloaded {
+            self.prefill[sr.prefill_instance].executor_kv_tokens =
+                self.prefill[sr.prefill_instance].executor_kv_tokens.saturating_sub(sr.kv_tokens);
+        } else {
+            let _ = self.decode[inst].kv.release(id);
+        }
+        sr.kv_tokens = 0;
+        // Recompute path: prompt + generated becomes the new prefill.
+        sr.effective_prompt = sr.req.prompt_len + sr.generated;
+        sr.phase = Phase::WaitingDispatch;
+        self.decode[inst].running.retain(|&r| r != id);
+
+        // Re-route through the proxy (offload decision may differ now).
+        let (route, _) = {
+            let sr = &self.reqs[&id];
+            (self.proxy.route(&sr.req), 0)
+        };
+        let sr = self.reqs.get_mut(&id).unwrap();
+        sr.offloaded = route.offload.offloaded();
+        sr.prefill_instance = route.prefill_instance;
+        sr.decode_instance = route.decode_instance;
+        self.prefill[route.prefill_instance].queue.push_back(id);
+    }
+
+    /// Dispatch queued prompts whose KV has a guaranteed home.
+    /// Dispatch queued prompts whose KV has a guaranteed home, batching
+    /// prompts up to `max_prefill_tokens` into one prefill step (vLLM's
+    /// token-budget prefill batching — amortizes the per-step weight pass
+    /// across prompts and is what keeps TTFT flat below saturation).
+    fn dispatch_prefills(&mut self, t: f64) {
+        for pi in 0..self.prefill.len() {
+            if self.prefill[pi].busy_until > t {
+                continue;
+            }
+            let budget = self.cfg.serving.max_prefill_tokens;
+            let mut batch: Vec<RequestId> = Vec::new();
+            let mut batch_tokens = 0usize;
+            loop {
+                let Some(&id) = self.prefill[pi].queue.front() else { break };
+                let sr = &self.reqs[&id];
+                if sr.phase != Phase::WaitingDispatch {
+                    self.prefill[pi].queue.pop_front();
+                    continue;
+                }
+                let need = sr.effective_prompt;
+                if !batch.is_empty() && batch_tokens + need > budget {
+                    break; // token budget reached
+                }
+                let fits = if sr.offloaded {
+                    let p = &self.prefill[pi];
+                    p.executor_kv_tokens + p.executor_reserved + need <= p.executor_kv_budget
+                } else {
+                    let d = &self.decode[sr.decode_instance];
+                    d.kv_tokens() + d.reserved + need <= d.kv_budget()
+                };
+                if !fits {
+                    break; // FCFS: head-of-line blocks (vLLM behavior)
+                }
+                let id = self.prefill[pi].queue.pop_front().unwrap();
+                // Reserve the destination.
+                if sr.offloaded {
+                    self.prefill[pi].executor_reserved += need;
+                } else {
+                    let d = self.reqs[&id].decode_instance;
+                    self.decode[d].reserved += need;
+                }
+                self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
+                batch_tokens += need;
+                batch.push(id);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+            // One fused prefill step over the batch's total tokens; every
+            // request in the batch completes when the step does.
+            let exec_time = self.prefill_time(pi, batch_tokens as u64);
+            self.prefill[pi].prefill_busy_s += exec_time;
+            self.prefill[pi].busy_until = t + exec_time;
+            for id in batch {
+                self.events.push(t + exec_time, Ev::PrefillDone { inst: pi, id });
+            }
+        }
+    }
+
+    /// Admit waiting requests into the decode batch (KV already resident or
+    /// reserved; admission consumes the reservation for local requests).
+    fn admit_waiters(&mut self, t: f64, d: usize) {
+        while let Some(&id) = self.decode[d].waiting.front() {
+            if self.decode[d].running.len() >= self.cfg.serving.max_batch {
+                break;
+            }
+            let sr = &self.reqs[&id];
+            if !sr.offloaded {
+                let need = sr.kv_tokens;
+                let dec = &mut self.decode[d];
+                // The reservation covers it; convert to block residency.
+                dec.reserved = dec.reserved.saturating_sub(need);
+                if dec.kv.admit(id, need).is_err() {
+                    break;
+                }
+            }
+            self.decode[d].waiting.pop_front();
+            self.decode[d].running.push(id);
+            self.record_decode_occupancy(t, d);
+        }
+    }
+
+    fn maybe_start_step(&mut self, t: f64, d: usize) {
+        if self.decode[d].step_in_flight || self.decode[d].running.is_empty() {
+            return;
+        }
+        let (step, flops) = self.decode_step_time(d);
+        let dec = &mut self.decode[d];
+        dec.step_in_flight = true;
+        dec.busy_s += step;
+        dec.flops_done += flops;
+        self.batch_size.push(t, self.decode[d].running.len() as f64);
+        self.events.push(t + step, Ev::DecodeStepEnd { inst: d });
+    }
+
+    // ----- timing models ----------------------------------------------------
+
+    fn prefill_time(&mut self, pi: usize, tokens: u64) -> f64 {
+        let base = PrefillKernelTimes::compute(&self.rl_whole, &self.cfg.model, tokens).total();
+        if !self.cfg.serving.offload.is_enabled() {
+            return base;
+        }
+        // MPS reservation always applies; bandwidth contention applies in
+        // proportion to the executor's recent duty cycle.
+        let duty = {
+            let p = &self.prefill[pi];
+            if p.prefill_busy_s + p.executor_busy_s > 0.0 {
+                (p.executor_busy_s / (p.prefill_busy_s + p.executor_busy_s)).min(1.0)
+            } else {
+                0.0
+            }
+        };
+        let prefill_bw_frac = 0.25; // Fig 1a: prefill's own bandwidth draw
+        let attn_bw = self.interference.attn_bw_cap(self.cfg.cluster.gpu.bw_eff);
+        let idle = self.interference.prefill_slowdown_idle();
+        let active = self.interference.prefill_slowdown_active(prefill_bw_frac, attn_bw);
+        base * (idle * (1.0 - duty) + active * duty)
+    }
+
+    /// One decode step for instance `d`: returns (seconds, flops).
+    fn decode_step_time(&mut self, d: usize) -> (f64, f64) {
+        let model = self.cfg.model;
+        let mut local_ctx = 0u64;
+        let mut remote_ctx: HashMap<usize, u64> = HashMap::new();
+        let mut b_total = 0u64;
+        for &id in &self.decode[d].running {
+            let sr = &self.reqs[&id];
+            b_total += 1;
+            if sr.offloaded {
+                *remote_ctx.entry(sr.prefill_instance).or_insert(0) += sr.kv_tokens as u64 + 1;
+            } else {
+                local_ctx += sr.kv_tokens as u64 + 1;
+            }
+        }
+
+        let times = DecodeKernelTimes::compute(&self.rl_whole, &model, b_total, 1);
+        let non_attn = times.non_attention();
+        let local_attn = if local_ctx > 0 {
+            self.rl_whole.time(KernelCost::new(
+                model.decode_attn_flops(local_ctx),
+                model.decode_attn_bytes(local_ctx),
+            ))
+        } else {
+            0.0
+        };
+        // Remote attention on each involved executor partition, in parallel.
+        let mut remote_attn: f64 = 0.0;
+        for (&pi, &ctx) in &remote_ctx {
+            let t = self.rl_executor.time(KernelCost::new(
+                model.decode_attn_flops(ctx),
+                model.decode_attn_bytes(ctx),
+            ));
+            self.prefill[pi].executor_busy_s += t;
+            remote_attn = remote_attn.max(t);
+        }
+        if !remote_ctx.is_empty() {
+            remote_attn += self.cfg.sync_overhead_s * model.n_layers as f64;
+        }
+
+        let step = non_attn
+            + local_attn.max(remote_attn)
+            + self.cfg.eager_launch_overhead_s;
+        let flops = model.decode_step_flops(b_total, local_ctx + remote_ctx.values().sum::<u64>());
+        (step, flops)
+    }
+
+    // ----- accounting -------------------------------------------------------
+
+    fn record_decode_occupancy(&mut self, t: f64, d: usize) {
+        if d == 0 {
+            self.decode_occupancy.push(t, self.decode[d].kv.occupancy());
+        }
+    }
+
+    fn record_prefill_occupancy(&mut self, t: f64) {
+        // Fig 16 metric: capacity utilization of prefill instance 0.
+        let m = &self.cfg.model;
+        let p = &self.prefill[0];
+        let used = m.weight_bytes()
+            + HbmUsage::activation_workspace(m)
+            + p.executor_kv_tokens as f64 * m.kv_bytes_per_token();
+        self.prefill_occupancy.push(t, (used / self.cfg.cluster.gpu.hbm_capacity).min(1.0));
+    }
+
+    fn report(mut self) -> SimReport {
+        let end = self.events.clock();
+        self.record_prefill_occupancy(end);
+        let window = StableWindow::detect(&self.decode_occupancy, &self.batch_size);
+        let throughput = match window {
+            Some(w) if w.duration() > 1e-9 => self.metrics.throughput_in_window(w.start, w.end),
+            _ => {
+                if end > 0.0 {
+                    self.metrics.total_output_tokens() as f64 / end
+                } else {
+                    0.0
+                }
+            }
+        };
+
+        // Prefill-instance utilization means (instance 0).
+        let gpu = self.cfg.cluster.gpu;
+        let p0 = &self.prefill[0];
+        let span = end.max(1e-9);
+        let prefill_bw_frac = 0.25;
+        let exec_bw_frac = self.interference.attn_bw_cap(gpu.bw_eff);
+        let prefill_hbm_bw_util = (p0.prefill_busy_s * prefill_bw_frac
+            + p0.executor_busy_s * exec_bw_frac)
+            / span;
+        let executor_duty = p0.executor_busy_s / span;
+
+        let d0 = &self.decode[0];
+        let decode_compute_util = if d0.busy_s > 0.0 {
+            (d0.flops_done / d0.busy_s) / gpu.peak_flops
+        } else {
+            0.0
+        };
+
+        let prefill_hbm_capacity_util = self
+            .prefill_occupancy
+            .time_weighted_mean(0.0, end)
+            .unwrap_or(0.0);
+
+        // SLO attainment + goodput over finished requests.
+        let slo = self.cfg.serving.slo;
+        let mut met_ttft = 0usize;
+        let mut met_tpot = 0usize;
+        let mut met_both = 0usize;
+        let mut finished_seen = 0usize;
+        for sr in self.reqs.values() {
+            if sr.phase != Phase::Done {
+                continue;
+            }
+            finished_seen += 1;
+            let Some(rm) = self.metrics.request(sr.req.id) else { continue };
+            let ttft_ok = rm.ttft().is_some_and(|t| t <= slo.ttft_s);
+            let tpots = rm.tpot_samples();
+            let tpot_ok = if tpots.is_empty() {
+                true
+            } else {
+                tpots.iter().sum::<f64>() / tpots.len() as f64 <= slo.tpot_s
+            };
+            met_ttft += usize::from(ttft_ok);
+            met_tpot += usize::from(tpot_ok);
+            met_both += usize::from(ttft_ok && tpot_ok);
+        }
+        let frac = |n: usize| {
+            if finished_seen == 0 {
+                0.0
+            } else {
+                n as f64 / finished_seen as f64
+            }
+        };
+        let good_frac = frac(met_both);
+
+        SimReport {
+            ttft: self.metrics.ttft_stats(),
+            tpot: self.metrics.tpot_stats(),
+            throughput,
+            window,
+            arrived: self.reqs.len(),
+            finished: self.finished_total,
+            preemptions: self.preemptions,
+            offloaded_fraction: if self.finished_total > 0 {
+                self.finished_offloaded as f64 / self.finished_total as f64
+            } else {
+                0.0
+            },
+            prefill_hbm_capacity_util,
+            prefill_hbm_bw_util,
+            executor_bw_util: exec_bw_frac,
+            executor_duty,
+            decode_compute_util,
+            ttft_slo_attainment: frac(met_ttft),
+            tpot_slo_attainment: frac(met_tpot),
+            goodput: throughput * good_frac,
+            decode_occupancy: self.decode_occupancy,
+            prefill_occupancy: self.prefill_occupancy,
+            batch_size: self.batch_size,
+            sim_end_s: end,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn quick(policy_on: bool, rate: f64, duration: f64) -> SimReport {
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = if policy_on {
+            SimConfig::paper_default(model, WorkloadKind::ShareGpt, rate)
+        } else {
+            SimConfig::baseline(model, WorkloadKind::ShareGpt, rate)
+        };
+        cfg.duration_s = duration;
+        ClusterSim::new(cfg).run()
+    }
+
+    #[test]
+    fn all_requests_finish_at_low_rate() {
+        let r = quick(false, 0.5, 40.0);
+        assert!(r.arrived > 0);
+        assert_eq!(r.finished, r.arrived, "low load must drain fully");
+        assert!(r.ttft.is_some() && r.tpot.is_some());
+    }
+
+    #[test]
+    fn offloading_happens_under_load_aware_policy() {
+        let r = quick(true, 2.0, 60.0);
+        assert!(r.offloaded_fraction > 0.05, "offloaded {}", r.offloaded_fraction);
+        assert!(r.executor_duty > 0.0);
+    }
+
+    #[test]
+    fn baseline_never_offloads() {
+        let r = quick(false, 2.0, 40.0);
+        assert_eq!(r.offloaded_fraction, 0.0);
+        assert_eq!(r.executor_duty, 0.0);
+    }
+
+    /// Saturating ShareGPT rate for this testbed. The paper's testbed
+    /// saturates near 4 req/s; our roofline decode steps are faster than
+    /// the authors' measured stack, so the decode pool fills at a higher
+    /// rate — the crossover shape is what must match, not the absolute
+    /// rate (see EXPERIMENTS.md).
+    const SATURATING_RATE: f64 = 24.0;
+
+    #[test]
+    fn adrenaline_beats_baseline_throughput_at_high_rate() {
+        // The headline claim (Fig 11d): at saturating rates Adrenaline
+        // sustains higher output-token throughput.
+        let base = quick(false, SATURATING_RATE, 120.0);
+        let adre = quick(true, SATURATING_RATE, 120.0);
+        assert!(
+            adre.throughput > base.throughput * 1.1,
+            "adrenaline {} vs baseline {}",
+            adre.throughput,
+            base.throughput
+        );
+    }
+
+    #[test]
+    fn prefill_capacity_util_improves_with_offloading() {
+        let base = quick(false, SATURATING_RATE, 120.0);
+        let adre = quick(true, SATURATING_RATE, 120.0);
+        assert!(
+            adre.prefill_hbm_capacity_util > base.prefill_hbm_capacity_util * 1.3,
+            "adre {} base {}",
+            adre.prefill_hbm_capacity_util,
+            base.prefill_hbm_capacity_util
+        );
+    }
+
+    #[test]
+    fn tokens_conserved() {
+        let r = quick(true, 1.0, 30.0);
+        // Every finished request produced exactly its output_len tokens;
+        // total output tokens >= finished (each got >= 1).
+        assert!(r.finished > 0);
+        assert!(r.tpot.map(|t| t.count).unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = quick(true, 1.5, 30.0);
+        let b = quick(true, 1.5, 30.0);
+        assert_eq!(a.finished, b.finished);
+        assert!((a.throughput - b.throughput).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Typed discrete-event queue (min-heap over f64 timestamps).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: (time, seq) with reversed ordering for a min-heap; `seq`
+/// breaks ties deterministically (insertion order).
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap; NaN times are a caller bug (assert on push).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-time event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    next_seq: u64,
+    clock: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, clock: 0.0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `t` (must not precede the clock).
+    pub fn push(&mut self, t: f64, event: E) {
+        assert!(t.is_finite(), "event time must be finite");
+        assert!(
+            t >= self.clock - 1e-12,
+            "cannot schedule into the past: t={t} clock={}",
+            self.clock
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time: t, seq, event });
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let e = self.heap.pop()?;
+        self.clock = e.time;
+        Some((e.time, e.event))
+    }
+
+    /// Earliest scheduled time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "first");
+        q.push(1.0, "second");
+        q.push(1.0, "third");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.push(1.0, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(q.clock(), t1);
+        q.push(2.0, ()); // after clock=1, fine
+        let mut prev = t1;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn scheduling_into_past_panics() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push(1.0, ());
+    }
+
+    #[test]
+    fn property_always_sorted() {
+        crate::util::prop::check("event_queue_sorted", 50, |rng| {
+            let mut q = EventQueue::new();
+            for i in 0..100u64 {
+                q.push(rng.f64() * 1000.0, i);
+            }
+            let mut prev = f64::NEG_INFINITY;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= prev);
+                prev = t;
+            }
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Discrete-event cluster simulator for the A100-scale evaluation
+//! (Figs 1–3, 5–6, 9–18). See DESIGN.md §1 for why the paper's testbed is
+//! simulated and §4 for the per-figure index.
+
+pub mod cluster;
+pub mod events;
+pub mod run;
+
+pub use cluster::{ClusterSim, SimConfig, SimReport};
+pub use run::{run_e2e, run_ratio_sweep, E2eConfig, E2ePoint};

@@ -1,0 +1,158 @@
+//! End-to-end sweep harness: the request-rate sweeps behind Figs 11–14
+//! and the offload-ratio sweep behind Figs 15/17.
+
+use crate::config::{ModelSpec, OffloadPolicy};
+use crate::workload::WorkloadKind;
+
+use super::cluster::{ClusterSim, SimConfig, SimReport};
+
+/// One figure panel's configuration.
+#[derive(Debug, Clone)]
+pub struct E2eConfig {
+    pub model: ModelSpec,
+    pub workload: WorkloadKind,
+    pub rates: Vec<f64>,
+    pub duration_s: f64,
+    pub seed: u64,
+}
+
+impl E2eConfig {
+    /// Fig 11: ShareGPT + Llama-2 7B.
+    pub fn fig11() -> Self {
+        E2eConfig {
+            model: ModelSpec::llama2_7b(),
+            workload: WorkloadKind::ShareGpt,
+            rates: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            duration_s: 240.0,
+            seed: 42,
+        }
+    }
+
+    /// Fig 12: ShareGPT + Llama-2 13B.
+    pub fn fig12() -> Self {
+        E2eConfig { model: ModelSpec::llama2_13b(), ..Self::fig11() }
+    }
+
+    /// Fig 13: OpenThoughts + Llama-2 7B (longer outputs, lower rates).
+    pub fn fig13() -> Self {
+        E2eConfig {
+            model: ModelSpec::llama2_7b(),
+            workload: WorkloadKind::OpenThoughts,
+            rates: vec![0.5, 1.0, 1.5, 2.0, 2.5],
+            duration_s: 240.0,
+            seed: 42,
+        }
+    }
+
+    /// Fig 14: OpenThoughts + Llama-2 13B.
+    pub fn fig14() -> Self {
+        E2eConfig { model: ModelSpec::llama2_13b(), ..Self::fig13() }
+    }
+}
+
+/// One point of an E2E sweep (one system at one rate).
+#[derive(Debug)]
+pub struct E2ePoint {
+    pub rate: f64,
+    pub system: &'static str,
+    pub ttft_mean_s: f64,
+    pub tpot_mean_s: f64,
+    pub tpot_p99_s: f64,
+    pub throughput_tok_s: f64,
+    pub finished: usize,
+    pub preemptions: u64,
+    pub offloaded_fraction: f64,
+}
+
+impl E2ePoint {
+    pub fn from_report(rate: f64, system: &'static str, r: &SimReport) -> Self {
+        E2ePoint {
+            rate,
+            system,
+            ttft_mean_s: r.ttft.map(|s| s.mean).unwrap_or(f64::NAN),
+            tpot_mean_s: r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
+            tpot_p99_s: r.tpot.map(|s| s.p99).unwrap_or(f64::NAN),
+            throughput_tok_s: r.throughput,
+            finished: r.finished,
+            preemptions: r.preemptions,
+            offloaded_fraction: r.offloaded_fraction,
+        }
+    }
+}
+
+/// Run the vLLM-baseline and Adrenaline systems across the sweep.
+pub fn run_e2e(cfg: &E2eConfig) -> Vec<E2ePoint> {
+    let mut out = Vec::new();
+    for &rate in &cfg.rates {
+        let mut base = SimConfig::baseline(cfg.model, cfg.workload, rate);
+        base.duration_s = cfg.duration_s;
+        base.seed = cfg.seed;
+        let br = ClusterSim::new(base).run();
+        out.push(E2ePoint::from_report(rate, "vllm", &br));
+
+        let mut adre = SimConfig::paper_default(cfg.model, cfg.workload, rate);
+        adre.duration_s = cfg.duration_s;
+        adre.seed = cfg.seed;
+        let ar = ClusterSim::new(adre).run();
+        out.push(E2ePoint::from_report(rate, "adrenaline", &ar));
+    }
+    out
+}
+
+/// Offload-ratio sweep (Fig 15/17): fixed-ratio policies at one rate.
+pub fn run_ratio_sweep(
+    model: ModelSpec,
+    workload: WorkloadKind,
+    rate: f64,
+    ratios: &[f64],
+    duration_s: f64,
+) -> Vec<(f64, SimReport)> {
+    ratios
+        .iter()
+        .map(|&ratio| {
+            let mut cfg = SimConfig::paper_default(model, workload, rate);
+            cfg.duration_s = duration_s;
+            cfg.serving.offload = if ratio <= 0.0 {
+                OffloadPolicy::Disabled
+            } else {
+                OffloadPolicy::FixedRatio(ratio)
+            };
+            (ratio, ClusterSim::new(cfg).run())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2e_sweep_produces_point_pairs() {
+        let cfg = E2eConfig {
+            rates: vec![1.0, 3.0],
+            duration_s: 40.0,
+            ..E2eConfig::fig11()
+        };
+        let pts = run_e2e(&cfg);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().any(|p| p.system == "vllm"));
+        assert!(pts.iter().any(|p| p.system == "adrenaline"));
+        for p in &pts {
+            assert!(p.finished > 0, "rate {} {}", p.rate, p.system);
+        }
+    }
+
+    #[test]
+    fn ratio_sweep_monotone_offload_fraction() {
+        let pts = run_ratio_sweep(
+            ModelSpec::llama2_7b(),
+            WorkloadKind::ShareGpt,
+            2.0,
+            &[0.0, 0.4, 0.8],
+            40.0,
+        );
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].1.offloaded_fraction, 0.0);
+        assert!(pts[1].1.offloaded_fraction < pts[2].1.offloaded_fraction);
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal criterion-style benchmark harness (the vendored crate set has
+//! no criterion). Used by every target in `benches/`.
+//!
+//! Protocol per benchmark: warm up for `warmup_iters`, then time
+//! `sample_iters` batches and report mean / p50 / p99 per iteration. For
+//! figure-regeneration benches the harness also prints labelled data rows
+//! (`row!`-style) so `cargo bench | tee bench_output.txt` doubles as the
+//! figure data dump.
+
+use std::time::Instant;
+
+/// One benchmark's timing summary (seconds per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, sample_iters: 20 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Bench { warmup_iters, sample_iters }
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let stats = BenchStats {
+            iters: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p50_s: samples[n / 2],
+            p99_s: samples[((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1],
+            min_s: samples[0],
+        };
+        println!(
+            "bench {name:<44} mean {:>12} p50 {:>12} p99 {:>12}",
+            fmt_duration(stats.mean_s),
+            fmt_duration(stats.p50_s),
+            fmt_duration(stats.p99_s),
+        );
+        stats
+    }
+}
+
+/// Human-scale duration.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print a figure data row: a stable, grep-able format shared by benches
+/// and the `figures` binary.
+pub fn figure_row(figure: &str, series: &str, x: f64, y: f64) {
+    println!("figure={figure} series={series} x={x} y={y:.6}");
+}
+
+/// Black-box hint to stop the optimizer eliding benched work (stable-Rust
+/// equivalent of `std::hint::black_box` pre-1.66; kept for clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_times_work() {
+        let b = Bench::new(1, 5);
+        let mut count = 0u64;
+        let stats = b.run("spin", || {
+            for i in 0..10_000u64 {
+                count = black_box(count.wrapping_add(i));
+            }
+        });
+        assert_eq!(stats.iters, 5);
+        assert!(stats.mean_s > 0.0);
+        assert!(stats.min_s <= stats.p50_s);
+        assert!(stats.p50_s <= stats.p99_s);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with(" ms"));
+        assert!(fmt_duration(2.5e-6).contains("µs"));
+        assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+}

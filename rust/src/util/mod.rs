@@ -1,0 +1,20 @@
+//! Dependency-free substrates.
+//!
+//! This build is fully offline: the only third-party crates available are
+//! `xla`, `anyhow`, and `thiserror` (see .cargo/config.toml). Everything a
+//! serving framework would normally pull from the ecosystem is implemented
+//! here from scratch:
+//!
+//! * [`json`] — a small, strict JSON parser/serializer (manifest + config
+//!   files);
+//! * [`rng`] — SplitMix64 + xoshiro256++ PRNG with exponential, normal and
+//!   log-normal samplers (workload generation);
+//! * [`mod@bench`] — a minimal criterion-style benchmark harness (warmup,
+//!   timed iterations, mean/p50/p99 reporting) used by `benches/*`;
+//! * [`prop`] — a tiny property-testing loop (seeded case generation +
+//!   shrink-free failure reporting) used where `proptest` would be.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

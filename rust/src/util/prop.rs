@@ -1,0 +1,92 @@
+//! Tiny property-testing loop (no proptest in the offline vendor set).
+//!
+//! `check(name, cases, |rng| ...)` runs `cases` seeded trials; the closure
+//! builds a random input from the [`Rng`] and asserts the property. On
+//! panic the harness re-raises with the failing case's seed so the trial
+//! reproduces exactly (`PROP_SEED=<seed> cargo test ...`).
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `property`. Each trial gets a fresh RNG
+/// derived from a base seed (env `PROP_SEED` overrides for replay).
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, property: F) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base {
+        let mut rng = Rng::seed_from_u64(seed);
+        property(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        // Derive per-case seeds deterministically from the property name so
+        // different properties explore different inputs.
+        let seed = fnv1a(name) ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed on case {case} (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 50, |rng| {
+            let a = rng.range_u64(0, 1000);
+            let b = rng.range_u64(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always_fails", 3, |_rng| {
+                panic!("nope");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("PROP_SEED="), "got: {msg}");
+        assert!(msg.contains("always_fails"));
+    }
+
+    #[test]
+    fn cases_get_distinct_inputs() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        check("distinct", 10, |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        let v = seen.lock().unwrap();
+        let mut uniq = v.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), v.len());
+    }
+}

@@ -1,0 +1,224 @@
+//! Seeded synthetic trace generation matching the paper's two datasets.
+//!
+//! Length statistics (tokens), drawn from the published characterizations
+//! of each dataset (ShareGPT: vLLM/DistServe sampling convention;
+//! OpenThoughts: long chain-of-thought outputs with short prompts):
+//!
+//! | dataset       | prompt (median≈) | output (median≈) | output/prompt |
+//! |---------------|------------------|------------------|---------------|
+//! | ShareGPT      | ~220             | ~180             | ≈ 1           |
+//! | OpenThoughts  | ~120             | ~1600            | ≫ 1           |
+//!
+//! Lengths are log-normal (the standard fit for both corpora), clipped to
+//! sane ranges; arrivals are Poisson at a configurable rate — exactly the
+//! process the paper's request-rate sweeps use. Everything is seeded and
+//! replayable (see `util::rng`).
+
+use crate::util::rng::Rng;
+
+use super::request::Request;
+
+/// Which dataset's length statistics to synthesize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// Chatbot traffic (ShareGPT-like).
+    ShareGpt,
+    /// Reasoning traffic (OpenThoughts-like): short prompts, very long
+    /// outputs — the preemption-heavy case in Figs 13/14.
+    OpenThoughts,
+    /// Fixed lengths (microbenchmarks and unit tests).
+    Fixed { prompt: usize, output: usize },
+}
+
+impl WorkloadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::ShareGpt => "sharegpt",
+            WorkloadKind::OpenThoughts => "openthoughts",
+            WorkloadKind::Fixed { .. } => "fixed",
+        }
+    }
+
+    /// (mu, sigma) of ln(prompt_len), ln(output_len).
+    fn lognormal_params(&self) -> ((f64, f64), (f64, f64)) {
+        match self {
+            // median 220 prompt / 180 output, moderate spread.
+            WorkloadKind::ShareGpt => ((220f64.ln(), 0.95), (180f64.ln(), 0.85)),
+            // median 120 prompt / 1600 output, heavier output tail.
+            WorkloadKind::OpenThoughts => ((120f64.ln(), 0.60), (1600f64.ln(), 0.45)),
+            WorkloadKind::Fixed { .. } => unreachable!("fixed lengths don't sample"),
+        }
+    }
+}
+
+/// Poisson-arrival trace generator.
+#[derive(Debug)]
+pub struct TraceGenerator {
+    kind: WorkloadKind,
+    /// Mean request rate, req/s.
+    rate: f64,
+    /// Clip range for prompt lengths (inclusive).
+    prompt_clip: (usize, usize),
+    /// Clip range for output lengths (inclusive).
+    output_clip: (usize, usize),
+    rng: Rng,
+    next_id: u64,
+    clock_s: f64,
+}
+
+impl TraceGenerator {
+    pub fn new(kind: WorkloadKind, rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        TraceGenerator {
+            kind,
+            rate,
+            prompt_clip: (4, 8192),
+            output_clip: (1, 8192),
+            rng: Rng::seed_from_u64(seed),
+            next_id: 0,
+            clock_s: 0.0,
+        }
+    }
+
+    /// Clip ranges for the *tiny* CPU-path model (max_seq_len 128).
+    pub fn with_clip(mut self, prompt: (usize, usize), output: (usize, usize)) -> Self {
+        assert!(prompt.0 >= 1 && prompt.0 <= prompt.1);
+        assert!(output.0 >= 1 && output.0 <= output.1);
+        self.prompt_clip = prompt;
+        self.output_clip = output;
+        self
+    }
+
+    fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, clip: (usize, usize)) -> usize {
+        (rng.lognormal(mu, sigma).round() as usize).clamp(clip.0, clip.1)
+    }
+
+    /// Generate the next request (arrivals strictly increase).
+    pub fn next_request(&mut self) -> Request {
+        self.clock_s += self.rng.exp(self.rate);
+        let (prompt_len, output_len) = match self.kind {
+            WorkloadKind::Fixed { prompt, output } => (prompt, output),
+            kind => {
+                let ((pm, ps), (om, os)) = kind.lognormal_params();
+                (
+                    Self::sample_len(&mut self.rng, pm, ps, self.prompt_clip),
+                    Self::sample_len(&mut self.rng, om, os, self.output_clip),
+                )
+            }
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, self.clock_s, prompt_len, output_len)
+    }
+
+    /// Generate a trace covering `duration_s` seconds.
+    pub fn trace(&mut self, duration_s: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.next_request();
+            if r.arrival_s > duration_s {
+                break;
+            }
+            out.push(r);
+        }
+        out
+    }
+
+    /// Generate exactly `n` requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Attach random prompt token ids (for the real CPU path).
+    pub fn with_tokens(&mut self, mut reqs: Vec<Request>, vocab: u32) -> Vec<Request> {
+        for r in &mut reqs {
+            r.prompt_tokens = (0..r.prompt_len)
+                .map(|_| self.rng.range_u64(0, vocab as u64) as u32)
+                .collect();
+        }
+        reqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn median(mut v: Vec<usize>) -> usize {
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TraceGenerator::new(WorkloadKind::ShareGpt, 2.0, 42).take(50);
+        let b = TraceGenerator::new(WorkloadKind::ShareGpt, 2.0, 42).take(50);
+        assert_eq!(a, b);
+        let c = TraceGenerator::new(WorkloadKind::ShareGpt, 2.0, 43).take(50);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_strictly_increase_at_mean_rate() {
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 4.0, 1).take(2000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 4.0).abs() / 4.0 < 0.1, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn sharegpt_length_statistics() {
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 1.0, 7).take(4000);
+        let pm = median(reqs.iter().map(|r| r.prompt_len).collect());
+        let om = median(reqs.iter().map(|r| r.output_len).collect());
+        assert!((150..300).contains(&pm), "prompt median {pm}");
+        assert!((120..260).contains(&om), "output median {om}");
+    }
+
+    #[test]
+    fn openthoughts_output_dominates_prompt() {
+        let reqs = TraceGenerator::new(WorkloadKind::OpenThoughts, 1.0, 7).take(4000);
+        let pm = median(reqs.iter().map(|r| r.prompt_len).collect()) as f64;
+        let om = median(reqs.iter().map(|r| r.output_len).collect()) as f64;
+        assert!(om / pm > 5.0, "output/prompt ratio = {}", om / pm);
+    }
+
+    #[test]
+    fn clip_respected() {
+        let reqs = TraceGenerator::new(WorkloadKind::OpenThoughts, 1.0, 3)
+            .with_clip((4, 48), (1, 64))
+            .take(500);
+        for r in &reqs {
+            assert!((4..=48).contains(&r.prompt_len));
+            assert!((1..=64).contains(&r.output_len));
+        }
+    }
+
+    #[test]
+    fn fixed_kind_is_fixed() {
+        let reqs =
+            TraceGenerator::new(WorkloadKind::Fixed { prompt: 32, output: 16 }, 1.0, 0).take(10);
+        assert!(reqs.iter().all(|r| r.prompt_len == 32 && r.output_len == 16));
+    }
+
+    #[test]
+    fn trace_bounded_by_duration() {
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 10.0, 5).trace(3.0);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|r| r.arrival_s <= 3.0));
+    }
+
+    #[test]
+    fn with_tokens_populates_prompt_ids() {
+        let mut g = TraceGenerator::new(WorkloadKind::Fixed { prompt: 8, output: 4 }, 1.0, 0);
+        let reqs = g.take(3);
+        let reqs = g.with_tokens(reqs, 256);
+        for r in &reqs {
+            assert_eq!(r.prompt_tokens.len(), 8);
+            assert!(r.prompt_tokens.iter().all(|&t| t < 256));
+        }
+    }
+}

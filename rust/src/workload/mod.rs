@@ -1,0 +1,17 @@
+//! Workload generation: synthetic equivalents of the paper's datasets.
+//!
+//! The paper evaluates on ShareGPT (chatbot: moderate prompts, moderate
+//! outputs) and OpenThoughts (reasoning: short prompts, long
+//! chain-of-thought outputs, output/prompt ratio ≫ 1). The text content is
+//! irrelevant to a serving system — every figure depends only on the
+//! (prompt_len, output_len) joint distribution and the arrival process —
+//! so we generate seeded synthetic traces matching the published length
+//! statistics. See DESIGN.md §1.
+
+mod generator;
+mod request;
+pub mod trace;
+
+pub use generator::{TraceGenerator, WorkloadKind};
+pub use request::{Request, RequestId};
+pub use trace::{load_trace, save_trace, trace_from_json, trace_to_json};

@@ -1,0 +1,55 @@
+//! Request descriptor shared by the simulator and the real serving path.
+
+pub type RequestId = u64;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length, tokens.
+    pub prompt_len: usize,
+    /// Output tokens to generate (the trace's ground-truth output length;
+    /// serving systems see it as max_tokens).
+    pub output_len: usize,
+    /// Concrete prompt token ids — only populated for the real CPU serving
+    /// path (the simulator works from lengths alone).
+    pub prompt_tokens: Vec<u32>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival_s: f64, prompt_len: usize, output_len: usize) -> Self {
+        Request { id, arrival_s, prompt_len, output_len, prompt_tokens: Vec::new() }
+    }
+
+    /// Total KV tokens this request holds at completion.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_len + self.output_len
+    }
+
+    /// `max_token` in Algorithm 1: the sequence-length budget the scheduler
+    /// reserves when admitting this request's attention for offload.
+    pub fn max_token(&self) -> usize {
+        self.total_tokens()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let r = Request::new(1, 0.5, 100, 50);
+        assert_eq!(r.total_tokens(), 150);
+        assert_eq!(r.max_token(), 150);
+    }
+
+    #[test]
+    fn construction_defaults() {
+        let r = Request::new(2, 1.0, 10, 5);
+        assert!(r.prompt_tokens.is_empty());
+        assert_eq!(r.id, 2);
+    }
+}

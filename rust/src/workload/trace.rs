@@ -1,0 +1,136 @@
+//! Replayable trace files: serialize generated traces so experiments are
+//! exactly reproducible across machines and runs (and so real request logs
+//! can be replayed through both the simulator and the CPU serving path).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::request::Request;
+
+/// Serialize a trace to JSON.
+pub fn trace_to_json(requests: &[Request]) -> String {
+    Json::Arr(
+        requests
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("id".into(), Json::Num(r.id as f64));
+                o.insert("arrival_s".into(), Json::Num(r.arrival_s));
+                o.insert("prompt_len".into(), Json::Num(r.prompt_len as f64));
+                o.insert("output_len".into(), Json::Num(r.output_len as f64));
+                if !r.prompt_tokens.is_empty() {
+                    o.insert(
+                        "prompt_tokens".into(),
+                        Json::Arr(r.prompt_tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    );
+                }
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+    .to_string()
+}
+
+/// Parse a trace from JSON.
+pub fn trace_from_json(text: &str) -> Result<Vec<Request>> {
+    let v = Json::parse(text)?;
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("trace must be a JSON array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    let mut last_arrival = f64::NEG_INFINITY;
+    for (i, e) in arr.iter().enumerate() {
+        let field = |k: &str| {
+            e.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("trace[{i}]: missing numeric `{k}`"))
+        };
+        let mut r = Request::new(
+            field("id")? as u64,
+            field("arrival_s")?,
+            field("prompt_len")? as usize,
+            field("output_len")? as usize,
+        );
+        anyhow::ensure!(r.prompt_len >= 1, "trace[{i}]: empty prompt");
+        anyhow::ensure!(r.output_len >= 1, "trace[{i}]: empty output");
+        anyhow::ensure!(
+            r.arrival_s >= last_arrival,
+            "trace[{i}]: arrivals must be non-decreasing"
+        );
+        last_arrival = r.arrival_s;
+        if let Some(toks) = e.get("prompt_tokens").and_then(Json::as_arr) {
+            r.prompt_tokens = toks
+                .iter()
+                .map(|t| {
+                    t.as_u64()
+                        .map(|n| n as u32)
+                        .ok_or_else(|| anyhow::anyhow!("trace[{i}]: bad token"))
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(
+                r.prompt_tokens.len() == r.prompt_len,
+                "trace[{i}]: prompt_tokens/prompt_len mismatch"
+            );
+        }
+        out.push(r);
+    }
+    Ok(out)
+}
+
+pub fn save_trace(path: &Path, requests: &[Request]) -> Result<()> {
+    std::fs::write(path, trace_to_json(requests))?;
+    Ok(())
+}
+
+pub fn load_trace(path: &Path) -> Result<Vec<Request>> {
+    trace_from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{TraceGenerator, WorkloadKind};
+
+    #[test]
+    fn roundtrip_without_tokens() {
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 2.0, 9).take(25);
+        let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
+        assert_eq!(reqs, back);
+    }
+
+    #[test]
+    fn roundtrip_with_tokens() {
+        let mut g = TraceGenerator::new(WorkloadKind::Fixed { prompt: 6, output: 3 }, 1.0, 2);
+        let reqs = g.take(4);
+        let reqs = g.with_tokens(reqs, 256);
+        let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
+        assert_eq!(reqs, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("adrenaline_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let reqs = TraceGenerator::new(WorkloadKind::OpenThoughts, 1.0, 5).take(10);
+        save_trace(&path, &reqs).unwrap();
+        assert_eq!(load_trace(&path).unwrap(), reqs);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(trace_from_json("{}").is_err());
+        assert!(trace_from_json(r#"[{"id": 0}]"#).is_err());
+        // Decreasing arrivals.
+        let bad = r#"[
+            {"id": 0, "arrival_s": 5.0, "prompt_len": 4, "output_len": 2},
+            {"id": 1, "arrival_s": 1.0, "prompt_len": 4, "output_len": 2}
+        ]"#;
+        assert!(trace_from_json(bad).is_err());
+        // Token/length mismatch.
+        let bad2 = r#"[{"id": 0, "arrival_s": 0.0, "prompt_len": 3,
+                        "output_len": 1, "prompt_tokens": [1, 2]}]"#;
+        assert!(trace_from_json(bad2).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Integration tests asserting the *paper-shape* claims end-to-end on the
+//! A100-scale simulator: who wins, by roughly what factor, and where the
+//! crossovers fall (DESIGN.md §4). Absolute numbers are testbed-specific;
+//! these tests pin the qualitative structure of every headline figure.
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::{run_e2e, ClusterSim, E2eConfig, SimConfig};
+use adrenaline::workload::WorkloadKind;
+
+fn quick(model: ModelSpec, workload: WorkloadKind, on: bool, rate: f64, dur: f64) -> adrenaline::sim::SimReport {
+    let mut cfg = if on {
+        SimConfig::paper_default(model, workload, rate)
+    } else {
+        SimConfig::baseline(model, workload, rate)
+    };
+    cfg.duration_s = dur;
+    ClusterSim::new(cfg).run()
+}
+
+/// Fig 11a shape: once the decode pool saturates, vLLM's TTFT explodes
+/// (queueing) while Adrenaline defers the explosion.
+#[test]
+fn fig11a_ttft_blowup_at_saturation() {
+    // The crossover band: vLLM is past its sustainable rate (~15 req/s on
+    // this testbed), Adrenaline is not (its decode capacity is ~1.4x).
+    let rate = 20.0;
+    let base = quick(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, false, rate, 120.0);
+    let adre = quick(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, true, rate, 120.0);
+    let b = base.ttft.unwrap().mean;
+    let a = adre.ttft.unwrap().mean;
+    assert!(b / a > 3.0, "vLLM TTFT {b:.2}s should dwarf Adrenaline's {a:.2}s");
+}
+
+/// Fig 11d shape: baseline throughput plateaus, Adrenaline scales past it.
+#[test]
+fn fig11d_throughput_win_after_plateau() {
+    let m = ModelSpec::llama2_7b();
+    let base_lo = quick(m, WorkloadKind::ShareGpt, false, 16.0, 120.0);
+    let base_hi = quick(m, WorkloadKind::ShareGpt, false, 32.0, 120.0);
+    // Plateau: doubling the rate adds <15% throughput for the baseline.
+    assert!(
+        base_hi.throughput < base_lo.throughput * 1.15,
+        "baseline should plateau: {} -> {}",
+        base_lo.throughput,
+        base_hi.throughput
+    );
+    let adre_hi = quick(m, WorkloadKind::ShareGpt, true, 32.0, 120.0);
+    let speedup = adre_hi.throughput / base_hi.throughput;
+    assert!(
+        (1.2..2.2).contains(&speedup),
+        "Adrenaline speedup at saturation = {speedup:.2} (paper: ~1.47x for 7B ShareGPT)"
+    );
+}
+
+/// Figs 13/14 shape: OpenThoughts' long outputs cause heavy preemption in
+/// the baseline; Adrenaline mitigates it and cuts mean TPOT.
+#[test]
+fn fig13_openthoughts_preemption_mitigation() {
+    let m = ModelSpec::llama2_7b();
+    let base = quick(m, WorkloadKind::OpenThoughts, false, 2.0, 120.0);
+    let adre = quick(m, WorkloadKind::OpenThoughts, true, 2.0, 120.0);
+    assert!(base.preemptions > 50, "baseline preempts heavily: {}", base.preemptions);
+    assert!(
+        adre.preemptions < base.preemptions / 4,
+        "Adrenaline cuts preemptions: {} vs {}",
+        adre.preemptions,
+        base.preemptions
+    );
+    let tb = base.tpot.unwrap().mean;
+    let ta = adre.tpot.unwrap().mean;
+    assert!(
+        ta < tb * 0.85,
+        "mean TPOT improves (paper: 26.9-29.5%): {ta:.4} vs {tb:.4}"
+    );
+    // P99 TPOT also improves (paper: 48.5-58.8% for 7B).
+    let pb = base.tpot.unwrap().p99;
+    let pa = adre.tpot.unwrap().p99;
+    assert!(pa < pb, "P99 TPOT: {pa:.4} vs {pb:.4}");
+}
+
+/// Fig 16 shape: prefill-instance HBM capacity utilization roughly doubles
+/// (paper: 2.28x) once the executor pool fills.
+#[test]
+fn fig16_prefill_hbm_capacity_gain() {
+    let m = ModelSpec::llama2_7b();
+    let base = quick(m, WorkloadKind::ShareGpt, false, 24.0, 120.0);
+    let adre = quick(m, WorkloadKind::ShareGpt, true, 24.0, 120.0);
+    let gain = adre.prefill_hbm_capacity_util / base.prefill_hbm_capacity_util;
+    assert!(
+        (1.5..3.5).contains(&gain),
+        "capacity utilization gain = {gain:.2} (paper: 2.28x)"
+    );
+}
+
+/// Fig 17a shape: prefill-instance bandwidth utilization rises with
+/// offloading (paper: 1.49-2.07x).
+#[test]
+fn fig17a_prefill_bandwidth_gain() {
+    let m = ModelSpec::llama2_7b();
+    let base = quick(m, WorkloadKind::ShareGpt, false, 24.0, 120.0);
+    let adre = quick(m, WorkloadKind::ShareGpt, true, 24.0, 120.0);
+    assert!(
+        adre.prefill_hbm_bw_util > base.prefill_hbm_bw_util * 1.2,
+        "bw util: {} vs {}",
+        adre.prefill_hbm_bw_util,
+        base.prefill_hbm_bw_util
+    );
+}
+
+/// Fig 17b shape: decode compute utilization rises with the bigger batch
+/// (paper: 1.67x).
+#[test]
+fn fig17b_decode_compute_gain() {
+    let m = ModelSpec::llama2_7b();
+    let base = quick(m, WorkloadKind::ShareGpt, false, 24.0, 120.0);
+    let adre = quick(m, WorkloadKind::ShareGpt, true, 24.0, 120.0);
+    let gain = adre.decode_compute_util / base.decode_compute_util;
+    assert!((1.1..2.5).contains(&gain), "decode compute gain = {gain:.2} (paper: 1.67x)");
+}
+
+/// 13B shows the same structure (Figs 12/14/17).
+#[test]
+fn llama13b_same_shapes() {
+    let m = ModelSpec::llama2_13b();
+    let base = quick(m, WorkloadKind::ShareGpt, false, 16.0, 120.0);
+    let adre = quick(m, WorkloadKind::ShareGpt, true, 16.0, 120.0);
+    assert!(adre.throughput > base.throughput, "{} vs {}", adre.throughput, base.throughput);
+    assert!(adre.prefill_hbm_capacity_util > base.prefill_hbm_capacity_util);
+}
+
+/// run_e2e produces both systems at every rate (the figure-driver path).
+#[test]
+fn e2e_driver_integrity() {
+    let cfg = E2eConfig {
+        rates: vec![8.0, 24.0],
+        duration_s: 60.0,
+        ..E2eConfig::fig11()
+    };
+    let pts = run_e2e(&cfg);
+    assert_eq!(pts.len(), 4);
+    for p in &pts {
+        assert!(p.finished > 0);
+        assert!(p.throughput_tok_s > 0.0);
+        if p.system == "vllm" {
+            assert_eq!(p.offloaded_fraction, 0.0);
+        }
+    }
+}
+
+/// SLO attainment / goodput (DistServe-style): at saturation, Adrenaline
+/// keeps more requests inside the TTFT+TPOT SLOs than the baseline.
+#[test]
+fn slo_attainment_and_goodput() {
+    let m = ModelSpec::llama2_7b();
+    let base = quick(m, WorkloadKind::ShareGpt, false, 20.0, 120.0);
+    let adre = quick(m, WorkloadKind::ShareGpt, true, 20.0, 120.0);
+    assert!(base.ttft_slo_attainment <= 1.0 && base.ttft_slo_attainment >= 0.0);
+    assert!(
+        adre.ttft_slo_attainment > base.ttft_slo_attainment,
+        "TTFT attainment: {} vs {}",
+        adre.ttft_slo_attainment,
+        base.ttft_slo_attainment
+    );
+    assert!(
+        adre.goodput > base.goodput,
+        "goodput: {} vs {}",
+        adre.goodput,
+        base.goodput
+    );
+    assert!(adre.goodput <= adre.throughput + 1e-9);
+}
+
+/// §3.3.2 adaptive partition: a tighter TTFT SLO reserves more SMs for
+/// prefill (smaller executor share); the run still completes.
+#[test]
+fn adaptive_partition_tracks_ttft_slo() {
+    let m = ModelSpec::llama2_7b();
+    let mut loose = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 8.0);
+    loose.serving.slo.ttft_s = 2.0;
+    let loose = loose.with_adaptive_partition(1024);
+
+    let mut tight = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 8.0);
+    tight.serving.slo.ttft_s = 0.08;
+    let tight = tight.with_adaptive_partition(1024);
+
+    assert!(
+        tight.cluster.attn_executor_sm_frac <= loose.cluster.attn_executor_sm_frac,
+        "tight SLO must not grant the executor more SMs: {} vs {}",
+        tight.cluster.attn_executor_sm_frac,
+        loose.cluster.attn_executor_sm_frac
+    );
+
+    let mut cfg = loose.clone();
+    cfg.duration_s = 40.0;
+    let r = ClusterSim::new(cfg).run();
+    assert!(r.finished > 0);
+}
+
+/// §3.4.2 flexibility: adding a prefill instance raises OB_mem (Eq 1 is
+/// linear in n) and with it the offloading capacity and throughput.
+#[test]
+fn prefill_pool_scaling_raises_capacity() {
+    let m = ModelSpec::llama2_7b();
+    let mut one = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+    one.duration_s = 120.0;
+    let one = ClusterSim::new(one).run();
+
+    let mut two = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+    two.duration_s = 120.0;
+    two.cluster.n_prefill = 2;
+    let two = ClusterSim::new(two).run();
+
+    assert!(
+        two.throughput > one.throughput * 1.1,
+        "2 prefill instances should lift throughput: {} vs {}",
+        two.throughput,
+        one.throughput
+    );
+}
+
+/// Conservation laws under random load: no request is lost, every finished
+/// request produced exactly its output_len tokens, and the clock is sane.
+#[test]
+fn property_sim_conservation() {
+    adrenaline::util::prop::check("sim_conservation", 12, |rng| {
+        let rate = 0.5 + rng.f64() * 20.0;
+        let seed = rng.next_u64();
+        let workload = if rng.f64() < 0.5 {
+            WorkloadKind::ShareGpt
+        } else {
+            WorkloadKind::OpenThoughts
+        };
+        let model = if rng.f64() < 0.5 {
+            ModelSpec::llama2_7b()
+        } else {
+            ModelSpec::llama2_13b()
+        };
+        let mut cfg = SimConfig::paper_default(model, workload, rate);
+        cfg.duration_s = 20.0;
+        cfg.seed = seed;
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.finished <= r.arrived, "finished {} > arrived {}", r.finished, r.arrived);
+        assert_eq!(r.finished, r.arrived, "20s trace must drain (rate {rate:.1})");
+        assert!(r.sim_end_s.is_finite() && r.sim_end_s >= 0.0);
+        assert!(r.offloaded_fraction >= 0.0 && r.offloaded_fraction <= 1.0);
+        assert!(r.goodput <= r.throughput + 1e-9);
+        // Occupancy never exceeded 1 (preemption enforced the budget).
+        if let Some(max) = r.decode_occupancy.max_value() {
+            assert!(max <= 1.0 + 1e-9, "decode occupancy {max}");
+        }
+    });
+}
