@@ -2,6 +2,10 @@
 //! decode-step latency for the fused fast path, the split layer-loop path,
 //! and the path with attention offloaded to the executor thread — the
 //! numbers behind EXPERIMENTS.md §Perf.
+//!
+//! The *simulator* hot path has its own bench (`sim_throughput`, tracked
+//! in BENCH_sim.json); EXPERIMENTS.md §Perf records both baselines and
+//! the memoization/bucketing scheme the simulator path relies on.
 
 use adrenaline::config::ServingConfig;
 use adrenaline::engine::Server;

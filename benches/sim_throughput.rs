@@ -1,34 +1,110 @@
 //! Simulator performance: events/s and simulated-vs-wall time ratio — the
 //! L3 substrate must stay fast enough that figure sweeps are interactive.
+//!
+//! Besides the human-readable `bench ...` / `figure=sim_perf ...` lines,
+//! this bench writes a machine-readable `BENCH_sim.json` (path override:
+//! env `BENCH_SIM_JSON`) so the hot-path numbers are tracked across PRs —
+//! the acceptance bar for the §Perf overhaul is
+//! `saturated_32rps.sim_seconds_per_wall_second` improving ≥ 5× over the
+//! pre-overhaul baseline (see EXPERIMENTS.md §Perf).
+//!
+//! CI smoke knobs: `SIM_BENCH_ITERS` (sample iterations, default 5) and
+//! `SIM_BENCH_DURATION_S` (simulated trace seconds, default 120).
+
+use std::collections::BTreeMap;
 
 use adrenaline::config::ModelSpec;
-use adrenaline::sim::{ClusterSim, SimConfig};
-use adrenaline::util::bench::{figure_row, Bench};
+use adrenaline::sim::{ClusterSim, SimConfig, SimReport};
+use adrenaline::util::bench::{figure_row, Bench, BenchStats};
+use adrenaline::util::json::Json;
 use adrenaline::workload::WorkloadKind;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn row(
+    name: &str,
+    rate: f64,
+    duration_s: f64,
+    stats: &BenchStats,
+    report: &SimReport,
+) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str(format!("sim_throughput/{name}")));
+    o.insert("rate_rps".into(), Json::Num(rate));
+    o.insert("duration_s".into(), Json::Num(duration_s));
+    o.insert("iters".into(), Json::Num(stats.iters as f64));
+    o.insert("p50_wall_s".into(), Json::Num(stats.p50_s));
+    o.insert("mean_wall_s".into(), Json::Num(stats.mean_s));
+    // Numerator is the configured trace duration (the seed metric's
+    // definition), NOT sim_end_s (which includes the post-trace drain and
+    // would inflate the ratio against pre-overhaul baselines).
+    o.insert(
+        "sim_seconds_per_wall_second".into(),
+        Json::Num(duration_s / stats.p50_s),
+    );
+    o.insert("sim_end_s".into(), Json::Num(report.sim_end_s));
+    o.insert(
+        "events_per_second".into(),
+        Json::Num(report.events_processed as f64 / stats.p50_s),
+    );
+    o.insert("events".into(), Json::Num(report.events_processed as f64));
+    o.insert("finished".into(), Json::Num(report.finished as f64));
+    Json::Obj(o)
+}
 
 fn main() {
     let m = ModelSpec::llama2_7b();
+    let iters = env_usize("SIM_BENCH_ITERS", 5);
+    let duration = env_f64("SIM_BENCH_DURATION_S", 120.0);
+    let mut rows: Vec<Json> = Vec::new();
 
-    for (name, rate, dur) in [("light_4rps", 4.0, 120.0), ("saturated_32rps", 32.0, 120.0)] {
-        let mut tokens = 0usize;
-        let stats = Bench::new(1, 5).run(&format!("sim_throughput/{name}"), || {
+    for (name, rate) in [("light_4rps", 4.0), ("saturated_32rps", 32.0)] {
+        let mut last: Option<SimReport> = None;
+        let stats = Bench::new(1, iters).run(&format!("sim_throughput/{name}"), || {
             let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
-            cfg.duration_s = dur;
-            let r = ClusterSim::new(cfg).run();
-            tokens = r.finished;
+            cfg.duration_s = duration;
+            last = Some(ClusterSim::new(cfg).run());
         });
+        let report = last.expect("bench ran at least once");
         figure_row(
             "sim_perf",
             &format!("{name}_sim_seconds_per_wall_second"),
             rate,
-            dur / stats.p50_s,
+            duration / stats.p50_s,
         );
+        figure_row(
+            "sim_perf",
+            &format!("{name}_events_per_second"),
+            rate,
+            report.events_processed as f64 / stats.p50_s,
+        );
+        rows.push(row(name, rate, duration, &stats, &report));
     }
 
     // OpenThoughts generates ~10x the decode steps per request.
-    Bench::new(1, 3).run("sim_throughput/openthoughts_2rps_120s", || {
-        let mut cfg = SimConfig::paper_default(m, WorkloadKind::OpenThoughts, 2.0);
-        cfg.duration_s = 120.0;
-        let _ = ClusterSim::new(cfg).run();
-    });
+    {
+        let rate = 2.0;
+        let mut last: Option<SimReport> = None;
+        let stats =
+            Bench::new(1, iters.min(3)).run("sim_throughput/openthoughts_2rps", || {
+                let mut cfg = SimConfig::paper_default(m, WorkloadKind::OpenThoughts, rate);
+                cfg.duration_s = duration;
+                last = Some(ClusterSim::new(cfg).run());
+            });
+        let report = last.expect("bench ran at least once");
+        rows.push(row("openthoughts_2rps", rate, duration, &stats, &report));
+    }
+
+    let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());
+    let payload = format!("{}\n", Json::Arr(rows));
+    match std::fs::write(&path, payload) {
+        Ok(()) => println!("bench rows written to {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

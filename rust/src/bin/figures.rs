@@ -9,6 +9,11 @@
 //! so `figures all | tee figures.txt` is the full evaluation dump.
 //! Simulated panels run at this testbed's saturating rates — see
 //! EXPERIMENTS.md for the paper-vs-measured mapping.
+//!
+//! Sweep points (rate sweeps, ratio sweeps, the fig16/launch/scaling
+//! panels) run one seed-deterministic simulation per core and print in
+//! the same order — and with bit-identical values — as the serial
+//! drivers. Set `ADRENALINE_SERIAL=1` to force serial execution.
 
 use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, SloConfig};
 use adrenaline::coordinator::OffloadBounds;
@@ -16,7 +21,9 @@ use adrenaline::gpu_model::{
     bw_frac_of_sm_frac, prefill_slowdown, DecodeKernelTimes, HbmUsage, KernelKind, PhaseKernels,
     PrefillKernelTimes, Roofline,
 };
-use adrenaline::sim::{run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig};
+use adrenaline::sim::{
+    parallel_map, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig, SimReport,
+};
 use adrenaline::util::bench::figure_row;
 use adrenaline::workload::WorkloadKind;
 
@@ -236,15 +243,18 @@ fn fig15() {
 
 /// Fig 16: prefill-instance HBM capacity over the run.
 fn fig16() {
-    for (name, on) in [("vllm", false), ("adrenaline", true)] {
+    let systems = [("vllm", false), ("adrenaline", true)];
+    let reports: Vec<SimReport> = parallel_map(systems.len(), |i| {
         let m = ModelSpec::llama2_7b();
-        let mut cfg = if on {
+        let mut cfg = if systems[i].1 {
             SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0)
         } else {
             SimConfig::baseline(m, WorkloadKind::ShareGpt, 24.0)
         };
         cfg.duration_s = 120.0;
-        let r = ClusterSim::new(cfg).run();
+        ClusterSim::new(cfg).run()
+    });
+    for ((name, _), r) in systems.iter().zip(&reports) {
         let pts = r.prefill_occupancy.points();
         let stride = (pts.len() / 20).max(1);
         for (t, v) in pts.iter().step_by(stride) {
@@ -311,11 +321,14 @@ fn fig18() {
 /// (CUDA-graph analogue) launch batching, plus the computed offload bounds.
 fn launch() {
     let m = ModelSpec::llama2_7b();
-    for (name, eager) in [("graphed", 0.0), ("eager", 0.76e-3 * 32.0)] {
+    let variants = [("graphed", 0.0), ("eager", 0.76e-3 * 32.0)];
+    let reports: Vec<SimReport> = parallel_map(variants.len(), |i| {
         let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 16.0);
         cfg.duration_s = 60.0;
-        cfg.eager_launch_overhead_s = eager;
-        let r = ClusterSim::new(cfg).run();
+        cfg.eager_launch_overhead_s = variants[i].1;
+        ClusterSim::new(cfg).run()
+    });
+    for ((name, _), r) in variants.iter().zip(&reports) {
         figure_row(
             "launch",
             &format!("{name}_tpot_s"),
@@ -339,11 +352,14 @@ fn launch() {
 /// offload capacity ⇒ higher saturated throughput.
 fn scaling() {
     let m = ModelSpec::llama2_7b();
-    for n in [1u32, 2, 3] {
+    let sizes = [1u32, 2, 3];
+    let reports: Vec<SimReport> = parallel_map(sizes.len(), |i| {
         let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 28.0);
         cfg.duration_s = 120.0;
-        cfg.cluster.n_prefill = n;
-        let r = ClusterSim::new(cfg).run();
+        cfg.cluster.n_prefill = sizes[i];
+        ClusterSim::new(cfg).run()
+    });
+    for (&n, r) in sizes.iter().zip(&reports) {
         figure_row("scaling", "tput_tok_s", n as f64, r.throughput);
         figure_row("scaling", "offloaded_fraction", n as f64, r.offloaded_fraction);
         figure_row("scaling", "ttft_s", n as f64, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));

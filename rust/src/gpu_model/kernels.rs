@@ -119,6 +119,108 @@ impl DecodeKernelTimes {
     }
 }
 
+/// Memoized decode-step costs for one roofline (§Perf, EXPERIMENTS.md).
+///
+/// The simulator's hot loop asks for the same three quantities millions of
+/// times per run: the non-attention step time (a function of the batch
+/// size alone), the decode-attention time (a function of the total context
+/// alone), and the step FLOPs. Recomputing the full
+/// [`DecodeKernelTimes`] roofline breakdown per step is ~5 roofline
+/// evaluations per event; this table does the math once per distinct input
+/// instead:
+///
+/// * **Batch dimension** — a dense lazy table indexed by exact batch size
+///   (bounded by the scheduler's `max_batch`, so at most a few hundred
+///   entries). The table is warmed at the executable-bucket grid's local
+///   capacities ([`crate::coordinator::GraphCache`]) — the same bucket set
+///   the paper's 2-D CUDA-graph capture pre-compiles — and backfills
+///   lazily at step-granularity (bucket width 1), which keeps the memo
+///   *exact* rather than rounding batches up to a captured bucket.
+/// * **Context dimension** — decode attention's FLOPs and bytes are both
+///   linear in `ctx_total` through the origin, so two cached per-token
+///   rates reproduce `Roofline::time` bit-for-bit at any context length;
+///   no table is needed at all.
+#[derive(Debug, Clone)]
+pub struct DecodeCostTable {
+    model: ModelSpec,
+    rl: Roofline,
+    /// Non-attention step time by exact batch size (NaN = unfilled).
+    non_attn: Vec<f64>,
+    /// Attention FLOPs / HBM bytes per context token.
+    attn_flops_per_ctx: f64,
+    attn_bytes_per_ctx: f64,
+    /// Cached effective roofline rates (deterministic per `rl`).
+    eff_flops: f64,
+    eff_bw: f64,
+    /// Whole-step FLOPs per batch row (all non-attention kernels + head).
+    flops_per_row: f64,
+}
+
+impl DecodeCostTable {
+    pub fn new(rl: &Roofline, model: &ModelSpec) -> Self {
+        DecodeCostTable {
+            model: *model,
+            rl: *rl,
+            non_attn: Vec::new(),
+            attn_flops_per_ctx: model.decode_attn_flops(1),
+            attn_bytes_per_ctx: model.decode_attn_bytes(1),
+            eff_flops: rl.effective_flops(),
+            eff_bw: rl.effective_bw(),
+            flops_per_row: model.decode_qkv_flops(1)
+                + model.decode_oproj_flops(1)
+                + model.decode_ffn_flops(1)
+                + model.decode_head_flops(1),
+        }
+    }
+
+    /// Pre-fill the batch table at the given bucket capacities (the
+    /// graph-capture warm-up analogue; pass `GraphCache::local_buckets`).
+    pub fn warm(&mut self, buckets: &[usize]) {
+        for &b in buckets {
+            if b > 0 {
+                let _ = self.non_attention(b as u64);
+            }
+        }
+    }
+
+    /// Non-attention step time (qkv + oproj + ffn + head) for batch `b`,
+    /// memoized per exact batch size.
+    pub fn non_attention(&mut self, b: u64) -> f64 {
+        let i = b as usize;
+        if i >= self.non_attn.len() {
+            self.non_attn.resize(i + 1, f64::NAN);
+        }
+        if self.non_attn[i].is_nan() {
+            self.non_attn[i] =
+                DecodeKernelTimes::compute(&self.rl, &self.model, b, 1).non_attention();
+        }
+        self.non_attn[i]
+    }
+
+    /// Decode-attention time over `ctx_total` context tokens. Exact: the
+    /// cost is linear in context, so this equals timing the full
+    /// [`KernelCost`] on the roofline.
+    pub fn attention(&self, ctx_total: u64) -> f64 {
+        if ctx_total == 0 {
+            return 0.0;
+        }
+        let c = ctx_total as f64;
+        ((c * self.attn_flops_per_ctx) / self.eff_flops)
+            .max((c * self.attn_bytes_per_ctx) / self.eff_bw)
+    }
+
+    /// Whole-step FLOPs for compute-utilization accounting (equals
+    /// [`ModelSpec::decode_step_flops`]).
+    pub fn step_flops(&self, b: u64, ctx_total: u64) -> f64 {
+        b as f64 * self.flops_per_row + ctx_total as f64 * self.attn_flops_per_ctx
+    }
+
+    /// Entries currently materialized in the batch table (observability).
+    pub fn filled_entries(&self) -> usize {
+        self.non_attn.iter().filter(|v| !v.is_nan()).count()
+    }
+}
+
 /// Timed breakdown of one prefill step.
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillKernelTimes {
@@ -243,6 +345,69 @@ mod tests {
         let t8 = DecodeKernelTimes::compute(&rl, &m, 8, 8 * 1024).non_attention();
         let t64 = DecodeKernelTimes::compute(&rl, &m, 64, 64 * 1024).non_attention();
         assert!(t64 / t8 < 1.25, "non-attn time should be ~flat: {}", t64 / t8);
+    }
+
+    #[test]
+    fn cost_table_non_attention_matches_direct_compute() {
+        let (rl, m) = setup();
+        let mut tab = DecodeCostTable::new(&rl, &m);
+        for b in [1u64, 3, 8, 17, 64, 200, 256] {
+            let direct = DecodeKernelTimes::compute(&rl, &m, b, 1).non_attention();
+            // Same computation, cached: bit-identical, twice.
+            assert_eq!(tab.non_attention(b), direct, "b={b}");
+            assert_eq!(tab.non_attention(b), direct, "b={b} (cached)");
+        }
+        assert!(tab.filled_entries() >= 7);
+    }
+
+    #[test]
+    fn cost_table_attention_linear_and_exact() {
+        let (rl, m) = setup();
+        let tab = DecodeCostTable::new(&rl, &m);
+        assert_eq!(tab.attention(0), 0.0);
+        for ctx in [1u64, 37, 1024, 81920, 1_000_000] {
+            let direct = rl.time(KernelCost::new(m.decode_attn_flops(ctx), m.decode_attn_bytes(ctx)));
+            let memo = tab.attention(ctx);
+            assert!(
+                (memo - direct).abs() <= direct.abs() * 1e-12,
+                "ctx={ctx}: memo={memo:e} direct={direct:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_table_step_flops_matches_model() {
+        let (rl, m) = setup();
+        let tab = DecodeCostTable::new(&rl, &m);
+        for (b, ctx) in [(1u64, 128u64), (7, 4096), (80, 80 * 1024), (256, 1_000_000)] {
+            let direct = m.decode_step_flops(b, ctx);
+            let memo = tab.step_flops(b, ctx);
+            assert!(
+                (memo - direct).abs() <= direct.abs() * 1e-12,
+                "b={b} ctx={ctx}: memo={memo:e} direct={direct:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_table_warms_at_graph_cache_buckets() {
+        let (rl, m) = setup();
+        let grid = crate::coordinator::GraphCache::new(&[1, 2, 4, 8], &[1, 2, 4, 8], None);
+        let mut tab = DecodeCostTable::new(&rl, &m);
+        tab.warm(grid.local_buckets());
+        // The 0 bucket is skipped; the four real capacities are filled.
+        assert_eq!(tab.filled_entries(), 4);
+    }
+
+    #[test]
+    fn cost_table_partition_roofline() {
+        // The executor partition's table must use the partition's rates.
+        let m = ModelSpec::llama2_7b();
+        let whole = Roofline::whole(GpuSpec::a100_80g());
+        let part = Roofline::partition(GpuSpec::a100_80g(), 0.5);
+        let tw = DecodeCostTable::new(&whole, &m);
+        let tp = DecodeCostTable::new(&part, &m);
+        assert!(tp.attention(4096) > tw.attention(4096));
     }
 
     #[test]

@@ -27,7 +27,9 @@ pub mod partition;
 pub mod profile;
 pub mod roofline;
 
-pub use kernels::{DecodeKernelTimes, KernelKind, PhaseKernels, PrefillKernelTimes};
+pub use kernels::{
+    DecodeCostTable, DecodeKernelTimes, KernelKind, PhaseKernels, PrefillKernelTimes,
+};
 pub use memory::HbmUsage;
 pub use partition::{bw_frac_of_sm_frac, prefill_slowdown, InterferenceModel};
 pub use profile::{PrefillProfile, ProfileEntry};

@@ -145,15 +145,26 @@ impl KvPool {
 }
 
 /// KV pool errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("sequence {0} already admitted")]
     DuplicateSeq(SeqId),
-    #[error("sequence {0} not found")]
     UnknownSeq(SeqId),
-    #[error("out of KV blocks: requested {requested}, available {available}")]
     OutOfBlocks { requested: usize, available: usize },
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::DuplicateSeq(id) => write!(f, "sequence {id} already admitted"),
+            KvError::UnknownSeq(id) => write!(f, "sequence {id} not found"),
+            KvError::OutOfBlocks { requested, available } => {
+                write!(f, "out of KV blocks: requested {requested}, available {available}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 #[cfg(test)]
 mod tests {

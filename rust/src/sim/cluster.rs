@@ -15,20 +15,36 @@
 //!   (Fig 8b). Remote attention runs on the executor's SM share with the
 //!   superlinear-bandwidth curve (Fig 9).
 //! * **Memory.** Decode KV pool and per-prefill-instance executor pools
-//!   sized from HBM budgets; exhaustion causes LIFO preemption with
-//!   recompute (vLLM semantics), the effect behind the OpenThoughts TPOT
-//!   spikes (Figs 13/14).
+//!   sized from HBM budgets (overridable via
+//!   `ServingConfig::{decode,executor}_kv_capacity_tokens` for exhaustion
+//!   tests); exhaustion causes LIFO preemption with recompute (vLLM
+//!   semantics), the effect behind the OpenThoughts TPOT spikes
+//!   (Figs 13/14).
 //! * **Dispatch gating.** A prompt is only dispatched to prefill when its
 //!   KV has a home (decode pool for local, executor pool for offloaded) —
 //!   queueing at high rate is what blows up vLLM's TTFT in Fig 11a.
+//!
+//! # Hot path (EXPERIMENTS.md §Perf)
+//!
+//! The per-step path is allocation-free and rescans nothing:
+//!
+//! * requests live in a dense slab (`Vec<SimReq>` indexed by request id —
+//!   the trace generator hands out dense ids);
+//! * running sets remove by swap-remove via a back-pointer (`run_slot`),
+//!   with LIFO preemption order preserved through `admit_seq`;
+//! * each decode instance keeps incremental aggregates (local/remote
+//!   context-token sums and row counts) so `decode_step_time` is O(1) in
+//!   the batch size (O(n_prefill) for the remote max);
+//! * roofline math is memoized in [`DecodeCostTable`], warmed at the
+//!   [`GraphCache`] bucket grid.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
-use crate::coordinator::{OffloadBounds, Proxy};
+use crate::coordinator::{GraphCache, OffloadBounds, Proxy};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
-    DecodeKernelTimes, HbmUsage, InterferenceModel, KernelCost, PrefillKernelTimes, Roofline,
+    DecodeCostTable, HbmUsage, InterferenceModel, PrefillKernelTimes, Roofline,
 };
 use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
 use crate::workload::{Request, RequestId, TraceGenerator, WorkloadKind};
@@ -103,6 +119,9 @@ enum Phase {
     Done,
 }
 
+/// Sentinel for "not in any running set".
+const NO_SLOT: usize = usize::MAX;
+
 #[derive(Debug, Clone)]
 struct SimReq {
     req: Request,
@@ -117,6 +136,12 @@ struct SimReq {
     /// Re-prefill length after preemption (prompt + generated).
     effective_prompt: usize,
     preemptions: u32,
+    /// Position in its decode instance's `running` vec (`NO_SLOT` when not
+    /// running). Back-pointer for O(1) swap-remove.
+    run_slot: usize,
+    /// Monotone admission stamp; preserves LIFO (newest-first) preemption
+    /// order now that `running` is no longer kept in admission order.
+    admit_seq: u64,
 }
 
 #[derive(Debug)]
@@ -136,7 +161,8 @@ struct PrefillInst {
 
 #[derive(Debug)]
 struct DecodeInst {
-    /// Running batch (request ids).
+    /// Running batch (request ids). NOT in admission order — removal is
+    /// swap-remove; use `SimReq::admit_seq` for LIFO scans.
     running: Vec<RequestId>,
     /// Prefilled requests waiting for KV admission.
     waiting: VecDeque<RequestId>,
@@ -149,6 +175,17 @@ struct DecodeInst {
     /// Accumulated (flops, seconds) for compute-utilization accounting.
     flops_done: f64,
     busy_s: f64,
+    // ----- incremental aggregates over `running` ------------------------
+    // Kept in sync on admit / per-token append / finish / preempt so the
+    // per-step timing model never rescans the batch.
+    /// Local (non-offloaded) rows in the running batch.
+    local_rows: u64,
+    /// Sum of `kv_tokens` over local running rows.
+    local_ctx: u64,
+    /// Offloaded rows per prefill instance.
+    remote_rows: Vec<u64>,
+    /// Sum of `kv_tokens` over offloaded running rows, per prefill inst.
+    remote_ctx: Vec<u64>,
 }
 
 impl DecodeInst {
@@ -181,6 +218,13 @@ pub struct SimReport {
     pub arrived: usize,
     pub finished: usize,
     pub preemptions: u64,
+    /// Sum of per-request preemption counters — always equals
+    /// `preemptions` (checked by the conservation tests).
+    pub req_preemptions_total: u64,
+    /// Token-accounting invariant: every finished request produced exactly
+    /// the tokens the recorder saw for it (and at least its `output_len`),
+    /// and the global recorder total matches the per-request sums.
+    pub tokens_conserved: bool,
     /// Fraction of finished requests whose attention was offloaded.
     pub offloaded_fraction: f64,
     /// Mean prefill-instance HBM capacity utilization (Fig 16).
@@ -205,12 +249,16 @@ pub struct SimReport {
     pub prefill_occupancy: Timeline,
     pub batch_size: Timeline,
     pub sim_end_s: f64,
+    /// Discrete events processed by the run loop (the sim-perf metric
+    /// benches/sim_throughput.rs tracks in BENCH_sim.json).
+    pub events_processed: u64,
 }
 
 /// The cluster simulator.
 pub struct ClusterSim {
     cfg: SimConfig,
-    reqs: HashMap<RequestId, SimReq>,
+    /// Dense request slab indexed by `RequestId` (ids are sequential).
+    reqs: Vec<SimReq>,
     prefill: Vec<PrefillInst>,
     decode: Vec<DecodeInst>,
     proxy: Proxy,
@@ -221,12 +269,23 @@ pub struct ClusterSim {
     batch_size: Timeline,
     preemptions: u64,
     rl_whole: Roofline,
-    rl_executor: Roofline,
     interference: InterferenceModel,
+    /// Memoized decode-step costs on the whole-GPU roofline.
+    costs: DecodeCostTable,
+    /// Memoized attention costs on the executor's SM partition.
+    costs_exec: DecodeCostTable,
     /// Pending arrivals not yet injected (sorted by time).
     trace: VecDeque<Request>,
     finished_offloaded: usize,
     finished_total: usize,
+    /// Monotone admission counter (LIFO preemption order).
+    admit_counter: u64,
+    events_processed: u64,
+    // Reusable per-step scratch (drained and returned each step so the
+    // hot path never allocates after warm-up).
+    scratch_finish: Vec<RequestId>,
+    scratch_overflow: Vec<RequestId>,
+    scratch_batch: Vec<RequestId>,
 }
 
 impl ClusterSim {
@@ -251,10 +310,16 @@ impl ClusterSim {
             cfg.cluster.n_decode as usize,
         );
 
-        let kv_budget = HbmUsage::kv_token_budget(&cfg.cluster, &cfg.model) as usize;
-        let executor_budget = if cfg.serving.offload.is_enabled() { kv_budget } else { 0 };
+        let hbm_budget = HbmUsage::kv_token_budget(&cfg.cluster, &cfg.model) as usize;
+        let kv_budget = cfg.serving.decode_kv_capacity_tokens.unwrap_or(hbm_budget);
+        let executor_budget = if cfg.serving.offload.is_enabled() {
+            cfg.serving.executor_kv_capacity_tokens.unwrap_or(hbm_budget)
+        } else {
+            0
+        };
 
-        let prefill = (0..cfg.cluster.n_prefill)
+        let n_prefill = cfg.cluster.n_prefill as usize;
+        let prefill = (0..n_prefill)
             .map(|_| PrefillInst {
                 busy_until: 0.0,
                 queue: VecDeque::new(),
@@ -275,6 +340,10 @@ impl ClusterSim {
                 step_in_flight: false,
                 flops_done: 0.0,
                 busy_s: 0.0,
+                local_rows: 0,
+                local_ctx: 0,
+                remote_rows: vec![0; n_prefill],
+                remote_ctx: vec![0; n_prefill],
             })
             .collect();
 
@@ -285,9 +354,18 @@ impl ClusterSim {
             cfg.cluster.attn_executor_sm_frac.max(1e-3),
         );
 
+        // Memoized roofline costs, warmed at the executable-bucket grid
+        // (the same capacities the paper's 2-D CUDA-graph capture
+        // pre-compiles); everything else backfills lazily and exactly.
+        let grid =
+            GraphCache::new(&cfg.serving.decode_buckets, &cfg.serving.offload_buckets, None);
+        let mut costs = DecodeCostTable::new(&rl_whole, &cfg.model);
+        costs.warm(grid.local_buckets());
+        let costs_exec = DecodeCostTable::new(&rl_executor, &cfg.model);
+
         ClusterSim {
             cfg,
-            reqs: HashMap::new(),
+            reqs: Vec::new(),
             prefill,
             decode,
             proxy,
@@ -298,42 +376,49 @@ impl ClusterSim {
             batch_size: Timeline::new(),
             preemptions: 0,
             rl_whole,
-            rl_executor,
             interference,
+            costs,
+            costs_exec,
             trace,
             finished_offloaded: 0,
             finished_total: 0,
+            admit_counter: 0,
+            events_processed: 0,
+            scratch_finish: Vec::new(),
+            scratch_overflow: Vec::new(),
+            scratch_batch: Vec::new(),
         }
     }
 
     /// Run to completion (trace drained and all requests finished or the
     /// hard cap hit) and report.
     pub fn run(mut self) -> SimReport {
-        // Seed arrival events.
-        let arrivals: Vec<(f64, RequestId)> =
-            self.trace.iter().map(|r| (r.arrival_s, r.id)).collect();
-        for (t, _) in &arrivals {
-            let req = self.trace.pop_front().unwrap();
+        // Seed the request slab and arrival events. Trace ids are dense
+        // and sequential, so slab index == request id.
+        self.reqs.reserve(self.trace.len());
+        while let Some(req) = self.trace.pop_front() {
             let id = req.id;
-            self.reqs.insert(
-                id,
-                SimReq {
-                    effective_prompt: req.prompt_len,
-                    req,
-                    phase: Phase::WaitingDispatch,
-                    generated: 0,
-                    kv_tokens: 0,
-                    offloaded: false,
-                    prefill_instance: 0,
-                    decode_instance: 0,
-                    preemptions: 0,
-                },
-            );
-            self.events.push(*t, Ev::Arrival(id));
+            debug_assert_eq!(id as usize, self.reqs.len(), "trace ids must be dense");
+            let t = req.arrival_s;
+            self.reqs.push(SimReq {
+                effective_prompt: req.prompt_len,
+                req,
+                phase: Phase::WaitingDispatch,
+                generated: 0,
+                kv_tokens: 0,
+                offloaded: false,
+                prefill_instance: 0,
+                decode_instance: 0,
+                preemptions: 0,
+                run_slot: NO_SLOT,
+                admit_seq: 0,
+            });
+            self.events.push(t, Ev::Arrival(id));
         }
 
         let hard_stop = self.cfg.duration_s * 20.0 + 3600.0;
         while let Some((t, ev)) = self.events.pop() {
+            self.events_processed += 1;
             if t > hard_stop {
                 break;
             }
@@ -353,16 +438,126 @@ impl ClusterSim {
         self.report()
     }
 
+    // ----- slab access ------------------------------------------------------
+
+    #[inline]
+    fn req(&self, id: RequestId) -> &SimReq {
+        &self.reqs[id as usize]
+    }
+
+    #[inline]
+    fn req_mut(&mut self, id: RequestId) -> &mut SimReq {
+        &mut self.reqs[id as usize]
+    }
+
+    // ----- running-set / aggregate maintenance ------------------------------
+
+    /// Fold `sr` into its decode instance's running aggregates.
+    fn agg_add(dec: &mut DecodeInst, sr: &SimReq) {
+        if sr.offloaded {
+            dec.remote_rows[sr.prefill_instance] += 1;
+            dec.remote_ctx[sr.prefill_instance] += sr.kv_tokens as u64;
+        } else {
+            dec.local_rows += 1;
+            dec.local_ctx += sr.kv_tokens as u64;
+        }
+    }
+
+    /// Remove `sr` from its decode instance's running aggregates.
+    fn agg_sub(dec: &mut DecodeInst, sr: &SimReq) {
+        if sr.offloaded {
+            dec.remote_rows[sr.prefill_instance] -= 1;
+            dec.remote_ctx[sr.prefill_instance] -= sr.kv_tokens as u64;
+        } else {
+            dec.local_rows -= 1;
+            dec.local_ctx -= sr.kv_tokens as u64;
+        }
+    }
+
+    /// O(1) removal from the running set (swap-remove + back-pointer fix).
+    fn remove_from_running(&mut self, inst: usize, id: RequestId) {
+        let slot = self.reqs[id as usize].run_slot;
+        debug_assert_ne!(slot, NO_SLOT, "request {id} not running");
+        let dec = &mut self.decode[inst];
+        debug_assert_eq!(dec.running[slot], id);
+        dec.running.swap_remove(slot);
+        if slot < dec.running.len() {
+            let moved = dec.running[slot];
+            self.reqs[moved as usize].run_slot = slot;
+        }
+        self.reqs[id as usize].run_slot = NO_SLOT;
+    }
+
+    /// Newest-admitted local (non-offloaded) running request on `inst` —
+    /// the vLLM recompute-preemption victim. O(batch), but only runs on
+    /// the (rare) KV-overflow path, never per step.
+    fn newest_local_victim(&self, inst: usize) -> Option<RequestId> {
+        let mut best: Option<(u64, RequestId)> = None;
+        for &id in &self.decode[inst].running {
+            let sr = &self.reqs[id as usize];
+            if sr.offloaded {
+                continue;
+            }
+            debug_assert!(self.decode[inst].kv.contains(id));
+            if best.map_or(true, |(seq, _)| sr.admit_seq > seq) {
+                best = Some((sr.admit_seq, id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Newest-admitted offloaded request homed on prefill instance `pi`,
+    /// across ALL decode instances' running sets. (The executor pool is
+    /// shared by every decode instance, so an overflow caused by one
+    /// instance's sequences must be resolvable regardless of which
+    /// instance's step just ended.)
+    fn newest_offloaded_victim(&self, pi: usize) -> Option<(usize, RequestId)> {
+        let mut best: Option<(u64, usize, RequestId)> = None;
+        for (d, dec) in self.decode.iter().enumerate() {
+            for &id in &dec.running {
+                let sr = &self.reqs[id as usize];
+                if !sr.offloaded || sr.prefill_instance != pi {
+                    continue;
+                }
+                if best.map_or(true, |(seq, _, _)| sr.admit_seq > seq) {
+                    best = Some((sr.admit_seq, d, id));
+                }
+            }
+        }
+        best.map(|(_, d, id)| (d, id))
+    }
+
+    /// Debug-build invariant: the incremental aggregates match a full
+    /// rescan of the running set.
+    #[cfg(debug_assertions)]
+    fn assert_aggregates(&self, d: usize) {
+        let dec = &self.decode[d];
+        let mut local_rows = 0u64;
+        let mut local_ctx = 0u64;
+        let mut remote_rows = vec![0u64; self.prefill.len()];
+        let mut remote_ctx = vec![0u64; self.prefill.len()];
+        for &id in &dec.running {
+            let sr = &self.reqs[id as usize];
+            debug_assert_ne!(sr.run_slot, NO_SLOT);
+            if sr.offloaded {
+                remote_rows[sr.prefill_instance] += 1;
+                remote_ctx[sr.prefill_instance] += sr.kv_tokens as u64;
+            } else {
+                local_rows += 1;
+                local_ctx += sr.kv_tokens as u64;
+            }
+        }
+        assert_eq!((local_rows, local_ctx), (dec.local_rows, dec.local_ctx), "local aggregates");
+        assert_eq!(remote_rows, dec.remote_rows, "remote row aggregates");
+        assert_eq!(remote_ctx, dec.remote_ctx, "remote ctx aggregates");
+    }
+
     // ----- event handlers ---------------------------------------------------
 
     fn on_arrival(&mut self, t: f64, id: RequestId) {
         self.metrics.on_arrival(id, t);
-        let (route, prompt_len) = {
-            let sr = &self.reqs[&id];
-            (self.proxy.route(&sr.req), sr.req.prompt_len)
-        };
-        let _ = prompt_len;
-        let sr = self.reqs.get_mut(&id).unwrap();
+        let route = self.proxy.route(&self.reqs[id as usize].req);
+        let sr = self.req_mut(id);
         sr.offloaded = route.offload.offloaded();
         sr.prefill_instance = route.prefill_instance;
         sr.decode_instance = route.decode_instance;
@@ -371,25 +566,27 @@ impl ClusterSim {
 
     fn on_prefill_done(&mut self, t: f64, inst: usize, id: RequestId) {
         // First token exists as soon as prefill completes.
-        let was_preempted = self.reqs[&id].preemptions > 0;
-        if !was_preempted || self.reqs[&id].generated == 0 {
+        let was_preempted = self.req(id).preemptions > 0;
+        if !was_preempted || self.req(id).generated == 0 {
             if self.metrics.request(id).and_then(|r| r.first_token_s).is_none() {
                 self.metrics.on_first_token(id, t);
-                let sr = self.reqs.get_mut(&id).unwrap();
+                let sr = self.req_mut(id);
                 sr.generated = 1;
-                self.proxy.on_token(sr.decode_instance, id);
+                let d = sr.decode_instance;
+                self.proxy.on_token(d, id);
             }
         }
-        let sr = self.reqs.get_mut(&id).unwrap();
+        let sr = &mut self.reqs[id as usize];
         sr.kv_tokens = sr.effective_prompt;
         if sr.offloaded {
             // KV stays on this instance (executor pool): reservation
             // becomes residency, no transfer.
-            let p = &mut self.prefill[inst];
-            p.executor_reserved = p.executor_reserved.saturating_sub(sr.kv_tokens);
-            p.executor_kv_tokens += sr.kv_tokens;
-            sr.phase = Phase::Decoding;
+            let kv = sr.kv_tokens;
             let d = sr.decode_instance;
+            sr.phase = Phase::Decoding;
+            let p = &mut self.prefill[inst];
+            p.executor_reserved = p.executor_reserved.saturating_sub(kv);
+            p.executor_kv_tokens += kv;
             self.decode[d].waiting.push_back(id);
             self.record_prefill_occupancy(t);
         } else {
@@ -403,7 +600,7 @@ impl ClusterSim {
 
     fn on_transfer_done(&mut self, t: f64, id: RequestId) {
         let _ = t;
-        let sr = self.reqs.get_mut(&id).unwrap();
+        let sr = self.req_mut(id);
         sr.phase = Phase::Decoding;
         let d = sr.decode_instance;
         self.decode[d].waiting.push_back(id);
@@ -411,22 +608,30 @@ impl ClusterSim {
 
     fn on_decode_step_end(&mut self, t: f64, inst: usize) {
         self.decode[inst].step_in_flight = false;
-        let running = self.decode[inst].running.clone();
-        if running.is_empty() {
+        if self.decode[inst].running.is_empty() {
             return;
         }
 
-        // Every running request gains one token.
-        let mut to_finish = Vec::new();
-        let mut overflow = Vec::new();
-        let mut executor_appends: HashMap<usize, usize> = HashMap::new();
-        for &id in &running {
-            let sr = self.reqs.get_mut(&id).unwrap();
+        // Reusable scratch: no allocation after warm-up.
+        let mut to_finish = std::mem::take(&mut self.scratch_finish);
+        let mut overflow = std::mem::take(&mut self.scratch_overflow);
+        debug_assert!(to_finish.is_empty() && overflow.is_empty());
+
+        // Every running request gains one token. `running` is not mutated
+        // inside this loop (finishes and preemptions are deferred), so we
+        // iterate by index instead of cloning the batch.
+        let n = self.decode[inst].running.len();
+        for i in 0..n {
+            let id = self.decode[inst].running[i];
+            let sr = &mut self.reqs[id as usize];
             sr.generated += 1;
             sr.kv_tokens += 1;
             if sr.offloaded {
-                *executor_appends.entry(sr.prefill_instance).or_insert(0) += 1;
+                let pi = sr.prefill_instance;
+                self.decode[inst].remote_ctx[pi] += 1;
+                self.prefill[pi].executor_kv_tokens += 1;
             } else {
+                self.decode[inst].local_ctx += 1;
                 // Paged append: a failed block allocation marks this
                 // sequence for the preemption pass below (vLLM appends the
                 // token after evicting a victim; we evict-then-retry at
@@ -442,28 +647,19 @@ impl ClusterSim {
                 to_finish.push(id);
             }
         }
-        for (pi, n) in executor_appends {
-            self.prefill[pi].executor_kv_tokens += n;
-        }
 
         // Retire finished requests.
-        for id in to_finish {
+        for &id in &to_finish {
             self.finish(t, inst, id);
         }
 
         // Preempt (LIFO, newest first) until every overflowed append fits.
-        for id in overflow {
-            if !self.decode[inst].running.contains(&id) {
-                continue; // finished this step
+        for &id in &overflow {
+            if self.reqs[id as usize].run_slot == NO_SLOT {
+                continue; // finished or already preempted this step
             }
             loop {
-                let victim = self.decode[inst]
-                    .running
-                    .iter()
-                    .rev()
-                    .copied()
-                    .find(|v| !self.reqs[v].offloaded && self.decode[inst].kv.contains(*v));
-                match victim {
+                match self.newest_local_victim(inst) {
                     Some(v) if v == id => {
                         // The overflowing sequence is itself the newest:
                         // preempt it (its token accounting rolls back via
@@ -481,21 +677,26 @@ impl ClusterSim {
                 }
             }
         }
+
         // Executor pools can also overflow (offloaded requests growing).
+        // Victims are drawn from ALL decode instances' running sets: the
+        // pool is shared, and an oversubscription caused by another
+        // instance's sequences must not persist until that instance
+        // happens to end a step.
         for pi in 0..self.prefill.len() {
             while self.prefill[pi].executor_kv_tokens > self.prefill[pi].executor_kv_budget {
-                let victim = self.decode[inst]
-                    .running
-                    .iter()
-                    .rev()
-                    .copied()
-                    .find(|id| self.reqs[id].offloaded && self.reqs[id].prefill_instance == pi);
-                match victim {
-                    Some(v) => self.preempt(t, inst, v),
+                match self.newest_offloaded_victim(pi) {
+                    Some((d, v)) => self.preempt(t, d, v),
                     None => break,
                 }
             }
         }
+
+        // Return the scratch buffers for the next step.
+        to_finish.clear();
+        overflow.clear();
+        self.scratch_finish = to_finish;
+        self.scratch_overflow = overflow;
 
         self.record_decode_occupancy(t, inst);
     }
@@ -505,7 +706,8 @@ impl ClusterSim {
     fn finish(&mut self, t: f64, inst: usize, id: RequestId) {
         self.metrics.on_finished(id, t);
         self.proxy.on_finished(inst, id);
-        let sr = self.reqs.get_mut(&id).unwrap();
+        Self::agg_sub(&mut self.decode[inst], &self.reqs[id as usize]);
+        let sr = &mut self.reqs[id as usize];
         sr.phase = Phase::Done;
         self.finished_total += 1;
         if sr.offloaded {
@@ -516,7 +718,7 @@ impl ClusterSim {
             let _ = self.decode[inst].kv.release(id);
         }
         sr.kv_tokens = 0;
-        self.decode[inst].running.retain(|&r| r != id);
+        self.remove_from_running(inst, id);
         // Occupancy is recorded by the step-end handler *after* the
         // preemption pass — recording here would capture the transient
         // overshoot between token appends and preemption.
@@ -526,7 +728,8 @@ impl ClusterSim {
     fn preempt(&mut self, _t: f64, inst: usize, id: RequestId) {
         self.preemptions += 1;
         self.proxy.on_preempted(inst, id);
-        let sr = self.reqs.get_mut(&id).unwrap();
+        Self::agg_sub(&mut self.decode[inst], &self.reqs[id as usize]);
+        let sr = &mut self.reqs[id as usize];
         sr.preemptions += 1;
         if sr.offloaded {
             self.prefill[sr.prefill_instance].executor_kv_tokens =
@@ -538,49 +741,48 @@ impl ClusterSim {
         // Recompute path: prompt + generated becomes the new prefill.
         sr.effective_prompt = sr.req.prompt_len + sr.generated;
         sr.phase = Phase::WaitingDispatch;
-        self.decode[inst].running.retain(|&r| r != id);
+        self.remove_from_running(inst, id);
 
         // Re-route through the proxy (offload decision may differ now).
-        let (route, _) = {
-            let sr = &self.reqs[&id];
-            (self.proxy.route(&sr.req), 0)
-        };
-        let sr = self.reqs.get_mut(&id).unwrap();
+        let route = self.proxy.route(&self.reqs[id as usize].req);
+        let sr = self.req_mut(id);
         sr.offloaded = route.offload.offloaded();
         sr.prefill_instance = route.prefill_instance;
         sr.decode_instance = route.decode_instance;
         self.prefill[route.prefill_instance].queue.push_back(id);
     }
 
-    /// Dispatch queued prompts whose KV has a guaranteed home.
     /// Dispatch queued prompts whose KV has a guaranteed home, batching
     /// prompts up to `max_prefill_tokens` into one prefill step (vLLM's
     /// token-budget prefill batching — amortizes the per-step weight pass
     /// across prompts and is what keeps TTFT flat below saturation).
     fn dispatch_prefills(&mut self, t: f64) {
+        let mut batch = std::mem::take(&mut self.scratch_batch);
         for pi in 0..self.prefill.len() {
             if self.prefill[pi].busy_until > t {
                 continue;
             }
             let budget = self.cfg.serving.max_prefill_tokens;
-            let mut batch: Vec<RequestId> = Vec::new();
+            batch.clear();
             let mut batch_tokens = 0usize;
             loop {
                 let Some(&id) = self.prefill[pi].queue.front() else { break };
-                let sr = &self.reqs[&id];
-                if sr.phase != Phase::WaitingDispatch {
+                let (phase, need, offloaded, dec_inst) = {
+                    let sr = &self.reqs[id as usize];
+                    (sr.phase, sr.effective_prompt, sr.offloaded, sr.decode_instance)
+                };
+                if phase != Phase::WaitingDispatch {
                     self.prefill[pi].queue.pop_front();
                     continue;
                 }
-                let need = sr.effective_prompt;
                 if !batch.is_empty() && batch_tokens + need > budget {
                     break; // token budget reached
                 }
-                let fits = if sr.offloaded {
+                let fits = if offloaded {
                     let p = &self.prefill[pi];
                     p.executor_kv_tokens + p.executor_reserved + need <= p.executor_kv_budget
                 } else {
-                    let d = &self.decode[sr.decode_instance];
+                    let d = &self.decode[dec_inst];
                     d.kv_tokens() + d.reserved + need <= d.kv_budget()
                 };
                 if !fits {
@@ -588,13 +790,12 @@ impl ClusterSim {
                 }
                 let id = self.prefill[pi].queue.pop_front().unwrap();
                 // Reserve the destination.
-                if sr.offloaded {
+                if offloaded {
                     self.prefill[pi].executor_reserved += need;
                 } else {
-                    let d = self.reqs[&id].decode_instance;
-                    self.decode[d].reserved += need;
+                    self.decode[dec_inst].reserved += need;
                 }
-                self.reqs.get_mut(&id).unwrap().phase = Phase::Prefilling;
+                self.reqs[id as usize].phase = Phase::Prefilling;
                 batch_tokens += need;
                 batch.push(id);
             }
@@ -606,10 +807,12 @@ impl ClusterSim {
             let exec_time = self.prefill_time(pi, batch_tokens as u64);
             self.prefill[pi].prefill_busy_s += exec_time;
             self.prefill[pi].busy_until = t + exec_time;
-            for id in batch {
+            for &id in &batch {
                 self.events.push(t + exec_time, Ev::PrefillDone { inst: pi, id });
             }
         }
+        batch.clear();
+        self.scratch_batch = batch;
     }
 
     /// Admit waiting requests into the decode batch (KV already resident or
@@ -619,9 +822,11 @@ impl ClusterSim {
             if self.decode[d].running.len() >= self.cfg.serving.max_batch {
                 break;
             }
-            let sr = &self.reqs[&id];
-            if !sr.offloaded {
-                let need = sr.kv_tokens;
+            let (offloaded, need) = {
+                let sr = &self.reqs[id as usize];
+                (sr.offloaded, sr.kv_tokens)
+            };
+            if !offloaded {
                 let dec = &mut self.decode[d];
                 // The reservation covers it; convert to block residency.
                 dec.reserved = dec.reserved.saturating_sub(need);
@@ -630,7 +835,16 @@ impl ClusterSim {
                 }
             }
             self.decode[d].waiting.pop_front();
+            let slot = self.decode[d].running.len();
             self.decode[d].running.push(id);
+            self.admit_counter += 1;
+            let seq = self.admit_counter;
+            {
+                let sr = &mut self.reqs[id as usize];
+                sr.run_slot = slot;
+                sr.admit_seq = seq;
+            }
+            Self::agg_add(&mut self.decode[d], &self.reqs[id as usize]);
             self.record_decode_occupancy(t, d);
         }
     }
@@ -639,6 +853,8 @@ impl ClusterSim {
         if self.decode[d].step_in_flight || self.decode[d].running.is_empty() {
             return;
         }
+        #[cfg(debug_assertions)]
+        self.assert_aggregates(d);
         let (step, flops) = self.decode_step_time(d);
         let dec = &mut self.decode[d];
         dec.step_in_flight = true;
@@ -673,49 +889,44 @@ impl ClusterSim {
     }
 
     /// One decode step for instance `d`: returns (seconds, flops).
+    ///
+    /// O(1) in the batch size: the context sums come from the incremental
+    /// aggregates, and the roofline math is memoized in [`DecodeCostTable`]
+    /// (each running row attends over its `kv_tokens` plus the token being
+    /// generated, hence the `+ rows` terms).
     fn decode_step_time(&mut self, d: usize) -> (f64, f64) {
-        let model = self.cfg.model;
-        let mut local_ctx = 0u64;
-        let mut remote_ctx: HashMap<usize, u64> = HashMap::new();
-        let mut b_total = 0u64;
-        for &id in &self.decode[d].running {
-            let sr = &self.reqs[&id];
-            b_total += 1;
-            if sr.offloaded {
-                *remote_ctx.entry(sr.prefill_instance).or_insert(0) += sr.kv_tokens as u64 + 1;
-            } else {
-                local_ctx += sr.kv_tokens as u64 + 1;
-            }
-        }
+        let b_total = self.decode[d].running.len() as u64;
+        let local_rows = self.decode[d].local_rows;
+        let local_ctx = self.decode[d].local_ctx + local_rows;
 
-        let times = DecodeKernelTimes::compute(&self.rl_whole, &model, b_total, 1);
-        let non_attn = times.non_attention();
-        let local_attn = if local_ctx > 0 {
-            self.rl_whole.time(KernelCost::new(
-                model.decode_attn_flops(local_ctx),
-                model.decode_attn_bytes(local_ctx),
-            ))
-        } else {
-            0.0
-        };
+        let non_attn = self.costs.non_attention(b_total);
+        let local_attn = self.costs.attention(if local_rows > 0 { local_ctx } else { 0 });
+
         // Remote attention on each involved executor partition, in parallel.
         let mut remote_attn: f64 = 0.0;
-        for (&pi, &ctx) in &remote_ctx {
-            let t = self.rl_executor.time(KernelCost::new(
-                model.decode_attn_flops(ctx),
-                model.decode_attn_bytes(ctx),
-            ));
+        let mut remote_ctx_total: u64 = 0;
+        let mut any_remote = false;
+        for pi in 0..self.prefill.len() {
+            let rows = self.decode[d].remote_rows[pi];
+            if rows == 0 {
+                continue;
+            }
+            any_remote = true;
+            let ctx = self.decode[d].remote_ctx[pi] + rows;
+            remote_ctx_total += ctx;
+            let t = self.costs_exec.attention(ctx);
             self.prefill[pi].executor_busy_s += t;
             remote_attn = remote_attn.max(t);
         }
-        if !remote_ctx.is_empty() {
-            remote_attn += self.cfg.sync_overhead_s * model.n_layers as f64;
+        if any_remote {
+            remote_attn += self.cfg.sync_overhead_s * self.cfg.model.n_layers as f64;
         }
 
         let step = non_attn
             + local_attn.max(remote_attn)
             + self.cfg.eager_launch_overhead_s;
-        let flops = model.decode_step_flops(b_total, local_ctx + remote_ctx.values().sum::<u64>());
+        let local_for_flops = if local_rows > 0 { local_ctx } else { 0 };
+        let flops = self.costs.step_flops(b_total, local_for_flops + remote_ctx_total);
         (step, flops)
     }
 
@@ -775,18 +986,27 @@ impl ClusterSim {
             .time_weighted_mean(0.0, end)
             .unwrap_or(0.0);
 
-        // SLO attainment + goodput over finished requests.
+        // SLO attainment + goodput over finished requests, plus the
+        // token-conservation invariants.
         let slo = self.cfg.serving.slo;
         let mut met_ttft = 0usize;
         let mut met_tpot = 0usize;
         let mut met_both = 0usize;
         let mut finished_seen = 0usize;
-        for sr in self.reqs.values() {
+        let mut req_preemptions_total = 0u64;
+        let mut generated_total = 0usize;
+        let mut tokens_conserved = true;
+        for sr in &self.reqs {
+            req_preemptions_total += sr.preemptions as u64;
+            generated_total += sr.generated;
             if sr.phase != Phase::Done {
                 continue;
             }
             finished_seen += 1;
             let Some(rm) = self.metrics.request(sr.req.id) else { continue };
+            if rm.output_tokens() != sr.generated || sr.generated < sr.req.output_len {
+                tokens_conserved = false;
+            }
             let ttft_ok = rm.ttft().is_some_and(|t| t <= slo.ttft_s);
             let tpots = rm.tpot_samples();
             let tpot_ok = if tpots.is_empty() {
@@ -797,6 +1017,9 @@ impl ClusterSim {
             met_ttft += usize::from(ttft_ok);
             met_tpot += usize::from(tpot_ok);
             met_both += usize::from(ttft_ok && tpot_ok);
+        }
+        if generated_total != self.metrics.total_output_tokens() {
+            tokens_conserved = false;
         }
         let frac = |n: usize| {
             if finished_seen == 0 {
@@ -815,6 +1038,8 @@ impl ClusterSim {
             arrived: self.reqs.len(),
             finished: self.finished_total,
             preemptions: self.preemptions,
+            req_preemptions_total,
+            tokens_conserved,
             offloaded_fraction: if self.finished_total > 0 {
                 self.finished_offloaded as f64 / self.finished_total as f64
             } else {
@@ -832,6 +1057,7 @@ impl ClusterSim {
             prefill_occupancy: self.prefill_occupancy,
             batch_size: self.batch_size,
             sim_end_s: end,
+            events_processed: self.events_processed,
         }
     }
 }
@@ -914,6 +1140,8 @@ mod tests {
         // total output tokens >= finished (each got >= 1).
         assert!(r.finished > 0);
         assert!(r.tpot.map(|t| t.count).unwrap_or(0) > 0);
+        assert!(r.tokens_conserved);
+        assert_eq!(r.preemptions, r.req_preemptions_total);
     }
 
     #[test]
@@ -922,5 +1150,47 @@ mod tests {
         let b = quick(true, 1.5, 30.0);
         assert_eq!(a.finished, b.finished);
         assert!((a.throughput - b.throughput).abs() < 1e-9);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn events_processed_counts_the_run() {
+        let r = quick(false, 1.0, 20.0);
+        // At least one event per arrival and one per generated token.
+        assert!(r.events_processed as usize > r.arrived);
+        assert!(r.events_processed > 0);
+    }
+
+    #[test]
+    fn tiny_kv_pools_force_preemption_and_conserve_tokens() {
+        // Shrunk decode + executor pools (the exhaustion path): preemption
+        // churn must not corrupt token accounting or the aggregates (the
+        // debug-build aggregate invariant runs on every step here).
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::OpenThoughts, 1.0);
+        cfg.duration_s = 20.0;
+        cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+        cfg.serving.executor_kv_capacity_tokens = Some(16 * 1024);
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.preemptions > 0, "tiny pools must preempt");
+        assert!(r.tokens_conserved, "token accounting must survive preemption churn");
+        assert_eq!(r.preemptions, r.req_preemptions_total);
+        assert!(r.finished > 0);
+    }
+
+    #[test]
+    fn shared_executor_pool_drains_across_decode_instances() {
+        // Two decode instances feeding one prefill instance's executor
+        // pool: an overflow must be resolvable from either instance's
+        // step-end (the cross-instance victim scan).
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::OpenThoughts, 2.0);
+        cfg.duration_s = 20.0;
+        cfg.cluster.n_decode = 2;
+        cfg.serving.executor_kv_capacity_tokens = Some(8 * 1024);
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.finished > 0);
+        assert!(r.tokens_conserved);
+        assert_eq!(r.preemptions, r.req_preemptions_total);
     }
 }

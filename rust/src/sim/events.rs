@@ -24,11 +24,13 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap; NaN times are a caller bug (assert on push).
+        // Reverse for min-heap. `total_cmp` is total over all f64s, so the
+        // heap can never panic mid-sift: non-finite timestamps are rejected
+        // with a clear message at the `push` call site instead (the only
+        // place a bad timestamp can enter).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap()
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -64,9 +66,17 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
-    /// Schedule `event` at absolute time `t` (must not precede the clock).
+    /// Schedule `event` at absolute time `t` (must be finite — NaN and
+    /// infinities are rejected HERE, at the call site, rather than
+    /// surfacing as a comparison failure deep inside the heap — and must
+    /// not precede the clock).
     pub fn push(&mut self, t: f64, event: E) {
-        assert!(t.is_finite(), "event time must be finite");
+        assert!(
+            t.is_finite(),
+            "event time must be finite, got {t} (clock={}): a NaN/inf timestamp \
+             means an upstream timing model produced garbage",
+            self.clock
+        );
         assert!(
             t >= self.clock - 1e-12,
             "cannot schedule into the past: t={t} clock={}",
@@ -136,6 +146,20 @@ mod tests {
         q.push(5.0, ());
         q.pop();
         q.push(1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn nan_timestamp_panics_at_push() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn infinite_timestamp_panics_at_push() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
     }
 
     #[test]

@@ -7,4 +7,7 @@ pub mod events;
 pub mod run;
 
 pub use cluster::{ClusterSim, SimConfig, SimReport};
-pub use run::{run_e2e, run_ratio_sweep, E2eConfig, E2ePoint};
+pub use run::{
+    parallel_map, run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, E2eConfig,
+    E2ePoint,
+};

@@ -1,10 +1,65 @@
 //! End-to-end sweep harness: the request-rate sweeps behind Figs 11–14
 //! and the offload-ratio sweep behind Figs 15/17.
+//!
+//! Sweep points are independent, seed-deterministic simulations, so the
+//! default drivers fan them out across all cores with [`parallel_map`] and
+//! produce output **bit-identical** to the serial paths
+//! ([`run_e2e_serial`] / [`run_ratio_sweep_serial`], kept for the
+//! equivalence tests and for debugging). Set `ADRENALINE_SERIAL=1` to
+//! force serial execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 
 use crate::config::{ModelSpec, OffloadPolicy};
 use crate::workload::WorkloadKind;
 
 use super::cluster::{ClusterSim, SimConfig, SimReport};
+
+/// Deterministic parallel map: computes `f(0)..f(n-1)` on a pool of
+/// worker threads and returns the results in index order. Each index is
+/// claimed exactly once off an atomic counter, so results depend only on
+/// `f`, never on scheduling. Falls back to serial for trivial inputs,
+/// single-core machines, or `ADRENALINE_SERIAL=1`.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let force_serial = std::env::var("ADRENALINE_SERIAL").map_or(false, |v| v == "1");
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    if force_serial || threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = f(i);
+                if tx.send((i, result)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, result) in rx {
+            out[i] = Some(result);
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("every sweep point completes exactly once"))
+        .collect()
+}
 
 /// One figure panel's configuration.
 #[derive(Debug, Clone)]
@@ -51,7 +106,7 @@ impl E2eConfig {
 }
 
 /// One point of an E2E sweep (one system at one rate).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct E2ePoint {
     pub rate: f64,
     pub system: &'static str,
@@ -80,27 +135,82 @@ impl E2ePoint {
     }
 }
 
-/// Run the vLLM-baseline and Adrenaline systems across the sweep.
+/// Build the SimConfig for one (rate, system) sweep point.
+fn e2e_point_config(cfg: &E2eConfig, rate: f64, system: &str) -> SimConfig {
+    let mut c = if system == "vllm" {
+        SimConfig::baseline(cfg.model, cfg.workload, rate)
+    } else {
+        SimConfig::paper_default(cfg.model, cfg.workload, rate)
+    };
+    c.duration_s = cfg.duration_s;
+    c.seed = cfg.seed;
+    c
+}
+
+/// Run the vLLM-baseline and Adrenaline systems across the sweep, one
+/// simulation per core. Output order (and every value) is identical to
+/// [`run_e2e_serial`].
 pub fn run_e2e(cfg: &E2eConfig) -> Vec<E2ePoint> {
+    let jobs: Vec<(f64, &'static str)> = cfg
+        .rates
+        .iter()
+        .flat_map(|&rate| [(rate, "vllm"), (rate, "adrenaline")])
+        .collect();
+    parallel_map(jobs.len(), |i| {
+        let (rate, system) = jobs[i];
+        let report = ClusterSim::new(e2e_point_config(cfg, rate, system)).run();
+        E2ePoint::from_report(rate, system, &report)
+    })
+}
+
+/// Serial reference driver for [`run_e2e`].
+pub fn run_e2e_serial(cfg: &E2eConfig) -> Vec<E2ePoint> {
     let mut out = Vec::new();
     for &rate in &cfg.rates {
-        let mut base = SimConfig::baseline(cfg.model, cfg.workload, rate);
-        base.duration_s = cfg.duration_s;
-        base.seed = cfg.seed;
-        let br = ClusterSim::new(base).run();
-        out.push(E2ePoint::from_report(rate, "vllm", &br));
-
-        let mut adre = SimConfig::paper_default(cfg.model, cfg.workload, rate);
-        adre.duration_s = cfg.duration_s;
-        adre.seed = cfg.seed;
-        let ar = ClusterSim::new(adre).run();
-        out.push(E2ePoint::from_report(rate, "adrenaline", &ar));
+        for system in ["vllm", "adrenaline"] {
+            let report = ClusterSim::new(e2e_point_config(cfg, rate, system)).run();
+            out.push(E2ePoint::from_report(rate, system, &report));
+        }
     }
     out
 }
 
-/// Offload-ratio sweep (Fig 15/17): fixed-ratio policies at one rate.
+/// Build the SimConfig for one ratio-sweep point.
+fn ratio_point_config(
+    model: ModelSpec,
+    workload: WorkloadKind,
+    rate: f64,
+    ratio: f64,
+    duration_s: f64,
+) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(model, workload, rate);
+    cfg.duration_s = duration_s;
+    cfg.serving.offload = if ratio <= 0.0 {
+        OffloadPolicy::Disabled
+    } else {
+        OffloadPolicy::FixedRatio(ratio)
+    };
+    cfg
+}
+
+/// Offload-ratio sweep (Fig 15/17): fixed-ratio policies at one rate, one
+/// simulation per core. Identical output to [`run_ratio_sweep_serial`].
 pub fn run_ratio_sweep(
+    model: ModelSpec,
+    workload: WorkloadKind,
+    rate: f64,
+    ratios: &[f64],
+    duration_s: f64,
+) -> Vec<(f64, SimReport)> {
+    parallel_map(ratios.len(), |i| {
+        let ratio = ratios[i];
+        let cfg = ratio_point_config(model, workload, rate, ratio, duration_s);
+        (ratio, ClusterSim::new(cfg).run())
+    })
+}
+
+/// Serial reference driver for [`run_ratio_sweep`].
+pub fn run_ratio_sweep_serial(
     model: ModelSpec,
     workload: WorkloadKind,
     rate: f64,
@@ -110,13 +220,7 @@ pub fn run_ratio_sweep(
     ratios
         .iter()
         .map(|&ratio| {
-            let mut cfg = SimConfig::paper_default(model, workload, rate);
-            cfg.duration_s = duration_s;
-            cfg.serving.offload = if ratio <= 0.0 {
-                OffloadPolicy::Disabled
-            } else {
-                OffloadPolicy::FixedRatio(ratio)
-            };
+            let cfg = ratio_point_config(model, workload, rate, ratio, duration_s);
             (ratio, ClusterSim::new(cfg).run())
         })
         .collect()
@@ -154,5 +258,42 @@ mod tests {
         assert_eq!(pts.len(), 3);
         assert_eq!(pts[0].1.offloaded_fraction, 0.0);
         assert!(pts[1].1.offloaded_fraction < pts[2].1.offloaded_fraction);
+    }
+
+    #[test]
+    fn parallel_map_preserves_index_order() {
+        let out = parallel_map(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        assert!(parallel_map(0, |i| i).is_empty());
+        assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    /// NaN-tolerant exact equality (sweep points at unfinished rates can
+    /// legitimately carry NaN latency means).
+    fn feq(a: f64, b: f64) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    #[test]
+    fn parallel_e2e_matches_serial_bitwise() {
+        let cfg = E2eConfig {
+            rates: vec![1.0, 2.0, 3.0],
+            duration_s: 30.0,
+            ..E2eConfig::fig11()
+        };
+        let par = run_e2e(&cfg);
+        let ser = run_e2e_serial(&cfg);
+        assert_eq!(par.len(), ser.len());
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.rate, s.rate);
+            assert_eq!(p.system, s.system);
+            assert!(feq(p.ttft_mean_s, s.ttft_mean_s), "{} {}", p.ttft_mean_s, s.ttft_mean_s);
+            assert!(feq(p.tpot_mean_s, s.tpot_mean_s));
+            assert!(feq(p.tpot_p99_s, s.tpot_p99_s));
+            assert!(feq(p.throughput_tok_s, s.throughput_tok_s));
+            assert_eq!(p.finished, s.finished);
+            assert_eq!(p.preemptions, s.preemptions);
+            assert!(feq(p.offloaded_fraction, s.offloaded_fraction));
+        }
     }
 }

@@ -1,9 +1,9 @@
 //! Dependency-free substrates.
 //!
 //! This build is fully offline: the only third-party crates available are
-//! `xla`, `anyhow`, and `thiserror` (see .cargo/config.toml). Everything a
-//! serving framework would normally pull from the ecosystem is implemented
-//! here from scratch:
+//! the minimal `anyhow` and `xla` shims vendored under rust/vendor/.
+//! Everything a serving framework would normally pull from the ecosystem
+//! is implemented here from scratch:
 //!
 //! * [`json`] — a small, strict JSON parser/serializer (manifest + config
 //!   files);

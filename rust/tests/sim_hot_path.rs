@@ -1,0 +1,126 @@
+//! Hot-path overhaul regression tests (EXPERIMENTS.md §Perf):
+//!
+//! * token-conservation property under forced KV-pool exhaustion (tiny
+//!   HBM budgets + OpenThoughts-style long outputs — the preemption-heavy
+//!   regime of Figs 13/14), with monotone preemption counters;
+//! * bit-identical SimReports from the parallel sweep driver and the
+//!   serial reference path.
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::{
+    run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, ClusterSim, SimConfig,
+    SimReport,
+};
+use adrenaline::util::prop;
+use adrenaline::workload::WorkloadKind;
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+#[test]
+fn kv_exhaustion_conserves_tokens() {
+    // Tiny pools force continual exhaustion: requests are preempted,
+    // recomputed, and re-admitted many times. Conservation must hold
+    // throughout, and the global preemption counter must equal the sum of
+    // the per-request counters (monotonicity: nothing ever un-counts).
+    let m = ModelSpec::llama2_7b();
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::OpenThoughts, 1.0);
+    cfg.duration_s = 30.0;
+    cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+    cfg.serving.executor_kv_capacity_tokens = Some(16 * 1024);
+    let r = ClusterSim::new(cfg).run();
+    assert!(r.preemptions > 0, "tiny pools must force preemption");
+    assert!(r.tokens_conserved, "token accounting must survive preemption churn");
+    assert_eq!(r.preemptions, r.req_preemptions_total, "counters must agree");
+    assert!(r.finished > 0, "the run must still make progress");
+}
+
+#[test]
+fn property_exhaustion_conservation_random_budgets() {
+    prop::check("sim_exhaustion_conservation", 6, |rng| {
+        let budget = 8 * 1024 + rng.range_usize(0, 24 * 1024);
+        let rate = 0.5 + rng.f64() * 1.5;
+        let m = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::OpenThoughts, rate);
+        cfg.duration_s = 15.0;
+        cfg.seed = rng.next_u64();
+        cfg.serving.decode_kv_capacity_tokens = Some(budget);
+        cfg.serving.executor_kv_capacity_tokens = Some(budget / 2);
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.tokens_conserved, "budget={budget} rate={rate:.2}");
+        assert_eq!(r.preemptions, r.req_preemptions_total);
+        // Occupancy never exceeds 1: preemption enforced the budget.
+        if let Some(max) = r.decode_occupancy.max_value() {
+            assert!(max <= 1.0 + 1e-9, "decode occupancy {max}");
+        }
+    });
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.sim_end_s, b.sim_end_s));
+    match (&a.ttft, &b.ttft) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count);
+            assert!(feq(x.mean, y.mean) && feq(x.p50, y.p50) && feq(x.p99, y.p99));
+        }
+        (None, None) => {}
+        _ => panic!("ttft presence differs"),
+    }
+    match (&a.tpot, &b.tpot) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count);
+            assert!(feq(x.mean, y.mean) && feq(x.p50, y.p50) && feq(x.p99, y.p99));
+        }
+        (None, None) => {}
+        _ => panic!("tpot presence differs"),
+    }
+    assert_eq!(a.decode_occupancy.points(), b.decode_occupancy.points());
+    assert_eq!(a.batch_size.points(), b.batch_size.points());
+}
+
+#[test]
+fn ratio_sweep_parallel_matches_serial_bitwise() {
+    let m = ModelSpec::llama2_7b();
+    let ratios = [0.0, 0.4, 0.8];
+    let par = run_ratio_sweep(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0);
+    let ser = run_ratio_sweep_serial(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0);
+    assert_eq!(par.len(), ser.len());
+    for ((rp, p), (rs, s)) in par.iter().zip(&ser) {
+        assert_eq!(rp, rs, "ratio order must match the serial driver");
+        assert_reports_identical(p, s);
+    }
+}
+
+#[test]
+fn e2e_sweep_parallel_matches_serial() {
+    let cfg = adrenaline::sim::E2eConfig {
+        rates: vec![2.0, 6.0],
+        duration_s: 30.0,
+        ..adrenaline::sim::E2eConfig::fig13()
+    };
+    let par = run_e2e(&cfg);
+    let ser = run_e2e_serial(&cfg);
+    assert_eq!(par.len(), ser.len());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!((p.rate, p.system), (s.rate, s.system));
+        assert!(feq(p.ttft_mean_s, s.ttft_mean_s));
+        assert!(feq(p.tpot_mean_s, s.tpot_mean_s));
+        assert!(feq(p.tpot_p99_s, s.tpot_p99_s));
+        assert!(feq(p.throughput_tok_s, s.throughput_tok_s));
+        assert_eq!(p.finished, s.finished);
+        assert_eq!(p.preemptions, s.preemptions);
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The container this repository builds in has no crate registry, so the
+//! tiny subset of `anyhow` the codebase uses is implemented here:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion to exist without overlapping
+//! impls.
+
+use std::fmt;
+
+/// A type-erased error: any `std::error::Error + Send + Sync` or an ad-hoc
+/// message built by [`anyhow!`].
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Wrap a concrete error.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// Build an error from a display-able message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display,
+    {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Macro plumbing for `anyhow!` (kept separate from `msg` so the
+    /// macros expand to a single concrete call).
+    #[doc(hidden)]
+    pub fn from_message(message: String) -> Self {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// The root cause as a `std::error::Error` trait object.
+    pub fn root_cause(&self) -> &(dyn std::error::Error + 'static) {
+        let mut cause: &(dyn std::error::Error + 'static) = &*self.0;
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Ad-hoc message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+/// Construct an [`Error`] from a message, a format string, or another
+/// display-able value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_message(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_message(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::from_message(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let key = "decode_buckets";
+        let e = anyhow!("bad bucket in {key}");
+        assert_eq!(e.to_string(), "bad bucket in decode_buckets");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e.to_string(), "1 + 2");
+        let e = anyhow!(io_err());
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("lucky numbers rejected");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(7).unwrap_err().to_string().contains("lucky"));
+    }
+
+    #[test]
+    fn debug_includes_message() {
+        let e = Error::msg("top level");
+        assert!(format!("{e:?}").contains("top level"));
+        assert_eq!(e.root_cause().to_string(), "top level");
+    }
+}
