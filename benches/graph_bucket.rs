@@ -2,12 +2,36 @@
 //! selection cost and padding overhead vs bucket-interval configuration,
 //! the AOT analogue of the paper's 2-D CUDA-graph storage/overhead
 //! trade-off (§3.2.2).
+//!
+//! Besides the human-readable `figure=graph_bucket` rows, the bench
+//! writes machine-readable padding-efficiency rows (used vs padded slots
+//! per grid configuration) to `BENCH_graph_bucket.json` (path override:
+//! env `BENCH_GRAPH_BUCKET_JSON`) so bucket-interval choices are tracked
+//! across PRs alongside `BENCH_sim.json`.
+
+use std::collections::BTreeMap;
 
 use adrenaline::coordinator::GraphCache;
 use adrenaline::util::bench::{black_box, figure_row, Bench};
+use adrenaline::util::json::Json;
 use adrenaline::util::rng::Rng;
 
+/// One grid configuration's padding-efficiency row.
+fn efficiency_row(name: &str, g: &GraphCache) -> Json {
+    let s = g.stats();
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str(format!("graph_bucket/{name}")));
+    o.insert("grid_size".into(), Json::Num(g.grid_size() as f64));
+    o.insert("selections".into(), Json::Num(s.selections as f64));
+    o.insert("used_slots".into(), Json::Num(s.used_slots as f64));
+    o.insert("padded_slots".into(), Json::Num(s.padded_slots as f64));
+    o.insert("padding_overhead".into(), Json::Num(g.padding_overhead()));
+    Json::Obj(o)
+}
+
 fn main() {
+    let mut rows: Vec<Json> = Vec::new();
+
     // Padding overhead vs grid granularity, under a realistic mixed load.
     let grids: &[(&str, Vec<usize>)] = &[
         ("pow2", vec![1, 2, 4, 8, 16, 32, 64, 128, 256]),
@@ -25,6 +49,7 @@ fn main() {
         }
         figure_row("graph_bucket", &format!("{name}_grid_size"), 0.0, g.grid_size() as f64);
         figure_row("graph_bucket", &format!("{name}_padding_overhead"), 0.0, g.padding_overhead());
+        rows.push(efficiency_row(name, &g));
     }
 
     // Interval-limited grid (the paper's configurable cap).
@@ -41,6 +66,7 @@ fn main() {
             limit as f64,
             g.padding_overhead(),
         );
+        rows.push(efficiency_row(&format!("limit{limit}"), &g));
     }
 
     // Selection hot-path cost (runs once per decode step per instance).
@@ -51,4 +77,13 @@ fn main() {
             black_box(g.select(rng.range_usize(1, 250), rng.range_usize(0, 120)));
         }
     });
+    rows.push(efficiency_row("select_10k", &g));
+
+    let path = std::env::var("BENCH_GRAPH_BUCKET_JSON")
+        .unwrap_or_else(|_| "BENCH_graph_bucket.json".into());
+    let payload = format!("{}\n", Json::Arr(rows));
+    match std::fs::write(&path, payload) {
+        Ok(()) => println!("bench rows written to {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

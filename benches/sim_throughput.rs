@@ -55,6 +55,16 @@ fn row(
     );
     o.insert("events".into(), Json::Num(report.events_processed as f64));
     o.insert("finished".into(), Json::Num(report.finished as f64));
+    // Executable-grid padding efficiency (bucketed cost plane): requested
+    // vs padding-wasted batch slots and their ratio. All zero under
+    // ADRENALINE_EXACT_COSTS=1.
+    o.insert("graph_selections".into(), Json::Num(report.graph_selections as f64));
+    o.insert("graph_used_slots".into(), Json::Num(report.graph_used_slots as f64));
+    o.insert("graph_padded_slots".into(), Json::Num(report.graph_padded_slots as f64));
+    o.insert(
+        "graph_padding_overhead".into(),
+        Json::Num(report.graph_padding_overhead),
+    );
     Json::Obj(o)
 }
 

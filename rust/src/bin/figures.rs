@@ -10,10 +10,18 @@
 //! Simulated panels run at this testbed's saturating rates — see
 //! EXPERIMENTS.md for the paper-vs-measured mapping.
 //!
-//! Sweep points (rate sweeps, ratio sweeps, the fig16/launch/scaling
-//! panels) run one seed-deterministic simulation per core and print in
-//! the same order — and with bit-identical values — as the serial
-//! drivers. Set `ADRENALINE_SERIAL=1` to force serial execution.
+//! Parallelism happens at two levels, both through [`parallel_map`]:
+//! `figures all` fans the figure *groups* themselves out (capped, since
+//! each sweep group fans out again internally; each group buffers its
+//! rows and the buffers print in the fixed group order), and the
+//! sweep-driven groups fan their sweep points across all cores. Every
+//! simulation is seed-deterministic, so the output is bit-identical to a
+//! serial run. Set `ADRENALINE_SERIAL=1` to force serial execution at
+//! both levels.
+//!
+//! Simulated step costs default to the bucket-padded model (the 2-D
+//! executable grid, §3.2.2); set `ADRENALINE_EXACT_COSTS=1` to reproduce
+//! the exact-cost ablation.
 
 use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, SloConfig};
 use adrenaline::coordinator::OffloadBounds;
@@ -22,65 +30,62 @@ use adrenaline::gpu_model::{
     PrefillKernelTimes, Roofline,
 };
 use adrenaline::sim::{
-    parallel_map, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig, SimReport,
+    parallel_map, parallel_map_capped, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig,
+    SimReport,
 };
-use adrenaline::util::bench::figure_row;
+use adrenaline::util::bench::figure_row_str;
 use adrenaline::workload::WorkloadKind;
+
+/// The figure groups, in output order. Each writes its rows into a
+/// buffer so `all` can run groups concurrently.
+const GROUPS: &[(&str, fn(&mut String))] = &[
+    ("fig1", fig1),
+    ("fig2", fig2),
+    ("fig3", fig3),
+    ("fig5", fig5),
+    ("fig6", fig6),
+    ("fig9", fig9),
+    ("fig10", fig10),
+    ("fig11", fig11),
+    ("fig12", fig12),
+    ("fig13", fig13),
+    ("fig14", fig14),
+    ("fig15", fig15),
+    ("fig16", fig16),
+    ("fig17", fig17),
+    ("fig18", fig18),
+    ("launch", launch),
+    ("scaling", scaling),
+];
 
 fn main() {
     let which = std::env::args().nth(1).unwrap_or_else(|| "all".into());
-    let all = which == "all";
-    if all || which == "fig1" {
-        fig1();
+    let selected: Vec<&(&str, fn(&mut String))> =
+        GROUPS.iter().filter(|(name, _)| which == "all" || *name == which).collect();
+    if selected.is_empty() {
+        eprintln!("unknown figure `{which}`; valid groups:");
+        eprintln!("  all {}", GROUPS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(" "));
+        std::process::exit(2);
     }
-    if all || which == "fig2" {
-        fig2();
+    // The sweep-driven groups fan out again internally, so the group
+    // level is capped: two groups in flight overlap the cheap analytic
+    // groups with the sim-heavy ones while keeping live simulations near
+    // the core count (groups × cores would thrash memory on big hosts).
+    let outputs = parallel_map_capped(selected.len(), 2, |i| {
+        let mut out = String::new();
+        (selected[i].1)(&mut out);
+        out
+    });
+    for out in outputs {
+        print!("{out}");
     }
-    if all || which == "fig3" {
-        fig3();
-    }
-    if all || which == "fig5" {
-        fig5();
-    }
-    if all || which == "fig6" {
-        fig6();
-    }
-    if all || which == "fig9" {
-        fig9();
-    }
-    if all || which == "fig10" {
-        fig10();
-    }
-    if all || which == "fig11" {
-        e2e("fig11", scaled(E2eConfig::fig11()));
-    }
-    if all || which == "fig12" {
-        e2e("fig12", scaled(E2eConfig::fig12()));
-    }
-    if all || which == "fig13" {
-        e2e("fig13", E2eConfig::fig13());
-    }
-    if all || which == "fig14" {
-        e2e("fig14", E2eConfig::fig14());
-    }
-    if all || which == "fig15" {
-        fig15();
-    }
-    if all || which == "fig16" {
-        fig16();
-    }
-    if all || which == "fig17" {
-        fig17();
-    }
-    if all || which == "fig18" {
-        fig18();
-    }
-    if all || which == "launch" {
-        launch();
-    }
-    if all || which == "scaling" {
-        scaling();
-    }
+}
+
+/// Buffered variant of `figure_row` (same format, printed later in
+/// group order).
+fn row(out: &mut String, figure: &str, series: &str, x: f64, y: f64) {
+    out.push_str(&figure_row_str(figure, series, x, y));
+    out.push('\n');
 }
 
 /// ShareGPT panels run at this testbed's saturating rates (the paper's
@@ -98,7 +103,7 @@ fn setup() -> (Roofline, ModelSpec) {
 
 /// Fig 1: (a) prefill HBM-bw utilization vs prompt length; (b) decode
 /// compute utilization vs batch size.
-fn fig1() {
+fn fig1(out: &mut String) {
     let (rl, m) = setup();
     let pk = PhaseKernels::new(m);
     for p in [256u64, 512, 1024, 2048, 4096] {
@@ -106,7 +111,7 @@ fn fig1() {
         for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
             cost = cost.add(&pk.prefill_cost(k, p));
         }
-        figure_row("fig1a", "prefill_hbm_bw_util", p as f64, rl.bw_utilization(cost));
+        row(out, "fig1a", "prefill_hbm_bw_util", p as f64, rl.bw_utilization(cost));
     }
     for b in [1u64, 8, 16, 32, 64, 80, 128] {
         let ctx = b * 1024;
@@ -114,109 +119,130 @@ fn fig1() {
         for k in [KernelKind::Attention, KernelKind::OutProj, KernelKind::Ffn] {
             cost = cost.add(&pk.decode_cost(k, b, ctx));
         }
-        figure_row("fig1b", "decode_compute_util", b as f64, rl.compute_utilization(cost));
+        row(out, "fig1b", "decode_compute_util", b as f64, rl.compute_utilization(cost));
     }
 }
 
 /// Fig 2: HBM capacity utilization of prefill vs decode instances.
-fn fig2() {
+fn fig2(out: &mut String) {
     let c = ClusterSpec::paper_default();
     let m = ModelSpec::llama2_7b();
     let prefill = HbmUsage::for_instance(&c, &m, 0);
-    figure_row("fig2", "prefill_capacity_util", 0.0, prefill.utilization());
+    row(out, "fig2", "prefill_capacity_util", 0.0, prefill.utilization());
     let budget = HbmUsage::kv_token_budget(&c, &m);
     let decode = HbmUsage::for_instance(&c, &m, budget);
-    figure_row("fig2", "decode_capacity_util", 0.0, decode.utilization());
-    figure_row("fig2", "decode_kv_share", 0.0, decode.kv_share());
+    row(out, "fig2", "decode_capacity_util", 0.0, decode.utilization());
+    row(out, "fig2", "decode_kv_share", 0.0, decode.kv_share());
 }
 
 /// Fig 3: decode attention share of layer time vs batch (seq 1K).
-fn fig3() {
+fn fig3(out: &mut String) {
     let (rl, m) = setup();
     for b in [1u64, 8, 16, 32, 48, 64, 80, 96, 128] {
         let t = DecodeKernelTimes::compute(&rl, &m, b, b * 1024);
-        figure_row("fig3", "attention_share", b as f64, t.attention_share());
+        row(out, "fig3", "attention_share", b as f64, t.attention_share());
     }
 }
 
 /// Fig 5: prefill per-kernel compute & bandwidth utilization vs prompt len.
-fn fig5() {
+fn fig5(out: &mut String) {
     let (rl, m) = setup();
     let pk = PhaseKernels::new(m);
     for p in [256u64, 1024, 4096] {
         for k in KernelKind::ALL {
             let cost = pk.prefill_cost(k, p);
-            figure_row(
+            row(
+                out,
                 "fig5a",
                 &format!("{}_compute", k.name()),
                 p as f64,
                 rl.compute_utilization(cost),
             );
-            figure_row("fig5b", &format!("{}_bw", k.name()), p as f64, rl.bw_utilization(cost));
+            row(out, "fig5b", &format!("{}_bw", k.name()), p as f64, rl.bw_utilization(cost));
         }
     }
 }
 
 /// Fig 6: decode per-kernel compute & bandwidth utilization vs batch.
-fn fig6() {
+fn fig6(out: &mut String) {
     let (rl, m) = setup();
     let pk = PhaseKernels::new(m);
     for b in [8u64, 32, 80, 128] {
         let ctx = b * 1024;
         for k in KernelKind::ALL {
             let cost = pk.decode_cost(k, b, ctx);
-            figure_row(
+            row(
+                out,
                 "fig6a",
                 &format!("{}_compute", k.name()),
                 b as f64,
                 rl.compute_utilization(cost),
             );
-            figure_row("fig6b", &format!("{}_bw", k.name()), b as f64, rl.bw_utilization(cost));
+            row(out, "fig6b", &format!("{}_bw", k.name()), b as f64, rl.bw_utilization(cost));
         }
     }
 }
 
 /// Fig 9: attention-kernel bandwidth vs SM fraction (superlinear).
-fn fig9() {
+fn fig9(out: &mut String) {
     for i in 1..=10 {
         let s = i as f64 / 10.0;
-        figure_row("fig9", "bw_frac", s, bw_frac_of_sm_frac(s));
+        row(out, "fig9", "bw_frac", s, bw_frac_of_sm_frac(s));
     }
-    figure_row("fig9", "bw_frac_anchor", 0.2, bw_frac_of_sm_frac(0.2));
+    row(out, "fig9", "bw_frac_anchor", 0.2, bw_frac_of_sm_frac(0.2));
 }
 
 /// Fig 10: normalized prefill throughput vs SM fraction (sublinear).
-fn fig10() {
+fn fig10(out: &mut String) {
     let (rl, m) = setup();
     for p in [1024u64, 4096] {
         let base = PrefillKernelTimes::compute(&rl, &m, p).total();
         for i in 2..=10 {
             let s = i as f64 / 10.0;
             let t = base * prefill_slowdown(s);
-            figure_row("fig10", &format!("norm_tput_p{p}"), s, base / t);
+            row(out, "fig10", &format!("norm_tput_p{p}"), s, base / t);
         }
     }
 }
 
+fn fig11(out: &mut String) {
+    e2e(out, "fig11", scaled(E2eConfig::fig11()));
+}
+
+fn fig12(out: &mut String) {
+    e2e(out, "fig12", scaled(E2eConfig::fig12()));
+}
+
+fn fig13(out: &mut String) {
+    e2e(out, "fig13", E2eConfig::fig13());
+}
+
+fn fig14(out: &mut String) {
+    e2e(out, "fig14", E2eConfig::fig14());
+}
+
 /// Figs 11–14: TTFT / TPOT / P99 TPOT / throughput vs request rate for
 /// both systems.
-fn e2e(fig: &str, cfg: E2eConfig) {
+fn e2e(out: &mut String, fig: &str, cfg: E2eConfig) {
     for p in run_e2e(&cfg) {
-        figure_row(&format!("{fig}a"), &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
-        figure_row(&format!("{fig}b"), &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
-        figure_row(
+        row(out, &format!("{fig}a"), &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
+        row(out, &format!("{fig}b"), &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
+        row(
+            out,
             &format!("{fig}c"),
             &format!("{}_p99_tpot_s", p.system),
             p.rate,
             p.tpot_p99_s,
         );
-        figure_row(
+        row(
+            out,
             &format!("{fig}d"),
             &format!("{}_tput_tok_s", p.system),
             p.rate,
             p.throughput_tok_s,
         );
-        figure_row(
+        row(
+            out,
             &format!("{fig}x"),
             &format!("{}_preemptions", p.system),
             p.rate,
@@ -226,7 +252,7 @@ fn e2e(fig: &str, cfg: E2eConfig) {
 }
 
 /// Fig 15: E2E performance vs (fixed) offload ratio.
-fn fig15() {
+fn fig15(out: &mut String) {
     let pts = run_ratio_sweep(
         ModelSpec::llama2_7b(),
         WorkloadKind::ShareGpt,
@@ -235,14 +261,14 @@ fn fig15() {
         120.0,
     );
     for (ratio, r) in &pts {
-        figure_row("fig15", "tput_tok_s", *ratio, r.throughput);
-        figure_row("fig15", "tpot_s", *ratio, r.tpot.map(|s| s.mean).unwrap_or(f64::NAN));
-        figure_row("fig15", "ttft_s", *ratio, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
+        row(out, "fig15", "tput_tok_s", *ratio, r.throughput);
+        row(out, "fig15", "tpot_s", *ratio, r.tpot.map(|s| s.mean).unwrap_or(f64::NAN));
+        row(out, "fig15", "ttft_s", *ratio, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
     }
 }
 
 /// Fig 16: prefill-instance HBM capacity over the run.
-fn fig16() {
+fn fig16(out: &mut String) {
     let systems = [("vllm", false), ("adrenaline", true)];
     let reports: Vec<SimReport> = parallel_map(systems.len(), |i| {
         let m = ModelSpec::llama2_7b();
@@ -258,26 +284,28 @@ fn fig16() {
         let pts = r.prefill_occupancy.points();
         let stride = (pts.len() / 20).max(1);
         for (t, v) in pts.iter().step_by(stride) {
-            figure_row("fig16", &format!("{name}_capacity_util"), *t, *v);
+            row(out, "fig16", &format!("{name}_capacity_util"), *t, *v);
         }
-        figure_row("fig16", &format!("{name}_mean"), 0.0, r.prefill_hbm_capacity_util);
+        row(out, "fig16", &format!("{name}_mean"), 0.0, r.prefill_hbm_capacity_util);
     }
 }
 
 /// Fig 17: prefill bandwidth & decode compute utilization vs offload ratio,
 /// both models.
-fn fig17() {
+fn fig17(out: &mut String) {
     for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
         let rate = if m.name == "llama2-7b" { 24.0 } else { 16.0 };
         let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &[0.0, 0.4, 0.6, 0.8], 120.0);
         for (ratio, r) in &pts {
-            figure_row(
+            row(
+                out,
                 "fig17a",
                 &format!("{}_prefill_bw_util", m.name),
                 *ratio,
                 r.prefill_hbm_bw_util,
             );
-            figure_row(
+            row(
+                out,
                 "fig17b",
                 &format!("{}_decode_compute_util", m.name),
                 *ratio,
@@ -289,14 +317,14 @@ fn fig17() {
 
 /// Fig 18: (a) prefill bandwidth with executor on/off + duty cycle;
 /// (b) non-attention kernel compute growth vs offload ratio.
-fn fig18() {
+fn fig18(out: &mut String) {
     let m = ModelSpec::llama2_7b();
     let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
     cfg.duration_s = 120.0;
     let r = ClusterSim::new(cfg).run();
-    figure_row("fig18a", "attn_on_bw_util", 0.0, r.executor_bw_util);
-    figure_row("fig18a", "attn_off_bw_util", 0.0, 0.25); // prefill-only draw (Fig 1a)
-    figure_row("fig18a", "executor_duty", 0.0, r.executor_duty);
+    row(out, "fig18a", "attn_on_bw_util", 0.0, r.executor_bw_util);
+    row(out, "fig18a", "attn_off_bw_util", 0.0, 0.25); // prefill-only draw (Fig 1a)
+    row(out, "fig18a", "executor_duty", 0.0, r.executor_duty);
 
     // (b) per-kernel decode compute at growing total batch (the effect of
     // offload ratios 0 / 0.4 / 0.8 on the non-attention kernels).
@@ -307,7 +335,8 @@ fn fig18() {
         let b_total = (b_local as f64 * (1.0 + ratio)) as u64;
         for k in [KernelKind::QkvProj, KernelKind::OutProj, KernelKind::Ffn] {
             let cost = pk.decode_cost(k, b_total, b_total * 1024);
-            figure_row(
+            row(
+                out,
                 "fig18b",
                 &format!("{}_compute_util", k.name()),
                 ratio,
@@ -318,8 +347,9 @@ fn fig18() {
 }
 
 /// §3.2.2 ablation: decode TPOT with and without the executable-grid
-/// (CUDA-graph analogue) launch batching, plus the computed offload bounds.
-fn launch() {
+/// (CUDA-graph analogue) launch batching, the grid's padding overhead,
+/// plus the computed offload bounds.
+fn launch(out: &mut String) {
     let m = ModelSpec::llama2_7b();
     let variants = [("graphed", 0.0), ("eager", 0.76e-3 * 32.0)];
     let reports: Vec<SimReport> = parallel_map(variants.len(), |i| {
@@ -329,13 +359,21 @@ fn launch() {
         ClusterSim::new(cfg).run()
     });
     for ((name, _), r) in variants.iter().zip(&reports) {
-        figure_row(
+        row(
+            out,
             "launch",
             &format!("{name}_tpot_s"),
             0.0,
             r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
         );
-        figure_row("launch", &format!("{name}_tput"), 0.0, r.throughput);
+        row(out, "launch", &format!("{name}_tput"), 0.0, r.throughput);
+        row(
+            out,
+            "launch",
+            &format!("{name}_padding_overhead"),
+            0.0,
+            r.graph_padding_overhead,
+        );
     }
     let b = OffloadBounds::compute(
         &ClusterSpec::paper_default(),
@@ -343,14 +381,14 @@ fn launch() {
         &SloConfig::default(),
         1024,
     );
-    figure_row("launch", "ob_mem", 0.0, b.ob_mem);
-    figure_row("launch", "ob", 0.0, b.ob());
+    row(out, "launch", "ob_mem", 0.0, b.ob_mem);
+    row(out, "launch", "ob", 0.0, b.ob());
 }
 
 /// §3.4.2 flexibility: prefill-pool scaling. Eq 1's OB_mem is linear in
 /// n (prefill instances per decode instance); more executors ⇒ more
 /// offload capacity ⇒ higher saturated throughput.
-fn scaling() {
+fn scaling(out: &mut String) {
     let m = ModelSpec::llama2_7b();
     let sizes = [1u32, 2, 3];
     let reports: Vec<SimReport> = parallel_map(sizes.len(), |i| {
@@ -360,8 +398,8 @@ fn scaling() {
         ClusterSim::new(cfg).run()
     });
     for (&n, r) in sizes.iter().zip(&reports) {
-        figure_row("scaling", "tput_tok_s", n as f64, r.throughput);
-        figure_row("scaling", "offloaded_fraction", n as f64, r.offloaded_fraction);
-        figure_row("scaling", "ttft_s", n as f64, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
+        row(out, "scaling", "tput_tok_s", n as f64, r.throughput);
+        row(out, "scaling", "offloaded_fraction", n as f64, r.offloaded_fraction);
+        row(out, "scaling", "ttft_s", n as f64, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
     }
 }

@@ -70,6 +70,13 @@ pub struct ServingConfig {
     pub executor_kv_capacity_tokens: Option<usize>,
     /// Token capacity of the decode instance's local KV pool (`HBM_d`).
     pub decode_kv_capacity_tokens: Option<usize>,
+    /// Charge simulator step costs at exact batch sizes instead of padding
+    /// to the captured executable-bucket pair (§3.2.2). The bucketed model
+    /// is the default (it is what the real 2-D grid executes); the exact
+    /// path is kept for ablations and bit-identical regression against the
+    /// pre-bucketing baselines. Env `ADRENALINE_EXACT_COSTS=1` forces it
+    /// regardless of this field.
+    pub exact_costs: bool,
 }
 
 impl Default for ServingConfig {
@@ -85,6 +92,7 @@ impl Default for ServingConfig {
             b_max_override: None,
             executor_kv_capacity_tokens: None,
             decode_kv_capacity_tokens: None,
+            exact_costs: false,
         }
     }
 }
@@ -154,6 +162,9 @@ impl ServingConfig {
         if let Some(n) = v.get("decode_kv_tokens").and_then(Json::as_u64) {
             cfg.decode_kv_capacity_tokens = Some(n as usize);
         }
+        if let Some(b) = v.get("exact_costs").and_then(Json::as_bool) {
+            cfg.exact_costs = b;
+        }
         Ok(cfg)
     }
 
@@ -194,6 +205,7 @@ impl ServingConfig {
         if let Some(n) = self.decode_kv_capacity_tokens {
             o.insert("decode_kv_tokens".into(), Json::Num(n as f64));
         }
+        o.insert("exact_costs".into(), Json::Bool(self.exact_costs));
         Json::Obj(o).to_string()
     }
 }
@@ -237,6 +249,15 @@ mod tests {
         assert_eq!(cfg.max_batch, 32);
         assert_eq!(cfg.offload, OffloadPolicy::FixedRatio(0.5));
         assert_eq!(cfg.kv_block_tokens, ServingConfig::default().kv_block_tokens);
+        assert!(!cfg.exact_costs, "bucketed costs are the default");
+    }
+
+    #[test]
+    fn json_exact_costs_roundtrip() {
+        let cfg = ServingConfig::from_json(r#"{"exact_costs": true}"#).unwrap();
+        assert!(cfg.exact_costs);
+        let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
     }
 
     #[test]

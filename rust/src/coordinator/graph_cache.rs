@@ -8,6 +8,11 @@
 //! the pair of AOT-compiled executables `attn_b{C_d}` / `attn_b{C_o}` plus
 //! the bucket-sized non-attention executables — the selection problem and
 //! the storage trade-off are identical.
+//!
+//! Since the cost-plane refactor the simulator also routes every decode
+//! step through [`GraphCache::select`] (see [`crate::gpu_model::cost`]),
+//! so the grid's padding statistics describe the *simulated* runs too,
+//! not just the real decode path.
 
 /// A selected bucket pair: the step runs local attention padded to
 /// `local`, offloaded attention padded to `offload`.
@@ -36,6 +41,28 @@ pub struct GraphCache {
     /// Always includes 0 (steps with nothing offloaded).
     offload_buckets: Vec<usize>,
     stats: GraphCacheStats,
+    /// Per-pair selection counts, row-major over
+    /// `(local_idx, offload_idx)` — the hit histogram ablations plot.
+    hits: Vec<u64>,
+}
+
+/// A configured bucket list must be usable as-is by the capture planner:
+/// non-empty, strictly ascending, and free of zero capacities (the 0
+/// bucket is added internally for empty sub-batches).
+fn validate_buckets(dim: &str, buckets: &[usize]) -> crate::Result<()> {
+    anyhow::ensure!(!buckets.is_empty(), "{dim} bucket list is empty");
+    for (i, &b) in buckets.iter().enumerate() {
+        anyhow::ensure!(b > 0, "{dim} bucket list contains a zero capacity (index {i})");
+        if i > 0 {
+            anyhow::ensure!(
+                b > buckets[i - 1],
+                "{dim} bucket list must be strictly ascending: {} then {} at index {i}",
+                buckets[i - 1],
+                b
+            );
+        }
+    }
+    Ok(())
 }
 
 impl GraphCache {
@@ -43,12 +70,28 @@ impl GraphCache {
     /// total number of captured pairs (the paper's configurable interval):
     /// when `|C_d| * |C_o|` exceeds it, coarser grids are used (every k-th
     /// bucket kept, largest always retained).
+    ///
+    /// Panics with a clear message on an invalid bucket configuration; use
+    /// [`GraphCache::try_new`] to handle the error instead (the real-path
+    /// server does, so a bad config file fails at startup, not mid-serve).
     pub fn new(
         local_buckets: &[usize],
         offload_buckets: &[usize],
         interval_limit: Option<usize>,
     ) -> Self {
-        assert!(!local_buckets.is_empty(), "need at least one local bucket");
+        Self::try_new(local_buckets, offload_buckets, interval_limit)
+            .unwrap_or_else(|e| panic!("invalid executable-bucket grid: {e}"))
+    }
+
+    /// Fallible constructor: rejects empty, unsorted/duplicated, or
+    /// zero-capacity bucket lists instead of silently misbehaving.
+    pub fn try_new(
+        local_buckets: &[usize],
+        offload_buckets: &[usize],
+        interval_limit: Option<usize>,
+    ) -> crate::Result<Self> {
+        validate_buckets("local (C_d)", local_buckets)?;
+        validate_buckets("offload (C_o)", offload_buckets)?;
         // Both dimensions include 0: a step may have nothing offloaded, or
         // (at high offload ratios) nothing local.
         let mut local: Vec<usize> = local_buckets.to_vec();
@@ -61,7 +104,7 @@ impl GraphCache {
         offload.dedup();
 
         if let Some(limit) = interval_limit {
-            assert!(limit >= 2, "interval limit must allow at least a 2x1 grid");
+            anyhow::ensure!(limit >= 2, "interval limit must allow at least a 2x1 grid");
             while local.len() * offload.len() > limit {
                 // Thin the larger dimension, keeping first and last.
                 let v = if local.len() >= offload.len() { &mut local } else { &mut offload };
@@ -76,7 +119,13 @@ impl GraphCache {
                 v.dedup();
             }
         }
-        GraphCache { local_buckets: local, offload_buckets: offload, stats: Default::default() }
+        let hits = vec![0; local.len() * offload.len()];
+        Ok(GraphCache {
+            local_buckets: local,
+            offload_buckets: offload,
+            stats: Default::default(),
+            hits,
+        })
     }
 
     pub fn grid_size(&self) -> usize {
@@ -95,6 +144,20 @@ impl GraphCache {
         self.stats
     }
 
+    /// Selection counts per captured pair, non-zero entries only.
+    pub fn bucket_hits(&self) -> Vec<(BucketPair, u64)> {
+        let mut out = Vec::new();
+        for (li, &l) in self.local_buckets.iter().enumerate() {
+            for (oi, &o) in self.offload_buckets.iter().enumerate() {
+                let n = self.hits[li * self.offload_buckets.len() + oi];
+                if n > 0 {
+                    out.push((BucketPair { local: l, offload: o }, n));
+                }
+            }
+        }
+        out
+    }
+
     pub fn max_local(&self) -> usize {
         *self.local_buckets.last().unwrap()
     }
@@ -108,12 +171,27 @@ impl GraphCache {
     /// both local and remote attention batches"). Returns `None` if either
     /// dimension exceeds the grid (the scheduler must split the step).
     pub fn select(&mut self, local: usize, offload: usize) -> Option<BucketPair> {
-        let l = *self.local_buckets.iter().find(|&&b| b >= local)?;
-        let o = *self.offload_buckets.iter().find(|&&b| b >= offload)?;
+        let li = self.local_buckets.iter().position(|&b| b >= local)?;
+        let oi = self.offload_buckets.iter().position(|&b| b >= offload)?;
+        let l = self.local_buckets[li];
+        let o = self.offload_buckets[oi];
         self.stats.selections += 1;
         self.stats.used_slots += (local + offload) as u64;
         self.stats.padded_slots += ((l - local) + (o - offload)) as u64;
+        self.hits[li * self.offload_buckets.len() + oi] += 1;
         Some(BucketPair { local: l, offload: o })
+    }
+
+    /// Smallest captured offload capacity covering `n` rows, without
+    /// recording a selection. The cost plane uses this to size each
+    /// executor's own attention executable: the decode-side [`select`]
+    /// covers the step's *total* offloaded batch, but every executor runs
+    /// a bucket of its own row count (padding each executor to the total's
+    /// bucket would overcharge multi-executor steps).
+    ///
+    /// [`select`]: GraphCache::select
+    pub fn cover_offload(&self, n: usize) -> Option<usize> {
+        self.offload_buckets.iter().copied().find(|&b| b >= n)
     }
 
     /// Fraction of compute wasted to padding so far (ablation metric for
@@ -155,6 +233,23 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_bucket_lists() {
+        assert!(GraphCache::try_new(&[], &[1], None).is_err(), "empty local");
+        assert!(GraphCache::try_new(&[1], &[], None).is_err(), "empty offload");
+        assert!(GraphCache::try_new(&[1, 0, 2], &[1], None).is_err(), "zero bucket");
+        assert!(GraphCache::try_new(&[1, 4, 2], &[1], None).is_err(), "unsorted");
+        assert!(GraphCache::try_new(&[1, 2, 2, 4], &[1], None).is_err(), "duplicate");
+        assert!(GraphCache::try_new(&[1, 2], &[1, 2], Some(1)).is_err(), "limit < 2");
+        assert!(GraphCache::try_new(&[1, 2, 4], &[1, 2, 4], None).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid executable-bucket grid")]
+    fn new_panics_with_clear_message() {
+        let _ = GraphCache::new(&[], &[1], None);
+    }
+
+    #[test]
     fn interval_limit_thins_grid_keeping_extremes() {
         let g = GraphCache::new(
             &[1, 2, 3, 4, 5, 6, 7, 8],
@@ -165,6 +260,43 @@ mod tests {
         assert_eq!(g.max_local(), 8, "largest bucket must survive thinning");
         assert_eq!(g.max_offload(), 8);
         assert!(g.local_buckets().contains(&0), "smallest bucket survives");
+    }
+
+    #[test]
+    fn property_interval_limit_retains_largest_buckets() {
+        // The paper's interval coarsening trades padding for storage; it
+        // must never lose the grid's extremes — dropping the largest
+        // bucket would cap the servable batch, dropping 0 would break
+        // empty sub-batches.
+        crate::util::prop::check("graph_cache_limit_retention", 200, |rng| {
+            let n_local = rng.range_usize(1, 12);
+            let n_offload = rng.range_usize(1, 12);
+            let mut local: Vec<usize> = Vec::new();
+            let mut cap = 0usize;
+            for _ in 0..n_local {
+                cap += rng.range_usize(1, 9);
+                local.push(cap);
+            }
+            let mut offload: Vec<usize> = Vec::new();
+            cap = 0;
+            for _ in 0..n_offload {
+                cap += rng.range_usize(1, 9);
+                offload.push(cap);
+            }
+            let limit = rng.range_usize(2, 40);
+            let g = GraphCache::new(&local, &offload, Some(limit));
+            assert_eq!(g.max_local(), *local.last().unwrap(), "largest C_d retained");
+            assert_eq!(g.max_offload(), *offload.last().unwrap(), "largest C_o retained");
+            assert!(g.local_buckets().contains(&0));
+            assert!(g.offload_buckets().contains(&0));
+            // The thinning loop stops once both dimensions are down to
+            // {0, max}; the grid can never exceed max(limit, 4).
+            assert!(
+                g.grid_size() <= limit.max(4),
+                "grid {} vs limit {limit}",
+                g.grid_size()
+            );
+        });
     }
 
     #[test]
@@ -181,6 +313,19 @@ mod tests {
         let mut g = GraphCache::new(&[1, 2, 4], &[1, 2, 4], None);
         g.select(2, 4).unwrap();
         assert_eq!(g.padding_overhead(), 0.0);
+    }
+
+    #[test]
+    fn hit_histogram_counts_selections() {
+        let mut g = GraphCache::new(&[1, 2, 4], &[1, 2, 4], None);
+        g.select(3, 0).unwrap(); // -> (4, 0)
+        g.select(4, 0).unwrap(); // -> (4, 0)
+        g.select(1, 2).unwrap(); // -> (1, 2)
+        let hits = g.bucket_hits();
+        assert_eq!(hits.len(), 2);
+        assert!(hits.contains(&(BucketPair { local: 4, offload: 0 }, 2)));
+        assert!(hits.contains(&(BucketPair { local: 1, offload: 2 }, 1)));
+        assert_eq!(hits.iter().map(|&(_, n)| n).sum::<u64>(), g.stats().selections);
     }
 
     #[test]

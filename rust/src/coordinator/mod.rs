@@ -8,6 +8,6 @@ pub mod proxy;
 pub mod scheduler;
 
 pub use bounds::OffloadBounds;
-pub use graph_cache::GraphCache;
+pub use graph_cache::{BucketPair, GraphCache, GraphCacheStats};
 pub use proxy::{Proxy, RouteDecision};
 pub use scheduler::{OffloadScheduler, RuntimeMetadata};

@@ -40,6 +40,10 @@ pub struct ServeReport {
     pub decode_steps: u64,
     pub fused_steps: u64,
     pub wall_s: f64,
+    /// Output tokens/s over the run (the recorder's streaming prefix-sum
+    /// window query — the same path the simulator's stable-window
+    /// throughput uses).
+    pub output_tok_s: f64,
 }
 
 struct Active {
@@ -75,7 +79,8 @@ impl Server {
         let mut decode_rt = ModelRuntime::load(artifact_dir)?;
         decode_rt.warmup()?;
 
-        let graph = GraphCache::new(&cfg.decode_buckets, &cfg.offload_buckets, None);
+        // A malformed bucket config fails here, at startup, not mid-serve.
+        let graph = GraphCache::try_new(&cfg.decode_buckets, &cfg.offload_buckets, None)?;
         let decode = DecodeEngine::new(decode_rt, graph);
 
         // Offload bounds for the CPU testbed: OB_mem comes from the
@@ -354,13 +359,16 @@ impl Server {
             }
         }
 
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let output_tok_s = metrics.throughput_in_window(0.0, wall_s);
         Ok(ServeReport {
             completions,
             metrics,
             offloaded_requests,
             decode_steps: self.decode.stats.steps,
             fused_steps: self.decode.stats.fused_steps,
-            wall_s: wall0.elapsed().as_secs_f64(),
+            wall_s,
+            output_tok_s,
         })
     }
 

@@ -1,0 +1,477 @@
+//! The unified cost plane: every step-time quantity the simulator charges
+//! flows through [`CostModel`], so the bucket-granularity fidelity policy
+//! lives in exactly one place instead of being smeared across
+//! `sim/cluster.rs`, `gpu_model/kernels.rs`, and
+//! `coordinator/graph_cache.rs`.
+//!
+//! # Cost modes
+//!
+//! * [`CostMode::Bucketed`] (default) — decode steps pay the padded rows
+//!   of the 2-D executable grid (§3.2.2): each step selects the smallest
+//!   captured `(C_d, C_o)` pair covering its (local, offloaded) sub-batch
+//!   via [`GraphCache::select`], the non-attention executables run at
+//!   `C_d + C_o` rows, and every padded attention row reads its single
+//!   dummy KV slot. This is what the real 2-D CUDA-graph / AOT-executable
+//!   path executes, so the simulator's step times now carry the same
+//!   bucket-granularity trade-off DistServe-style systems tune.
+//! * [`CostMode::Exact`] — the pre-bucketing model (costs at exact batch
+//!   sizes), kept for ablations and bit-identical regression against the
+//!   PR 1 baselines. Enabled via `ServingConfig::exact_costs` or the
+//!   `ADRENALINE_EXACT_COSTS=1` environment switch.
+//!
+//! In both modes the underlying roofline math is memoized:
+//! [`DecodeCostTable`] for decode steps, [`PrefillCostTable`] for prefill
+//! batches (previously recomputed per batch), warmed at the grid's local
+//! capacities the way real graph capture pre-compiles them.
+//!
+//! Step FLOPs stay *useful* FLOPs (exact rows/contexts) in both modes:
+//! padding burns wall-clock, not useful work, so decode compute
+//! utilization dips by exactly the padding share — the effect Fig 17b's
+//! ablation wants visible.
+
+use crate::config::ModelSpec;
+use crate::coordinator::{BucketPair, GraphCache, GraphCacheStats};
+
+use super::kernels::{DecodeCostTable, PrefillCostTable};
+use super::partition::InterferenceModel;
+use super::roofline::Roofline;
+
+/// Prefill's own HBM-bandwidth draw when unconstrained (Fig 1a) — the
+/// demand fraction the interference model weighs against the executor's.
+pub const PREFILL_BW_FRAC: f64 = 0.25;
+
+/// How decode-step costs are charged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostMode {
+    /// Exact per-batch costs (pre-bucketing model; ablation/regression).
+    Exact,
+    /// Costs padded to the selected executable-bucket pair (default).
+    Bucketed,
+}
+
+/// One decode step's cost breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeStepCost {
+    /// Total step wall time (non-attention + max(local, remote+sync) +
+    /// eager launch overhead).
+    pub step_s: f64,
+    pub non_attention_s: f64,
+    pub local_attention_s: f64,
+    /// Max over executor partitions, including the per-layer sync
+    /// overhead when any row is offloaded.
+    pub remote_attention_s: f64,
+    /// Useful FLOPs (exact, never padded) for utilization accounting.
+    pub flops: f64,
+    /// The selected executable pair (None in exact mode, or if the step
+    /// exceeded the grid and fell back to exact charging).
+    pub bucket: Option<BucketPair>,
+}
+
+/// The simulator's cost plane. Owns the memoized roofline tables, the
+/// executable-bucket grid, and the prefill interference model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    mode: CostMode,
+    /// Decode-step costs on the decode instance's whole-GPU roofline.
+    decode: DecodeCostTable,
+    /// Attention costs on the executor's SM partition.
+    executor: DecodeCostTable,
+    /// Memoized prefill step times (whole-GPU roofline).
+    prefill: PrefillCostTable,
+    /// The 2-D executable grid; selection statistics accumulate here.
+    grid: GraphCache,
+    /// Colocation interference (None when offloading is disabled — the
+    /// prefill instance then runs unpartitioned).
+    interference: Option<InterferenceModel>,
+    /// The GPU's achievable-bandwidth efficiency (for the executor's
+    /// bandwidth cap inside the interference model).
+    gpu_bw_eff: f64,
+    /// Per-layer decode<->executor sync overhead, whole-step total.
+    sync_total_s: f64,
+    /// Extra CPU launch overhead per step (eager ablation; 0 with graphs).
+    eager_launch_overhead_s: f64,
+}
+
+impl CostModel {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rl_whole: &Roofline,
+        rl_executor: &Roofline,
+        model: &ModelSpec,
+        grid: GraphCache,
+        mode: CostMode,
+        interference: Option<InterferenceModel>,
+        sync_overhead_s: f64,
+        eager_launch_overhead_s: f64,
+    ) -> Self {
+        let mut decode = DecodeCostTable::new(rl_whole, model);
+        // Warm at the captured capacities (the graph-capture analogue);
+        // everything else backfills lazily and exactly.
+        decode.warm(grid.local_buckets());
+        CostModel {
+            mode,
+            decode,
+            executor: DecodeCostTable::new(rl_executor, model),
+            prefill: PrefillCostTable::new(rl_whole, model),
+            grid,
+            interference,
+            gpu_bw_eff: rl_whole.gpu.bw_eff,
+            sync_total_s: sync_overhead_s * model.n_layers as f64,
+            eager_launch_overhead_s,
+        }
+    }
+
+    /// Build the step-cost bucket grid from the configured capture lists,
+    /// extended by doubling the largest capacity until both dimensions
+    /// cover `max_batch` — the scheduler caps batches there, so every
+    /// reachable step selects a captured pair (real capture does the same:
+    /// the grid must span the servable batch range or the step splits).
+    pub fn build_grid(
+        decode_buckets: &[usize],
+        offload_buckets: &[usize],
+        max_batch: usize,
+    ) -> GraphCache {
+        let extend = |buckets: &[usize]| -> Vec<usize> {
+            let mut v = buckets.to_vec();
+            if let Some(&last) = v.last() {
+                let mut cap = last;
+                while cap < max_batch && cap > 0 {
+                    cap *= 2;
+                    v.push(cap);
+                }
+            }
+            v
+        };
+        GraphCache::new(&extend(decode_buckets), &extend(offload_buckets), None)
+    }
+
+    pub fn mode(&self) -> CostMode {
+        self.mode
+    }
+
+    pub fn grid(&self) -> &GraphCache {
+        &self.grid
+    }
+
+    pub fn graph_stats(&self) -> GraphCacheStats {
+        self.grid.stats()
+    }
+
+    pub fn bucket_hits(&self) -> Vec<(BucketPair, u64)> {
+        self.grid.bucket_hits()
+    }
+
+    pub fn padding_overhead(&self) -> f64 {
+        self.grid.padding_overhead()
+    }
+
+    /// Prefill step time over `tokens` prompt tokens. `executor_duty` is
+    /// the colocated executor's recent duty cycle in [0, 1]: the MPS
+    /// reservation always applies, bandwidth contention in proportion to
+    /// the duty cycle.
+    pub fn prefill_time(&mut self, tokens: u64, executor_duty: f64) -> f64 {
+        let base = self.prefill.total(tokens);
+        let Some(interference) = self.interference else {
+            return base;
+        };
+        let attn_bw = interference.attn_bw_cap(self.gpu_bw_eff);
+        let idle = interference.prefill_slowdown_idle();
+        let active = interference.prefill_slowdown_active(PREFILL_BW_FRAC, attn_bw);
+        base * (idle * (1.0 - executor_duty) + active * executor_duty)
+    }
+
+    /// One decode step's cost from the per-instance aggregates.
+    ///
+    /// * `local_rows` / `local_ctx_sum` — non-offloaded rows in the batch
+    ///   and the sum of their resident KV tokens (the token being
+    ///   generated is added here, one per row).
+    /// * `remote_rows` / `remote_ctx_sums` — the same per executor
+    ///   partition (indexed by prefill instance).
+    /// * `executor_times_out` — cleared and filled with each executor's
+    ///   attention seconds (0.0 where no rows), so the caller can
+    ///   attribute busy time; its capacity is reused across calls.
+    pub fn decode_step(
+        &mut self,
+        local_rows: u64,
+        local_ctx_sum: u64,
+        remote_rows: &[u64],
+        remote_ctx_sums: &[u64],
+        executor_times_out: &mut Vec<f64>,
+    ) -> DecodeStepCost {
+        debug_assert_eq!(remote_rows.len(), remote_ctx_sums.len());
+        executor_times_out.clear();
+        executor_times_out.resize(remote_rows.len(), 0.0);
+
+        let remote_rows_total: u64 = remote_rows.iter().sum();
+        let b_total = local_rows + remote_rows_total;
+
+        // Bucket selection: the step runs padded to the smallest captured
+        // pair covering (local, offload). A step beyond the grid (only
+        // possible with a hand-shrunk grid) falls back to exact charging.
+        let bucket = match self.mode {
+            CostMode::Exact => None,
+            CostMode::Bucketed => {
+                self.grid.select(local_rows as usize, remote_rows_total as usize)
+            }
+        };
+        let (rows_charged, local_pad) = match bucket {
+            Some(p) => ((p.local + p.offload) as u64, p.local as u64 - local_rows),
+            None => (b_total, 0),
+        };
+
+        // Non-attention executables run at the captured batch shape.
+        let non_attention_s = self.decode.non_attention(rows_charged);
+
+        // Each local row attends over its context plus the token being
+        // generated; each padded row reads its single dummy slot.
+        let local_attention_s = if local_rows > 0 {
+            self.decode.attention(local_ctx_sum + local_rows + local_pad)
+        } else {
+            0.0
+        };
+
+        // Remote attention on each involved executor partition, in
+        // parallel. Each executor runs the smallest offload-bucket
+        // executable covering *its own* rows (the decode-side pair above
+        // covers the step total; padding every executor to that total's
+        // bucket would overcharge multi-executor steps), so its padded
+        // rows each read one dummy KV slot.
+        let mut remote_attention_s: f64 = 0.0;
+        let mut remote_ctx_total: u64 = 0;
+        let mut any_remote = false;
+        for (pi, (&rows, &ctx_sum)) in remote_rows.iter().zip(remote_ctx_sums).enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            any_remote = true;
+            let ctx = ctx_sum + rows;
+            remote_ctx_total += ctx;
+            let pad = if bucket.is_some() {
+                self.grid.cover_offload(rows as usize).map_or(0, |b| b as u64 - rows)
+            } else {
+                0
+            };
+            let t = self.executor.attention(ctx + pad);
+            executor_times_out[pi] = t;
+            remote_attention_s = remote_attention_s.max(t);
+        }
+        if any_remote {
+            remote_attention_s += self.sync_total_s;
+        }
+
+        let step_s = non_attention_s
+            + local_attention_s.max(remote_attention_s)
+            + self.eager_launch_overhead_s;
+
+        let local_for_flops = if local_rows > 0 { local_ctx_sum + local_rows } else { 0 };
+        let flops = self.decode.step_flops(b_total, local_for_flops + remote_ctx_total);
+
+        DecodeStepCost {
+            step_s,
+            non_attention_s,
+            local_attention_s,
+            remote_attention_s,
+            flops,
+            bucket,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::gpu_model::kernels::DecodeCostTable;
+
+    fn setup(mode: CostMode) -> CostModel {
+        let gpu = GpuSpec::a100_80g();
+        let m = ModelSpec::llama2_7b();
+        let rl = Roofline::whole(gpu);
+        let rl_exec = Roofline::partition(gpu, 0.25);
+        let grid = CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256);
+        CostModel::new(
+            &rl,
+            &rl_exec,
+            &m,
+            grid,
+            mode,
+            Some(InterferenceModel::new(0.25)),
+            15e-6,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn build_grid_covers_max_batch() {
+        let g = CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256);
+        assert!(g.max_local() >= 256);
+        assert!(g.max_offload() >= 256);
+        // The configured capacities survive the extension.
+        for b in [1usize, 2, 4, 8] {
+            assert!(g.local_buckets().contains(&b));
+        }
+    }
+
+    #[test]
+    fn exact_mode_matches_legacy_inline_formula() {
+        // The exact path must reproduce the pre-refactor step math
+        // bit-for-bit (the ADRENALINE_EXACT_COSTS regression contract).
+        let gpu = GpuSpec::a100_80g();
+        let m = ModelSpec::llama2_7b();
+        let rl = Roofline::whole(gpu);
+        let rl_exec = Roofline::partition(gpu, 0.25);
+        let mut cm = setup(CostMode::Exact);
+        let mut legacy = DecodeCostTable::new(&rl, &m);
+        let mut legacy_exec = DecodeCostTable::new(&rl_exec, &m);
+        let sync_total = 15e-6 * m.n_layers as f64;
+
+        let mut out = Vec::new();
+        for (lr, lc, rr, rc) in [
+            (0u64, 0u64, vec![3u64, 0], vec![900u64, 0]),
+            (7, 4321, vec![0, 0], vec![0, 0]),
+            (100, 120_000, vec![5, 9], vec![4000, 11_000]),
+            (1, 1, vec![1, 1], vec![1, 1]),
+        ] {
+            let cost = cm.decode_step(lr, lc, &rr, &rc, &mut out);
+            assert!(cost.bucket.is_none());
+
+            // Legacy inline computation (pre-refactor decode_step_time).
+            let b_total = lr + rr.iter().sum::<u64>();
+            let non_attn = legacy.non_attention(b_total);
+            let local_attn = legacy.attention(if lr > 0 { lc + lr } else { 0 });
+            let mut remote_attn: f64 = 0.0;
+            let mut remote_ctx_total = 0u64;
+            let mut any = false;
+            for (&rows, &ctx_sum) in rr.iter().zip(&rc) {
+                if rows == 0 {
+                    continue;
+                }
+                any = true;
+                let ctx = ctx_sum + rows;
+                remote_ctx_total += ctx;
+                remote_attn = remote_attn.max(legacy_exec.attention(ctx));
+            }
+            if any {
+                remote_attn += sync_total;
+            }
+            let step = non_attn + local_attn.max(remote_attn);
+            let lf = if lr > 0 { lc + lr } else { 0 };
+            let flops = legacy.step_flops(b_total, lf + remote_ctx_total);
+            assert_eq!(cost.step_s.to_bits(), step.to_bits(), "step ({lr},{lc})");
+            assert_eq!(cost.flops.to_bits(), flops.to_bits(), "flops ({lr},{lc})");
+        }
+    }
+
+    #[test]
+    fn property_bucketed_dominates_exact() {
+        // Bucketed step time >= exact step time for any reachable batch,
+        // with equality when the sub-batches land exactly on captured
+        // buckets (no padded rows anywhere).
+        crate::util::prop::check("cost_bucketed_dominates_exact", 300, |rng| {
+            let mut exact = setup(CostMode::Exact);
+            let mut bucketed = setup(CostMode::Bucketed);
+            let local_rows = rng.range_u64(0, 201);
+            let remote = rng.range_u64(0, 51);
+            let local_ctx = local_rows * rng.range_u64(1, 2048);
+            let remote_ctx = remote * rng.range_u64(1, 2048);
+            let mut out = Vec::new();
+            let e = exact.decode_step(local_rows, local_ctx, &[remote], &[remote_ctx], &mut out);
+            let b = bucketed.decode_step(local_rows, local_ctx, &[remote], &[remote_ctx], &mut out);
+            assert!(
+                b.step_s >= e.step_s,
+                "bucketed {} < exact {} at rows=({local_rows},{remote})",
+                b.step_s,
+                e.step_s
+            );
+            // Useful FLOPs are identical: padding burns time, not work.
+            assert_eq!(b.flops.to_bits(), e.flops.to_bits());
+            // On-bucket batches pay zero padding.
+            let pair = b.bucket.expect("grid covers max_batch");
+            if pair.local as u64 == local_rows && pair.offload as u64 == remote {
+                assert_eq!(b.step_s.to_bits(), e.step_s.to_bits(), "aligned batch must be free");
+            }
+        });
+    }
+
+    #[test]
+    fn bucket_aligned_batch_costs_exactly_like_exact() {
+        let mut exact = setup(CostMode::Exact);
+        let mut bucketed = setup(CostMode::Bucketed);
+        let mut out = Vec::new();
+        // 16 local + 8 offloaded rows: both captured capacities.
+        let e = exact.decode_step(16, 16 * 700, &[8], &[8 * 700], &mut out);
+        let b = bucketed.decode_step(16, 16 * 700, &[8], &[8 * 700], &mut out);
+        assert_eq!(b.bucket, Some(BucketPair { local: 16, offload: 8 }));
+        assert_eq!(b.step_s.to_bits(), e.step_s.to_bits());
+        assert_eq!(bucketed.graph_stats().padded_slots, 0);
+        // Off-bucket: strictly more expensive.
+        let e2 = exact.decode_step(17, 17 * 700, &[8], &[8 * 700], &mut out);
+        let b2 = bucketed.decode_step(17, 17 * 700, &[8], &[8 * 700], &mut out);
+        assert!(b2.step_s > e2.step_s, "{} vs {}", b2.step_s, e2.step_s);
+        assert!(bucketed.graph_stats().padded_slots > 0);
+    }
+
+    #[test]
+    fn multi_executor_pads_each_to_its_own_bucket() {
+        // Two executors with 16 rows each: the decode-side pair covers the
+        // 32-row total, but each executor runs its own 16-row bucket — no
+        // dummy-slot padding anywhere, so the step must cost exactly like
+        // the exact model (padding each executor to the total's 32-bucket
+        // would overcharge 16 dummy rows per executor).
+        let mut exact = setup(CostMode::Exact);
+        let mut bucketed = setup(CostMode::Bucketed);
+        let mut out = Vec::new();
+        let rows = [16u64, 16];
+        let ctx = [16 * 600u64, 16 * 600];
+        let e = exact.decode_step(8, 8 * 600, &rows, &ctx, &mut out);
+        let b = bucketed.decode_step(8, 8 * 600, &rows, &ctx, &mut out);
+        assert_eq!(b.bucket, Some(BucketPair { local: 8, offload: 32 }));
+        assert_eq!(bucketed.graph_stats().padded_slots, 0);
+        assert_eq!(b.step_s.to_bits(), e.step_s.to_bits());
+    }
+
+    #[test]
+    fn executor_times_reported_per_partition() {
+        let mut cm = setup(CostMode::Bucketed);
+        let mut out = Vec::new();
+        let cost = cm.decode_step(4, 4 * 512, &[3, 0, 6], &[3 * 512, 0, 6 * 512], &mut out);
+        assert_eq!(out.len(), 3);
+        assert!(out[0] > 0.0 && out[2] > 0.0);
+        assert_eq!(out[1], 0.0);
+        // Max executor time is what the step overlaps against (plus sync).
+        assert!(cost.remote_attention_s > out[0].max(out[2]));
+    }
+
+    #[test]
+    fn prefill_time_memoizes_and_applies_interference() {
+        let gpu = GpuSpec::a100_80g();
+        let m = ModelSpec::llama2_7b();
+        let rl = Roofline::whole(gpu);
+        let rl_exec = Roofline::partition(gpu, 0.25);
+        let grid = CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256);
+        let interference = InterferenceModel::new(0.25);
+        let mut with = CostModel::new(
+            &rl,
+            &rl_exec,
+            &m,
+            grid.clone(),
+            CostMode::Bucketed,
+            Some(interference),
+            15e-6,
+            0.0,
+        );
+        let mut without =
+            CostModel::new(&rl, &rl_exec, &m, grid, CostMode::Bucketed, None, 15e-6, 0.0);
+        let base = crate::gpu_model::PrefillKernelTimes::compute(&rl, &m, 2048).total();
+        // No interference model: the raw roofline time, bit-identical.
+        assert_eq!(without.prefill_time(2048, 0.7).to_bits(), base.to_bits());
+        // With the executor colocated, the MPS reservation alone slows
+        // prefill even at duty 0, and activity slows it further.
+        let idle = with.prefill_time(2048, 0.0);
+        let busy = with.prefill_time(2048, 1.0);
+        assert!(idle > base);
+        assert!(busy >= idle);
+        // Memoized: same value again.
+        assert_eq!(with.prefill_time(2048, 0.0).to_bits(), idle.to_bits());
+    }
+}

@@ -221,6 +221,50 @@ impl DecodeCostTable {
     }
 }
 
+/// Memoized prefill step costs for one roofline — the prefill-side mirror
+/// of [`DecodeCostTable`] (§Perf, EXPERIMENTS.md).
+///
+/// `ClusterSim::prefill_time` used to recompute the full
+/// [`PrefillKernelTimes`] roofline breakdown (four kernel timings) for
+/// every prefill batch. Batched prompt-token totals repeat heavily across
+/// a run (trace lengths recur, preempted requests re-prefill at the same
+/// totals), so a dense lazy table indexed by the exact token count makes
+/// each distinct total cost one computation. Unlike decode attention,
+/// prefill attention is *quadratic* in the token count, so there is no
+/// per-token linear shortcut: the table stores the full step time,
+/// bit-identical to the direct computation (computed once, then reread).
+#[derive(Debug, Clone)]
+pub struct PrefillCostTable {
+    model: ModelSpec,
+    rl: Roofline,
+    /// Step time by exact prompt-token total (NaN = unfilled).
+    times: Vec<f64>,
+}
+
+impl PrefillCostTable {
+    pub fn new(rl: &Roofline, model: &ModelSpec) -> Self {
+        PrefillCostTable { model: *model, rl: *rl, times: Vec::new() }
+    }
+
+    /// Total prefill step time over `tokens` prompt tokens, memoized per
+    /// exact token count.
+    pub fn total(&mut self, tokens: u64) -> f64 {
+        let i = tokens as usize;
+        if i >= self.times.len() {
+            self.times.resize(i + 1, f64::NAN);
+        }
+        if self.times[i].is_nan() {
+            self.times[i] = PrefillKernelTimes::compute(&self.rl, &self.model, tokens).total();
+        }
+        self.times[i]
+    }
+
+    /// Entries currently materialized (observability).
+    pub fn filled_entries(&self) -> usize {
+        self.times.iter().filter(|v| !v.is_nan()).count()
+    }
+}
+
 /// Timed breakdown of one prefill step.
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillKernelTimes {
@@ -408,6 +452,19 @@ mod tests {
         let tw = DecodeCostTable::new(&whole, &m);
         let tp = DecodeCostTable::new(&part, &m);
         assert!(tp.attention(4096) > tw.attention(4096));
+    }
+
+    #[test]
+    fn prefill_cost_table_matches_direct_compute() {
+        let (rl, m) = setup();
+        let mut tab = PrefillCostTable::new(&rl, &m);
+        for p in [1u64, 128, 511, 512, 2048, 8192] {
+            let direct = PrefillKernelTimes::compute(&rl, &m, p).total();
+            // Same computation, cached: bit-identical, twice.
+            assert_eq!(tab.total(p), direct, "p={p}");
+            assert_eq!(tab.total(p), direct, "p={p} (cached)");
+        }
+        assert_eq!(tab.filled_entries(), 6);
     }
 
     #[test]

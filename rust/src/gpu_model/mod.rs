@@ -12,7 +12,10 @@
 //! * [`partition`] — the MPS SM-partitioning curves: superlinear bandwidth
 //!   vs SM fraction (Fig 9) and sublinear prefill slowdown (Fig 10), plus
 //!   the colocation interference model;
-//! * [`memory`] — HBM capacity accounting (weights, activations, KV).
+//! * [`memory`] — HBM capacity accounting (weights, activations, KV);
+//! * [`cost`] — the unified cost plane: memoized decode/prefill step-time
+//!   tables routed through the 2-D executable-bucket grid (the simulator
+//!   pays the same padded rows the real capture grid executes).
 //!
 //! Calibration anchors (unit-tested against the paper's numbers):
 //!   Fig 1a: prefill HBM-bw utilization < 30 %;
@@ -21,14 +24,17 @@
 //!   Fig 9: 20 % SMs ⇒ ~60 % of peak bandwidth;
 //!   Fig 18a: attention executor sustains ~83 % of the bandwidth cap.
 
+pub mod cost;
 pub mod kernels;
 pub mod memory;
 pub mod partition;
 pub mod profile;
 pub mod roofline;
 
+pub use cost::{CostMode, CostModel, DecodeStepCost, PREFILL_BW_FRAC};
 pub use kernels::{
-    DecodeCostTable, DecodeKernelTimes, KernelKind, PhaseKernels, PrefillKernelTimes,
+    DecodeCostTable, DecodeKernelTimes, KernelKind, PhaseKernels, PrefillCostTable,
+    PrefillKernelTimes,
 };
 pub use memory::HbmUsage;
 pub use partition::{bw_frac_of_sm_frac, prefill_slowdown, InterferenceModel};

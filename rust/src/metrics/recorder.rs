@@ -75,11 +75,22 @@ impl RequestMetrics {
 }
 
 /// Collects lifecycle events for all requests in a run.
+///
+/// Token-completion events stream into a sorted cumulative prefix-sum
+/// series instead of a raw event list: producers (the sim's event clock
+/// and the real path's wall clock) emit times in nondecreasing order, so
+/// the series stays sorted by construction, same-instant events coalesce
+/// into one entry (a whole decode batch lands on one step-end timestamp),
+/// and [`MetricsRecorder::throughput_in_window`] answers from two binary
+/// searches — O(log n) instead of the full-series rescan it used to do —
+/// with values identical to the linear scan (the counts are the same
+/// integers).
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
     requests: HashMap<RequestId, RequestMetrics>,
-    /// (time, tokens) decode-token completion events for throughput.
-    token_events: Vec<(f64, usize)>,
+    /// `(time, tokens completed at or before time)`, strictly increasing
+    /// in both components.
+    token_cum: Vec<(f64, u64)>,
 }
 
 impl MetricsRecorder {
@@ -95,12 +106,55 @@ impl MetricsRecorder {
         let r = self.requests.entry(id).or_default();
         debug_assert!(r.first_token_s.is_none(), "duplicate first token for {id}");
         r.first_token_s = Some(t);
-        self.token_events.push((t, 1));
+        self.push_token_event(t, 1);
     }
 
     pub fn on_token(&mut self, id: RequestId, t: f64) {
         self.requests.entry(id).or_default().token_times_s.push(t);
-        self.token_events.push((t, 1));
+        self.push_token_event(t, 1);
+    }
+
+    fn push_token_event(&mut self, t: f64, n: u64) {
+        if let Some(last) = self.token_cum.last_mut() {
+            debug_assert!(t >= last.0, "token events must arrive in time order");
+            if t <= last.0 {
+                // Same instant (or, defensively in release builds, a clock
+                // that failed to advance): coalesce — every window query
+                // sums the same tokens either way.
+                last.1 += n;
+                return;
+            }
+            let cum = last.1 + n;
+            self.token_cum.push((t, cum));
+        } else {
+            self.token_cum.push((t, n));
+        }
+    }
+
+    /// Tokens completed at times `<= t` (cumulative prefix lookup).
+    fn tokens_at_or_before(&self, t: f64) -> u64 {
+        let idx = self.token_cum.partition_point(|&(et, _)| et <= t);
+        if idx == 0 {
+            0
+        } else {
+            self.token_cum[idx - 1].1
+        }
+    }
+
+    /// Tokens completed at times strictly `< t`.
+    fn tokens_before(&self, t: f64) -> u64 {
+        let idx = self.token_cum.partition_point(|&(et, _)| et < t);
+        if idx == 0 {
+            0
+        } else {
+            self.token_cum[idx - 1].1
+        }
+    }
+
+    /// Distinct token-event timestamps retained (observability: the
+    /// coalesced series is what window queries binary-search).
+    pub fn token_event_entries(&self) -> usize {
+        self.token_cum.len()
     }
 
     pub fn on_finished(&mut self, id: RequestId, t: f64) {
@@ -134,17 +188,14 @@ impl MetricsRecorder {
         LatencyStats::from_samples(&samples)
     }
 
-    /// Output-token throughput (tokens/s) within [start, end].
+    /// Output-token throughput (tokens/s) within `[start, end]`, both ends
+    /// inclusive. Two prefix-sum lookups — O(log n) in the number of
+    /// distinct event timestamps, never a rescan.
     pub fn throughput_in_window(&self, start: f64, end: f64) -> f64 {
         if end <= start {
             return 0.0;
         }
-        let tokens: usize = self
-            .token_events
-            .iter()
-            .filter(|(t, _)| (start..=end).contains(t))
-            .map(|(_, n)| n)
-            .sum();
+        let tokens = self.tokens_at_or_before(end) - self.tokens_before(start);
         tokens as f64 / (end - start)
     }
 }
@@ -213,5 +264,77 @@ mod tests {
         let m = MetricsRecorder::new();
         assert!(m.ttft_stats().is_none());
         assert!(m.tpot_stats().is_none());
+        assert_eq!(m.throughput_in_window(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn same_instant_tokens_coalesce() {
+        // A decode batch of 50 finishing one step produces 50 on_token
+        // calls at the same timestamp: one prefix-sum entry, same counts.
+        let mut m = MetricsRecorder::new();
+        m.on_arrival(1, 0.0);
+        m.on_first_token(1, 1.0);
+        for _ in 0..49 {
+            m.on_token(1, 1.0);
+        }
+        m.on_token(1, 2.0);
+        assert_eq!(m.token_event_entries(), 2);
+        assert!((m.throughput_in_window(0.5, 1.5) - 50.0).abs() < 1e-9);
+        assert!((m.throughput_in_window(0.0, 2.0) - 25.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_boundaries_are_inclusive() {
+        let mut m = MetricsRecorder::new();
+        m.on_arrival(1, 0.0);
+        m.on_first_token(1, 1.0);
+        m.on_token(1, 2.0);
+        m.on_token(1, 3.0);
+        // [1, 2] includes both endpoint events.
+        assert!((m.throughput_in_window(1.0, 2.0) - 2.0).abs() < 1e-12);
+        // [2, 3] likewise.
+        assert!((m.throughput_in_window(2.0, 3.0) - 2.0).abs() < 1e-12);
+        // (strictly between events) empty.
+        assert_eq!(m.throughput_in_window(1.1, 1.9), 0.0);
+    }
+
+    #[test]
+    fn property_prefix_sums_match_linear_rescan() {
+        // The streaming aggregates must answer every window query with a
+        // value bit-identical to the old full-list linear scan.
+        crate::util::prop::check("metrics_prefix_vs_linear", 40, |rng| {
+            let mut m = MetricsRecorder::new();
+            let mut events: Vec<f64> = Vec::new();
+            let mut t = 0.0f64;
+            m.on_arrival(1, 0.0);
+            t += rng.f64();
+            m.on_first_token(1, t);
+            events.push(t);
+            for _ in 0..rng.range_usize(0, 300) {
+                // ~1/3 of tokens share the previous timestamp (batched
+                // step-ends), exercising the coalescing path.
+                if rng.f64() > 0.33 {
+                    t += rng.f64() * 0.2;
+                }
+                m.on_token(1, t);
+                events.push(t);
+            }
+            let horizon = t + 1.0;
+            for _ in 0..20 {
+                let a = rng.f64() * horizon;
+                let b = rng.f64() * horizon;
+                let (start, end) = if a <= b { (a, b) } else { (b, a) };
+                let linear: usize =
+                    events.iter().filter(|&&e| (start..=end).contains(&e)).count();
+                let reference =
+                    if end <= start { 0.0 } else { linear as f64 / (end - start) };
+                let got = m.throughput_in_window(start, end);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "window [{start}, {end}]: got {got}, linear {reference}"
+                );
+            }
+        });
     }
 }

@@ -35,16 +35,19 @@
 //! * each decode instance keeps incremental aggregates (local/remote
 //!   context-token sums and row counts) so `decode_step_time` is O(1) in
 //!   the batch size (O(n_prefill) for the remote max);
-//! * roofline math is memoized in [`DecodeCostTable`], warmed at the
-//!   [`GraphCache`] bucket grid.
+//! * all step-time math lives in the [`CostModel`] cost plane: memoized
+//!   decode and prefill roofline tables, routed (by default) through the
+//!   2-D executable-bucket grid so every step pays the padded rows real
+//!   graph capture executes (§3.2.2). `ServingConfig::exact_costs` or
+//!   `ADRENALINE_EXACT_COSTS=1` selects the exact pre-bucketing model.
 
 use std::collections::VecDeque;
 
 use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
-use crate::coordinator::{GraphCache, OffloadBounds, Proxy};
+use crate::coordinator::{BucketPair, OffloadBounds, Proxy};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
-    DecodeCostTable, HbmUsage, InterferenceModel, PrefillKernelTimes, Roofline,
+    CostMode, CostModel, HbmUsage, InterferenceModel, Roofline, PREFILL_BW_FRAC,
 };
 use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
 use crate::workload::{Request, RequestId, TraceGenerator, WorkloadKind};
@@ -252,6 +255,21 @@ pub struct SimReport {
     /// Discrete events processed by the run loop (the sim-perf metric
     /// benches/sim_throughput.rs tracks in BENCH_sim.json).
     pub events_processed: u64,
+    /// True when step costs were charged at exact batch sizes (ablation /
+    /// regression mode) instead of the default bucket-padded model.
+    pub exact_costs: bool,
+    /// Executable-grid selections performed (one per decode step in
+    /// bucketed mode; 0 in exact mode).
+    pub graph_selections: u64,
+    /// Batch slots actually requested, summed over selections.
+    pub graph_used_slots: u64,
+    /// Batch slots paid to bucket padding, summed over selections.
+    pub graph_padded_slots: u64,
+    /// `padded / (used + padded)` — the fraction of charged batch slots
+    /// wasted to bucket granularity (the §3.2.2 interval trade-off).
+    pub graph_padding_overhead: f64,
+    /// Selection counts per captured `(C_d, C_o)` pair (non-zero only).
+    pub graph_bucket_hits: Vec<(BucketPair, u64)>,
 }
 
 /// The cluster simulator.
@@ -268,12 +286,10 @@ pub struct ClusterSim {
     prefill_occupancy: Timeline,
     batch_size: Timeline,
     preemptions: u64,
-    rl_whole: Roofline,
     interference: InterferenceModel,
-    /// Memoized decode-step costs on the whole-GPU roofline.
-    costs: DecodeCostTable,
-    /// Memoized attention costs on the executor's SM partition.
-    costs_exec: DecodeCostTable,
+    /// The unified cost plane: memoized decode/prefill step-time tables
+    /// routed through the executable-bucket grid.
+    costs: CostModel,
     /// Pending arrivals not yet injected (sorted by time).
     trace: VecDeque<Request>,
     finished_offloaded: usize,
@@ -286,6 +302,8 @@ pub struct ClusterSim {
     scratch_finish: Vec<RequestId>,
     scratch_overflow: Vec<RequestId>,
     scratch_batch: Vec<RequestId>,
+    /// Per-executor attention seconds for the step being priced.
+    scratch_remote: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -354,14 +372,28 @@ impl ClusterSim {
             cfg.cluster.attn_executor_sm_frac.max(1e-3),
         );
 
-        // Memoized roofline costs, warmed at the executable-bucket grid
-        // (the same capacities the paper's 2-D CUDA-graph capture
-        // pre-compiles); everything else backfills lazily and exactly.
-        let grid =
-            GraphCache::new(&cfg.serving.decode_buckets, &cfg.serving.offload_buckets, None);
-        let mut costs = DecodeCostTable::new(&rl_whole, &cfg.model);
-        costs.warm(grid.local_buckets());
-        let costs_exec = DecodeCostTable::new(&rl_executor, &cfg.model);
+        // The cost plane: the executable-bucket grid (extended to cover
+        // `max_batch` the way real capture must span the servable range)
+        // plus the memoized decode/prefill roofline tables, warmed at the
+        // captured capacities. Bucketed charging is the default; the exact
+        // pre-bucketing model stays available for ablation/regression.
+        let exact = cfg.serving.exact_costs
+            || std::env::var("ADRENALINE_EXACT_COSTS").map_or(false, |v| v == "1");
+        let grid = CostModel::build_grid(
+            &cfg.serving.decode_buckets,
+            &cfg.serving.offload_buckets,
+            cfg.serving.max_batch,
+        );
+        let costs = CostModel::new(
+            &rl_whole,
+            &rl_executor,
+            &cfg.model,
+            grid,
+            if exact { CostMode::Exact } else { CostMode::Bucketed },
+            cfg.serving.offload.is_enabled().then_some(interference),
+            cfg.sync_overhead_s,
+            cfg.eager_launch_overhead_s,
+        );
 
         ClusterSim {
             cfg,
@@ -375,10 +407,8 @@ impl ClusterSim {
             prefill_occupancy: Timeline::new(),
             batch_size: Timeline::new(),
             preemptions: 0,
-            rl_whole,
             interference,
             costs,
-            costs_exec,
             trace,
             finished_offloaded: 0,
             finished_total: 0,
@@ -387,6 +417,7 @@ impl ClusterSim {
             scratch_finish: Vec::new(),
             scratch_overflow: Vec::new(),
             scratch_batch: Vec::new(),
+            scratch_remote: Vec::new(),
         }
     }
 
@@ -828,11 +859,15 @@ impl ClusterSim {
             };
             if !offloaded {
                 let dec = &mut self.decode[d];
-                // The reservation covers it; convert to block residency.
-                dec.reserved = dec.reserved.saturating_sub(need);
                 if dec.kv.admit(id, need).is_err() {
+                    // Block quantization can refuse an admission whose
+                    // token reservation fits; keep the reservation (the
+                    // waiter retries next event) or dispatch gating would
+                    // admit prompts whose KV has no home.
                     break;
                 }
+                // Admitted: the reservation converts to block residency.
+                dec.reserved = dec.reserved.saturating_sub(need);
             }
             self.decode[d].waiting.pop_front();
             let slot = self.decode[d].running.len();
@@ -867,12 +902,9 @@ impl ClusterSim {
     // ----- timing models ----------------------------------------------------
 
     fn prefill_time(&mut self, pi: usize, tokens: u64) -> f64 {
-        let base = PrefillKernelTimes::compute(&self.rl_whole, &self.cfg.model, tokens).total();
-        if !self.cfg.serving.offload.is_enabled() {
-            return base;
-        }
         // MPS reservation always applies; bandwidth contention applies in
-        // proportion to the executor's recent duty cycle.
+        // proportion to the executor's recent duty cycle. (The cost plane
+        // skips both when offloading is disabled — no executor colocated.)
         let duty = {
             let p = &self.prefill[pi];
             if p.prefill_busy_s + p.executor_busy_s > 0.0 {
@@ -881,53 +913,38 @@ impl ClusterSim {
                 0.0
             }
         };
-        let prefill_bw_frac = 0.25; // Fig 1a: prefill's own bandwidth draw
-        let attn_bw = self.interference.attn_bw_cap(self.cfg.cluster.gpu.bw_eff);
-        let idle = self.interference.prefill_slowdown_idle();
-        let active = self.interference.prefill_slowdown_active(prefill_bw_frac, attn_bw);
-        base * (idle * (1.0 - duty) + active * duty)
+        self.costs.prefill_time(tokens, duty)
     }
 
     /// One decode step for instance `d`: returns (seconds, flops).
     ///
     /// O(1) in the batch size: the context sums come from the incremental
-    /// aggregates, and the roofline math is memoized in [`DecodeCostTable`]
-    /// (each running row attends over its `kv_tokens` plus the token being
-    /// generated, hence the `+ rows` terms).
+    /// aggregates, and all roofline math (memoized tables + bucket
+    /// selection and padding) lives in the [`CostModel`] cost plane. The
+    /// per-executor attention seconds come back through a reusable scratch
+    /// buffer so executor busy-time attribution stays allocation-free.
     fn decode_step_time(&mut self, d: usize) -> (f64, f64) {
-        let b_total = self.decode[d].running.len() as u64;
-        let local_rows = self.decode[d].local_rows;
-        let local_ctx = self.decode[d].local_ctx + local_rows;
-
-        let non_attn = self.costs.non_attention(b_total);
-        let local_attn = self.costs.attention(if local_rows > 0 { local_ctx } else { 0 });
-
-        // Remote attention on each involved executor partition, in parallel.
-        let mut remote_attn: f64 = 0.0;
-        let mut remote_ctx_total: u64 = 0;
-        let mut any_remote = false;
-        for pi in 0..self.prefill.len() {
-            let rows = self.decode[d].remote_rows[pi];
-            if rows == 0 {
-                continue;
+        let mut remote_times = std::mem::take(&mut self.scratch_remote);
+        let dec = &self.decode[d];
+        debug_assert_eq!(
+            dec.local_rows + dec.remote_rows.iter().sum::<u64>(),
+            dec.running.len() as u64,
+            "row aggregates must cover the running set"
+        );
+        let cost = self.costs.decode_step(
+            dec.local_rows,
+            dec.local_ctx,
+            &dec.remote_rows,
+            &dec.remote_ctx,
+            &mut remote_times,
+        );
+        for (pi, &t) in remote_times.iter().enumerate() {
+            if t > 0.0 {
+                self.prefill[pi].executor_busy_s += t;
             }
-            any_remote = true;
-            let ctx = self.decode[d].remote_ctx[pi] + rows;
-            remote_ctx_total += ctx;
-            let t = self.costs_exec.attention(ctx);
-            self.prefill[pi].executor_busy_s += t;
-            remote_attn = remote_attn.max(t);
         }
-        if any_remote {
-            remote_attn += self.cfg.sync_overhead_s * self.cfg.model.n_layers as f64;
-        }
-
-        let step = non_attn
-            + local_attn.max(remote_attn)
-            + self.cfg.eager_launch_overhead_s;
-        let local_for_flops = if local_rows > 0 { local_ctx } else { 0 };
-        let flops = self.costs.step_flops(b_total, local_for_flops + remote_ctx_total);
-        (step, flops)
+        self.scratch_remote = remote_times;
+        (cost.step_s, cost.flops)
     }
 
     // ----- accounting -------------------------------------------------------
@@ -967,9 +984,8 @@ impl ClusterSim {
         let gpu = self.cfg.cluster.gpu;
         let p0 = &self.prefill[0];
         let span = end.max(1e-9);
-        let prefill_bw_frac = 0.25;
         let exec_bw_frac = self.interference.attn_bw_cap(gpu.bw_eff);
-        let prefill_hbm_bw_util = (p0.prefill_busy_s * prefill_bw_frac
+        let prefill_hbm_bw_util = (p0.prefill_busy_s * PREFILL_BW_FRAC
             + p0.executor_busy_s * exec_bw_frac)
             / span;
         let executor_duty = p0.executor_busy_s / span;
@@ -1029,6 +1045,7 @@ impl ClusterSim {
             }
         };
         let good_frac = frac(met_both);
+        let gstats = self.costs.graph_stats();
 
         SimReport {
             ttft: self.metrics.ttft_stats(),
@@ -1058,6 +1075,12 @@ impl ClusterSim {
             batch_size: self.batch_size,
             sim_end_s: end,
             events_processed: self.events_processed,
+            exact_costs: self.costs.mode() == CostMode::Exact,
+            graph_selections: gstats.selections,
+            graph_used_slots: gstats.used_slots,
+            graph_padded_slots: gstats.padded_slots,
+            graph_padding_overhead: self.costs.padding_overhead(),
+            graph_bucket_hits: self.costs.bucket_hits(),
         }
     }
 }
@@ -1142,6 +1165,37 @@ mod tests {
         assert!(r.tpot.map(|t| t.count).unwrap_or(0) > 0);
         assert!(r.tokens_conserved);
         assert_eq!(r.preemptions, r.req_preemptions_total);
+    }
+
+    #[test]
+    fn bucketed_costs_are_default_and_record_padding() {
+        let r = quick(true, 2.0, 40.0);
+        assert!(!r.exact_costs, "bucketed charging is the default");
+        assert!(r.graph_selections > 0, "every decode step selects a pair");
+        assert!(r.graph_used_slots > 0);
+        assert!(r.graph_padded_slots > 0, "real batches rarely land on buckets");
+        assert!((0.0..1.0).contains(&r.graph_padding_overhead));
+        assert!(!r.graph_bucket_hits.is_empty());
+        assert_eq!(
+            r.graph_bucket_hits.iter().map(|&(_, n)| n).sum::<u64>(),
+            r.graph_selections,
+            "hit histogram must account for every selection"
+        );
+    }
+
+    #[test]
+    fn exact_cost_switch_bypasses_the_grid() {
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 2.0);
+        cfg.duration_s = 40.0;
+        cfg.serving.exact_costs = true;
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.exact_costs);
+        assert_eq!(r.graph_selections, 0);
+        assert_eq!(r.graph_padded_slots, 0);
+        assert_eq!(r.graph_padding_overhead, 0.0);
+        assert!(r.graph_bucket_hits.is_empty());
+        assert!(r.finished > 0);
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod run;
 
 pub use cluster::{ClusterSim, SimConfig, SimReport};
 pub use run::{
-    parallel_map, run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, E2eConfig,
-    E2ePoint,
+    parallel_map, parallel_map_capped, run_e2e, run_e2e_serial, run_ratio_sweep,
+    run_ratio_sweep_serial, E2eConfig, E2ePoint,
 };

@@ -26,8 +26,23 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_capped(n, usize::MAX, f)
+}
+
+/// [`parallel_map`] with an explicit worker cap. Callers whose work items
+/// fan out *again* internally (e.g. the `figures` binary runs figure
+/// groups that each drive parallel sweeps) cap the outer level so total
+/// live work stays near the core count instead of groups × cores.
+pub fn parallel_map_capped<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let force_serial = std::env::var("ADRENALINE_SERIAL").map_or(false, |v| v == "1");
-    let threads = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    let threads = std::thread::available_parallelism()
+        .map_or(1, |p| p.get())
+        .min(n)
+        .min(max_threads.max(1));
     if force_serial || threads <= 1 {
         return (0..n).map(f).collect();
     }
@@ -117,6 +132,9 @@ pub struct E2ePoint {
     pub finished: usize,
     pub preemptions: u64,
     pub offloaded_fraction: f64,
+    /// Fraction of charged batch slots wasted to executable-bucket
+    /// padding at this point (0 under `ADRENALINE_EXACT_COSTS=1`).
+    pub graph_padding_overhead: f64,
 }
 
 impl E2ePoint {
@@ -131,6 +149,7 @@ impl E2ePoint {
             finished: r.finished,
             preemptions: r.preemptions,
             offloaded_fraction: r.offloaded_fraction,
+            graph_padding_overhead: r.graph_padding_overhead,
         }
     }
 }
@@ -268,6 +287,16 @@ mod tests {
         assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
     }
 
+    #[test]
+    fn parallel_map_capped_matches_uncapped() {
+        for cap in [1usize, 2, 64] {
+            let out = parallel_map_capped(40, cap, |i| i * i);
+            assert_eq!(out, (0..40).map(|i| i * i).collect::<Vec<_>>(), "cap {cap}");
+        }
+        // cap 0 is clamped to 1 worker, not a deadlock.
+        assert_eq!(parallel_map_capped(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
     /// NaN-tolerant exact equality (sweep points at unfinished rates can
     /// legitimately carry NaN latency means).
     fn feq(a: f64, b: f64) -> bool {
@@ -294,6 +323,7 @@ mod tests {
             assert_eq!(p.finished, s.finished);
             assert_eq!(p.preemptions, s.preemptions);
             assert!(feq(p.offloaded_fraction, s.offloaded_fraction));
+            assert!(feq(p.graph_padding_overhead, s.graph_padding_overhead));
         }
     }
 }

@@ -80,10 +80,17 @@ pub fn fmt_duration(s: f64) -> String {
     }
 }
 
+/// One figure data row, formatted but not printed — the `figures` binary
+/// buffers rows per figure group so groups can run in parallel and still
+/// print in a stable order.
+pub fn figure_row_str(figure: &str, series: &str, x: f64, y: f64) -> String {
+    format!("figure={figure} series={series} x={x} y={y:.6}")
+}
+
 /// Print a figure data row: a stable, grep-able format shared by benches
 /// and the `figures` binary.
 pub fn figure_row(figure: &str, series: &str, x: f64, y: f64) {
-    println!("figure={figure} series={series} x={x} y={y:.6}");
+    println!("{}", figure_row_str(figure, series, x, y));
 }
 
 /// Black-box hint to stop the optimizer eliding benched work (stable-Rust

@@ -2,6 +2,16 @@
 //! A100-scale simulator: who wins, by roughly what factor, and where the
 //! crossovers fall (DESIGN.md §4). Absolute numbers are testbed-specific;
 //! these tests pin the qualitative structure of every headline figure.
+//!
+//! Anchors are calibrated for the *bucketed* cost model (the default
+//! since the cost-plane refactor: decode steps pay the padded rows of
+//! the 2-D executable grid). Padding perturbs absolute step times by at
+//! most the non-attention kernels' near-flat batch scaling plus one
+//! dummy KV slot per padded attention row, so the paper-shape ratios are
+//! only nudged; bands below were widened where the old bound sat close
+//! to the measured exact-cost value (see EXPERIMENTS.md §Perf for the
+//! recalibration protocol, and `ADRENALINE_EXACT_COSTS=1` to reproduce
+//! the pre-refactor numbers bit-for-bit).
 
 use adrenaline::config::ModelSpec;
 use adrenaline::sim::{run_e2e, ClusterSim, E2eConfig, SimConfig};
@@ -46,8 +56,11 @@ fn fig11d_throughput_win_after_plateau() {
     );
     let adre_hi = quick(m, WorkloadKind::ShareGpt, true, 32.0, 120.0);
     let speedup = adre_hi.throughput / base_hi.throughput;
+    // Band floor recalibrated 1.2 -> 1.15 for bucketed costs: Adrenaline's
+    // larger combined (local + offloaded) batches pad slightly more than
+    // the baseline's local-only batches.
     assert!(
-        (1.2..2.2).contains(&speedup),
+        (1.15..2.2).contains(&speedup),
         "Adrenaline speedup at saturation = {speedup:.2} (paper: ~1.47x for 7B ShareGPT)"
     );
 }

@@ -4,12 +4,16 @@
 //!   HBM budgets + OpenThoughts-style long outputs — the preemption-heavy
 //!   regime of Figs 13/14), with monotone preemption counters;
 //! * bit-identical SimReports from the parallel sweep driver and the
-//!   serial reference path.
+//!   serial reference path, on both the bucketed (default) and exact
+//!   cost paths;
+//! * the cost plane's bucketed-vs-exact contract: bucketed step time
+//!   dominates exact, with equality on bucket-aligned batches.
 
-use adrenaline::config::ModelSpec;
+use adrenaline::config::{GpuSpec, ModelSpec};
+use adrenaline::gpu_model::{CostMode, CostModel, InterferenceModel, Roofline};
 use adrenaline::sim::{
-    run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, ClusterSim, SimConfig,
-    SimReport,
+    parallel_map, run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, ClusterSim,
+    SimConfig, SimReport,
 };
 use adrenaline::util::prop;
 use adrenaline::workload::WorkloadKind;
@@ -89,6 +93,13 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport) {
     }
     assert_eq!(a.decode_occupancy.points(), b.decode_occupancy.points());
     assert_eq!(a.batch_size.points(), b.batch_size.points());
+    // Cost-plane observability must be deterministic too.
+    assert_eq!(a.exact_costs, b.exact_costs);
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_used_slots, b.graph_used_slots);
+    assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
+    assert!(feq(a.graph_padding_overhead, b.graph_padding_overhead));
+    assert_eq!(a.graph_bucket_hits, b.graph_bucket_hits);
 }
 
 #[test]
@@ -102,6 +113,110 @@ fn ratio_sweep_parallel_matches_serial_bitwise() {
         assert_eq!(rp, rs, "ratio order must match the serial driver");
         assert_reports_identical(p, s);
     }
+}
+
+/// The serial/parallel bitwise-equivalence contract holds on the bucketed
+/// cost path (the new default) and on the exact ablation path alike.
+#[test]
+fn bucketed_and_exact_cost_paths_parallel_match_serial() {
+    let m = ModelSpec::llama2_7b();
+    let mk = |exact: bool, rate: f64| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = 25.0;
+        cfg.serving.exact_costs = exact;
+        cfg
+    };
+    let cfgs = [mk(false, 4.0), mk(true, 4.0), mk(false, 12.0), mk(true, 12.0)];
+    let par: Vec<SimReport> =
+        parallel_map(cfgs.len(), |i| ClusterSim::new(cfgs[i].clone()).run());
+    let ser: Vec<SimReport> =
+        cfgs.iter().map(|c| ClusterSim::new(c.clone()).run()).collect();
+    for (p, s) in par.iter().zip(&ser) {
+        assert_reports_identical(p, s);
+    }
+    // The bucketed runs actually exercised the grid; exact runs bypass it.
+    assert!(!par[0].exact_costs && par[0].graph_selections > 0);
+    assert!(par[0].graph_padded_slots > 0, "real batches rarely land on buckets");
+    assert!(par[1].exact_costs);
+    assert_eq!(par[1].graph_selections, 0);
+}
+
+/// Sim-level fidelity sanity: switching from exact to bucketed charging
+/// perturbs throughput by the padding share, not by integer factors —
+/// both runs are deterministic, so this is a fixed-number regression
+/// band, not a flake risk.
+#[test]
+fn bucketed_run_stays_near_exact_run() {
+    let m = ModelSpec::llama2_7b();
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 8.0);
+    cfg.duration_s = 60.0;
+    let bucketed = ClusterSim::new(cfg.clone()).run();
+    cfg.serving.exact_costs = true;
+    let exact = ClusterSim::new(cfg).run();
+    assert!(bucketed.finished > 0 && exact.finished > 0);
+    let ratio = bucketed.throughput / exact.throughput;
+    assert!(
+        (0.5..1.5).contains(&ratio),
+        "bucketed/exact throughput ratio {ratio:.3} (bucketed {} exact {})",
+        bucketed.throughput,
+        exact.throughput
+    );
+}
+
+/// The exact-vs-bucketed monotonicity contract at the cost-plane level:
+/// a bucketed step is never cheaper than the exact step, and costs the
+/// same exactly when the (local, offload) sub-batches land on captured
+/// buckets.
+#[test]
+fn property_bucketed_step_time_dominates_exact() {
+    let gpu = GpuSpec::a100_80g();
+    let m = ModelSpec::llama2_7b();
+    let rl = Roofline::whole(gpu);
+    let rl_exec = Roofline::partition(gpu, 0.25);
+    let mk = |mode: CostMode| {
+        CostModel::new(
+            &rl,
+            &rl_exec,
+            &m,
+            CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
+            mode,
+            Some(InterferenceModel::new(0.25)),
+            15e-6,
+            0.0,
+        )
+    };
+    prop::check("sim_bucketed_dominates_exact", 200, |rng| {
+        let mut exact = mk(CostMode::Exact);
+        let mut bucketed = mk(CostMode::Bucketed);
+        let local_rows = rng.range_u64(0, 256);
+        let n_exec = rng.range_usize(1, 4);
+        let remote_rows: Vec<u64> =
+            (0..n_exec).map(|_| rng.range_u64(0, 32)).collect();
+        let local_ctx = local_rows * rng.range_u64(1, 1500);
+        let remote_ctx: Vec<u64> =
+            remote_rows.iter().map(|&r| r * rng.range_u64(1, 1500)).collect();
+        let mut out = Vec::new();
+        let e = exact.decode_step(local_rows, local_ctx, &remote_rows, &remote_ctx, &mut out);
+        let b =
+            bucketed.decode_step(local_rows, local_ctx, &remote_rows, &remote_ctx, &mut out);
+        assert!(
+            b.step_s >= e.step_s,
+            "bucketed {} < exact {} (local={local_rows} remote={remote_rows:?})",
+            b.step_s,
+            e.step_s
+        );
+        assert_eq!(b.flops.to_bits(), e.flops.to_bits(), "padding must not inflate FLOPs");
+    });
+
+    // Equality on a bucket-aligned batch (single executor, both
+    // sub-batches exactly at captured capacities).
+    let mut exact = mk(CostMode::Exact);
+    let mut bucketed = mk(CostMode::Bucketed);
+    let mut out = Vec::new();
+    let e = exact.decode_step(32, 32 * 800, &[4], &[4 * 800], &mut out);
+    let b = bucketed.decode_step(32, 32 * 800, &[4], &[4 * 800], &mut out);
+    assert_eq!(b.step_s.to_bits(), e.step_s.to_bits(), "aligned batches pay no padding");
+    assert_eq!(bucketed.graph_stats().padded_slots, 0);
 }
 
 #[test]
