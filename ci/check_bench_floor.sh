@@ -1,0 +1,55 @@
+#!/usr/bin/env bash
+# Hot-path regression gate: fail when the sim_throughput smoke run's
+# events/s falls below a checked-in floor.
+#
+# The gated metric is `events_per_second` of the `saturated_32rps`
+# scenario in BENCH_sim.json — the most step-dense scenario, so an
+# accidental per-step allocation or rescan shows up here first.
+#
+# Floor calibration protocol (EXPERIMENTS.md §Perf):
+#   * the floor lives in ci/sim_bench_floor.txt and is deliberately set
+#     well below the recorded runner-class numbers (so runner variance
+#     never false-positives) but close enough to catch an
+#     order-of-magnitude hot-path regression;
+#   * for an intentional recalibration (e.g. the cost model gets richer),
+#     override with SIM_BENCH_FLOOR in the workflow env for the PR that
+#     moves it, and update the checked-in floor in the same PR.
+#
+# Usage: check_bench_floor.sh [BENCH_sim.json]
+set -euo pipefail
+
+json="${1:-BENCH_sim.json}"
+script_dir="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+floor="${SIM_BENCH_FLOOR:-$(tr -d '[:space:]' < "$script_dir/sim_bench_floor.txt")}"
+
+if [[ ! -f "$json" ]]; then
+    echo "bench gate: $json not found (did the bench step run?)" >&2
+    exit 1
+fi
+
+python3 - "$json" "$floor" <<'PY'
+import json, sys
+
+path, floor = sys.argv[1], float(sys.argv[2])
+with open(path) as f:
+    rows = json.load(f)
+eps = None
+for row in rows:
+    if row.get("bench") == "sim_throughput/saturated_32rps":
+        eps = float(row["events_per_second"])
+        break
+if eps is None:
+    print(f"bench gate: saturated_32rps row missing from {path}", file=sys.stderr)
+    sys.exit(1)
+print(f"bench gate: saturated_32rps events/s = {eps:.0f} (floor = {floor:.0f})")
+if eps >= floor:
+    print("bench gate: PASS")
+else:
+    print(
+        f"bench gate: FAIL — events/s {eps:.0f} below floor {floor:.0f}. "
+        "If this regression is intentional, recalibrate per the protocol "
+        "in ci/check_bench_floor.sh.",
+        file=sys.stderr,
+    )
+    sys.exit(1)
+PY

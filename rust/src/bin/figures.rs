@@ -2,7 +2,8 @@
 //! evaluation (DESIGN.md §4 maps each to its modules).
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
-//!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|all]`
+//!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
+//!                  rebalance|buckets|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -23,7 +24,7 @@
 //! executable grid, §3.2.2); set `ADRENALINE_EXACT_COSTS=1` to reproduce
 //! the exact-cost ablation.
 
-use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, SloConfig};
+use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, RebalanceConfig, SloConfig};
 use adrenaline::coordinator::OffloadBounds;
 use adrenaline::gpu_model::{
     bw_frac_of_sm_frac, prefill_slowdown, DecodeKernelTimes, HbmUsage, KernelKind, PhaseKernels,
@@ -34,7 +35,7 @@ use adrenaline::sim::{
     SimReport,
 };
 use adrenaline::util::bench::figure_row_str;
-use adrenaline::workload::WorkloadKind;
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
 
 /// The figure groups, in output order. Each writes its rows into a
 /// buffer so `all` can run groups concurrently.
@@ -56,6 +57,8 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("fig18", fig18),
     ("launch", launch),
     ("scaling", scaling),
+    ("rebalance", rebalance),
+    ("buckets", buckets),
 ];
 
 fn main() {
@@ -383,6 +386,112 @@ fn launch(out: &mut String) {
     );
     row(out, "launch", "ob_mem", 0.0, b.ob_mem);
     row(out, "launch", "ob", 0.0, b.ob());
+}
+
+/// Runtime offload rebalancing under bursty traffic (ISSUE 3 /
+/// EXPERIMENTS.md §Scenarios): static admission-time `LoadAware` vs the
+/// dynamic rebalancer on the same 3x-burst trace, plus the dynamic run's
+/// per-tick prefill-pressure and offloaded-fraction timelines — the
+/// tracking chart (fraction climbs with the admission wave each burst,
+/// and migrations keep it at the OB bound through the troughs).
+fn rebalance(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let pattern = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+    let variants: [(&str, Option<RebalanceConfig>); 2] =
+        [("static", None), ("dynamic", Some(RebalanceConfig::default()))];
+    let reports: Vec<SimReport> = parallel_map(variants.len(), |i| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+        cfg.duration_s = 120.0;
+        cfg.arrivals = pattern;
+        cfg.serving.rebalance = variants[i].1;
+        ClusterSim::new(cfg).run()
+    });
+    for ((name, _), r) in variants.iter().zip(&reports) {
+        row(out, "rebalance", &format!("{name}_tput_tok_s"), 0.0, r.throughput);
+        row(out, "rebalance", &format!("{name}_goodput_tok_s"), 0.0, r.goodput);
+        row(
+            out,
+            "rebalance",
+            &format!("{name}_ttft_s"),
+            0.0,
+            r.ttft.map(|s| s.mean).unwrap_or(f64::NAN),
+        );
+        row(
+            out,
+            "rebalance",
+            &format!("{name}_tpot_p99_s"),
+            0.0,
+            r.tpot.map(|s| s.p99).unwrap_or(f64::NAN),
+        );
+        row(out, "rebalance", &format!("{name}_offloaded_fraction"), 0.0, r.offloaded_fraction);
+        row(out, "rebalance", &format!("{name}_migrations"), 0.0, r.migrations_total as f64);
+        row(
+            out,
+            "rebalance",
+            &format!("{name}_migration_tokens"),
+            0.0,
+            r.migration_tokens_moved as f64,
+        );
+    }
+    // The dynamic run's tick timelines (strided to ~60 chart points).
+    let dynamic = &reports[1];
+    for (series, tl) in [
+        ("pressure", &dynamic.prefill_pressure_timeline),
+        ("offloaded_frac", &dynamic.offloaded_frac_timeline),
+    ] {
+        let pts = tl.points();
+        let stride = (pts.len() / 60).max(1);
+        for (t, v) in pts.iter().step_by(stride) {
+            row(out, "rebalance", series, *t, *v);
+        }
+    }
+}
+
+/// End-to-end bucket-granularity sweep (the ROADMAP follow-on to PR 2):
+/// the same saturated ShareGPT run under coarser/finer executable grids,
+/// charting the padding-overhead vs grid-size frontier that
+/// BENCH_graph_bucket.json tracks microscopically — now with the
+/// throughput cost attached. `exact` is the zero-padding reference
+/// (ADRENALINE_EXACT_COSTS ablation path).
+fn buckets(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let grids: &[(&str, &[usize])] = &[
+        ("coarse2", &[1, 2]),
+        ("pow2_8", &[1, 2, 4, 8]),
+        ("pow2_32", &[1, 2, 4, 8, 16, 32]),
+        ("dense16", &[1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16]),
+    ];
+    let reports: Vec<SimReport> = parallel_map(grids.len() + 1, |i| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 24.0);
+        cfg.duration_s = 60.0;
+        if i < grids.len() {
+            cfg.serving.decode_buckets = grids[i].1.to_vec();
+            cfg.serving.offload_buckets = grids[i].1.to_vec();
+        } else {
+            cfg.serving.exact_costs = true;
+        }
+        ClusterSim::new(cfg).run()
+    });
+    for (i, r) in reports.iter().enumerate() {
+        let name = if i < grids.len() { grids[i].0 } else { "exact" };
+        let grid_size = if i < grids.len() { grids[i].1.len() as f64 } else { 0.0 };
+        row(out, "buckets", &format!("{name}_grid_capacities"), grid_size, r.throughput);
+        row(out, "buckets", &format!("{name}_tput_tok_s"), 0.0, r.throughput);
+        row(
+            out,
+            "buckets",
+            &format!("{name}_padding_overhead"),
+            0.0,
+            r.graph_padding_overhead,
+        );
+        row(
+            out,
+            "buckets",
+            &format!("{name}_tpot_s"),
+            0.0,
+            r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
+        );
+    }
 }
 
 /// §3.4.2 flexibility: prefill-pool scaling. Eq 1's OB_mem is linear in

@@ -17,4 +17,4 @@ mod serving;
 
 pub use cluster::{ClusterSpec, GpuSpec};
 pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
-pub use serving::{OffloadPolicy, ServingConfig, SloConfig};
+pub use serving::{OffloadPolicy, RebalanceConfig, ServingConfig, SloConfig};

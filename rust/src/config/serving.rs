@@ -41,6 +41,28 @@ impl OffloadPolicy {
     }
 }
 
+/// Runtime offload-rebalancer knobs (§3.4.2 extended: the feedback
+/// controller that migrates decode attention between local and offloaded
+/// while requests run, instead of fixing the split at admission).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceConfig {
+    /// Controller tick period, seconds.
+    pub interval_s: f64,
+    /// Half-width of the prefill-pressure hysteresis band around the
+    /// setpoint (pressure = queued prompt tokens / max_prefill_tokens;
+    /// setpoint 0.5): the controller enters burst mode at
+    /// `0.5 + hysteresis` and leaves it at `0.5 - hysteresis`.
+    pub hysteresis: f64,
+    /// Cap on migrations started per tick (bounds KV-transfer churn).
+    pub max_migrations_per_interval: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { interval_s: 0.25, hysteresis: 0.25, max_migrations_per_interval: 16 }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -77,6 +99,10 @@ pub struct ServingConfig {
     /// pre-bucketing baselines. Env `ADRENALINE_EXACT_COSTS=1` forces it
     /// regardless of this field.
     pub exact_costs: bool,
+    /// Runtime offload rebalancing. `None` (the default) keeps the
+    /// one-shot admission-time split — bit-identical to the
+    /// pre-rebalancer simulator (pinned by `rust/tests/rebalance.rs`).
+    pub rebalance: Option<RebalanceConfig>,
 }
 
 impl Default for ServingConfig {
@@ -93,6 +119,7 @@ impl Default for ServingConfig {
             executor_kv_capacity_tokens: None,
             decode_kv_capacity_tokens: None,
             exact_costs: false,
+            rebalance: None,
         }
     }
 }
@@ -165,6 +192,28 @@ impl ServingConfig {
         if let Some(b) = v.get("exact_costs").and_then(Json::as_bool) {
             cfg.exact_costs = b;
         }
+        // Only an *object* enables the controller: `"rebalance": null`
+        // (the natural spelling of "off") stays off, and anything else is
+        // a config error rather than silently-enabled defaults.
+        match v.get("rebalance") {
+            None | Some(Json::Null) => {}
+            Some(rb @ Json::Obj(_)) => {
+                let mut r = RebalanceConfig::default();
+                if let Some(x) = rb.get("interval_s").and_then(Json::as_f64) {
+                    r.interval_s = x;
+                }
+                if let Some(x) = rb.get("hysteresis").and_then(Json::as_f64) {
+                    r.hysteresis = x;
+                }
+                if let Some(x) = rb.get("max_migrations").and_then(Json::as_u64) {
+                    r.max_migrations_per_interval = x as usize;
+                }
+                anyhow::ensure!(r.interval_s > 0.0, "rebalance interval_s must be positive");
+                anyhow::ensure!(r.hysteresis >= 0.0, "rebalance hysteresis must be >= 0");
+                cfg.rebalance = Some(r);
+            }
+            Some(other) => anyhow::bail!("bad rebalance config: {other}"),
+        }
         Ok(cfg)
     }
 
@@ -206,6 +255,16 @@ impl ServingConfig {
             o.insert("decode_kv_tokens".into(), Json::Num(n as f64));
         }
         o.insert("exact_costs".into(), Json::Bool(self.exact_costs));
+        if let Some(r) = self.rebalance {
+            let mut rb = BTreeMap::new();
+            rb.insert("interval_s".into(), Json::Num(r.interval_s));
+            rb.insert("hysteresis".into(), Json::Num(r.hysteresis));
+            rb.insert(
+                "max_migrations".into(),
+                Json::Num(r.max_migrations_per_interval as f64),
+            );
+            o.insert("rebalance".into(), Json::Obj(rb));
+        }
         Json::Obj(o).to_string()
     }
 }
@@ -237,6 +296,15 @@ mod tests {
             ServingConfig::default(),
             ServingConfig::baseline(),
             ServingConfig { offload: OffloadPolicy::FixedRatio(0.7), ..Default::default() },
+            ServingConfig { rebalance: Some(RebalanceConfig::default()), ..Default::default() },
+            ServingConfig {
+                rebalance: Some(RebalanceConfig {
+                    interval_s: 0.5,
+                    hysteresis: 0.1,
+                    max_migrations_per_interval: 4,
+                }),
+                ..Default::default()
+            },
         ] {
             let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
             assert_eq!(cfg, back);
@@ -258,6 +326,26 @@ mod tests {
         assert!(cfg.exact_costs);
         let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn rebalance_defaults_off_and_partial_json_fills_defaults() {
+        assert!(ServingConfig::default().rebalance.is_none(), "rebalancing is opt-in");
+        let cfg = ServingConfig::from_json(r#"{"rebalance": {"interval_s": 1.0}}"#).unwrap();
+        let r = cfg.rebalance.expect("rebalance object enables the controller");
+        assert_eq!(r.interval_s, 1.0);
+        assert_eq!(r.hysteresis, RebalanceConfig::default().hysteresis);
+        assert_eq!(
+            r.max_migrations_per_interval,
+            RebalanceConfig::default().max_migrations_per_interval
+        );
+        assert!(ServingConfig::from_json(r#"{"rebalance": {"interval_s": 0}}"#).is_err());
+        // null is the spelled-out "off"; non-objects are config errors,
+        // never silently-enabled defaults.
+        let off = ServingConfig::from_json(r#"{"rebalance": null}"#).unwrap();
+        assert!(off.rebalance.is_none());
+        assert!(ServingConfig::from_json(r#"{"rebalance": true}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"rebalance": 0.25}"#).is_err());
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod scheduler;
 pub use bounds::OffloadBounds;
 pub use graph_cache::{BucketPair, GraphCache, GraphCacheStats};
 pub use proxy::{Proxy, RouteDecision};
-pub use scheduler::{OffloadScheduler, RuntimeMetadata};
+pub use scheduler::{OffloadScheduler, RebalanceController, RebalanceMode, RuntimeMetadata};

@@ -107,6 +107,34 @@ impl Proxy {
         self.meta[instance].remove(id);
     }
 
+    /// A running request's attention migrated between local and offloaded
+    /// (the runtime rebalancer, §3.4.2 extended). Keeps the metadata the
+    /// offload scheduler consults consistent with actual residency.
+    /// Returns `true` iff the request was tracked.
+    pub fn on_migrated(&mut self, instance: usize, id: RequestId, offloaded: bool) -> bool {
+        self.meta[instance].set_offloaded(id, offloaded)
+    }
+
+    /// Would migrating tracked *local* request `id` to offloaded keep
+    /// decode instance `instance` within Algorithm 1's OB bound? Unlike
+    /// admission (where the candidate is in neither set), a migration
+    /// moves the request's tokens from the local sum to the offloaded sum,
+    /// so the post-move state is checked:
+    /// `attn_used + used <= (decode_used - used) · OB`.
+    pub fn migration_within_bound(&self, instance: usize, id: RequestId) -> bool {
+        let ob = self.scheduler.bounds.ob();
+        if ob <= 0.0 {
+            return false;
+        }
+        let m = &self.meta[instance];
+        if m.is_offloaded(id) {
+            return false;
+        }
+        let Some(used) = m.used_token_of(id) else { return false };
+        let decode_after = m.decode_used_tokens().saturating_sub(used) as f64;
+        (m.attn_used_tokens() + used) as f64 <= decode_after * ob
+    }
+
     /// Online B_TPOT refresh (§3.4.2): the proxy watches observed decode
     /// batch sizes that met the TPOT SLO and feeds the max back in.
     pub fn observe_b_tpot(&mut self, b_tpot: usize) {
@@ -201,6 +229,33 @@ mod tests {
         p.set_prefill_instances(4);
         assert!((p.bounds().ob_mem / before - 2.0).abs() < 1e-9);
         assert_eq!(p.n_prefill(), 4);
+    }
+
+    #[test]
+    fn migration_updates_metadata_and_respects_bound() {
+        // Disabled policy: every admission stays local, so the rebalancer
+        // (which checks the bound independently of the admission policy)
+        // is the only thing moving requests.
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 1);
+        let r0 = p.route(&req(0, 1000, 100));
+        let r1 = p.route(&req(1, 100, 50));
+        assert_eq!(r0.offload, OffloadDecision::Local);
+        assert_eq!(r1.offload, OffloadDecision::Local);
+        // ob = min(0.7, (160-80)/80) = 0.7. Moving 100 tokens:
+        // attn(0)+100 <= (1100-100)*0.7 -> 100 <= 700: within bound.
+        assert!(p.migration_within_bound(0, 1));
+        // Moving the 1000-token request: 1000 <= (1100-1000)*0.7 fails.
+        assert!(!p.migration_within_bound(0, 0));
+        // Untracked ids are refused.
+        assert!(!p.migration_within_bound(0, 99));
+        assert!(p.on_migrated(0, 1, true));
+        assert!(p.metadata(0).is_offloaded(1));
+        assert!(!p.migration_within_bound(0, 1), "already offloaded");
+        assert_eq!(p.offloaded_fraction(), 0.5);
+        // Migrating back restores the local set.
+        assert!(p.on_migrated(0, 1, false));
+        assert!(!p.metadata(0).is_offloaded(1));
+        assert!(!p.on_migrated(0, 99, true));
     }
 
     #[test]

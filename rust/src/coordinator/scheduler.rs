@@ -75,6 +75,33 @@ impl RuntimeMetadata {
         self.offloaded.contains_key(&id)
     }
 
+    /// Current sequence length of a tracked request (either set).
+    pub fn used_token_of(&self, id: RequestId) -> Option<usize> {
+        self.local
+            .get(&id)
+            .or_else(|| self.offloaded.get(&id))
+            .map(|m| m.used_token)
+    }
+
+    /// Move a tracked request between the local and offloaded sets (a
+    /// runtime migration, §3.4.2 extended). Returns `true` iff the request
+    /// is tracked; already being on the requested side is a no-op.
+    pub fn set_offloaded(&mut self, id: RequestId, offloaded: bool) -> bool {
+        if offloaded {
+            if let Some(m) = self.local.remove(&id) {
+                self.offloaded.insert(id, m);
+                return true;
+            }
+            self.offloaded.contains_key(&id)
+        } else {
+            if let Some(m) = self.offloaded.remove(&id) {
+                self.local.insert(id, m);
+                return true;
+            }
+            self.local.contains_key(&id)
+        }
+    }
+
     pub fn admit(&mut self, id: RequestId, meta: ReqMeta, offloaded: bool) {
         debug_assert!(!self.local.contains_key(&id) && !self.offloaded.contains_key(&id));
         if offloaded {
@@ -101,6 +128,74 @@ impl RuntimeMetadata {
 
     pub fn offloaded_ids(&self) -> impl Iterator<Item = RequestId> + '_ {
         self.offloaded.keys().copied()
+    }
+}
+
+/// What the rebalance controller wants for one prefill instance this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Prefill is lightly loaded: grow the offloaded share toward the OB
+    /// bound (migrating decode attention onto this instance's executor).
+    Offload,
+    /// A prefill burst is in flight: hold new offload migrations to this
+    /// instance and reclaim attention if its executor pool is choking
+    /// prompt dispatch.
+    Reclaim,
+}
+
+/// Feedback controller for runtime offload rebalancing (the dynamic
+/// extension of Algorithm 1; EXPERIMENTS.md §Scenarios).
+///
+/// Per tick the simulator reports each prefill instance's *pressure* —
+/// queued prompt tokens over `max_prefill_tokens`, i.e. how many full
+/// prefill batches are waiting — and the controller answers with a mode.
+/// The mode is a Schmitt trigger around the setpoint (0.5 batches): it
+/// flips to [`RebalanceMode::Reclaim`] at `0.5 + hysteresis`, back to
+/// [`RebalanceMode::Offload`] at `0.5 - hysteresis`, and holds its
+/// previous answer inside the band — so a pressure signal hovering at the
+/// threshold cannot make the controller thrash migrations.
+#[derive(Debug, Clone)]
+pub struct RebalanceController {
+    cfg: crate::config::RebalanceConfig,
+    /// Sticky per-prefill-instance mode (hysteresis state).
+    modes: Vec<RebalanceMode>,
+}
+
+/// Pressure setpoint: half a prefill batch queued.
+const REBALANCE_PRESSURE_SETPOINT: f64 = 0.5;
+
+impl RebalanceController {
+    pub fn new(cfg: crate::config::RebalanceConfig, n_prefill: usize) -> Self {
+        assert!(cfg.interval_s > 0.0 && n_prefill >= 1);
+        RebalanceController { cfg, modes: vec![RebalanceMode::Offload; n_prefill] }
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.cfg.interval_s
+    }
+
+    pub fn max_migrations_per_interval(&self) -> usize {
+        self.cfg.max_migrations_per_interval
+    }
+
+    pub fn mode(&self, prefill_instance: usize) -> RebalanceMode {
+        self.modes[prefill_instance]
+    }
+
+    /// Feed one tick's pressure observation for `prefill_instance` and get
+    /// the (possibly unchanged) mode back.
+    pub fn assess(&mut self, prefill_instance: usize, pressure: f64) -> RebalanceMode {
+        let low = (REBALANCE_PRESSURE_SETPOINT - self.cfg.hysteresis).max(0.0);
+        let high = REBALANCE_PRESSURE_SETPOINT + self.cfg.hysteresis;
+        let mode = if pressure >= high {
+            RebalanceMode::Reclaim
+        } else if pressure <= low {
+            RebalanceMode::Offload
+        } else {
+            self.modes[prefill_instance]
+        };
+        self.modes[prefill_instance] = mode;
+        mode
     }
 }
 
@@ -299,6 +394,118 @@ mod tests {
         assert!(m.remove(2));
         assert!(!m.remove(2));
         assert_eq!(m.offloaded_count(), 0);
+    }
+
+    #[test]
+    fn metadata_migration_moves_between_sets() {
+        let mut m = meta_with(&[(1, 10, 20)], &[(2, 30, 40)]);
+        assert!(m.set_offloaded(1, true), "local -> offloaded");
+        assert!(m.is_offloaded(1));
+        assert_eq!(m.attn_used_tokens(), 40);
+        assert_eq!(m.decode_used_tokens(), 0);
+        // Idempotent on the same side; unknown ids are refused.
+        assert!(m.set_offloaded(1, true));
+        assert!(m.set_offloaded(2, false));
+        assert!(!m.is_offloaded(2));
+        assert!(!m.set_offloaded(99, true));
+        assert_eq!(m.used_token_of(2), Some(30));
+        assert_eq!(m.used_token_of(99), None);
+    }
+
+    /// Satellite: RuntimeMetadata's local/offloaded token sums and counts
+    /// stay consistent with a reference residency model across random
+    /// admit / token / finish(remove) / preempt(remove) / migrate
+    /// sequences — the invariant the sim's proxy bookkeeping relies on.
+    #[test]
+    fn property_metadata_sums_consistent_under_admit_finish_preempt_migrate() {
+        crate::util::prop::check("metadata_residency_consistency", 100, |rng| {
+            let mut m = RuntimeMetadata::new();
+            // Reference model: id -> (used, offloaded).
+            let mut reference: Vec<(u64, usize, bool)> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.range_usize(0, 5) {
+                    // Admit (routing decision).
+                    0 | 1 => {
+                        let used = rng.range_usize(1, 400);
+                        let off = rng.range_usize(0, 2) == 1;
+                        m.admit(
+                            next_id,
+                            ReqMeta { used_token: used, max_token: used + rng.range_usize(1, 400) },
+                            off,
+                        );
+                        reference.push((next_id, used, off));
+                        next_id += 1;
+                    }
+                    // One decode token for a random tracked request.
+                    2 => {
+                        if !reference.is_empty() {
+                            let i = rng.range_usize(0, reference.len());
+                            reference[i].1 += 1;
+                            m.on_token(reference[i].0);
+                        }
+                    }
+                    // Finish or preempt: both remove from the metadata.
+                    3 => {
+                        if !reference.is_empty() {
+                            let i = rng.range_usize(0, reference.len());
+                            let (id, _, _) = reference.swap_remove(i);
+                            assert!(m.remove(id));
+                        }
+                    }
+                    // Migrate: flip the side.
+                    _ => {
+                        if !reference.is_empty() {
+                            let i = rng.range_usize(0, reference.len());
+                            reference[i].2 = !reference[i].2;
+                            assert!(m.set_offloaded(reference[i].0, reference[i].2));
+                        }
+                    }
+                }
+                // Invariants after every op.
+                let local_sum: usize =
+                    reference.iter().filter(|r| !r.2).map(|r| r.1).sum();
+                let off_sum: usize = reference.iter().filter(|r| r.2).map(|r| r.1).sum();
+                let local_n = reference.iter().filter(|r| !r.2).count();
+                let off_n = reference.iter().filter(|r| r.2).count();
+                assert_eq!(m.decode_used_tokens(), local_sum);
+                assert_eq!(m.attn_used_tokens(), off_sum);
+                assert_eq!(m.local_count(), local_n);
+                assert_eq!(m.offloaded_count(), off_n);
+                assert_eq!(m.total_count(), reference.len());
+                for &(id, used, off) in &reference {
+                    assert_eq!(m.is_offloaded(id), off, "id {id} side");
+                    assert_eq!(m.used_token_of(id), Some(used), "id {id} used");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rebalance_controller_schmitt_trigger() {
+        let cfg = crate::config::RebalanceConfig {
+            interval_s: 0.25,
+            hysteresis: 0.25,
+            max_migrations_per_interval: 16,
+        };
+        let mut c = RebalanceController::new(cfg, 2);
+        // Starts permissive (idle system should offload).
+        assert_eq!(c.mode(0), RebalanceMode::Offload);
+        // Inside the band: holds the previous mode.
+        assert_eq!(c.assess(0, 0.5), RebalanceMode::Offload);
+        assert_eq!(c.assess(0, 0.74), RebalanceMode::Offload);
+        // Crossing the high threshold flips to Reclaim...
+        assert_eq!(c.assess(0, 0.75), RebalanceMode::Reclaim);
+        // ...and stays there anywhere inside the band (hysteresis).
+        assert_eq!(c.assess(0, 0.5), RebalanceMode::Reclaim);
+        assert_eq!(c.assess(0, 0.26), RebalanceMode::Reclaim);
+        // Only dropping to the low threshold releases it.
+        assert_eq!(c.assess(0, 0.25), RebalanceMode::Offload);
+        // Instances are independent.
+        assert_eq!(c.assess(1, 10.0), RebalanceMode::Reclaim);
+        assert_eq!(c.mode(0), RebalanceMode::Offload);
+        assert_eq!(c.interval_s(), 0.25);
+        assert_eq!(c.max_migrations_per_interval(), 16);
     }
 
     #[test]

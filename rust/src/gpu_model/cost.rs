@@ -86,6 +86,10 @@ pub struct CostModel {
     /// The GPU's achievable-bandwidth efficiency (for the executor's
     /// bandwidth cap inside the interference model).
     gpu_bw_eff: f64,
+    /// KV-cache bytes per token (all layers) — the unit of KV movement.
+    kv_bytes_per_token: f64,
+    /// Inter-GPU interconnect bandwidth, B/s (NVLink).
+    interconnect_bw: f64,
     /// Per-layer decode<->executor sync overhead, whole-step total.
     sync_total_s: f64,
     /// Extra CPU launch overhead per step (eager ablation; 0 with graphs).
@@ -116,9 +120,20 @@ impl CostModel {
             grid,
             interference,
             gpu_bw_eff: rl_whole.gpu.bw_eff,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            interconnect_bw: rl_whole.gpu.interconnect_bw,
             sync_total_s: sync_overhead_s * model.n_layers as f64,
             eager_launch_overhead_s,
         }
+    }
+
+    /// Wall time to move `tokens` of KV cache across the interconnect —
+    /// the prefill→decode transfer and both directions of a runtime
+    /// offload migration. Bit-identical to the legacy inline
+    /// `bytes / interconnect_bw` formula (pinned by test).
+    pub fn kv_transfer_time(&self, tokens: u64) -> f64 {
+        let bytes = tokens as f64 * self.kv_bytes_per_token;
+        bytes / self.interconnect_bw
     }
 
     /// Build the step-cost bucket grid from the configured capture lists,
@@ -440,6 +455,28 @@ mod tests {
         assert_eq!(out[1], 0.0);
         // Max executor time is what the step overlaps against (plus sync).
         assert!(cost.remote_attention_s > out[0].max(out[2]));
+    }
+
+    #[test]
+    fn kv_transfer_time_matches_legacy_inline_formula() {
+        // The sim used to compute the prefill->decode transfer inline as
+        // `kv_tokens as f64 * model.kv_bytes_per_token() / interconnect_bw`;
+        // the cost-plane version must be bit-identical (the rebalancer's
+        // migration charging reuses the same path).
+        let gpu = GpuSpec::a100_80g();
+        let m = ModelSpec::llama2_7b();
+        let cm = setup(CostMode::Bucketed);
+        for tokens in [0u64, 1, 137, 4096, 1_000_000] {
+            let legacy = tokens as f64 * m.kv_bytes_per_token() / gpu.interconnect_bw;
+            assert_eq!(
+                cm.kv_transfer_time(tokens).to_bits(),
+                legacy.to_bits(),
+                "tokens={tokens}"
+            );
+        }
+        // Sanity: ~0.5 MiB/token over 600 GB/s NVLink.
+        let per_tok = cm.kv_transfer_time(1);
+        assert!((per_tok - 524288.0 / 600e9).abs() < 1e-12);
     }
 
     #[test]

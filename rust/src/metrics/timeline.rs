@@ -38,6 +38,12 @@ impl Timeline {
         })
     }
 
+    pub fn min_value(&self) -> Option<f64> {
+        self.points.iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.min(v)))
+        })
+    }
+
     /// Time-weighted mean value over [start, end] (step interpolation).
     pub fn time_weighted_mean(&self, start: f64, end: f64) -> Option<f64> {
         if end <= start || self.points.is_empty() {
@@ -127,6 +133,18 @@ mod tests {
         assert!((tl.time_weighted_mean(0.0, 2.0).unwrap() - 2.0).abs() < 1e-12);
         // [0.5, 1.5]: 1.0 for 0.5s, 3.0 for 0.5s -> 2.0
         assert!((tl.time_weighted_mean(0.5, 1.5).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_values() {
+        let mut tl = Timeline::new();
+        assert_eq!(tl.min_value(), None);
+        assert_eq!(tl.max_value(), None);
+        for (t, v) in [(0.0, 0.4), (1.0, -2.0), (2.0, 3.5)] {
+            tl.push(t, v);
+        }
+        assert_eq!(tl.min_value(), Some(-2.0));
+        assert_eq!(tl.max_value(), Some(3.5));
     }
 
     #[test]

@@ -44,13 +44,13 @@
 use std::collections::VecDeque;
 
 use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
-use crate::coordinator::{BucketPair, OffloadBounds, Proxy};
+use crate::coordinator::{BucketPair, OffloadBounds, Proxy, RebalanceController, RebalanceMode};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
     CostMode, CostModel, HbmUsage, InterferenceModel, Roofline, PREFILL_BW_FRAC,
 };
 use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
-use crate::workload::{Request, RequestId, TraceGenerator, WorkloadKind};
+use crate::workload::{ArrivalPattern, Request, RequestId, TraceGenerator, WorkloadKind};
 
 use super::events::EventQueue;
 
@@ -61,6 +61,9 @@ pub struct SimConfig {
     pub model: ModelSpec,
     pub serving: ServingConfig,
     pub workload: WorkloadKind,
+    /// Arrival-process shape (Poisson by default; bursty/diurnal for the
+    /// rebalancer scenarios — EXPERIMENTS.md §Scenarios).
+    pub arrivals: ArrivalPattern,
     /// Mean request rate, req/s.
     pub rate: f64,
     /// Trace duration, seconds (drain continues afterwards).
@@ -82,6 +85,7 @@ impl SimConfig {
             model,
             serving: ServingConfig::default(),
             workload,
+            arrivals: ArrivalPattern::Poisson,
             rate,
             duration_s: 300.0,
             seed: 42,
@@ -119,8 +123,25 @@ enum Phase {
     Prefilling,
     Transferring,
     Decoding,
+    /// KV in flight between the decode pool and an executor pool (runtime
+    /// rebalancing): out of the batch until `MigrationDone`.
+    Migrating,
     Done,
 }
+
+/// Executor-pool occupancy (incl. reservations) above which the rebalancer
+/// stops migrating *more* attention onto an executor — the headroom keeps
+/// dispatch gating from starving on migrated KV.
+const OFFLOAD_POOL_HEADROOM: f64 = 0.95;
+
+/// Tighter executor-pool watermark for offload migrations onto an
+/// instance whose controller is in burst (Reclaim) mode: its incoming
+/// cohort still needs dispatch reservations.
+const OFFLOAD_POOL_HEADROOM_BURST: f64 = 0.90;
+
+/// Decode-pool occupancy cap for reclaim migrations: never trade executor
+/// pressure for local preemption churn.
+const RECLAIM_DECODE_POOL_GUARD: f64 = 0.9;
 
 /// Sentinel for "not in any running set".
 const NO_SLOT: usize = usize::MAX;
@@ -207,6 +228,12 @@ enum Ev {
     PrefillDone { inst: usize, id: RequestId },
     TransferDone { id: RequestId },
     DecodeStepEnd { inst: usize },
+    /// A rebalance migration's KV transfer finished; the request rejoins
+    /// its decode instance's waiting queue on the new side.
+    MigrationDone { id: RequestId },
+    /// Periodic rebalance-controller tick (only scheduled when
+    /// `ServingConfig::rebalance` is set and offloading is enabled).
+    RebalanceTick,
 }
 
 /// Post-run report.
@@ -270,6 +297,25 @@ pub struct SimReport {
     pub graph_padding_overhead: f64,
     /// Selection counts per captured `(C_d, C_o)` pair (non-zero only).
     pub graph_bucket_hits: Vec<(BucketPair, u64)>,
+    /// Completed runtime rebalance migrations (0 without
+    /// `ServingConfig::rebalance`).
+    pub migrations_total: u64,
+    /// Migrations that moved attention local → offloaded.
+    pub migrations_to_offload: u64,
+    /// Migrations that pulled attention offloaded → local.
+    pub migrations_to_local: u64,
+    /// KV tokens moved across the interconnect by migrations.
+    pub migration_tokens_moved: u64,
+    /// Offloaded fraction of proxy-tracked requests, sampled once per
+    /// rebalance tick (empty without rebalancing).
+    pub offloaded_frac_timeline: Timeline,
+    /// Prefill-instance-0 queue pressure (queued prompt tokens /
+    /// `max_prefill_tokens`), sampled once per rebalance tick.
+    pub prefill_pressure_timeline: Timeline,
+    /// Requests still tracked by the proxy at sim end — 0 whenever the run
+    /// drained fully (the metadata-residency invariant the rebalancer must
+    /// preserve).
+    pub metadata_residual: usize,
 }
 
 /// The cluster simulator.
@@ -297,6 +343,13 @@ pub struct ClusterSim {
     /// Monotone admission counter (LIFO preemption order).
     admit_counter: u64,
     events_processed: u64,
+    /// Runtime offload rebalancer (None = static admission-time split).
+    rebalancer: Option<RebalanceController>,
+    migrations_to_offload: u64,
+    migrations_to_local: u64,
+    migration_tokens_moved: u64,
+    offloaded_frac_timeline: Timeline,
+    prefill_pressure_timeline: Timeline,
     // Reusable per-step scratch (drained and returned each step so the
     // hot path never allocates after warm-up).
     scratch_finish: Vec<RequestId>,
@@ -304,11 +357,16 @@ pub struct ClusterSim {
     scratch_batch: Vec<RequestId>,
     /// Per-executor attention seconds for the step being priced.
     scratch_remote: Vec<f64>,
+    /// (kv_tokens, id) migration-candidate buffer (tick-time only).
+    scratch_migrate: Vec<(u64, RequestId)>,
+    /// Per-decode-instance OB-bound backoff flags (tick-time only).
+    scratch_bounded: Vec<bool>,
 }
 
 impl ClusterSim {
     pub fn new(cfg: SimConfig) -> Self {
-        let mut gen = TraceGenerator::new(cfg.workload, cfg.rate, cfg.seed);
+        let mut gen = TraceGenerator::new(cfg.workload, cfg.rate, cfg.seed)
+            .with_arrivals(cfg.arrivals);
         let trace: VecDeque<Request> = gen.trace(cfg.duration_s).into();
 
         let avg_seq = if trace.is_empty() {
@@ -395,6 +453,16 @@ impl ClusterSim {
             cfg.eager_launch_overhead_s,
         );
 
+        // The rebalancer only makes sense with offloading on: under
+        // `OffloadPolicy::Disabled` there is no executor to migrate to, so
+        // the controller stays off and the sim is bit-identical to the
+        // static path regardless of the `rebalance` field.
+        let rebalancer = if cfg.serving.offload.is_enabled() {
+            cfg.serving.rebalance.map(|rc| RebalanceController::new(rc, n_prefill))
+        } else {
+            None
+        };
+
         ClusterSim {
             cfg,
             reqs: Vec::new(),
@@ -414,10 +482,18 @@ impl ClusterSim {
             finished_total: 0,
             admit_counter: 0,
             events_processed: 0,
+            rebalancer,
+            migrations_to_offload: 0,
+            migrations_to_local: 0,
+            migration_tokens_moved: 0,
+            offloaded_frac_timeline: Timeline::new(),
+            prefill_pressure_timeline: Timeline::new(),
             scratch_finish: Vec::new(),
             scratch_overflow: Vec::new(),
             scratch_batch: Vec::new(),
             scratch_remote: Vec::new(),
+            scratch_migrate: Vec::new(),
+            scratch_bounded: Vec::new(),
         }
     }
 
@@ -446,6 +522,11 @@ impl ClusterSim {
             });
             self.events.push(t, Ev::Arrival(id));
         }
+        if let Some(ctl) = &self.rebalancer {
+            if !self.reqs.is_empty() {
+                self.events.push(ctl.interval_s(), Ev::RebalanceTick);
+            }
+        }
 
         let hard_stop = self.cfg.duration_s * 20.0 + 3600.0;
         while let Some((t, ev)) = self.events.pop() {
@@ -458,6 +539,8 @@ impl ClusterSim {
                 Ev::PrefillDone { inst, id } => self.on_prefill_done(t, inst, id),
                 Ev::TransferDone { id } => self.on_transfer_done(t, id),
                 Ev::DecodeStepEnd { inst } => self.on_decode_step_end(t, inst),
+                Ev::MigrationDone { id } => self.on_migration_done(t, id),
+                Ev::RebalanceTick => self.on_rebalance_tick(t),
             }
             // Global scheduling pass after every event.
             self.dispatch_prefills(t);
@@ -621,10 +704,10 @@ impl ClusterSim {
             self.decode[d].waiting.push_back(id);
             self.record_prefill_occupancy(t);
         } else {
-            // NVLink transfer to the decode instance.
+            // NVLink transfer to the decode instance (cost plane;
+            // bit-identical to the old inline bytes/bandwidth formula).
             sr.phase = Phase::Transferring;
-            let bytes = sr.kv_tokens as f64 * self.cfg.model.kv_bytes_per_token();
-            let xfer = bytes / self.cfg.cluster.gpu.interconnect_bw;
+            let xfer = self.costs.kv_transfer_time(sr.kv_tokens as u64);
             self.events.push(t + xfer, Ev::TransferDone { id });
         }
     }
@@ -730,6 +813,298 @@ impl ClusterSim {
         self.scratch_overflow = overflow;
 
         self.record_decode_occupancy(t, inst);
+    }
+
+    // ----- runtime offload rebalancing (§3.4.2 extended) --------------------
+    //
+    // A feedback controller in the coordinator makes the offloaded share
+    // *dynamic*: the admission-time split of Algorithm 1 is kept, and once
+    // per tick the controller compares each prefill instance's observed
+    // load (queued prompt tokens, executor-pool occupancy) against the
+    // `OffloadBounds` headroom and migrates running decode requests
+    // between local and offloaded attention:
+    //
+    // * **Offload more** whenever no executor is choking (any tick
+    //   without a reclaim): running local requests migrate onto the
+    //   least-occupied executor (largest KV first) until the OB bound
+    //   binds or the pool loses its dispatch headroom — 95 % watermark
+    //   normally, 90 % while that instance rides out a burst. This is
+    //   where the throughput comes from: admission can only act on
+    //   *arriving* requests, so after a trough (empty budget ⇒ local
+    //   admissions) the resident set under-uses the executor until
+    //   migrations correct the mix.
+    // * **Reclaim ahead of / during prefill bursts**: when an instance's
+    //   queue pressure crosses the hysteresis band AND its executor pool
+    //   is actually blocking the head-of-line prompt's dispatch
+    //   reservation, offloaded requests homed there migrate back
+    //   (smallest KV first) until the blocked prompt fits. Reclaim is
+    //   deliberately conditioned on a *blocked* dispatch, not on pressure
+    //   alone: at saturation the pools are the throughput currency, and
+    //   draining an executor pool that isn't choking anything only
+    //   shrinks capacity.
+
+    fn on_rebalance_tick(&mut self, t: f64) {
+        let Some(ctl) = self.rebalancer.as_ref() else { return };
+        let interval = ctl.interval_s();
+        let mut budget = ctl.max_migrations_per_interval();
+
+        let max_prefill_tokens = self.cfg.serving.max_prefill_tokens.max(1);
+        let mut reclaimed_any = false;
+        for pi in 0..self.prefill.len() {
+            let mut queued = 0usize;
+            for &id in &self.prefill[pi].queue {
+                let sr = &self.reqs[id as usize];
+                if sr.phase == Phase::WaitingDispatch {
+                    queued += sr.effective_prompt;
+                }
+            }
+            let pressure = queued as f64 / max_prefill_tokens as f64;
+            if pi == 0 {
+                self.prefill_pressure_timeline.push(t, pressure);
+            }
+            let mode = self
+                .rebalancer
+                .as_mut()
+                .expect("rebalancer checked above")
+                .assess(pi, pressure);
+            if mode == RebalanceMode::Reclaim {
+                reclaimed_any |= self.reclaim_for(t, pi, &mut budget);
+            }
+        }
+        // Reclaim and offload in the same tick would migrate against
+        // ourselves; the reclaiming instance's pressure clears first.
+        if !reclaimed_any && budget > 0 {
+            self.offload_more(t, &mut budget);
+        }
+        self.offloaded_frac_timeline.push(t, self.proxy.offloaded_fraction());
+        if self.finished_total < self.reqs.len() {
+            self.events.push_in(interval, Ev::RebalanceTick);
+        }
+    }
+
+    /// Reclaim attention homed on prefill instance `pi` until its blocked
+    /// head-of-line prompt can reserve the executor pool. Returns whether
+    /// any migration started.
+    fn reclaim_for(&mut self, t: f64, pi: usize, budget: &mut usize) -> bool {
+        // FCFS dispatch: only the queue head can block.
+        let mut blocked_need = 0usize;
+        for &id in &self.prefill[pi].queue {
+            let sr = &self.reqs[id as usize];
+            if sr.phase != Phase::WaitingDispatch {
+                continue;
+            }
+            let p = &self.prefill[pi];
+            if sr.offloaded
+                && p.executor_kv_tokens + p.executor_reserved + sr.effective_prompt
+                    > p.executor_kv_budget
+            {
+                blocked_need = sr.effective_prompt;
+            }
+            break;
+        }
+        if blocked_need == 0 || *budget == 0 {
+            return false;
+        }
+        // Offloaded running requests homed on `pi`, smallest KV first
+        // (cheapest transfers; frees the pool with the least capacity
+        // surrendered per migration).
+        let mut cands = std::mem::take(&mut self.scratch_migrate);
+        cands.clear();
+        for dec in &self.decode {
+            for &id in &dec.running {
+                let sr = &self.reqs[id as usize];
+                if sr.offloaded && sr.prefill_instance == pi {
+                    cands.push((sr.kv_tokens as u64, id));
+                }
+            }
+        }
+        cands.sort_unstable();
+        let mut any = false;
+        for &(kv, id) in &cands {
+            if *budget == 0 {
+                break;
+            }
+            {
+                let p = &self.prefill[pi];
+                if p.executor_kv_tokens + p.executor_reserved + blocked_need
+                    <= p.executor_kv_budget
+                {
+                    break; // freed enough: the head fits now
+                }
+            }
+            let kv = kv as usize;
+            let d = self.reqs[id as usize].decode_instance;
+            let dec = &self.decode[d];
+            if (dec.kv_tokens() + dec.reserved + kv) as f64
+                > dec.kv_budget() as f64 * RECLAIM_DECODE_POOL_GUARD
+            {
+                continue;
+            }
+            self.start_migration(t, id, false, pi);
+            *budget -= 1;
+            any = true;
+        }
+        cands.clear();
+        self.scratch_migrate = cands;
+        any
+    }
+
+    /// Migrate running local requests onto the least-occupied executor in
+    /// Offload mode, largest KV first, until the OB bound or the pool
+    /// headroom binds.
+    fn offload_more(&mut self, t: f64, budget: &mut usize) {
+        let mut cands = std::mem::take(&mut self.scratch_migrate);
+        cands.clear();
+        for dec in &self.decode {
+            for &id in &dec.running {
+                let sr = &self.reqs[id as usize];
+                if !sr.offloaded {
+                    cands.push((sr.kv_tokens as u64, id));
+                }
+            }
+        }
+        // Largest KV first: each migration moves the most attention load
+        // and frees the most decode-pool capacity per transfer.
+        cands.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        // Per-decode-instance OB backoff (see the bound-refusal comment
+        // below): refusal stops that instance for this tick, not the rest.
+        let mut bounded = std::mem::take(&mut self.scratch_bounded);
+        bounded.clear();
+        bounded.resize(self.decode.len(), false);
+        for &(kv, id) in &cands {
+            if *budget == 0 {
+                break;
+            }
+            let d = self.reqs[id as usize].decode_instance;
+            if bounded[d] {
+                continue;
+            }
+            let kv = kv as usize;
+            // Least-occupied executor pool. A Reclaim-mode instance can
+            // still *receive* (no reclaim fired this tick, so its pool is
+            // not choking dispatch) — it just keeps a thicker headroom
+            // for the burst cohort in flight.
+            let mut target: Option<(f64, usize)> = None;
+            for pi in 0..self.prefill.len() {
+                let p = &self.prefill[pi];
+                if p.executor_kv_budget == 0 {
+                    continue;
+                }
+                let occ = (p.executor_kv_tokens + p.executor_reserved) as f64
+                    / p.executor_kv_budget as f64;
+                let better = match target {
+                    Some((best, _)) => occ < best,
+                    None => true,
+                };
+                if better {
+                    target = Some((occ, pi));
+                }
+            }
+            let Some((_, pi)) = target else { break };
+            {
+                let ctl = self.rebalancer.as_ref().expect("tick implies rebalancer");
+                let headroom = match ctl.mode(pi) {
+                    RebalanceMode::Offload => OFFLOAD_POOL_HEADROOM,
+                    RebalanceMode::Reclaim => OFFLOAD_POOL_HEADROOM_BURST,
+                };
+                let p = &self.prefill[pi];
+                if (p.executor_kv_tokens + p.executor_reserved + kv) as f64
+                    > p.executor_kv_budget as f64 * headroom
+                {
+                    continue; // a smaller candidate may still fit
+                }
+            }
+            if !self.proxy.migration_within_bound(d, id) {
+                // The OB bound is a budget over token *sums*; with
+                // candidates sorted largest-first, the first refusal means
+                // this instance's remaining headroom is marginal — stop
+                // migrating from it this tick, exactly like Algorithm 1
+                // stops admitting. (Deliberately NOT `continue` into
+                // smaller candidates: packing the bound tight with many
+                // small sequences measurably over-migrates past the
+                // attention balance point and loses throughput.) Other
+                // decode instances keep their own headroom.
+                bounded[d] = true;
+                if bounded.iter().all(|&b| b) {
+                    break;
+                }
+                continue;
+            }
+            self.start_migration(t, id, true, pi);
+            *budget -= 1;
+        }
+        cands.clear();
+        bounded.clear();
+        self.scratch_migrate = cands;
+        self.scratch_bounded = bounded;
+    }
+
+    /// Begin moving a running request's attention + KV between the decode
+    /// pool and executor pool `pi`. The request leaves the batch for the
+    /// transfer (destination reserved up front, mirroring dispatch
+    /// gating); residency converts on `MigrationDone`.
+    ///
+    /// Mid-step semantics (deliberate): a tick almost always lands inside
+    /// a step window, so the request leaves a batch whose in-flight step
+    /// was priced with its row — that step completes at full cost and the
+    /// migrated request is simply absent at token-grant time. This models
+    /// a migration canceling the row's in-flight work (the same
+    /// work-discarding convention preemption uses, one token instead of
+    /// the whole sequence) and deliberately charges the *dynamic* policy:
+    /// the step cost is not refunded and the abandoned token is
+    /// regenerated later. The dynamic-beats-static acceptance margin is
+    /// measured with this penalty included.
+    fn start_migration(&mut self, t: f64, id: RequestId, to_offload: bool, pi: usize) {
+        let d = self.reqs[id as usize].decode_instance;
+        debug_assert_ne!(self.reqs[id as usize].run_slot, NO_SLOT, "must be running");
+        debug_assert_eq!(self.reqs[id as usize].phase, Phase::Decoding);
+        Self::agg_sub(&mut self.decode[d], &self.reqs[id as usize]);
+        self.remove_from_running(d, id);
+        let kv = self.reqs[id as usize].kv_tokens;
+        if to_offload {
+            // KV leaves the decode pool now; executor residency
+            // materializes when the transfer completes.
+            let _ = self.decode[d].kv.release(id);
+            self.prefill[pi].executor_reserved += kv;
+            let sr = &mut self.reqs[id as usize];
+            sr.offloaded = true;
+            sr.prefill_instance = pi;
+        } else {
+            debug_assert_eq!(self.reqs[id as usize].prefill_instance, pi);
+            self.prefill[pi].executor_kv_tokens =
+                self.prefill[pi].executor_kv_tokens.saturating_sub(kv);
+            self.decode[d].reserved += kv;
+            self.reqs[id as usize].offloaded = false;
+            self.record_prefill_occupancy(t);
+        }
+        self.reqs[id as usize].phase = Phase::Migrating;
+        let _tracked = self.proxy.on_migrated(d, id, to_offload);
+        debug_assert!(_tracked, "migrating request must be tracked by the proxy");
+        let xfer = self.costs.kv_transfer_time(kv as u64);
+        self.events.push(t + xfer, Ev::MigrationDone { id });
+    }
+
+    fn on_migration_done(&mut self, t: f64, id: RequestId) {
+        let (offloaded, d, kv, pi) = {
+            let sr = &self.reqs[id as usize];
+            debug_assert_eq!(sr.phase, Phase::Migrating);
+            (sr.offloaded, sr.decode_instance, sr.kv_tokens, sr.prefill_instance)
+        };
+        if offloaded {
+            let p = &mut self.prefill[pi];
+            p.executor_reserved = p.executor_reserved.saturating_sub(kv);
+            p.executor_kv_tokens += kv;
+            self.migrations_to_offload += 1;
+            self.record_prefill_occupancy(t);
+        } else {
+            // The decode-pool reservation converts to block residency on
+            // admission (`admit_waiters`), exactly like a prefill→decode
+            // transfer landing.
+            self.migrations_to_local += 1;
+        }
+        self.migration_tokens_moved += kv as u64;
+        self.reqs[id as usize].phase = Phase::Decoding;
+        self.decode[d].waiting.push_back(id);
     }
 
     // ----- actions ----------------------------------------------------------
@@ -1046,6 +1421,9 @@ impl ClusterSim {
         };
         let good_frac = frac(met_both);
         let gstats = self.costs.graph_stats();
+        let metadata_residual: usize = (0..self.decode.len())
+            .map(|i| self.proxy.metadata(i).total_count())
+            .sum();
 
         SimReport {
             ttft: self.metrics.ttft_stats(),
@@ -1081,6 +1459,13 @@ impl ClusterSim {
             graph_padded_slots: gstats.padded_slots,
             graph_padding_overhead: self.costs.padding_overhead(),
             graph_bucket_hits: self.costs.bucket_hits(),
+            migrations_total: self.migrations_to_offload + self.migrations_to_local,
+            migrations_to_offload: self.migrations_to_offload,
+            migrations_to_local: self.migrations_to_local,
+            migration_tokens_moved: self.migration_tokens_moved,
+            offloaded_frac_timeline: self.offloaded_frac_timeline,
+            prefill_pressure_timeline: self.prefill_pressure_timeline,
+            metadata_residual,
         }
     }
 }
@@ -1230,6 +1615,61 @@ mod tests {
         assert!(r.tokens_conserved, "token accounting must survive preemption churn");
         assert_eq!(r.preemptions, r.req_preemptions_total);
         assert!(r.finished > 0);
+    }
+
+    #[test]
+    fn static_runs_never_migrate() {
+        // Without `ServingConfig::rebalance` there are no ticks, no
+        // migrations, and the new observability stays empty — the
+        // bit-identity contract's structural half (rust/tests/rebalance.rs
+        // pins the behavioral half).
+        for policy_on in [true, false] {
+            let r = quick(policy_on, 2.0, 40.0);
+            assert_eq!(r.migrations_total, 0);
+            assert_eq!(r.migrations_to_offload, 0);
+            assert_eq!(r.migrations_to_local, 0);
+            assert_eq!(r.migration_tokens_moved, 0);
+            assert!(r.offloaded_frac_timeline.is_empty());
+            assert!(r.prefill_pressure_timeline.is_empty());
+        }
+    }
+
+    #[test]
+    fn disabled_policy_ignores_rebalance_config() {
+        // Rebalancing on top of OffloadPolicy::Disabled must not invent an
+        // executor: no ticks run, nothing offloads.
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::baseline(model, WorkloadKind::ShareGpt, 2.0);
+        cfg.duration_s = 30.0;
+        cfg.serving.rebalance = Some(crate::config::RebalanceConfig::default());
+        let r = ClusterSim::new(cfg).run();
+        assert_eq!(r.migrations_total, 0);
+        assert_eq!(r.offloaded_fraction, 0.0);
+        assert!(r.prefill_pressure_timeline.is_empty());
+    }
+
+    #[test]
+    fn rebalancing_run_samples_timelines_and_conserves() {
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 8.0);
+        cfg.duration_s = 30.0;
+        cfg.arrivals = ArrivalPattern::Bursty { period_s: 10.0, duty: 0.25, mult: 3.0 };
+        cfg.serving.rebalance = Some(crate::config::RebalanceConfig::default());
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.finished > 0);
+        assert!(r.tokens_conserved, "migrations must not corrupt token accounting");
+        assert_eq!(r.preemptions, r.req_preemptions_total);
+        // One pressure + one fraction sample per tick, aligned.
+        assert!(!r.prefill_pressure_timeline.is_empty());
+        assert_eq!(
+            r.prefill_pressure_timeline.len(),
+            r.offloaded_frac_timeline.len(),
+            "tick samples must stay aligned"
+        );
+        // Every request finished => the proxy metadata fully drained.
+        if r.finished == r.arrived {
+            assert_eq!(r.metadata_residual, 0);
+        }
     }
 
     #[test]

@@ -87,6 +87,14 @@ impl<E> EventQueue<E> {
         self.heap.push(Entry { time: t, seq, event });
     }
 
+    /// Schedule `event` `delay` seconds after the current clock — the
+    /// common pattern for transfer completions and periodic controller
+    /// ticks. `delay` must be non-negative and finite (checked by `push`).
+    pub fn push_in(&mut self, delay: f64, event: E) {
+        debug_assert!(delay >= 0.0, "push_in takes a non-negative delay, got {delay}");
+        self.push(self.clock + delay, event);
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         let e = self.heap.pop()?;
@@ -137,6 +145,18 @@ mod tests {
             assert!(t >= prev);
             prev = t;
         }
+    }
+
+    #[test]
+    fn push_in_schedules_relative_to_clock() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "a");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 2.0);
+        q.push_in(1.5, "b");
+        q.push_in(0.5, "c");
+        let order: Vec<(f64, &str)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(2.5, "c"), (3.5, "b")]);
     }
 
     #[test]

@@ -10,9 +10,12 @@
 //! | OpenThoughts  | ~120             | ~1600            | ≫ 1           |
 //!
 //! Lengths are log-normal (the standard fit for both corpora), clipped to
-//! sane ranges; arrivals are Poisson at a configurable rate — exactly the
-//! process the paper's request-rate sweeps use. Everything is seeded and
-//! replayable (see `util::rng`).
+//! sane ranges; arrivals default to homogeneous Poisson at a configurable
+//! rate — exactly the process the paper's request-rate sweeps use — and
+//! can be modulated into bursty (on/off MMPP) or diurnal (sinusoidal)
+//! non-stationary processes for the rebalancer scenarios
+//! (EXPERIMENTS.md §Scenarios). Everything is seeded and replayable (see
+//! `util::rng`).
 
 use crate::util::rng::Rng;
 
@@ -51,12 +54,62 @@ impl WorkloadKind {
     }
 }
 
-/// Poisson-arrival trace generator.
+/// Shape of the arrival process (EXPERIMENTS.md §Scenarios).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Homogeneous Poisson arrivals at the configured mean rate — the
+    /// default, bit-identical to the pre-pattern generator (one
+    /// exponential draw per arrival).
+    Poisson,
+    /// On/off modulated Poisson (MMPP): the rate is `mult × rate` for the
+    /// first `duty` fraction of each `period_s`-second cycle and a
+    /// compensating low rate for the rest, so the *mean* offered load
+    /// stays at `rate` (requires `duty · mult < 1`). Sampled exactly via
+    /// the memorylessness of the exponential: a draw that crosses a
+    /// segment boundary restarts from the boundary at the new rate.
+    Bursty { period_s: f64, duty: f64, mult: f64 },
+    /// Sinusoidal diurnal modulation, `λ(t) = rate·(1 + depth·sin(2πt/T))`,
+    /// sampled by Lewis–Shedler thinning against `λ_max = rate·(1+depth)`.
+    Diurnal { period_s: f64, depth: f64 },
+}
+
+impl ArrivalPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson => "poisson",
+            ArrivalPattern::Bursty { .. } => "bursty",
+            ArrivalPattern::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    fn validate(&self) {
+        match *self {
+            ArrivalPattern::Poisson => {}
+            ArrivalPattern::Bursty { period_s, duty, mult } => {
+                assert!(period_s > 0.0, "bursty period must be positive");
+                assert!((0.0..1.0).contains(&duty) && duty > 0.0, "duty in (0,1)");
+                assert!(mult >= 1.0, "burst multiplier must be >= 1");
+                assert!(
+                    duty * mult < 1.0,
+                    "duty*mult must be < 1 so the trough rate stays positive"
+                );
+            }
+            ArrivalPattern::Diurnal { period_s, depth } => {
+                assert!(period_s > 0.0, "diurnal period must be positive");
+                assert!((0.0..=1.0).contains(&depth), "depth in [0,1]");
+            }
+        }
+    }
+}
+
+/// Poisson-arrival trace generator (optionally rate-modulated; see
+/// [`ArrivalPattern`]).
 #[derive(Debug)]
 pub struct TraceGenerator {
     kind: WorkloadKind,
     /// Mean request rate, req/s.
     rate: f64,
+    arrivals: ArrivalPattern,
     /// Clip range for prompt lengths (inclusive).
     prompt_clip: (usize, usize),
     /// Clip range for output lengths (inclusive).
@@ -72,6 +125,7 @@ impl TraceGenerator {
         TraceGenerator {
             kind,
             rate,
+            arrivals: ArrivalPattern::Poisson,
             prompt_clip: (4, 8192),
             output_clip: (1, 8192),
             rng: Rng::seed_from_u64(seed),
@@ -89,13 +143,63 @@ impl TraceGenerator {
         self
     }
 
+    /// Select the arrival process. `Poisson` (the default) consumes the
+    /// RNG exactly like the pre-pattern generator, so existing seeded
+    /// traces are unchanged.
+    pub fn with_arrivals(mut self, arrivals: ArrivalPattern) -> Self {
+        arrivals.validate();
+        self.arrivals = arrivals;
+        self
+    }
+
     fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, clip: (usize, usize)) -> usize {
         (rng.lognormal(mu, sigma).round() as usize).clamp(clip.0, clip.1)
     }
 
+    /// Advance the clock to the next arrival instant.
+    fn advance_clock(&mut self) {
+        match self.arrivals {
+            ArrivalPattern::Poisson => self.clock_s += self.rng.exp(self.rate),
+            ArrivalPattern::Bursty { period_s, duty, mult } => {
+                let burst_len = duty * period_s;
+                let high = self.rate * mult;
+                let low = self.rate * (1.0 - duty * mult) / (1.0 - duty);
+                loop {
+                    let phase = self.clock_s % period_s;
+                    let (lam, seg_end) = if phase < burst_len {
+                        (high, self.clock_s - phase + burst_len)
+                    } else {
+                        (low, self.clock_s - phase + period_s)
+                    };
+                    let gap = self.rng.exp(lam);
+                    if self.clock_s + gap <= seg_end {
+                        self.clock_s += gap;
+                        return;
+                    }
+                    // The draw crossed the boundary: by memorylessness the
+                    // residual restarts at the boundary under the new rate.
+                    self.clock_s = seg_end;
+                }
+            }
+            ArrivalPattern::Diurnal { period_s, depth } => {
+                let lam_max = self.rate * (1.0 + depth);
+                loop {
+                    self.clock_s += self.rng.exp(lam_max);
+                    let lam_t = self.rate
+                        * (1.0
+                            + depth
+                                * (std::f64::consts::TAU * self.clock_s / period_s).sin());
+                    if self.rng.f64() * lam_max <= lam_t {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
     /// Generate the next request (arrivals strictly increase).
     pub fn next_request(&mut self) -> Request {
-        self.clock_s += self.rng.exp(self.rate);
+        self.advance_clock();
         let (prompt_len, output_len) = match self.kind {
             WorkloadKind::Fixed { prompt, output } => (prompt, output),
             kind => {
@@ -209,6 +313,96 @@ mod tests {
         let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 10.0, 5).trace(3.0);
         assert!(!reqs.is_empty());
         assert!(reqs.iter().all(|r| r.arrival_s <= 3.0));
+    }
+
+    #[test]
+    fn poisson_default_matches_legacy_sampling_exactly() {
+        // The pre-pattern generator drew one exp(rate) gap then the two
+        // log-normal lengths per request. The Poisson path must consume
+        // the RNG in exactly that order (bit-identical seeded traces).
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 2.0, 42)
+            .with_arrivals(ArrivalPattern::Poisson)
+            .take(100);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(42);
+        let mut clock = 0.0f64;
+        for (i, r) in reqs.iter().enumerate() {
+            clock += rng.exp(2.0);
+            let p = (rng.lognormal(220f64.ln(), 0.95).round() as usize).clamp(4, 8192);
+            let o = (rng.lognormal(180f64.ln(), 0.85).round() as usize).clamp(1, 8192);
+            assert_eq!(r.arrival_s.to_bits(), clock.to_bits(), "req {i} arrival");
+            assert_eq!((r.prompt_len, r.output_len), (p, o), "req {i} lengths");
+        }
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_burst_windows() {
+        let pattern = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 8.0, 11)
+            .with_arrivals(pattern)
+            .trace(600.0);
+        let (mut in_burst, mut in_trough) = (0usize, 0usize);
+        for r in &reqs {
+            if r.arrival_s % 30.0 < 7.5 {
+                in_burst += 1;
+            } else {
+                in_trough += 1;
+            }
+        }
+        // Burst windows are 1/4 of the time at 3x rate; troughs carry the
+        // compensating 1/3x rate. Empirical per-second ratio ~9.
+        let burst_rate = in_burst as f64 / (600.0 * 0.25);
+        let trough_rate = in_trough as f64 / (600.0 * 0.75);
+        assert!(
+            burst_rate / trough_rate > 4.0,
+            "burst {burst_rate:.2}/s vs trough {trough_rate:.2}/s"
+        );
+        // Mean offered load is preserved.
+        let mean = reqs.len() as f64 / 600.0;
+        assert!((mean - 8.0).abs() / 8.0 < 0.15, "mean rate {mean:.2}");
+        // Strictly increasing arrivals survive the segment restarts.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_with_the_sinusoid() {
+        let pattern = ArrivalPattern::Diurnal { period_s: 100.0, depth: 0.8 };
+        let reqs = TraceGenerator::new(WorkloadKind::ShareGpt, 6.0, 9)
+            .with_arrivals(pattern)
+            .trace(1000.0);
+        // sin > 0 on the first half of each period: that half must carry
+        // visibly more arrivals than the second.
+        let (mut up, mut down) = (0usize, 0usize);
+        for r in &reqs {
+            if r.arrival_s % 100.0 < 50.0 {
+                up += 1;
+            } else {
+                down += 1;
+            }
+        }
+        assert!(up as f64 > down as f64 * 1.5, "up {up} down {down}");
+        let mean = reqs.len() as f64 / 1000.0;
+        assert!((mean - 6.0).abs() / 6.0 < 0.15, "mean rate {mean:.2}");
+    }
+
+    #[test]
+    fn patterned_traces_are_seed_deterministic() {
+        let pattern = ArrivalPattern::Bursty { period_s: 20.0, duty: 0.3, mult: 2.5 };
+        let a = TraceGenerator::new(WorkloadKind::ShareGpt, 4.0, 5)
+            .with_arrivals(pattern)
+            .take(200);
+        let b = TraceGenerator::new(WorkloadKind::ShareGpt, 4.0, 5)
+            .with_arrivals(pattern)
+            .take(200);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "duty*mult")]
+    fn bursty_with_no_trough_rate_rejected() {
+        let _ = TraceGenerator::new(WorkloadKind::ShareGpt, 4.0, 5)
+            .with_arrivals(ArrivalPattern::Bursty { period_s: 10.0, duty: 0.5, mult: 2.0 });
     }
 
     #[test]

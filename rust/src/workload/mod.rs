@@ -12,6 +12,6 @@ mod generator;
 mod request;
 pub mod trace;
 
-pub use generator::{TraceGenerator, WorkloadKind};
+pub use generator::{ArrivalPattern, TraceGenerator, WorkloadKind};
 pub use request::{Request, RequestId};
 pub use trace::{load_trace, save_trace, trace_from_json, trace_to_json};

@@ -1,0 +1,213 @@
+//! Runtime offload rebalancer — behavioral contract (ISSUE 3).
+//!
+//! The static bit-identity contract ("`LoadAware`/`Disabled` without
+//! rebalancing behave exactly as before the rebalancer existed") is pinned
+//! from three sides:
+//!
+//! * structurally: `ServingConfig::rebalance = None` schedules no ticks
+//!   and runs no migration code (`static_runs_never_migrate` in
+//!   `sim::cluster`), and the refactored seams are pinned bit-for-bit at
+//!   the unit level — the Poisson arrival path consumes the RNG exactly
+//!   like the pre-pattern generator
+//!   (`poisson_default_matches_legacy_sampling_exactly`) and
+//!   `CostModel::kv_transfer_time` reproduces the old inline transfer
+//!   formula (`kv_transfer_time_matches_legacy_inline_formula`);
+//! * behaviorally: [`ticks_without_migrations_are_inert`] shows that even
+//!   *with* the controller ticking, a zero-migration budget leaves every
+//!   simulated metric bit-identical to the static run — the ticks only
+//!   observe, they never perturb.
+//!
+//! The dynamic contract on a bursty trace: migrations happen, token
+//! accounting and proxy metadata survive them, runs stay deterministic,
+//! and throughput is at least the static `LoadAware` baseline's.
+
+use adrenaline::config::{ModelSpec, RebalanceConfig};
+use adrenaline::sim::{parallel_map, ClusterSim, SimConfig, SimReport};
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
+
+/// The §Scenarios burst trace: 3x the mean rate for a quarter of each
+/// 30 s cycle, troughs compensating so the offered load stays 24 req/s.
+const BURSTY: ArrivalPattern = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+
+fn bursty_cfg(rebalance: Option<RebalanceConfig>) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 120.0;
+    cfg.arrivals = BURSTY;
+    cfg.serving.rebalance = rebalance;
+    cfg
+}
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+/// A ticking controller with a zero migration budget must leave every
+/// simulated quantity bit-identical to the static run: the rebalancer
+/// observes the system, it never perturbs it except by migrating.
+#[test]
+fn ticks_without_migrations_are_inert() {
+    let mut short = bursty_cfg(None);
+    short.duration_s = 60.0;
+    let frozen = RebalanceConfig { max_migrations_per_interval: 0, ..Default::default() };
+    let mut ticking = bursty_cfg(Some(frozen));
+    ticking.duration_s = 60.0;
+
+    let runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { short.clone() } else { ticking.clone() }).run()
+    });
+    let (a, b) = (&runs[0], &runs[1]);
+    assert_eq!(b.migrations_total, 0);
+    assert!(!b.prefill_pressure_timeline.is_empty(), "the controller did tick");
+
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    // (sim_end_s and the end-normalized utilization means are NOT
+    // compared: the final tick legitimately advances the clock up to one
+    // interval past the last finish.)
+    match (&a.ttft, &b.ttft) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count);
+            assert!(feq(x.mean, y.mean) && feq(x.p50, y.p50) && feq(x.p99, y.p99));
+        }
+        (None, None) => {}
+        _ => panic!("ttft presence differs"),
+    }
+    match (&a.tpot, &b.tpot) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count);
+            assert!(feq(x.mean, y.mean) && feq(x.p50, y.p50) && feq(x.p99, y.p99));
+        }
+        (None, None) => {}
+        _ => panic!("tpot presence differs"),
+    }
+    assert_eq!(a.decode_occupancy.points(), b.decode_occupancy.points());
+    assert_eq!(a.batch_size.points(), b.batch_size.points());
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_bucket_hits, b.graph_bucket_hits);
+    // The only allowed difference: the tick events themselves.
+    assert!(b.events_processed > a.events_processed);
+}
+
+/// The acceptance bar: on the bursty trace the dynamic rebalancer
+/// migrates (offloading more whenever troughs leave OB headroom the
+/// admission-time split can't reach) and overall throughput is at least
+/// the static `LoadAware` baseline's.
+#[test]
+fn dynamic_rebalancing_beats_static_on_bursty_trace() {
+    let cfgs = [bursty_cfg(None), bursty_cfg(Some(RebalanceConfig::default()))];
+    let runs: Vec<SimReport> = parallel_map(2, |i| ClusterSim::new(cfgs[i].clone()).run());
+    let (stat, dyn_) = (&runs[0], &runs[1]);
+
+    assert_eq!(stat.migrations_total, 0);
+    assert!(dyn_.migrations_total > 0, "the controller must act on this trace");
+    assert!(dyn_.migrations_to_offload > 0, "troughs leave OB headroom to claim");
+    assert!(dyn_.tokens_conserved, "migrations must not corrupt token accounting");
+    assert_eq!(dyn_.preemptions, dyn_.req_preemptions_total);
+    assert!(dyn_.migration_tokens_moved > 0, "token movement must be recorded");
+    assert!(
+        dyn_.throughput >= stat.throughput * 0.99,
+        "dynamic {} must not lose to static {}",
+        dyn_.throughput,
+        stat.throughput
+    );
+    if dyn_.finished == dyn_.arrived {
+        assert_eq!(dyn_.metadata_residual, 0, "proxy metadata must drain");
+    }
+}
+
+/// The burst signal itself: the prefill-pressure samples must cross both
+/// edges of the default hysteresis band (0.25 / 0.75), and the offloaded
+/// fraction must actually move in response — the tracking the `rebalance`
+/// figure group charts.
+#[test]
+fn pressure_spans_the_band_and_fraction_responds() {
+    let r = ClusterSim::new(bursty_cfg(Some(RebalanceConfig::default()))).run();
+    let pressure = &r.prefill_pressure_timeline;
+    assert!(!pressure.is_empty());
+    let pmax = pressure.max_value().unwrap();
+    let pmin = pressure.min_value().unwrap();
+    assert!(pmax >= 0.75, "bursts must push pressure past the band, got {pmax}");
+    assert!(pmin <= 0.25, "troughs must drain below the band, got {pmin}");
+
+    let frac = &r.offloaded_frac_timeline;
+    assert_eq!(frac.len(), pressure.len(), "tick samples stay aligned");
+    let fmax = frac.max_value().unwrap();
+    let fmin = frac.min_value().unwrap();
+    assert!(fmax - fmin > 0.2, "offloaded fraction must move, range {}", fmax - fmin);
+}
+
+/// With a tight executor pool, prefill bursts block offloaded prompts at
+/// dispatch; the controller must reclaim (offloaded → local) to unblock
+/// them — both migration directions fire, and accounting survives.
+#[test]
+fn tight_executor_pool_forces_reclaim_migrations() {
+    let mut cfg = bursty_cfg(Some(RebalanceConfig::default()));
+    cfg.serving.executor_kv_capacity_tokens = Some(32 * 1024);
+    let r = ClusterSim::new(cfg).run();
+    assert!(r.finished > 0);
+    assert!(r.migrations_to_local > 0, "blocked dispatch must trigger reclaim");
+    assert!(r.migrations_to_offload > 0, "troughs must still refill the pool");
+    assert!(r.tokens_conserved);
+    assert_eq!(r.preemptions, r.req_preemptions_total);
+    if r.finished == r.arrived {
+        assert_eq!(r.metadata_residual, 0);
+    }
+}
+
+/// Migration churn on top of preemption churn (tiny pools, long outputs):
+/// the two recovery paths must compose without corrupting accounting.
+#[test]
+fn rebalancing_composes_with_preemption_churn() {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::OpenThoughts, 1.0);
+    cfg.duration_s = 20.0;
+    cfg.arrivals = ArrivalPattern::Bursty { period_s: 8.0, duty: 0.25, mult: 3.0 };
+    cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+    cfg.serving.executor_kv_capacity_tokens = Some(16 * 1024);
+    cfg.serving.rebalance = Some(RebalanceConfig::default());
+    let r = ClusterSim::new(cfg).run();
+    assert!(r.preemptions > 0, "tiny pools must preempt");
+    assert!(r.tokens_conserved, "accounting must survive preempt+migrate churn");
+    assert_eq!(r.preemptions, r.req_preemptions_total);
+    assert!(r.finished > 0);
+}
+
+/// Rebalancing runs stay seed-deterministic, migrations included.
+#[test]
+fn rebalancing_is_deterministic_given_seed() {
+    let mut cfg = bursty_cfg(Some(RebalanceConfig::default()));
+    cfg.duration_s = 45.0;
+    let a = ClusterSim::new(cfg.clone()).run();
+    let b = ClusterSim::new(cfg).run();
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migrations_to_offload, b.migrations_to_offload);
+    assert_eq!(a.migrations_to_local, b.migrations_to_local);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_eq!(a.finished, b.finished);
+    assert!(feq(a.throughput, b.throughput));
+    assert_eq!(a.offloaded_frac_timeline.points(), b.offloaded_frac_timeline.points());
+    assert_eq!(a.prefill_pressure_timeline.points(), b.prefill_pressure_timeline.points());
+}
+
+/// The diurnal pattern drives the same machinery more gently: the sim
+/// runs, conserves, and (with rebalancing) keeps metadata consistent.
+#[test]
+fn diurnal_trace_runs_clean_with_rebalancing() {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 12.0);
+    cfg.duration_s = 60.0;
+    cfg.arrivals = ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 };
+    cfg.serving.rebalance = Some(RebalanceConfig::default());
+    let r = ClusterSim::new(cfg).run();
+    assert!(r.finished > 0);
+    assert!(r.tokens_conserved);
+    assert!(!r.prefill_pressure_timeline.is_empty());
+    if r.finished == r.arrived {
+        assert_eq!(r.metadata_residual, 0);
+    }
+}

@@ -100,6 +100,14 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport) {
     assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
     assert!(feq(a.graph_padding_overhead, b.graph_padding_overhead));
     assert_eq!(a.graph_bucket_hits, b.graph_bucket_hits);
+    // Rebalancer observability: counters, tick samples, residency.
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migrations_to_offload, b.migrations_to_offload);
+    assert_eq!(a.migrations_to_local, b.migrations_to_local);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_eq!(a.offloaded_frac_timeline.points(), b.offloaded_frac_timeline.points());
+    assert_eq!(a.prefill_pressure_timeline.points(), b.prefill_pressure_timeline.points());
+    assert_eq!(a.metadata_residual, b.metadata_residual);
 }
 
 #[test]
