@@ -3,7 +3,7 @@
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
 //!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
-//!                  rebalance|buckets|all]`
+//!                  rebalance|buckets|feedback|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -24,7 +24,9 @@
 //! executable grid, §3.2.2); set `ADRENALINE_EXACT_COSTS=1` to reproduce
 //! the exact-cost ablation.
 
-use adrenaline::config::{ClusterSpec, GpuSpec, ModelSpec, RebalanceConfig, SloConfig};
+use adrenaline::config::{
+    BoundsFeedbackConfig, ClusterSpec, GpuSpec, ModelSpec, RebalanceConfig, SloConfig,
+};
 use adrenaline::coordinator::OffloadBounds;
 use adrenaline::gpu_model::{
     bw_frac_of_sm_frac, prefill_slowdown, DecodeKernelTimes, HbmUsage, KernelKind, PhaseKernels,
@@ -59,6 +61,7 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("scaling", scaling),
     ("rebalance", rebalance),
     ("buckets", buckets),
+    ("feedback", feedback),
 ];
 
 fn main() {
@@ -443,6 +446,76 @@ fn rebalance(out: &mut String) {
         let stride = (pts.len() / 60).max(1);
         for (t, v) in pts.iter().step_by(stride) {
             row(out, "rebalance", series, *t, *v);
+        }
+    }
+}
+
+/// Online bounds feedback (ISSUE 4 / EXPERIMENTS.md §Scenarios): static
+/// offline `OB` vs the online B_TPOT feedback loop on the PR 3
+/// non-stationary traces. Rows per (trace, mode): throughput, goodput,
+/// TPOT-SLO attainment, mean/P99 TPOT, and refresh counters, plus the
+/// online runs' per-tick `b_tpot` / `ob` timelines — the tracking chart
+/// (the offline seed is one horizontal line; the online bound moves with
+/// context length and load).
+fn feedback(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let traces: [(&str, ArrivalPattern, f64); 2] = [
+        ("bursty", ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 }, 24.0),
+        ("diurnal", ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 }, 12.0),
+    ];
+    let modes: [(&str, Option<BoundsFeedbackConfig>); 2] =
+        [("static", None), ("online", Some(BoundsFeedbackConfig::default()))];
+    let reports: Vec<SimReport> = parallel_map(traces.len() * modes.len(), |i| {
+        let (_, pattern, rate) = traces[i / modes.len()];
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = 120.0;
+        cfg.arrivals = pattern;
+        // Two prefill instances: Eq 1's OB_mem doubles, so the compute
+        // bound (Eq 2) binds and online B_TPOT movement translates into
+        // OB movement (at n=1 OB_mem binds and the loop is observational
+        // — EXPERIMENTS.md §Scenarios).
+        cfg.cluster.n_prefill = 2;
+        cfg.serving.bounds_feedback = modes[i % modes.len()].1;
+        ClusterSim::new(cfg).run()
+    });
+    for (i, r) in reports.iter().enumerate() {
+        let trace = traces[i / modes.len()].0;
+        let mode = modes[i % modes.len()].0;
+        let s = |name: &str| format!("{trace}_{mode}_{name}");
+        row(out, "feedback", &s("tput_tok_s"), 0.0, r.throughput);
+        row(out, "feedback", &s("goodput_tok_s"), 0.0, r.goodput);
+        row(out, "feedback", &s("tpot_slo_attainment"), 0.0, r.tpot_slo_attainment);
+        row(
+            out,
+            "feedback",
+            &s("tpot_s"),
+            0.0,
+            r.tpot.map(|t| t.mean).unwrap_or(f64::NAN),
+        );
+        row(
+            out,
+            "feedback",
+            &s("tpot_p99_s"),
+            0.0,
+            r.tpot.map(|t| t.p99).unwrap_or(f64::NAN),
+        );
+        row(out, "feedback", &s("bounds_refreshes"), 0.0, r.bounds_refreshes as f64);
+        row(
+            out,
+            "feedback",
+            &s("b_tpot_observations"),
+            0.0,
+            r.b_tpot_observations as f64,
+        );
+        // The online runs' tracking timelines (strided to ~60 points).
+        if mode == "online" {
+            for (series, tl) in [("b_tpot", &r.b_tpot_timeline), ("ob", &r.ob_timeline)] {
+                let pts = tl.points();
+                let stride = (pts.len() / 60).max(1);
+                for (t, v) in pts.iter().step_by(stride) {
+                    row(out, "feedback", &format!("{trace}_{series}"), *t, *v);
+                }
+            }
         }
     }
 }

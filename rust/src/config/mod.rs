@@ -17,4 +17,6 @@ mod serving;
 
 pub use cluster::{ClusterSpec, GpuSpec};
 pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
-pub use serving::{OffloadPolicy, RebalanceConfig, ServingConfig, SloConfig};
+pub use serving::{
+    BoundsFeedbackConfig, OffloadPolicy, RebalanceConfig, ServingConfig, SloConfig,
+};

@@ -63,6 +63,30 @@ impl Default for RebalanceConfig {
     }
 }
 
+/// Online bounds-feedback knobs (§3.4.2: the proxy tracks `B_TPOT` online
+/// and refreshes `OB_comp` as load shifts, instead of freezing the
+/// offline roofline seed for the whole run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundsFeedbackConfig {
+    /// Standalone refresh-tick period, seconds (used when no rebalancer
+    /// runs; with rebalancing on, refreshes ride the rebalance ticks).
+    pub interval_s: f64,
+    /// EMA weight for each new step-time / request-TPOT observation.
+    pub alpha: f64,
+    /// Decode-step observations required before the first refresh is
+    /// applied (the offline seed holds until the EMAs have warmed up).
+    /// The JSON plane carries this as f64 (like every numeric field):
+    /// integers up to 2^53 round-trip exactly, `u64::MAX` survives via
+    /// the saturating cast, values in between lose precision.
+    pub min_observations: u64,
+}
+
+impl Default for BoundsFeedbackConfig {
+    fn default() -> Self {
+        BoundsFeedbackConfig { interval_s: 0.25, alpha: 0.2, min_observations: 16 }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -103,6 +127,11 @@ pub struct ServingConfig {
     /// one-shot admission-time split — bit-identical to the
     /// pre-rebalancer simulator (pinned by `rust/tests/rebalance.rs`).
     pub rebalance: Option<RebalanceConfig>,
+    /// Online B_TPOT bounds feedback. `None` (the default) keeps the
+    /// offline roofline seed frozen for the whole run — no observation
+    /// hooks fire and no refresh ticks are scheduled (pinned by
+    /// `rust/tests/bounds_feedback.rs`).
+    pub bounds_feedback: Option<BoundsFeedbackConfig>,
 }
 
 impl Default for ServingConfig {
@@ -120,6 +149,7 @@ impl Default for ServingConfig {
             decode_kv_capacity_tokens: None,
             exact_costs: false,
             rebalance: None,
+            bounds_feedback: None,
         }
     }
 }
@@ -199,20 +229,66 @@ impl ServingConfig {
             None | Some(Json::Null) => {}
             Some(rb @ Json::Obj(_)) => {
                 let mut r = RebalanceConfig::default();
-                if let Some(x) = rb.get("interval_s").and_then(Json::as_f64) {
-                    r.interval_s = x;
+                // A present-but-wrong-typed field is a config error, not a
+                // silent default (same discipline as `bounds_feedback`).
+                if let Some(x) = rb.get("interval_s") {
+                    r.interval_s = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("bad rebalance interval_s: {x}"))?;
                 }
-                if let Some(x) = rb.get("hysteresis").and_then(Json::as_f64) {
-                    r.hysteresis = x;
+                if let Some(x) = rb.get("hysteresis") {
+                    r.hysteresis = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("bad rebalance hysteresis: {x}"))?;
                 }
-                if let Some(x) = rb.get("max_migrations").and_then(Json::as_u64) {
-                    r.max_migrations_per_interval = x as usize;
+                if let Some(x) = rb.get("max_migrations") {
+                    r.max_migrations_per_interval = x
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("bad rebalance max_migrations: {x}"))?
+                        as usize;
                 }
-                anyhow::ensure!(r.interval_s > 0.0, "rebalance interval_s must be positive");
+                anyhow::ensure!(
+                    r.interval_s.is_finite() && r.interval_s > 0.0,
+                    "rebalance interval_s must be positive and finite"
+                );
                 anyhow::ensure!(r.hysteresis >= 0.0, "rebalance hysteresis must be >= 0");
                 cfg.rebalance = Some(r);
             }
             Some(other) => anyhow::bail!("bad rebalance config: {other}"),
+        }
+        // Same object-or-null discipline as `rebalance`.
+        match v.get("bounds_feedback") {
+            None | Some(Json::Null) => {}
+            Some(fb @ Json::Obj(_)) => {
+                let mut f = BoundsFeedbackConfig::default();
+                // A present-but-wrong-typed field is a config error, not a
+                // silent default.
+                if let Some(x) = fb.get("interval_s") {
+                    f.interval_s = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("bad bounds_feedback interval_s: {x}"))?;
+                }
+                if let Some(x) = fb.get("alpha") {
+                    f.alpha = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("bad bounds_feedback alpha: {x}"))?;
+                }
+                if let Some(x) = fb.get("min_observations") {
+                    f.min_observations = x.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("bad bounds_feedback min_observations: {x}")
+                    })?;
+                }
+                anyhow::ensure!(
+                    f.interval_s.is_finite() && f.interval_s > 0.0,
+                    "bounds_feedback interval_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    f.alpha > 0.0 && f.alpha <= 1.0,
+                    "bounds_feedback alpha must be in (0, 1]"
+                );
+                cfg.bounds_feedback = Some(f);
+            }
+            Some(other) => anyhow::bail!("bad bounds_feedback config: {other}"),
         }
         Ok(cfg)
     }
@@ -265,6 +341,13 @@ impl ServingConfig {
             );
             o.insert("rebalance".into(), Json::Obj(rb));
         }
+        if let Some(f) = self.bounds_feedback {
+            let mut fb = BTreeMap::new();
+            fb.insert("interval_s".into(), Json::Num(f.interval_s));
+            fb.insert("alpha".into(), Json::Num(f.alpha));
+            fb.insert("min_observations".into(), Json::Num(f.min_observations as f64));
+            o.insert("bounds_feedback".into(), Json::Obj(fb));
+        }
         Json::Obj(o).to_string()
     }
 }
@@ -303,6 +386,19 @@ mod tests {
                     hysteresis: 0.1,
                     max_migrations_per_interval: 4,
                 }),
+                ..Default::default()
+            },
+            ServingConfig {
+                bounds_feedback: Some(BoundsFeedbackConfig::default()),
+                ..Default::default()
+            },
+            ServingConfig {
+                bounds_feedback: Some(BoundsFeedbackConfig {
+                    interval_s: 1.0,
+                    alpha: 0.5,
+                    min_observations: 4,
+                }),
+                rebalance: Some(RebalanceConfig::default()),
                 ..Default::default()
             },
         ] {
@@ -346,6 +442,42 @@ mod tests {
         assert!(off.rebalance.is_none());
         assert!(ServingConfig::from_json(r#"{"rebalance": true}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"rebalance": 0.25}"#).is_err());
+        // Wrong-typed fields are errors, never silent defaults.
+        assert!(ServingConfig::from_json(r#"{"rebalance": {"interval_s": "fast"}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"rebalance": {"max_migrations": 0.5}}"#).is_err());
+    }
+
+    #[test]
+    fn bounds_feedback_defaults_off_and_json_validates() {
+        assert!(ServingConfig::default().bounds_feedback.is_none(), "feedback is opt-in");
+        let cfg =
+            ServingConfig::from_json(r#"{"bounds_feedback": {"interval_s": 0.5}}"#).unwrap();
+        let f = cfg.bounds_feedback.expect("object enables the feedback plane");
+        assert_eq!(f.interval_s, 0.5);
+        assert_eq!(f.alpha, BoundsFeedbackConfig::default().alpha);
+        assert_eq!(f.min_observations, BoundsFeedbackConfig::default().min_observations);
+        // null spells "off"; malformed values are errors, never silent
+        // defaults.
+        let off = ServingConfig::from_json(r#"{"bounds_feedback": null}"#).unwrap();
+        assert!(off.bounds_feedback.is_none());
+        assert!(ServingConfig::from_json(r#"{"bounds_feedback": true}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"bounds_feedback": {"interval_s": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"bounds_feedback": {"alpha": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"bounds_feedback": {"alpha": 1.5}}"#).is_err());
+        // Wrong-typed fields are errors too, never silent defaults.
+        assert!(
+            ServingConfig::from_json(r#"{"bounds_feedback": {"interval_s": "fast"}}"#).is_err()
+        );
+        assert!(
+            ServingConfig::from_json(r#"{"bounds_feedback": {"interval_s": 1e400}}"#).is_err(),
+            "non-finite interval must be a config error, not a runtime panic"
+        );
+        assert!(
+            ServingConfig::from_json(r#"{"bounds_feedback": {"min_observations": -1}}"#).is_err()
+        );
+        assert!(
+            ServingConfig::from_json(r#"{"bounds_feedback": {"min_observations": 1.5}}"#).is_err()
+        );
     }
 
     #[test]

@@ -22,9 +22,23 @@ pub struct OffloadBounds {
     /// Largest batch meeting the TPOT SLO without offloading (B_TPOT).
     /// Tracked from runtime metadata; seeded from the model here.
     pub b_tpot: usize,
+    /// Drift-free rescaling reference: `ob_mem` as it was when the prefill
+    /// pool had `n_ref` instances. Captured on the first resize so every
+    /// later resize recomputes `ob_mem` from one multiply instead of
+    /// compounding per-resize f64 rounding.
+    ob_mem_ref: f64,
+    /// Reference prefill-instance count for `ob_mem_ref` (0 = no resize
+    /// has happened yet).
+    n_ref: f64,
 }
 
 impl OffloadBounds {
+    /// Bounds from already-derived quantities (tests, overrides). The
+    /// rescaling reference anchors on the first `rescale_ob_mem` call.
+    pub fn new(ob_mem: f64, b_max: usize, b_tpot: usize) -> Self {
+        OffloadBounds { ob_mem, b_max, b_tpot, ob_mem_ref: ob_mem, n_ref: 0.0 }
+    }
+
     /// Offline-profiling stage: derive all three quantities from the GPU
     /// model (the paper uses kernel profilers; we use the roofline).
     ///
@@ -36,11 +50,11 @@ impl OffloadBounds {
         slo: &SloConfig,
         avg_seq: u64,
     ) -> OffloadBounds {
-        OffloadBounds {
-            ob_mem: Self::ob_mem(cluster, model),
-            b_max: Self::b_max(cluster, model, slo),
-            b_tpot: Self::b_tpot(cluster, model, slo, avg_seq),
-        }
+        OffloadBounds::new(
+            Self::ob_mem(cluster, model),
+            Self::b_max(cluster, model, slo),
+            Self::b_tpot(cluster, model, slo, avg_seq),
+        )
     }
 
     /// Eq 1. `HBM_pi`: capacity each prefill instance can lend to its
@@ -177,10 +191,21 @@ impl OffloadBounds {
     }
 
     /// Refresh OB_mem when prefill instances are added/removed (§3.4.2).
+    ///
+    /// Eq 1 is linear in n, so the new value is recomputed exactly from a
+    /// reference pair `(n_ref, ob_mem_ref)` captured on the first resize —
+    /// repeated resizes used to compound `ob_mem *= new/old` multiplies,
+    /// drifting a few ULPs per round trip. Returning to the reference
+    /// count now restores `ob_mem` bit-exactly (`x * 1.0 == x`).
     pub fn rescale_ob_mem(&mut self, old_n: f64, new_n: f64) {
-        if old_n > 0.0 {
-            self.ob_mem *= new_n / old_n;
+        if old_n <= 0.0 || new_n <= 0.0 {
+            return;
         }
+        if self.n_ref <= 0.0 {
+            self.n_ref = old_n;
+            self.ob_mem_ref = self.ob_mem;
+        }
+        self.ob_mem = self.ob_mem_ref * (new_n / self.n_ref);
     }
 }
 
@@ -258,5 +283,57 @@ mod tests {
         let before = b.ob_mem;
         b.rescale_ob_mem(1.0, 3.0);
         assert!((b.ob_mem / before - 3.0).abs() < 1e-9);
+    }
+
+    /// Satellite (ISSUE 4): any chain of resizes that returns to the
+    /// starting instance count restores `ob_mem` bit-exactly — the old
+    /// `ob_mem *= new/old` compounding drifted a few ULPs per round trip.
+    #[test]
+    fn property_rescale_round_trip_is_bit_exact() {
+        crate::util::prop::check("rescale_ob_mem_drift_free", 200, |rng| {
+            let mut b = OffloadBounds::new(
+                rng.f64(),
+                100 + rng.range_usize(0, 1000),
+                1 + rng.range_usize(0, 99),
+            );
+            let original = b.ob_mem.to_bits();
+            let n0 = 1.0 + rng.range_usize(0, 7) as f64;
+            let mut cur = n0;
+            for _ in 0..rng.range_usize(1, 40) {
+                let next = 1.0 + rng.range_usize(0, 7) as f64;
+                b.rescale_ob_mem(cur, next);
+                cur = next;
+            }
+            b.rescale_ob_mem(cur, n0);
+            assert_eq!(
+                b.ob_mem.to_bits(),
+                original,
+                "returning to n={n0} must restore ob_mem bit-exactly"
+            );
+        });
+    }
+
+    /// Feedback-plane invariant (ISSUE 4): whatever B_TPOT the online
+    /// estimator feeds back, `0 <= ob() <= ob_mem`, and growing the
+    /// observed batch (B_TPOT up) never grows the offload bound.
+    #[test]
+    fn property_online_b_tpot_keeps_ob_bounded_and_monotone() {
+        crate::util::prop::check("ob_bounded_monotone", 200, |rng| {
+            let mut b = OffloadBounds::new(rng.f64(), 1 + rng.range_usize(0, 4096), 1);
+            let mut prev_ob = f64::INFINITY;
+            let mut bt = 1usize;
+            for _ in 0..20 {
+                bt += rng.range_usize(0, 64);
+                b.set_b_tpot(bt);
+                let ob = b.ob();
+                assert!(ob >= 0.0, "ob() went negative: {ob}");
+                assert!(ob <= b.ob_mem + 1e-12, "ob {} above ob_mem {}", ob, b.ob_mem);
+                assert!(
+                    ob <= prev_ob + 1e-12,
+                    "larger observed B_TPOT must not grow OB: {ob} after {prev_ob}"
+                );
+                prev_ob = ob;
+            }
+        });
     }
 }

@@ -31,8 +31,13 @@ pub struct Proxy {
     meta: Vec<RuntimeMetadata>,
     n_prefill: usize,
     rr_prefill: usize,
-    /// Decision counters: (c1, c2, local).
+    /// Fresh-arrival decision counters: (c1, c2, local). One increment per
+    /// arriving request, so the sum always equals the arrival count.
     pub decision_counts: (u64, u64, u64),
+    /// Re-route decision counters for preempted requests re-admitted via
+    /// the recompute path — kept separate so the admission counters above
+    /// are not inflated by preemption churn (one increment per preemption).
+    pub decision_counts_rerouted: (u64, u64, u64),
 }
 
 impl Proxy {
@@ -44,6 +49,7 @@ impl Proxy {
             n_prefill,
             rr_prefill: 0,
             decision_counts: (0, 0, 0),
+            decision_counts_rerouted: (0, 0, 0),
         }
     }
 
@@ -69,6 +75,25 @@ impl Proxy {
     /// metadata immediately (the §3.2.1 "hint": the attention executor
     /// learns about offloaded requests before their first decode step).
     pub fn route(&mut self, req: &Request) -> RouteDecision {
+        self.route_at(req, req.prompt_len, false)
+    }
+
+    /// Re-route a preempted request resuming via the recompute path. The
+    /// recompute prefill re-materializes `resumed_len = prompt + generated`
+    /// tokens of KV, so that — not the original prompt length — is the
+    /// `used_token` the offload budget must account (routing with the bare
+    /// prompt length undercounted every preempted request's OB share by
+    /// its generated tokens). Counted under `decision_counts_rerouted`.
+    pub fn route_resumed(&mut self, req: &Request, resumed_len: usize) -> RouteDecision {
+        debug_assert!(
+            resumed_len >= req.prompt_len,
+            "resumption length {resumed_len} below prompt {}",
+            req.prompt_len
+        );
+        self.route_at(req, resumed_len, true)
+    }
+
+    fn route_at(&mut self, req: &Request, used_token: usize, rerouted: bool) -> RouteDecision {
         let prefill_instance = self.rr_prefill;
         self.rr_prefill = (self.rr_prefill + 1) % self.n_prefill;
 
@@ -80,12 +105,17 @@ impl Proxy {
             .map(|(i, _)| i)
             .expect("at least one decode instance");
 
-        let rm = ReqMeta { used_token: req.prompt_len, max_token: req.max_token() };
+        let rm = ReqMeta { used_token, max_token: req.max_token().max(used_token) };
         let offload = self.scheduler.need_offload(rm, &self.meta[decode_instance]);
+        let counts = if rerouted {
+            &mut self.decision_counts_rerouted
+        } else {
+            &mut self.decision_counts
+        };
         match offload {
-            OffloadDecision::C1 => self.decision_counts.0 += 1,
-            OffloadDecision::C2 => self.decision_counts.1 += 1,
-            OffloadDecision::Local => self.decision_counts.2 += 1,
+            OffloadDecision::C1 => counts.0 += 1,
+            OffloadDecision::C2 => counts.1 += 1,
+            OffloadDecision::Local => counts.2 += 1,
         }
         self.meta[decode_instance].admit(req.id, rm, offload.offloaded());
         RouteDecision { prefill_instance, decode_instance, offload }
@@ -172,7 +202,7 @@ mod tests {
     use crate::util::prop;
 
     fn bounds() -> OffloadBounds {
-        OffloadBounds { ob_mem: 0.7, b_max: 160, b_tpot: 80 }
+        OffloadBounds::new(0.7, 160, 80)
     }
 
     fn req(id: u64, prompt: usize, output: usize) -> Request {
@@ -220,6 +250,53 @@ mod tests {
         p.on_finished(0, 0);
         p.on_preempted(0, 1);
         assert_eq!(p.metadata(0).total_count(), 0);
+    }
+
+    /// Regression (ISSUE 4 satellite): a preempted request resuming at
+    /// `prompt + generated` must re-enter the metadata at its resumption
+    /// length — `route` used to admit it at the bare prompt length,
+    /// undercounting the OB budget by every generated token.
+    #[test]
+    fn resumed_route_accounts_generated_tokens() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 1);
+        let r = req(0, 100, 50);
+        p.route(&r);
+        for _ in 0..20 {
+            p.on_token(0, 0);
+        }
+        assert_eq!(p.metadata(0).decode_used_tokens(), 120);
+        p.on_preempted(0, 0);
+        assert_eq!(p.metadata(0).decode_used_tokens(), 0);
+        // Recompute resumes at prompt + generated = 120 tokens.
+        p.route_resumed(&r, 120);
+        assert_eq!(
+            p.metadata(0).decode_used_tokens(),
+            120,
+            "re-admission must account the resumed sequence length"
+        );
+        assert_eq!(p.metadata(0).used_token_of(0), Some(120));
+    }
+
+    /// Satellite: re-routes land in their own counters; the fresh-arrival
+    /// counters keep summing to the arrival count.
+    #[test]
+    fn reroute_decisions_counted_separately() {
+        let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 1, 1);
+        let r0 = req(0, 500, 100);
+        let r1 = req(1, 50, 50);
+        p.route(&r0);
+        p.route(&r1);
+        let fresh = p.decision_counts;
+        assert_eq!(fresh.0 + fresh.1 + fresh.2, 2, "one decision per arrival");
+        assert_eq!(p.decision_counts_rerouted, (0, 0, 0));
+        // Preempt + re-admit both: only the rerouted counters move.
+        p.on_preempted(0, 0);
+        p.route_resumed(&r0, 510);
+        p.on_preempted(0, 1);
+        p.route_resumed(&r1, 60);
+        assert_eq!(p.decision_counts, fresh, "arrival counters must not inflate");
+        let re = p.decision_counts_rerouted;
+        assert_eq!(re.0 + re.1 + re.2, 2, "one rerouted decision per preemption");
     }
 
     #[test]
@@ -284,11 +361,11 @@ mod tests {
     fn property_offload_never_without_budget() {
         prop::check("offload_respects_bound", 100, |rng| {
             let ob_mem = rng.f64();
-            let b = OffloadBounds {
+            let b = OffloadBounds::new(
                 ob_mem,
-                b_max: 100 + rng.range_usize(0, 100),
-                b_tpot: 1 + rng.range_usize(0, 99),
-            };
+                100 + rng.range_usize(0, 100),
+                1 + rng.range_usize(0, 99),
+            );
             let mut p = Proxy::new(OffloadPolicy::LoadAware, b, 1, 1);
             for id in 0..30u64 {
                 let r = req(id, rng.range_usize(1, 300), rng.range_usize(1, 300));

@@ -302,7 +302,7 @@ mod tests {
     use super::*;
 
     fn bounds(ob_mem: f64, b_max: usize, b_tpot: usize) -> OffloadBounds {
-        OffloadBounds { ob_mem, b_max, b_tpot }
+        OffloadBounds::new(ob_mem, b_max, b_tpot)
     }
 
     fn meta_with(local: &[(u64, usize, usize)], offl: &[(u64, usize, usize)]) -> RuntimeMetadata {

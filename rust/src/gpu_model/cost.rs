@@ -292,6 +292,174 @@ impl CostModel {
     }
 }
 
+/// Online B_TPOT estimator (§3.4.2) — the feedback half of the bounds
+/// plane. The simulator feeds it every decode step's (batch, wall time)
+/// and every finished request's mean TPOT; it maintains an EMA of step
+/// time at each captured `GraphCache` local bucket plus a request-level
+/// TPOT EMA, and answers "what is the largest batch currently meeting the
+/// TPOT SLO" so the proxy can refresh `OB_comp` as load and context
+/// lengths shift (`Proxy::observe_b_tpot`).
+///
+/// The request-level EMA corrects for what raw step times cannot see:
+/// tokens wait on scheduling gaps, migrations, and recompute, so observed
+/// per-token latency is at least the step time. The ratio of the two EMAs
+/// becomes a ≥ 1 inflation factor applied to the per-bucket step curve
+/// before it is compared against the SLO.
+#[derive(Debug, Clone)]
+pub struct BTpotEstimator {
+    /// Captured local-batch capacities, ascending (zero filtered out).
+    buckets: Vec<usize>,
+    /// Per-bucket step-time EMA; NaN = bucket not yet observed.
+    step_ema: Vec<f64>,
+    /// EMA weight for each new observation.
+    alpha: f64,
+    /// Bucket-agnostic step-time EMA (denominator of the inflation).
+    global_step_ema: f64,
+    /// Finished requests' mean-TPOT EMA (numerator of the inflation).
+    req_tpot_ema: f64,
+    observations: u64,
+}
+
+impl BTpotEstimator {
+    pub fn new(buckets: &[usize], alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EMA alpha must be in (0, 1], got {alpha}");
+        let buckets: Vec<usize> = buckets.iter().copied().filter(|&b| b > 0).collect();
+        assert!(!buckets.is_empty(), "estimator needs at least one non-zero bucket");
+        debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+        BTpotEstimator {
+            step_ema: vec![f64::NAN; buckets.len()],
+            buckets,
+            alpha,
+            global_step_ema: f64::NAN,
+            req_tpot_ema: f64::NAN,
+            observations: 0,
+        }
+    }
+
+    /// Index of the smallest bucket covering `batch` (the bucket the
+    /// executable grid would run this batch at); saturates at the largest.
+    fn cover(&self, batch: usize) -> usize {
+        match self.buckets.binary_search(&batch) {
+            Ok(i) => i,
+            Err(i) => i.min(self.buckets.len() - 1),
+        }
+    }
+
+    fn ema_update(slot: &mut f64, alpha: f64, x: f64) {
+        *slot = if slot.is_nan() { x } else { alpha * x + (1.0 - alpha) * *slot };
+    }
+
+    /// One decode step of `batch` rows took `step_s` seconds.
+    pub fn observe_step(&mut self, batch: usize, step_s: f64) {
+        if batch == 0 || !step_s.is_finite() || step_s < 0.0 {
+            return;
+        }
+        let i = self.cover(batch);
+        Self::ema_update(&mut self.step_ema[i], self.alpha, step_s);
+        Self::ema_update(&mut self.global_step_ema, self.alpha, step_s);
+        self.observations += 1;
+    }
+
+    /// A finished request's mean per-output-token latency.
+    pub fn observe_request_tpot(&mut self, tpot_s: f64) {
+        if !tpot_s.is_finite() || tpot_s < 0.0 {
+            return;
+        }
+        Self::ema_update(&mut self.req_tpot_ema, self.alpha, tpot_s);
+    }
+
+    /// Decode-step observations ingested so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Step-time → TPOT inflation factor (≥ 1; 1 until both EMAs exist).
+    fn inflation(&self) -> f64 {
+        if self.req_tpot_ema.is_nan()
+            || self.global_step_ema.is_nan()
+            || self.global_step_ema <= 0.0
+        {
+            return 1.0;
+        }
+        (self.req_tpot_ema / self.global_step_ema).max(1.0)
+    }
+
+    /// Largest batch currently meeting `tpot_slo_s`: scan the observed
+    /// buckets ascending, keep the largest whose inflated step EMA fits
+    /// the SLO, and stop at the first observed violator (step time grows
+    /// with batch, so buckets past it are not trusted even if a stale EMA
+    /// there still looks good). If the smallest observed bucket already
+    /// violates, the frontier sits below it — report the bucket beneath
+    /// (or 1). `None` until any step has been observed.
+    pub fn b_tpot(&self, tpot_slo_s: f64) -> Option<usize> {
+        let infl = self.inflation();
+        let mut best: Option<usize> = None;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            let ema = self.step_ema[i];
+            if ema.is_nan() {
+                continue;
+            }
+            if ema * infl <= tpot_slo_s {
+                best = Some(b);
+            } else {
+                return best.or(Some(if i == 0 { 1 } else { self.buckets[i - 1] }));
+            }
+        }
+        best
+    }
+}
+
+/// Exponentially-decayed duty-cycle estimator for the colocated attention
+/// executor — the "recent duty" the prefill interference model weighs
+/// bandwidth contention by. Busy seconds decay with time constant
+/// `tau_s`, so a busy warm-up phase stops haunting the steady state (the
+/// old lifetime-cumulative ratio never forgot it).
+#[derive(Debug, Clone)]
+pub struct DutyCycleEstimator {
+    tau_s: f64,
+    last_t: f64,
+    w_executor: f64,
+    w_prefill: f64,
+}
+
+impl DutyCycleEstimator {
+    pub fn new(tau_s: f64) -> Self {
+        assert!(tau_s > 0.0, "duty time constant must be positive, got {tau_s}");
+        DutyCycleEstimator { tau_s, last_t: 0.0, w_executor: 0.0, w_prefill: 0.0 }
+    }
+
+    fn decay_to(&mut self, t: f64) {
+        if t > self.last_t {
+            let f = (-(t - self.last_t) / self.tau_s).exp();
+            self.w_executor *= f;
+            self.w_prefill *= f;
+            self.last_t = t;
+        }
+    }
+
+    /// The prefill pipeline ran for `busy_s` seconds, observed at time `t`.
+    pub fn record_prefill(&mut self, t: f64, busy_s: f64) {
+        self.decay_to(t);
+        self.w_prefill += busy_s.max(0.0);
+    }
+
+    /// The attention executor ran for `busy_s` seconds, observed at `t`.
+    pub fn record_executor(&mut self, t: f64, busy_s: f64) {
+        self.decay_to(t);
+        self.w_executor += busy_s.max(0.0);
+    }
+
+    /// Executor share of recent busy time, in [0, 1] (0 before any work).
+    pub fn duty(&self) -> f64 {
+        let total = self.w_executor + self.w_prefill;
+        if total > 0.0 {
+            (self.w_executor / total).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -510,5 +678,111 @@ mod tests {
         assert!(busy >= idle);
         // Memoized: same value again.
         assert_eq!(with.prefill_time(2048, 0.0).to_bits(), idle.to_bits());
+    }
+
+    // ----- BTpotEstimator ---------------------------------------------------
+
+    #[test]
+    fn b_tpot_estimator_tracks_slo_frontier() {
+        let mut est = BTpotEstimator::new(&[0, 1, 2, 4, 8, 16, 32], 0.5);
+        assert_eq!(est.b_tpot(0.1), None, "no observations yet");
+        // Batches 3 and 7 (buckets 4 and 8) comfortably meet a 100 ms SLO.
+        est.observe_step(3, 0.02);
+        est.observe_step(7, 0.04);
+        assert_eq!(est.b_tpot(0.1), Some(8));
+        // Bucket 32 violates: the frontier stays at 8 even though the 16
+        // bucket is unobserved.
+        est.observe_step(20, 0.25);
+        assert_eq!(est.b_tpot(0.1), Some(8));
+        assert_eq!(est.observations(), 3);
+    }
+
+    #[test]
+    fn b_tpot_estimator_reports_below_smallest_violator() {
+        let mut est = BTpotEstimator::new(&[1, 2, 4, 8], 1.0);
+        // Only bucket 4 observed, and it misses the SLO: the frontier sits
+        // below it.
+        est.observe_step(4, 0.5);
+        assert_eq!(est.b_tpot(0.1), Some(2));
+        // Smallest bucket violating => fall to 1.
+        let mut est1 = BTpotEstimator::new(&[1, 2], 1.0);
+        est1.observe_step(1, 0.5);
+        assert_eq!(est1.b_tpot(0.1), Some(1));
+    }
+
+    #[test]
+    fn b_tpot_estimator_request_tpot_inflates_the_curve() {
+        let mut est = BTpotEstimator::new(&[1, 2, 4, 8], 1.0);
+        est.observe_step(8, 0.08);
+        assert_eq!(est.b_tpot(0.1), Some(8));
+        // Requests report 3x the raw step time (queueing/recompute gaps):
+        // the inflated curve (0.24 s) misses the SLO, frontier drops.
+        est.observe_request_tpot(0.24);
+        assert_eq!(est.b_tpot(0.1), Some(4));
+        // Request TPOT below step time never deflates (factor clamps at 1).
+        let mut est2 = BTpotEstimator::new(&[1, 2, 4, 8], 1.0);
+        est2.observe_step(8, 0.08);
+        est2.observe_request_tpot(0.01);
+        assert_eq!(est2.b_tpot(0.1), Some(8));
+    }
+
+    /// Property (ISSUE 4): observing nondecreasing batches that all meet
+    /// the SLO keeps the derived B_TPOT nondecreasing, and it always
+    /// covers the largest batch observed so far.
+    #[test]
+    fn property_b_tpot_monotone_in_observed_batch() {
+        crate::util::prop::check("b_tpot_monotone", 200, |rng| {
+            let buckets = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+            let slo = 0.1;
+            let mut est = BTpotEstimator::new(&buckets, 0.3);
+            let mut batch = 1usize;
+            let mut prev = 0usize;
+            for _ in 0..30 {
+                batch = (batch + rng.range_usize(0, 32)).min(256);
+                // Step time strictly under the SLO (inflation stays 1: no
+                // request samples are fed here).
+                est.observe_step(batch, slo * rng.f64() * 0.99);
+                let got = est.b_tpot(slo).expect("observed => derivable");
+                assert!(got >= prev, "b_tpot regressed {prev} -> {got} at batch {batch}");
+                assert!(got >= batch, "b_tpot {got} below an SLO-meeting batch {batch}");
+                prev = got;
+            }
+        });
+    }
+
+    // ----- DutyCycleEstimator -----------------------------------------------
+
+    #[test]
+    fn duty_estimator_forgets_busy_warmup() {
+        // Lifetime-cumulative duty after a 10 s all-executor warm-up then
+        // 100 s of pure prefill would still read 10/110 ≈ 0.09; the
+        // decayed estimate must fall well below it.
+        let mut d = DutyCycleEstimator::new(10.0);
+        assert_eq!(d.duty(), 0.0);
+        d.record_executor(10.0, 10.0);
+        assert_eq!(d.duty(), 1.0);
+        let mut t = 10.0;
+        while t < 110.0 {
+            t += 1.0;
+            d.record_prefill(t, 1.0);
+        }
+        assert!(d.duty() < 0.01, "warm-up must decay away, duty = {}", d.duty());
+    }
+
+    #[test]
+    fn duty_estimator_tracks_recent_mix() {
+        let mut d = DutyCycleEstimator::new(5.0);
+        // Steady 50/50 mix: duty converges near 0.5 regardless of decay.
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += 0.5;
+            d.record_prefill(t, 0.25);
+            d.record_executor(t, 0.25);
+        }
+        assert!((d.duty() - 0.5).abs() < 1e-9, "duty = {}", d.duty());
+        // Out-of-order-free: time standing still keeps the ratio.
+        let before = d.duty();
+        d.record_prefill(t, 0.0);
+        assert!((d.duty() - before).abs() < 1e-12);
     }
 }

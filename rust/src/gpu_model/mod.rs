@@ -31,7 +31,9 @@ pub mod partition;
 pub mod profile;
 pub mod roofline;
 
-pub use cost::{CostMode, CostModel, DecodeStepCost, PREFILL_BW_FRAC};
+pub use cost::{
+    BTpotEstimator, CostMode, CostModel, DecodeStepCost, DutyCycleEstimator, PREFILL_BW_FRAC,
+};
 pub use kernels::{
     DecodeCostTable, DecodeKernelTimes, KernelKind, PhaseKernels, PrefillCostTable,
     PrefillKernelTimes,

@@ -47,7 +47,8 @@ use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
 use crate::coordinator::{BucketPair, OffloadBounds, Proxy, RebalanceController, RebalanceMode};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
-    CostMode, CostModel, HbmUsage, InterferenceModel, Roofline, PREFILL_BW_FRAC,
+    BTpotEstimator, CostMode, CostModel, DutyCycleEstimator, HbmUsage, InterferenceModel,
+    Roofline, PREFILL_BW_FRAC,
 };
 use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
 use crate::workload::{ArrivalPattern, Request, RequestId, TraceGenerator, WorkloadKind};
@@ -143,6 +144,12 @@ const OFFLOAD_POOL_HEADROOM_BURST: f64 = 0.90;
 /// pressure for local preemption churn.
 const RECLAIM_DECODE_POOL_GUARD: f64 = 0.9;
 
+/// Time constant for the decayed executor duty-cycle estimate the prefill
+/// interference model consumes (EXPERIMENTS.md §Scenarios): busy seconds
+/// older than a few tens of seconds stop weighing on the contention
+/// estimate, so a busy warm-up no longer haunts the steady state.
+const DUTY_TAU_S: f64 = 10.0;
+
 /// Sentinel for "not in any running set".
 const NO_SLOT: usize = usize::MAX;
 
@@ -234,6 +241,11 @@ enum Ev {
     /// Periodic rebalance-controller tick (only scheduled when
     /// `ServingConfig::rebalance` is set and offloading is enabled).
     RebalanceTick,
+    /// Standalone online-bounds refresh tick — scheduled only when
+    /// `ServingConfig::bounds_feedback` is set, offloading is enabled,
+    /// and no rebalancer runs (with rebalancing on, refreshes ride the
+    /// rebalance ticks instead of duplicating the event stream).
+    BoundsRefreshTick,
 }
 
 /// Post-run report.
@@ -316,6 +328,24 @@ pub struct SimReport {
     /// drained fully (the metadata-residency invariant the rebalancer must
     /// preserve).
     pub metadata_residual: usize,
+    /// Per-refresh-tick B_TPOT held by the proxy's bounds (empty without
+    /// `ServingConfig::bounds_feedback`).
+    pub b_tpot_timeline: Timeline,
+    /// Per-refresh-tick OB (Eq 3) after the refresh (empty without
+    /// `bounds_feedback`).
+    pub ob_timeline: Timeline,
+    /// Online bounds refreshes actually applied (`Proxy::observe_b_tpot`
+    /// calls; 0 without `bounds_feedback`).
+    pub bounds_refreshes: u64,
+    /// Decode-step observations fed to the online B_TPOT estimator (0
+    /// without `bounds_feedback`).
+    pub b_tpot_observations: u64,
+    /// Fresh-arrival offload decisions (C1, C2, Local) — sums to
+    /// `arrived` once every request has been routed.
+    pub decision_counts: (u64, u64, u64),
+    /// Preemption re-route decisions (C1, C2, Local) — sums to
+    /// `preemptions` (one recompute re-admission per preemption).
+    pub decision_counts_rerouted: (u64, u64, u64),
 }
 
 /// The cluster simulator.
@@ -345,11 +375,19 @@ pub struct ClusterSim {
     events_processed: u64,
     /// Runtime offload rebalancer (None = static admission-time split).
     rebalancer: Option<RebalanceController>,
+    /// Online B_TPOT estimator (None = offline bounds stay frozen).
+    b_tpot_est: Option<BTpotEstimator>,
+    /// Per-prefill-instance decayed executor duty estimators (the
+    /// interference model's "recent duty cycle").
+    duty: Vec<DutyCycleEstimator>,
     migrations_to_offload: u64,
     migrations_to_local: u64,
     migration_tokens_moved: u64,
     offloaded_frac_timeline: Timeline,
     prefill_pressure_timeline: Timeline,
+    b_tpot_timeline: Timeline,
+    ob_timeline: Timeline,
+    bounds_refreshes: u64,
     // Reusable per-step scratch (drained and returned each step so the
     // hot path never allocates after warm-up).
     scratch_finish: Vec<RequestId>,
@@ -463,6 +501,20 @@ impl ClusterSim {
             None
         };
 
+        // Like the rebalancer, bounds feedback only makes sense with
+        // offloading on: under `OffloadPolicy::Disabled` no admission or
+        // migration consults OB, so the estimator stays off and the sim
+        // is bit-identical to the static path regardless of the
+        // `bounds_feedback` field.
+        let b_tpot_est = if cfg.serving.offload.is_enabled() {
+            cfg.serving
+                .bounds_feedback
+                .map(|fb| BTpotEstimator::new(costs.grid().local_buckets(), fb.alpha))
+        } else {
+            None
+        };
+        let duty = (0..n_prefill).map(|_| DutyCycleEstimator::new(DUTY_TAU_S)).collect();
+
         ClusterSim {
             cfg,
             reqs: Vec::new(),
@@ -483,11 +535,16 @@ impl ClusterSim {
             admit_counter: 0,
             events_processed: 0,
             rebalancer,
+            b_tpot_est,
+            duty,
             migrations_to_offload: 0,
             migrations_to_local: 0,
             migration_tokens_moved: 0,
             offloaded_frac_timeline: Timeline::new(),
             prefill_pressure_timeline: Timeline::new(),
+            b_tpot_timeline: Timeline::new(),
+            ob_timeline: Timeline::new(),
+            bounds_refreshes: 0,
             scratch_finish: Vec::new(),
             scratch_overflow: Vec::new(),
             scratch_batch: Vec::new(),
@@ -526,6 +583,13 @@ impl ClusterSim {
             if !self.reqs.is_empty() {
                 self.events.push(ctl.interval_s(), Ev::RebalanceTick);
             }
+        } else if self.b_tpot_est.is_some() {
+            // Standalone refresh ticks only when no rebalancer runs; with
+            // rebalancing on, refreshes ride the rebalance ticks.
+            let fb = self.cfg.serving.bounds_feedback.expect("estimator implies config");
+            if !self.reqs.is_empty() {
+                self.events.push(fb.interval_s, Ev::BoundsRefreshTick);
+            }
         }
 
         let hard_stop = self.cfg.duration_s * 20.0 + 3600.0;
@@ -541,6 +605,7 @@ impl ClusterSim {
                 Ev::DecodeStepEnd { inst } => self.on_decode_step_end(t, inst),
                 Ev::MigrationDone { id } => self.on_migration_done(t, id),
                 Ev::RebalanceTick => self.on_rebalance_tick(t),
+                Ev::BoundsRefreshTick => self.on_bounds_refresh_tick(t),
             }
             // Global scheduling pass after every event.
             self.dispatch_prefills(t);
@@ -664,6 +729,32 @@ impl ClusterSim {
         assert_eq!((local_rows, local_ctx), (dec.local_rows, dec.local_ctx), "local aggregates");
         assert_eq!(remote_rows, dec.remote_rows, "remote row aggregates");
         assert_eq!(remote_ctx, dec.remote_ctx, "remote ctx aggregates");
+    }
+
+    /// Debug-build invariant: the proxy's per-request `used_token` stays in
+    /// lock-step with the sim's own `kv_tokens` for every running request.
+    /// A fresh request carries a +1 skew (its prefill-granted first token
+    /// is counted by the proxy before the KV slot is appended); a request
+    /// re-admitted after preemption resumes with the two exactly equal.
+    /// The preemption re-route undercount (ISSUE 4) violated this: the
+    /// proxy restarted at the bare prompt length while `kv_tokens` resumed
+    /// at `prompt + generated`.
+    #[cfg(debug_assertions)]
+    fn assert_proxy_tokens(&self, d: usize) {
+        let meta = self.proxy.metadata(d);
+        for &id in &self.decode[d].running {
+            let sr = &self.reqs[id as usize];
+            let used = meta
+                .used_token_of(id)
+                .expect("running request must be proxy-tracked");
+            assert!(
+                used == sr.kv_tokens || used == sr.kv_tokens + 1,
+                "proxy used_token {used} out of sync with kv_tokens {} for request {id} \
+                 (preemptions={})",
+                sr.kv_tokens,
+                sr.preemptions
+            );
+        }
     }
 
     // ----- event handlers ---------------------------------------------------
@@ -843,10 +934,56 @@ impl ClusterSim {
     //   draining an executor pool that isn't choking anything only
     //   shrinks capacity.
 
+    // ----- online bounds feedback (§3.4.2) ----------------------------------
+    //
+    // The proxy's `observe_b_tpot` hook existed since the seed but nothing
+    // called it online — `OB` stayed frozen at the offline roofline seed
+    // for the whole run even while the rebalancer migrated against it.
+    // With `ServingConfig::bounds_feedback` set, the sim feeds every
+    // decode step's (batch, wall time) and every finished request's mean
+    // TPOT into a `BTpotEstimator` (EMA per `GraphCache` bucket), and once
+    // per tick derives the largest batch currently meeting `slo.tpot_s`
+    // and pushes it through the proxy — so `OB_comp`/`OB` track context
+    // length and load, and the admission policy, the rebalancer, and the
+    // migration bound check all consume the live value.
+
+    /// Derive the current online B_TPOT and refresh the proxy's bounds.
+    /// Timelines sample on every tick; the refresh itself applies only
+    /// once the estimator has warmed past `min_observations`.
+    fn refresh_bounds(&mut self, t: f64) {
+        let Some(est) = self.b_tpot_est.as_ref() else { return };
+        let fb = self.cfg.serving.bounds_feedback.expect("estimator implies config");
+        if est.observations() >= fb.min_observations {
+            if let Some(b) = est.b_tpot(self.cfg.serving.slo.tpot_s) {
+                let b = b.clamp(1, self.cfg.serving.max_batch);
+                self.proxy.observe_b_tpot(b);
+                self.bounds_refreshes += 1;
+            }
+        }
+        self.b_tpot_timeline.push(t, self.proxy.bounds().b_tpot as f64);
+        self.ob_timeline.push(t, self.proxy.bounds().ob());
+    }
+
+    fn on_bounds_refresh_tick(&mut self, t: f64) {
+        if self.b_tpot_est.is_none() {
+            return;
+        }
+        self.refresh_bounds(t);
+        let interval = self.cfg.serving.bounds_feedback.expect("tick implies config").interval_s;
+        if self.finished_total < self.reqs.len() {
+            self.events.push_in(interval, Ev::BoundsRefreshTick);
+        }
+    }
+
     fn on_rebalance_tick(&mut self, t: f64) {
         let Some(ctl) = self.rebalancer.as_ref() else { return };
         let interval = ctl.interval_s();
         let mut budget = ctl.max_migrations_per_interval();
+
+        // Refresh the bounds first so this tick's migration decisions (and
+        // the admissions until the next tick) run against the live OB
+        // (no-op when the feedback plane is off).
+        self.refresh_bounds(t);
 
         let max_prefill_tokens = self.cfg.serving.max_prefill_tokens.max(1);
         let mut reclaimed_any = false;
@@ -1110,6 +1247,19 @@ impl ClusterSim {
     // ----- actions ----------------------------------------------------------
 
     fn finish(&mut self, t: f64, inst: usize, id: RequestId) {
+        // Feed the finished request's mean TPOT to the online bounds
+        // estimator — the request-level signal that sees the scheduling /
+        // recompute gaps raw step times cannot.
+        if self.b_tpot_est.is_some() && self.reqs[id as usize].generated >= 2 {
+            let first = self.metrics.request(id).and_then(|r| r.first_token_s);
+            if let Some(first) = first {
+                let gaps = (self.reqs[id as usize].generated - 1) as f64;
+                self.b_tpot_est
+                    .as_mut()
+                    .expect("checked above")
+                    .observe_request_tpot((t - first) / gaps);
+            }
+        }
         self.metrics.on_finished(id, t);
         self.proxy.on_finished(inst, id);
         Self::agg_sub(&mut self.decode[inst], &self.reqs[id as usize]);
@@ -1150,7 +1300,12 @@ impl ClusterSim {
         self.remove_from_running(inst, id);
 
         // Re-route through the proxy (offload decision may differ now).
-        let route = self.proxy.route(&self.reqs[id as usize].req);
+        // The recompute path resumes at `effective_prompt` tokens, so the
+        // re-admission must account that length — routing with the bare
+        // prompt undercounted the OB budget by every generated token.
+        let route = self
+            .proxy
+            .route_resumed(&self.reqs[id as usize].req, self.reqs[id as usize].effective_prompt);
         let sr = self.req_mut(id);
         sr.offloaded = route.offload.offloaded();
         sr.prefill_instance = route.prefill_instance;
@@ -1212,6 +1367,7 @@ impl ClusterSim {
             // request in the batch completes when the step does.
             let exec_time = self.prefill_time(pi, batch_tokens as u64);
             self.prefill[pi].prefill_busy_s += exec_time;
+            self.duty[pi].record_prefill(t, exec_time);
             self.prefill[pi].busy_until = t + exec_time;
             for &id in &batch {
                 self.events.push(t + exec_time, Ev::PrefillDone { inst: pi, id });
@@ -1265,7 +1421,18 @@ impl ClusterSim {
         }
         #[cfg(debug_assertions)]
         self.assert_aggregates(d);
-        let (step, flops) = self.decode_step_time(d);
+        #[cfg(debug_assertions)]
+        self.assert_proxy_tokens(d);
+        let (step, flops) = self.decode_step_time(t, d);
+        if let Some(est) = self.b_tpot_est.as_mut() {
+            // Observe the *local* sub-batch (the dimension B_TPOT is
+            // defined over — Eq 2's "largest batch meeting the SLO
+            // without offloading", and the one the executable grid
+            // selects its local bucket on). Binning by the total row
+            // count would credit mixed steps' offload speedup to pure
+            // local capability and bias the derived B_TPOT high.
+            est.observe_step(self.decode[d].local_rows as usize, step);
+        }
         let dec = &mut self.decode[d];
         dec.step_in_flight = true;
         dec.busy_s += step;
@@ -1278,16 +1445,13 @@ impl ClusterSim {
 
     fn prefill_time(&mut self, pi: usize, tokens: u64) -> f64 {
         // MPS reservation always applies; bandwidth contention applies in
-        // proportion to the executor's recent duty cycle. (The cost plane
-        // skips both when offloading is disabled — no executor colocated.)
-        let duty = {
-            let p = &self.prefill[pi];
-            if p.prefill_busy_s + p.executor_busy_s > 0.0 {
-                (p.executor_busy_s / (p.prefill_busy_s + p.executor_busy_s)).min(1.0)
-            } else {
-                0.0
-            }
-        };
+        // proportion to the executor's *recent* duty cycle — an
+        // exponentially-decayed estimate (`DutyCycleEstimator`, τ =
+        // `DUTY_TAU_S`) rather than the old lifetime-cumulative ratio,
+        // which never forgot a busy warm-up. (The cost plane skips both
+        // when offloading is disabled — no executor colocated, so the
+        // duty value is unused and that path stays bit-identical.)
+        let duty = self.duty[pi].duty();
         self.costs.prefill_time(tokens, duty)
     }
 
@@ -1298,7 +1462,7 @@ impl ClusterSim {
     /// selection and padding) lives in the [`CostModel`] cost plane. The
     /// per-executor attention seconds come back through a reusable scratch
     /// buffer so executor busy-time attribution stays allocation-free.
-    fn decode_step_time(&mut self, d: usize) -> (f64, f64) {
+    fn decode_step_time(&mut self, t: f64, d: usize) -> (f64, f64) {
         let mut remote_times = std::mem::take(&mut self.scratch_remote);
         let dec = &self.decode[d];
         debug_assert_eq!(
@@ -1313,9 +1477,10 @@ impl ClusterSim {
             &dec.remote_ctx,
             &mut remote_times,
         );
-        for (pi, &t) in remote_times.iter().enumerate() {
-            if t > 0.0 {
-                self.prefill[pi].executor_busy_s += t;
+        for (pi, &et) in remote_times.iter().enumerate() {
+            if et > 0.0 {
+                self.prefill[pi].executor_busy_s += et;
+                self.duty[pi].record_executor(t, et);
             }
         }
         self.scratch_remote = remote_times;
@@ -1466,6 +1631,12 @@ impl ClusterSim {
             offloaded_frac_timeline: self.offloaded_frac_timeline,
             prefill_pressure_timeline: self.prefill_pressure_timeline,
             metadata_residual,
+            b_tpot_timeline: self.b_tpot_timeline,
+            ob_timeline: self.ob_timeline,
+            bounds_refreshes: self.bounds_refreshes,
+            b_tpot_observations: self.b_tpot_est.as_ref().map_or(0, |e| e.observations()),
+            decision_counts: self.proxy.decision_counts,
+            decision_counts_rerouted: self.proxy.decision_counts_rerouted,
         }
     }
 }
@@ -1632,6 +1803,54 @@ mod tests {
             assert!(r.offloaded_frac_timeline.is_empty());
             assert!(r.prefill_pressure_timeline.is_empty());
         }
+    }
+
+    #[test]
+    fn no_feedback_means_no_observation_hooks() {
+        // Without `bounds_feedback` (the default) the estimator does not
+        // exist: no observations, no refreshes, empty timelines — the
+        // structural half of the ISSUE 4 bit-identity contract
+        // (rust/tests/bounds_feedback.rs pins the behavioral half).
+        for policy_on in [true, false] {
+            let r = quick(policy_on, 2.0, 40.0);
+            assert_eq!(r.bounds_refreshes, 0);
+            assert_eq!(r.b_tpot_observations, 0);
+            assert!(r.b_tpot_timeline.is_empty());
+            assert!(r.ob_timeline.is_empty());
+        }
+    }
+
+    #[test]
+    fn disabled_policy_ignores_bounds_feedback_config() {
+        // Feedback on top of OffloadPolicy::Disabled must not invent a
+        // control plane: nothing consults OB, so nothing observes.
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::baseline(model, WorkloadKind::ShareGpt, 2.0);
+        cfg.duration_s = 30.0;
+        cfg.serving.bounds_feedback = Some(crate::config::BoundsFeedbackConfig::default());
+        let r = ClusterSim::new(cfg).run();
+        assert_eq!(r.bounds_refreshes, 0);
+        assert_eq!(r.b_tpot_observations, 0);
+        assert!(r.b_tpot_timeline.is_empty());
+        assert!(r.ob_timeline.is_empty());
+    }
+
+    #[test]
+    fn decision_counts_track_arrivals_and_reroutes() {
+        // Tiny pools force preemptions: fresh-arrival decisions must sum
+        // to arrivals and re-route decisions to preemptions — the counters
+        // used to conflate the two, inflating C1/C2/Local per preemption.
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::OpenThoughts, 1.0);
+        cfg.duration_s = 20.0;
+        cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+        cfg.serving.executor_kv_capacity_tokens = Some(16 * 1024);
+        let r = ClusterSim::new(cfg).run();
+        assert!(r.preemptions > 0, "tiny pools must preempt");
+        let fresh = r.decision_counts.0 + r.decision_counts.1 + r.decision_counts.2;
+        assert_eq!(fresh as usize, r.arrived, "one fresh decision per arrival");
+        let re = r.decision_counts_rerouted;
+        assert_eq!(re.0 + re.1 + re.2, r.preemptions, "one re-route per preemption");
     }
 
     #[test]
