@@ -123,6 +123,14 @@ pub struct ServingConfig {
     /// pre-bucketing baselines. Env `ADRENALINE_EXACT_COSTS=1` forces it
     /// regardless of this field.
     pub exact_costs: bool,
+    /// Disable steady-state decode leaping in the simulator and schedule
+    /// every decode step as its own event (the per-step reference path).
+    /// Leaping is the default and is bit-identical to the reference on
+    /// every reported quantity except `events_processed` (pinned by
+    /// `rust/tests/step_leap.rs`); the switch exists for ablation,
+    /// regression bisection, and the paired perf rows in BENCH_sim.json.
+    /// Env `ADRENALINE_NO_LEAP=1` forces it regardless of this field.
+    pub no_leap: bool,
     /// Runtime offload rebalancing. `None` (the default) keeps the
     /// one-shot admission-time split — bit-identical to the
     /// pre-rebalancer simulator (pinned by `rust/tests/rebalance.rs`).
@@ -148,6 +156,7 @@ impl Default for ServingConfig {
             executor_kv_capacity_tokens: None,
             decode_kv_capacity_tokens: None,
             exact_costs: false,
+            no_leap: false,
             rebalance: None,
             bounds_feedback: None,
         }
@@ -221,6 +230,9 @@ impl ServingConfig {
         }
         if let Some(b) = v.get("exact_costs").and_then(Json::as_bool) {
             cfg.exact_costs = b;
+        }
+        if let Some(b) = v.get("no_leap").and_then(Json::as_bool) {
+            cfg.no_leap = b;
         }
         // Only an *object* enables the controller: `"rebalance": null`
         // (the natural spelling of "off") stays off, and anything else is
@@ -331,6 +343,7 @@ impl ServingConfig {
             o.insert("decode_kv_tokens".into(), Json::Num(n as f64));
         }
         o.insert("exact_costs".into(), Json::Bool(self.exact_costs));
+        o.insert("no_leap".into(), Json::Bool(self.no_leap));
         if let Some(r) = self.rebalance {
             let mut rb = BTreeMap::new();
             rb.insert("interval_s".into(), Json::Num(r.interval_s));
@@ -422,6 +435,17 @@ mod tests {
         assert!(cfg.exact_costs);
         let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_no_leap_roundtrip_and_defaults_off() {
+        assert!(!ServingConfig::default().no_leap, "leaping is the default");
+        let cfg = ServingConfig::from_json(r#"{"no_leap": true}"#).unwrap();
+        assert!(cfg.no_leap);
+        let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        let off = ServingConfig::from_json(r#"{"no_leap": false}"#).unwrap();
+        assert!(!off.no_leap);
     }
 
     #[test]

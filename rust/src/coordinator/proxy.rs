@@ -126,6 +126,13 @@ impl Proxy {
         self.meta[instance].on_token(id);
     }
 
+    /// A leaped run of `n` decode steps emitted `n` tokens for `id` on
+    /// `instance` (bulk form of [`Proxy::on_token`]; integer accounting,
+    /// so `n` single-token calls land on the same state).
+    pub fn on_token_bulk(&mut self, instance: usize, id: RequestId, n: usize) {
+        self.meta[instance].on_tokens(id, n);
+    }
+
     /// Request finished (or was cancelled): drop its metadata.
     pub fn on_finished(&mut self, instance: usize, id: RequestId) {
         self.meta[instance].remove(id);
@@ -297,6 +304,37 @@ mod tests {
         assert_eq!(p.decision_counts, fresh, "arrival counters must not inflate");
         let re = p.decision_counts_rerouted;
         assert_eq!(re.0 + re.1 + re.2, 2, "one rerouted decision per preemption");
+    }
+
+    #[test]
+    fn bulk_tokens_match_per_token_calls() {
+        let mut per = Proxy::new(OffloadPolicy::LoadAware, bounds(), 1, 2);
+        let mut bulk = Proxy::new(OffloadPolicy::LoadAware, bounds(), 1, 2);
+        let mut homes = Vec::new();
+        for id in 0..6u64 {
+            let r = req(id, 50 + 10 * id as usize, 50);
+            let d = per.route(&r).decode_instance;
+            assert_eq!(d, bulk.route(&r).decode_instance, "same routing state");
+            homes.push(d);
+        }
+        for (id, &d) in homes.iter().enumerate() {
+            for _ in 0..7 {
+                per.on_token(d, id as u64);
+            }
+            bulk.on_token_bulk(d, id as u64, 7);
+        }
+        for d in 0..2 {
+            let (p, b) = (per.metadata(d), bulk.metadata(d));
+            assert_eq!(p.decode_used_tokens(), b.decode_used_tokens());
+            assert_eq!(p.attn_used_tokens(), b.attn_used_tokens());
+            for id in 0..6u64 {
+                assert_eq!(p.used_token_of(id), b.used_token_of(id));
+            }
+        }
+        // Untracked ids are ignored, same as the per-token path.
+        bulk.on_token_bulk(0, 99, 3);
+        per.on_token(0, 99);
+        assert_eq!(per.metadata(0).decode_used_tokens(), bulk.metadata(0).decode_used_tokens());
     }
 
     #[test]

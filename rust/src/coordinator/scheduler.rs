@@ -113,8 +113,15 @@ impl RuntimeMetadata {
 
     /// A decode step produced one token for `id`.
     pub fn on_token(&mut self, id: RequestId) {
+        self.on_tokens(id, 1);
+    }
+
+    /// `n` consecutive decode steps produced `n` tokens for `id` — the
+    /// decode leap engine's bulk form of [`RuntimeMetadata::on_token`]
+    /// (one map lookup per leap instead of one per step).
+    pub fn on_tokens(&mut self, id: RequestId, n: usize) {
         if let Some(m) = self.local.get_mut(&id).or_else(|| self.offloaded.get_mut(&id)) {
-            m.used_token += 1;
+            m.used_token += n;
         }
     }
 

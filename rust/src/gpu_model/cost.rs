@@ -94,6 +94,11 @@ pub struct CostModel {
     sync_total_s: f64,
     /// Extra CPU launch overhead per step (eager ablation; 0 with graphs).
     eager_launch_overhead_s: f64,
+    /// Reusable scratch for [`CostModel::decode_step_series`]: the
+    /// advancing per-partition ctx sums and the per-step executor-time
+    /// staging buffer (no allocation after warm-up).
+    series_ctx: Vec<u64>,
+    series_exec: Vec<f64>,
 }
 
 impl CostModel {
@@ -124,6 +129,8 @@ impl CostModel {
             interconnect_bw: rl_whole.gpu.interconnect_bw,
             sync_total_s: sync_overhead_s * model.n_layers as f64,
             eager_launch_overhead_s,
+            series_ctx: Vec::new(),
+            series_exec: Vec::new(),
         }
     }
 
@@ -289,6 +296,76 @@ impl CostModel {
             flops,
             bucket,
         }
+    }
+
+    /// Price a run of consecutive decode steps with a *frozen* batch
+    /// composition — the steady-state leap engine's inner loop (§Perf).
+    /// Between scheduler events each step adds exactly one token per row,
+    /// so the context sums advance by the row counts from one step to the
+    /// next while the row counts stay fixed. Starting from `t0`, steps
+    /// are priced one at a time — identical f64 op order (and identical
+    /// grid-selection statistics) to calling [`CostModel::decode_step`]
+    /// per step with hand-advanced aggregates, so a leaped run's
+    /// step-time sequence is bit-identical to the per-step reference —
+    /// appending each step's cost to `costs_out` and its per-partition
+    /// executor seconds to `executor_times_out` (flattened,
+    /// `remote_rows.len()` entries per step), until the first step that
+    /// must become a scheduled event:
+    ///
+    /// * it is the `max_steps`-th step priced (the caller's clean-step
+    ///   horizon: first finish / pool overflow — or 1 when leaping is
+    ///   disabled), or
+    /// * it ends at or after `stop_before` (a queued event would
+    ///   interleave; queue ties must keep resolving in push order), or
+    /// * it ends after `hard_stop` (the run loop stops on the event that
+    ///   pops past its cutoff, so that step's tokens are never granted).
+    ///
+    /// Always prices at least one step and returns the count; the caller
+    /// commits all but the last inline and schedules the last.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step_series(
+        &mut self,
+        t0: f64,
+        stop_before: Option<f64>,
+        hard_stop: f64,
+        max_steps: usize,
+        local_rows: u64,
+        local_ctx_sum: u64,
+        remote_rows: &[u64],
+        remote_ctx_sums: &[u64],
+        costs_out: &mut Vec<DecodeStepCost>,
+        executor_times_out: &mut Vec<f64>,
+    ) -> usize {
+        debug_assert!(max_steps >= 1, "a step series prices at least one step");
+        costs_out.clear();
+        executor_times_out.clear();
+        let mut ctx = std::mem::take(&mut self.series_ctx);
+        let mut exec = std::mem::take(&mut self.series_exec);
+        ctx.clear();
+        ctx.extend_from_slice(remote_ctx_sums);
+        let mut local_ctx = local_ctx_sum;
+        let mut t = t0;
+        loop {
+            let cost = self.decode_step(local_rows, local_ctx, remote_rows, &ctx, &mut exec);
+            costs_out.push(cost);
+            executor_times_out.extend_from_slice(&exec);
+            let t_end = t + cost.step_s;
+            let interior = costs_out.len() < max_steps
+                && stop_before.map_or(true, |te| t_end < te)
+                && t_end <= hard_stop;
+            if !interior {
+                break;
+            }
+            local_ctx += local_rows;
+            for (c, &r) in ctx.iter_mut().zip(remote_rows) {
+                *c += r;
+            }
+            t = t_end;
+        }
+        let n = costs_out.len();
+        self.series_ctx = ctx;
+        self.series_exec = exec;
+        n
     }
 }
 
@@ -623,6 +700,141 @@ mod tests {
         assert_eq!(out[1], 0.0);
         // Max executor time is what the step overlaps against (plus sync).
         assert!(cost.remote_attention_s > out[0].max(out[2]));
+    }
+
+    #[test]
+    fn step_series_matches_manual_stepping_bitwise() {
+        // The leap engine's contract: pricing k frozen-composition steps
+        // through the series helper is bit-identical (costs, executor
+        // times, grid statistics) to k hand-advanced `decode_step` calls.
+        let mut manual = setup(CostMode::Bucketed);
+        let mut series = setup(CostMode::Bucketed);
+        let local_rows = 13u64;
+        let mut local_ctx = 13 * 700u64;
+        let remote_rows = [3u64, 0];
+        let mut remote_ctx = [3 * 500u64, 0];
+        let steps = 17usize;
+        let mut exec = Vec::new();
+        let mut want = Vec::new();
+        let mut want_exec = Vec::new();
+        for _ in 0..steps {
+            let cost =
+                manual.decode_step(local_rows, local_ctx, &remote_rows, &remote_ctx, &mut exec);
+            want.push(cost);
+            want_exec.extend_from_slice(&exec);
+            local_ctx += local_rows;
+            for (ctx, &r) in remote_ctx.iter_mut().zip(&remote_rows) {
+                *ctx += r;
+            }
+        }
+        let mut got = Vec::new();
+        let mut got_exec = Vec::new();
+        let n = series.decode_step_series(
+            5.0,
+            None,
+            f64::INFINITY,
+            steps,
+            13,
+            13 * 700,
+            &remote_rows,
+            &[3 * 500, 0],
+            &mut got,
+            &mut got_exec,
+        );
+        assert_eq!(n, steps);
+        assert_eq!(got.len(), steps);
+        assert_eq!(got_exec.len(), want_exec.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.step_s.to_bits(), g.step_s.to_bits());
+            assert_eq!(w.flops.to_bits(), g.flops.to_bits());
+            assert_eq!(w.bucket, g.bucket);
+        }
+        for (w, g) in want_exec.iter().zip(&got_exec) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        let (ms, ss) = (manual.graph_stats(), series.graph_stats());
+        assert_eq!(ms.selections, ss.selections);
+        assert_eq!(ms.used_slots, ss.used_slots);
+        assert_eq!(ms.padded_slots, ss.padded_slots);
+        assert_eq!(manual.bucket_hits(), series.bucket_hits());
+    }
+
+    #[test]
+    fn step_series_respects_the_event_and_step_bounds() {
+        let mut cm = setup(CostMode::Bucketed);
+        let mut costs = Vec::new();
+        let mut exec = Vec::new();
+        // max_steps = 1: exactly one priced step (the per-step reference
+        // path runs the same code with the horizon forced to zero).
+        let n = cm.decode_step_series(
+            0.0,
+            None,
+            f64::INFINITY,
+            1,
+            8,
+            8 * 600,
+            &[0, 0],
+            &[0, 0],
+            &mut costs,
+            &mut exec,
+        );
+        assert_eq!(n, 1);
+        assert_eq!(costs.len(), 1);
+        assert_eq!(exec.len(), 2);
+        let step1 = costs[0].step_s;
+        // A same-instant queued event: the very first step breaches it.
+        let n = cm.decode_step_series(
+            3.0,
+            Some(3.0),
+            f64::INFINITY,
+            100,
+            8,
+            8 * 600,
+            &[0, 0],
+            &[0, 0],
+            &mut costs,
+            &mut exec,
+        );
+        assert_eq!(n, 1);
+        // An event a few steps out: interior steps end strictly before
+        // it, the boundary step ends at/after it.
+        let te = 3.0 + 2.5 * step1;
+        let n = cm.decode_step_series(
+            3.0,
+            Some(te),
+            f64::INFINITY,
+            100,
+            8,
+            8 * 600,
+            &[0, 0],
+            &[0, 0],
+            &mut costs,
+            &mut exec,
+        );
+        assert!(n >= 2, "n = {n}");
+        let mut t = 3.0;
+        for (i, c) in costs.iter().enumerate() {
+            t += c.step_s;
+            if i + 1 < n {
+                assert!(t < te, "interior step {i} must end before the event");
+            } else {
+                assert!(t >= te, "the boundary step must reach the event");
+            }
+        }
+        // The hard stop is an inclusive bound on committed step ends.
+        let n = cm.decode_step_series(
+            0.0,
+            None,
+            0.0,
+            100,
+            8,
+            8 * 600,
+            &[0, 0],
+            &[0, 0],
+            &mut costs,
+            &mut exec,
+        );
+        assert_eq!(n, 1, "a step ending past the hard stop is the boundary");
     }
 
     #[test]

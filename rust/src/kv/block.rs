@@ -66,6 +66,19 @@ impl BlockAllocator {
         Some(self.free.split_off(self.free.len() - n))
     }
 
+    /// Allocate `n` blocks atomically into `out` (all or none; returns
+    /// whether the allocation succeeded). The no-temporary variant of
+    /// [`BlockAllocator::alloc_n`] for the bulk append path: same block
+    /// order as `alloc_n`, no intermediate `Vec`.
+    pub fn alloc_n_into(&mut self, n: usize, out: &mut Vec<BlockId>) -> bool {
+        if self.free.len() < n {
+            return false;
+        }
+        let start = self.free.len() - n;
+        out.extend(self.free.drain(start..));
+        true
+    }
+
     /// Return a block to the pool.
     ///
     /// Double-free is a logic bug upstream; debug builds assert.
@@ -119,6 +132,25 @@ mod tests {
         let blocks = a.alloc_n(3).unwrap();
         assert_eq!(blocks.len(), 3);
         assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    fn alloc_n_into_matches_alloc_n() {
+        // Same block-id order, same atomicity, no temporary.
+        let mut a = BlockAllocator::new(6, 16);
+        let mut b = BlockAllocator::new(6, 16);
+        let want = a.alloc_n(4).unwrap();
+        let mut got = vec![999]; // pre-existing entries must survive
+        assert!(b.alloc_n_into(4, &mut got));
+        assert_eq!(&got[1..], want.as_slice());
+        assert_eq!(a.free_blocks(), b.free_blocks());
+        // All-or-none on failure.
+        let len_before = got.len();
+        assert!(!b.alloc_n_into(3, &mut got));
+        assert_eq!(got.len(), len_before, "failed alloc_n_into must not push");
+        assert_eq!(b.free_blocks(), 2);
+        assert!(b.alloc_n_into(2, &mut got));
+        assert_eq!(b.free_blocks(), 0);
     }
 
     #[test]

@@ -60,12 +60,21 @@ impl KvPool {
         self.seqs.values().map(|s| s.tokens).sum()
     }
 
-    /// Pool saturation in [0, 1] (block granularity).
-    pub fn occupancy(&self) -> f64 {
-        if self.alloc.num_blocks() == 0 {
+    /// Pool saturation in [0, 1] (block granularity) for an explicit
+    /// block count — the single home of the `0 blocks ⇒ saturated`
+    /// convention, shared with callers that replay occupancy from
+    /// planned allocation counts without touching the pool (the sim's
+    /// leap engine, fed by [`KvPool::plan_bulk_steps`]).
+    pub fn occupancy_of(used_blocks: usize, total_blocks: usize) -> f64 {
+        if total_blocks == 0 {
             return 1.0;
         }
-        self.alloc.used_blocks() as f64 / self.alloc.num_blocks() as f64
+        used_blocks as f64 / total_blocks as f64
+    }
+
+    /// Pool saturation in [0, 1] (block granularity).
+    pub fn occupancy(&self) -> f64 {
+        Self::occupancy_of(self.alloc.used_blocks(), self.alloc.num_blocks())
     }
 
     pub fn contains(&self, id: SeqId) -> bool {
@@ -111,6 +120,94 @@ impl KvPool {
         }
         seq.tokens += 1;
         Ok(())
+    }
+
+    /// Append `n` generated tokens to a sequence at once — the decode
+    /// leap engine's bulk path. Block math is deterministic, so this
+    /// allocates exactly the blocks `n` successive
+    /// [`KvPool::append_token`] calls would have; the allocation is
+    /// atomic (on failure nothing is mutated — callers size `n` with
+    /// [`KvPool::plan_bulk_steps`] so the bulk path never fails).
+    pub fn append_tokens(&mut self, id: SeqId, n: usize) -> Result<(), KvError> {
+        if n == 0 {
+            return Ok(());
+        }
+        let block_tokens = self.alloc.block_tokens();
+        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let need = (seq.tokens + n).div_ceil(block_tokens);
+        if need > seq.blocks.len() {
+            let extra = need - seq.blocks.len();
+            if !self.alloc.alloc_n_into(extra, &mut seq.blocks) {
+                return Err(KvError::OutOfBlocks {
+                    requested: extra,
+                    available: self.alloc.free_blocks(),
+                });
+            }
+        }
+        seq.tokens += n;
+        Ok(())
+    }
+
+    /// Plan a run of whole-pool append steps — one token appended to
+    /// *every* resident sequence per step, the decode leap engine's
+    /// frozen-batch model. Returns the largest `k <= max_steps` for which
+    /// all `k` steps' block allocations succeed against the current free
+    /// list, and fills `allocs_out[i]` with the number of blocks step
+    /// `i + 1` allocates (truncated to the returned `k`), so callers can
+    /// replay the pool-occupancy series without touching the pool.
+    ///
+    /// Each sequence crosses a block boundary exactly when its pre-append
+    /// length is a whole number of blocks, i.e. every `block_tokens`
+    /// steps at a phase fixed by its current length — so a residue
+    /// histogram prices every step in O(1).
+    pub fn plan_bulk_steps(&self, max_steps: usize, allocs_out: &mut Vec<u32>) -> usize {
+        allocs_out.clear();
+        if max_steps == 0 {
+            return 0;
+        }
+        if self.seqs.is_empty() {
+            allocs_out.resize(max_steps, 0);
+            return max_steps;
+        }
+        let bt = self.alloc.block_tokens();
+        // Residue histogram on the stack for real-world block sizes (16
+        // by default); the heap fallback only triggers for exotic
+        // configurations, keeping the leap hot path allocation-free.
+        let mut stack_hist = [0u32; 64];
+        let mut heap_hist: Vec<u32>;
+        let hist: &mut [u32] = if bt <= stack_hist.len() {
+            &mut stack_hist[..bt]
+        } else {
+            heap_hist = vec![0u32; bt];
+            &mut heap_hist
+        };
+        for seq in self.seqs.values() {
+            if seq.tokens == 0 {
+                // Over-provisioned corner (a block table ahead of its
+                // token count): the phase math below would be wrong, so
+                // refuse to plan and let the per-step path handle it.
+                return 0;
+            }
+            debug_assert_eq!(
+                seq.blocks.len(),
+                seq.tokens.div_ceil(bt),
+                "sequence block table out of lock-step with its token count"
+            );
+            hist[seq.tokens % bt] += 1;
+        }
+        let mut free = self.alloc.free_blocks() as u64;
+        for i in 1..=max_steps {
+            // A sequence holding `tokens ≡ r (mod bt)` allocates at step
+            // `i` iff `(r + i - 1) ≡ 0 (mod bt)`.
+            let r = (bt - (i - 1) % bt) % bt;
+            let allocs = hist[r];
+            if u64::from(allocs) > free {
+                return i - 1;
+            }
+            free -= u64::from(allocs);
+            allocs_out.push(allocs);
+        }
+        max_steps
     }
 
     /// Release a sequence, returning its blocks to the pool.
@@ -251,5 +348,115 @@ mod tests {
         let err = p.append_token(1).unwrap_err();
         assert!(matches!(err, KvError::OutOfBlocks { .. }));
         assert_eq!(p.seq(1).unwrap().tokens, 16, "failed append must not mutate");
+    }
+
+    #[test]
+    fn bulk_append_matches_per_token_appends() {
+        // Same block growth either way (block identity may differ; counts
+        // and token lengths may not).
+        for (start, n) in [(1usize, 1usize), (15, 2), (16, 16), (30, 40), (16, 0)] {
+            let mut a = pool(64);
+            let mut b = pool(64);
+            a.admit(1, start).unwrap();
+            b.admit(1, start).unwrap();
+            for _ in 0..n {
+                a.append_token(1).unwrap();
+            }
+            b.append_tokens(1, n).unwrap();
+            assert_eq!(a.seq(1).unwrap().tokens, b.seq(1).unwrap().tokens, "({start},{n})");
+            assert_eq!(a.used_blocks(), b.used_blocks(), "({start},{n})");
+            assert_eq!(a.free_blocks(), b.free_blocks(), "({start},{n})");
+        }
+    }
+
+    #[test]
+    fn bulk_append_is_atomic_on_failure() {
+        let mut p = pool(2);
+        p.admit(1, 16).unwrap(); // 1 block, full
+        let err = p.append_tokens(1, 17).unwrap_err(); // needs 2 blocks, 1 free
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        assert_eq!(p.seq(1).unwrap().tokens, 16, "failed bulk append must not mutate");
+        assert_eq!(p.free_blocks(), 1);
+        assert_eq!(p.append_tokens(9, 1).unwrap_err(), KvError::UnknownSeq(9));
+    }
+
+    #[test]
+    fn plan_bulk_steps_prices_the_allocation_schedule() {
+        // Two sequences at 16-token blocks: tokens 16 (boundary: allocates
+        // at step 1, 17, ...) and 30 (allocates at step 3, 19, ...).
+        let mut p = pool(4);
+        p.admit(1, 16).unwrap();
+        p.admit(2, 30).unwrap();
+        assert_eq!(p.free_blocks(), 1);
+        let mut allocs = Vec::new();
+        // Step 1 takes the last free block; step 2 allocates nothing;
+        // step 3 needs a block that is not there.
+        let k = p.plan_bulk_steps(10, &mut allocs);
+        assert_eq!(k, 2);
+        assert_eq!(allocs, vec![1, 0]);
+        // With a bigger pool the plan runs to the horizon.
+        let mut p = pool(16);
+        p.admit(1, 16).unwrap();
+        p.admit(2, 30).unwrap();
+        let k = p.plan_bulk_steps(10, &mut allocs);
+        assert_eq!(k, 10);
+        assert_eq!(allocs.len(), 10);
+        assert_eq!(allocs[0], 1, "seq 1 crosses at step 1");
+        assert_eq!(allocs[2], 1, "seq 2 crosses at step 3");
+        // An empty pool absorbs any horizon with zero allocations.
+        let p = pool(4);
+        assert_eq!(p.plan_bulk_steps(5, &mut allocs), 5);
+        assert_eq!(allocs, vec![0; 5]);
+        assert_eq!(p.plan_bulk_steps(0, &mut allocs), 0);
+    }
+
+    #[test]
+    fn property_plan_bulk_steps_matches_replayed_appends() {
+        // The plan must predict exactly what per-token appends do: k is
+        // the last whole step that succeeds, step k+1 fails for at least
+        // one sequence, and the per-step allocation counts match.
+        crate::util::prop::check("kv_plan_bulk_steps", 60, |rng| {
+            let blocks = 4 + rng.range_usize(0, 60);
+            let bt = 1 + rng.range_usize(0, 31);
+            let mut p = KvPool::new(BlockAllocator::new(blocks, bt));
+            let n_seq = 1 + rng.range_usize(0, 8);
+            for id in 0..n_seq as u64 {
+                let tokens = 1 + rng.range_usize(0, 3 * bt);
+                if p.admit(id, tokens).is_err() {
+                    break;
+                }
+            }
+            if p.num_seqs() == 0 {
+                return;
+            }
+            let max_steps = 1 + rng.range_usize(0, 80);
+            let mut allocs = Vec::new();
+            let k = p.plan_bulk_steps(max_steps, &mut allocs);
+            assert_eq!(allocs.len(), k);
+            // Replay with per-token appends on a clone.
+            let mut q = KvPool::new(BlockAllocator::new(blocks, bt));
+            let ids: Vec<SeqId> = p.seq_ids().collect();
+            for &id in &ids {
+                q.admit(id, p.seq(id).unwrap().tokens).unwrap();
+            }
+            for step in 0..k {
+                let before = q.used_blocks();
+                for &id in &ids {
+                    let ok = q.append_token(id).is_ok();
+                    assert!(ok, "planned step {} must succeed", step + 1);
+                }
+                assert_eq!(
+                    (q.used_blocks() - before) as u32,
+                    allocs[step],
+                    "allocation count at step {}",
+                    step + 1
+                );
+            }
+            if k < max_steps {
+                // The first unplanned step must fail for some sequence.
+                let failed = ids.iter().any(|&id| q.append_token(id).is_err());
+                assert!(failed, "step {} should exhaust the pool", k + 1);
+            }
+        });
     }
 }

@@ -114,6 +114,29 @@ impl MetricsRecorder {
         self.push_token_event(t, 1);
     }
 
+    /// Bulk append of one request's token-completion times — the decode
+    /// leap engine's per-row flush (`times` is the leaped steps' end-time
+    /// sequence, nondecreasing). Appends to the request's own series
+    /// only: the shared cumulative series is advanced once per leaped
+    /// step via [`MetricsRecorder::on_step_tokens`] (pushing these times
+    /// per row would arrive out of time order from the second row on).
+    pub fn on_tokens(&mut self, id: RequestId, times: &[f64]) {
+        if times.is_empty() {
+            return;
+        }
+        self.requests.entry(id).or_default().token_times_s.extend_from_slice(times);
+    }
+
+    /// Advance the cumulative token series by `n` tokens completing at
+    /// `t` — exactly the prefix-sum contribution of `n` same-instant
+    /// [`MetricsRecorder::on_token`] calls (a whole decode batch landing
+    /// on one step-end timestamp).
+    pub fn on_step_tokens(&mut self, t: f64, n: u64) {
+        if n > 0 {
+            self.push_token_event(t, n);
+        }
+    }
+
     fn push_token_event(&mut self, t: f64, n: u64) {
         if let Some(last) = self.token_cum.last_mut() {
             debug_assert!(t >= last.0, "token events must arrive in time order");
@@ -265,6 +288,48 @@ mod tests {
         assert!(m.ttft_stats().is_none());
         assert!(m.tpot_stats().is_none());
         assert_eq!(m.throughput_in_window(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn bulk_tokens_match_per_token_calls() {
+        // Two rows leaping 3 steps: the bulk entry points must leave the
+        // recorder in exactly the per-token state (per-request series and
+        // the cumulative step series alike).
+        let times = [1.0, 1.5, 2.0];
+        let mut per = MetricsRecorder::new();
+        let mut bulk = MetricsRecorder::new();
+        for m in [&mut per, &mut bulk] {
+            m.on_arrival(1, 0.0);
+            m.on_arrival(2, 0.0);
+            m.on_first_token(1, 0.5);
+            m.on_first_token(2, 0.5);
+        }
+        for &t in &times {
+            per.on_token(1, t);
+            per.on_token(2, t);
+        }
+        for &t in &times {
+            bulk.on_step_tokens(t, 2);
+        }
+        bulk.on_tokens(1, &times);
+        bulk.on_tokens(2, &times);
+        bulk.on_tokens(2, &[]);
+        for id in [1, 2] {
+            assert_eq!(
+                per.request(id).unwrap().token_times_s,
+                bulk.request(id).unwrap().token_times_s
+            );
+            assert_eq!(per.request(id).unwrap().output_tokens(), 4);
+        }
+        assert_eq!(per.token_event_entries(), bulk.token_event_entries());
+        for (a, b) in [(0.0, 3.0), (1.0, 1.5), (1.5, 2.0), (0.6, 0.9)] {
+            assert_eq!(
+                per.throughput_in_window(a, b).to_bits(),
+                bulk.throughput_in_window(a, b).to_bits(),
+                "window [{a}, {b}]"
+            );
+        }
+        assert_eq!(per.total_output_tokens(), bulk.total_output_tokens());
     }
 
     #[test]

@@ -102,7 +102,11 @@ impl<E> EventQueue<E> {
         Some((e.time, e.event))
     }
 
-    /// Earliest scheduled time without popping.
+    /// Earliest scheduled time without popping — the decode leap
+    /// engine's horizon probe. A leap may only commit steps ending
+    /// *strictly before* this instant: an event at exactly a step's end
+    /// was pushed earlier, so it holds a smaller tie-breaking `seq` and
+    /// the reference run pops it before that step's end.
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.time)
     }
@@ -180,6 +184,26 @@ mod tests {
     fn infinite_timestamp_panics_at_push() {
         let mut q = EventQueue::new();
         q.push(f64::INFINITY, ());
+    }
+
+    #[test]
+    fn peek_time_tracks_the_head_without_popping() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(3.0, "late");
+        q.push(1.0, "early");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.len(), 2, "peeking must not pop");
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (1.0, "early"));
+        assert_eq!(q.peek_time(), Some(3.0));
+        // Ties: peek reports the shared time; pops still resolve in push
+        // order (the property the leap engine's strict bound relies on).
+        q.push(3.0, "later-pushed");
+        assert_eq!(q.peek_time(), Some(3.0));
+        assert_eq!(q.pop().unwrap().1, "late");
+        assert_eq!(q.pop().unwrap().1, "later-pushed");
+        assert_eq!(q.peek_time(), None);
     }
 
     #[test]

@@ -67,6 +67,7 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport) {
     assert_eq!(a.finished, b.finished);
     assert_eq!(a.preemptions, b.preemptions);
     assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.steps_simulated, b.steps_simulated);
     assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
     assert!(feq(a.goodput, b.goodput));
     assert!(feq(a.offloaded_fraction, b.offloaded_fraction));

@@ -1,0 +1,304 @@
+//! Steady-state decode leaping — the bit-identity contract (ISSUE 5).
+//!
+//! Leaping is default-on, so its contract is the strongest the house
+//! style has: on every scenario family, a leap run's `SimReport` must be
+//! **bit-identical** to the `ServingConfig::no_leap` per-step reference
+//! — same f64 op order for step times, duty decay, utilization
+//! accumulators and timelines; same integer accounting in bulk — with
+//! exactly one allowed difference, `events_processed` (collapsing decode
+//! step events into leaps is the point). Figure anchors therefore need
+//! no recalibration.
+//!
+//! The horizon-safety property ("a leap never skips a finish, a KV-pool
+//! or executor-pool overflow, or a queued event") is pinned through the
+//! same lens: the scenario matrix deliberately includes runs where each
+//! of those boundaries fires constantly — finishes everywhere,
+//! preemption churn under tiny pools (both overflow kinds), rebalance
+//! migrations and bounds-feedback refresh ticks (dense queued events),
+//! and two-decode-instance runs (the same-pass sole-starter guard plus
+//! the cross-instance executor-pool overflow scan) — and any skipped
+//! boundary diverges the reports. `ADRENALINE_NO_LEAP=1`
+//! forces the reference path process-wide; CI re-runs this suite under
+//! it so both modes stay green (the comparisons then pin the reference
+//! against itself, and the default-on structural checks are env-aware).
+
+use adrenaline::config::{BoundsFeedbackConfig, ModelSpec, RebalanceConfig};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{parallel_map, ClusterSim, SimConfig, SimReport};
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+/// Run `cfg` with leaping on and off; returns (leap, reference).
+fn leap_pair(cfg: &SimConfig) -> (SimReport, SimReport) {
+    let mut on = cfg.clone();
+    on.serving.no_leap = false;
+    let mut off = cfg.clone();
+    off.serving.no_leap = true;
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { on.clone() } else { off.clone() }).run()
+    });
+    let off = runs.pop().expect("two runs");
+    let on = runs.pop().expect("two runs");
+    (on, off)
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Everything in the report except `events_processed` must match bit for
+/// bit between the leap run `a` and the per-step reference `b`.
+fn assert_bit_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.req_preemptions_total, b.req_preemptions_total);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.executor_bw_util, b.executor_bw_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.ttft_slo_attainment, b.ttft_slo_attainment));
+    assert!(feq(a.tpot_slo_attainment, b.tpot_slo_attainment));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    match (&a.window, &b.window) {
+        (Some(x), Some(y)) => {
+            assert!(feq(x.start, y.start) && feq(x.end, y.end), "window bounds");
+            assert_eq!(x.saturated, y.saturated);
+        }
+        (None, None) => {}
+        _ => panic!("stable-window presence differs"),
+    }
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("prefill_occupancy", &a.prefill_occupancy, &b.prefill_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.exact_costs, b.exact_costs);
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_used_slots, b.graph_used_slots);
+    assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
+    assert!(feq(a.graph_padding_overhead, b.graph_padding_overhead));
+    assert_eq!(a.graph_bucket_hits, b.graph_bucket_hits);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migrations_to_offload, b.migrations_to_offload);
+    assert_eq!(a.migrations_to_local, b.migrations_to_local);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_timeline_eq("offloaded_frac", &a.offloaded_frac_timeline, &b.offloaded_frac_timeline);
+    assert_timeline_eq(
+        "prefill_pressure",
+        &a.prefill_pressure_timeline,
+        &b.prefill_pressure_timeline,
+    );
+    assert_eq!(a.metadata_residual, b.metadata_residual);
+    assert_timeline_eq("b_tpot", &a.b_tpot_timeline, &b.b_tpot_timeline);
+    assert_timeline_eq("ob", &a.ob_timeline, &b.ob_timeline);
+    assert_eq!(a.bounds_refreshes, b.bounds_refreshes);
+    assert_eq!(a.b_tpot_observations, b.b_tpot_observations);
+    assert_eq!(a.decision_counts, b.decision_counts);
+    assert_eq!(a.decision_counts_rerouted, b.decision_counts_rerouted);
+    // The one allowed difference; equality is fine too (under
+    // ADRENALINE_NO_LEAP=1 both runs take the reference path).
+    assert!(
+        a.events_processed <= b.events_processed,
+        "leaping must never add events: {} vs {}",
+        a.events_processed,
+        b.events_processed
+    );
+}
+
+#[test]
+fn baseline_poisson_bit_identity() {
+    for policy_on in [true, false] {
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = if policy_on {
+            SimConfig::paper_default(model, WorkloadKind::ShareGpt, 2.0)
+        } else {
+            SimConfig::baseline(model, WorkloadKind::ShareGpt, 2.0)
+        };
+        cfg.duration_s = 40.0;
+        let (on, off) = leap_pair(&cfg);
+        assert!(on.finished > 0);
+        assert_bit_identical(&on, &off);
+    }
+}
+
+#[test]
+fn saturated_bit_identity() {
+    // The bench's saturation regime: dense batches, dispatch gating,
+    // finishes on most steps — the leap boundaries that matter for the
+    // perf claim all fire here.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 40.0;
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.finished > 0);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn bursty_rebalance_bit_identity() {
+    // Rebalance ticks + migrations: dense queued events cut leaps and
+    // `Phase::Migrating` rows leave batches mid-window.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 45.0;
+    cfg.arrivals = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+    cfg.serving.rebalance = Some(RebalanceConfig::default());
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.finished > 0);
+    assert!(on.migrations_total > 0, "the controller must act on this trace");
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn diurnal_bounds_feedback_bit_identity() {
+    // Online B_TPOT loop: per-step estimator observations must replay in
+    // order inside leaps, and refresh ticks must land between them.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 45.0;
+    cfg.arrivals = ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 };
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.bounds_feedback = Some(BoundsFeedbackConfig::default());
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.finished > 0);
+    assert!(on.b_tpot_observations > 0, "the estimator must observe steps");
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn preemption_churn_bit_identity() {
+    // Tiny pools: the leap horizon's overflow bounds (decode KV blocks
+    // and executor-pool budgets) fire constantly; an overshot horizon
+    // would grant tokens the reference preempts first.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::OpenThoughts, 1.0);
+    cfg.duration_s = 20.0;
+    cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+    cfg.serving.executor_kv_capacity_tokens = Some(16 * 1024);
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.preemptions > 0, "tiny pools must preempt");
+    assert!(on.tokens_conserved);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn two_decode_instances_bit_identity() {
+    // Cross-instance interleaving: two decode instances share one
+    // prefill instance's executor pool, so the cross-instance overflow
+    // preemption scan and the run loop's same-pass sole-starter guard
+    // both fire (a leap by one instance while another starts in the same
+    // pass would emit future-stamped state ahead of the co-starter's
+    // pass-time writes — the guard forces both onto the per-step path
+    // for that one step).
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::OpenThoughts, 2.0);
+    cfg.duration_s = 20.0;
+    cfg.cluster.n_decode = 2;
+    cfg.serving.executor_kv_capacity_tokens = Some(8 * 1024);
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.finished > 0);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn two_decode_instances_with_rebalance_bit_identity() {
+    // Tick-driven migrations can free KV blocks on several decode
+    // instances inside one pass — the exact multi-starter scenario the
+    // sole-starter guard exists for.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
+    cfg.duration_s = 40.0;
+    cfg.arrivals = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+    cfg.cluster.n_decode = 2;
+    cfg.serving.rebalance = Some(RebalanceConfig::default());
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.finished > 0);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn exact_costs_bit_identity() {
+    // Leaping composes with the exact (pre-bucketing) cost plane: no
+    // grid selections, still bit-identical step series.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 2.0);
+    cfg.duration_s = 40.0;
+    cfg.serving.exact_costs = true;
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.exact_costs && on.finished > 0);
+    assert_eq!(on.graph_selections, 0);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn property_bit_identity_random_configs() {
+    // Random rates, seeds, pool budgets and durations: the horizon must
+    // never skip a finish, an overflow, or a queued event anywhere in
+    // the configuration space — any skip diverges the paired reports.
+    adrenaline::util::prop::check("step_leap_bit_identity", 5, |rng| {
+        let model = ModelSpec::llama2_7b();
+        let workload = if rng.range_usize(0, 2) == 0 {
+            WorkloadKind::ShareGpt
+        } else {
+            WorkloadKind::OpenThoughts
+        };
+        let mut cfg = SimConfig::paper_default(model, workload, 0.5 + rng.f64() * 4.0);
+        cfg.duration_s = 10.0 + rng.f64() * 10.0;
+        cfg.seed = rng.next_u64();
+        cfg.cluster.n_decode = 1 + rng.range_usize(0, 2) as u32;
+        if rng.range_usize(0, 2) == 0 {
+            let dec = 12 * 1024 + rng.range_usize(0, 32 * 1024);
+            let exe = 8 * 1024 + rng.range_usize(0, 16 * 1024);
+            cfg.serving.decode_kv_capacity_tokens = Some(dec);
+            cfg.serving.executor_kv_capacity_tokens = Some(exe);
+        }
+        let (on, off) = leap_pair(&cfg);
+        assert_bit_identical(&on, &off);
+    });
+}
+
+#[test]
+fn leap_collapses_events_on_quiet_traces() {
+    // Low rate => long event-free stretches => large leaps. Skipped (in
+    // spirit) under ADRENALINE_NO_LEAP=1, where both runs are the
+    // reference and the counts legitimately tie.
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 1.0);
+    cfg.duration_s = 30.0;
+    let (on, off) = leap_pair(&cfg);
+    assert_eq!(on.steps_simulated, off.steps_simulated);
+    let env_forced = std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
+    if env_forced {
+        assert_eq!(on.events_processed, off.events_processed);
+    } else {
+        assert!(
+            (on.events_processed as f64) < off.events_processed as f64 * 0.7,
+            "quiet traces must leap hard: {} vs {} events",
+            on.events_processed,
+            off.events_processed
+        );
+    }
+}
