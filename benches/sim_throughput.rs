@@ -22,7 +22,7 @@
 
 use std::collections::BTreeMap;
 
-use adrenaline::config::ModelSpec;
+use adrenaline::config::{FaultConfig, FaultKind, ModelSpec, ScriptedFault};
 use adrenaline::sim::{ClusterSim, SimConfig, SimReport};
 use adrenaline::util::bench::{figure_row, Bench, BenchStats};
 use adrenaline::util::json::Json;
@@ -94,6 +94,8 @@ fn row(
 }
 
 /// Run one scenario in one leap mode; returns (stats, last report).
+/// `customize` is the scenario's config hook (topology, fault plane, …).
+#[allow(clippy::too_many_arguments)]
 fn run_mode(
     m: ModelSpec,
     workload: WorkloadKind,
@@ -102,6 +104,7 @@ fn run_mode(
     duration: f64,
     iters: usize,
     no_leap: bool,
+    customize: fn(&mut SimConfig),
 ) -> (BenchStats, SimReport) {
     let label = if no_leap {
         format!("sim_throughput/{name}_no_leap")
@@ -113,6 +116,7 @@ fn run_mode(
         let mut cfg = SimConfig::paper_default(m, workload, rate);
         cfg.duration_s = duration;
         cfg.serving.no_leap = no_leap;
+        customize(&mut cfg);
         last = Some(ClusterSim::new(cfg).run());
     });
     (stats, last.expect("bench ran at least once"))
@@ -124,20 +128,43 @@ fn main() {
     let duration = env_f64("SIM_BENCH_DURATION_S", 120.0);
     let mut rows: Vec<Json> = Vec::new();
 
+    let noop: fn(&mut SimConfig) = |_| {};
+    // Fault-plane row (ISSUE 6): the saturated trace with a scripted
+    // mid-run prefill crash on a two-prefill cluster. Informational —
+    // the CI floor gate (`ci/check_bench_floor.sh`) reads only
+    // `saturated_32rps` — but it tracks the fault plane's hot-path cost
+    // across PRs, and the paired-mode `steps_simulated` assert below
+    // doubles as the leap/fault composition check in the bench.
+    let fault_crash: fn(&mut SimConfig) = |cfg| {
+        cfg.cluster.n_prefill = 2;
+        cfg.serving.fault = Some(FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::PrefillCrash,
+                instance: 0,
+                at_s: 40.0,
+                down_s: 10.0,
+            }],
+            ..FaultConfig::default()
+        });
+    };
+
     let scenarios = [
-        ("light_4rps", WorkloadKind::ShareGpt, 4.0, iters),
-        ("saturated_32rps", WorkloadKind::ShareGpt, 32.0, iters),
+        ("light_4rps", WorkloadKind::ShareGpt, 4.0, iters, noop),
+        ("saturated_32rps", WorkloadKind::ShareGpt, 32.0, iters, noop),
         // OpenThoughts generates ~10x the decode steps per request.
-        ("openthoughts_2rps", WorkloadKind::OpenThoughts, 2.0, iters.min(3)),
+        ("openthoughts_2rps", WorkloadKind::OpenThoughts, 2.0, iters.min(3), noop),
+        ("saturated_32rps_fault_crash", WorkloadKind::ShareGpt, 32.0, iters, fault_crash),
     ];
-    for (name, workload, rate, iters) in scenarios {
+    for (name, workload, rate, iters, customize) in scenarios {
         // Reference first so the paired leap-on row can carry the ratio.
         // The per-step reference only feeds the informational speedup
         // ratio (the gate reads the leap row), so it gets a capped
         // iteration count — it is the slow side of the pair by design.
         let ref_iters = iters.clamp(1, 2);
-        let (ref_stats, ref_report) = run_mode(m, workload, name, rate, duration, ref_iters, true);
-        let (leap_stats, leap_report) = run_mode(m, workload, name, rate, duration, iters, false);
+        let (ref_stats, ref_report) =
+            run_mode(m, workload, name, rate, duration, ref_iters, true, customize);
+        let (leap_stats, leap_report) =
+            run_mode(m, workload, name, rate, duration, iters, false, customize);
         assert_eq!(
             leap_report.steps_simulated,
             ref_report.steps_simulated,

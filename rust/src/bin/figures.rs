@@ -3,7 +3,7 @@
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
 //!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
-//!                  rebalance|buckets|feedback|all]`
+//!                  rebalance|buckets|feedback|faults|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -25,7 +25,8 @@
 //! the exact-cost ablation.
 
 use adrenaline::config::{
-    BoundsFeedbackConfig, ClusterSpec, GpuSpec, ModelSpec, RebalanceConfig, SloConfig,
+    BoundsFeedbackConfig, ClusterSpec, FaultConfig, FaultKind, GpuSpec, ModelSpec,
+    RebalanceConfig, ScriptedFault, SloConfig,
 };
 use adrenaline::coordinator::OffloadBounds;
 use adrenaline::gpu_model::{
@@ -62,6 +63,7 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("rebalance", rebalance),
     ("buckets", buckets),
     ("feedback", feedback),
+    ("faults", faults),
 ];
 
 fn main() {
@@ -565,6 +567,81 @@ fn buckets(out: &mut String) {
             r.tpot.map(|s| s.mean).unwrap_or(f64::NAN),
         );
     }
+}
+
+/// Fault plane (ISSUE 6 / EXPERIMENTS.md §Faults): (a) throughput /
+/// goodput / recovery counters vs stochastic crash MTBF, health-aware
+/// "graceful" degraded routing against the naive fail-and-recompute
+/// baseline; (b) a scripted prefill-crash run's health-fraction
+/// timeline — the dip at the crash, the heartbeat-latency recovery edge,
+/// and the recompute wave the counters attribute to it.
+fn faults(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let mtbfs = [20.0f64, 40.0, 80.0];
+    let modes: [(&str, bool); 2] = [("naive", false), ("graceful", true)];
+    let reports: Vec<SimReport> = parallel_map(mtbfs.len() * modes.len(), |i| {
+        let mtbf = mtbfs[i / modes.len()];
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 20.0);
+        cfg.duration_s = 120.0;
+        // Two instances per class so a crash leaves survivors to degrade
+        // onto; single-instance crashes only measure the recompute stall.
+        cfg.cluster.n_prefill = 2;
+        cfg.cluster.n_decode = 2;
+        cfg.serving.fault = Some(FaultConfig {
+            prefill_mtbf_s: Some(mtbf),
+            prefill_mttr_s: 4.0,
+            decode_mtbf_s: Some(2.0 * mtbf),
+            decode_mttr_s: 4.0,
+            health_aware: modes[i % modes.len()].1,
+            ..FaultConfig::default()
+        });
+        ClusterSim::new(cfg).run()
+    });
+    for (i, r) in reports.iter().enumerate() {
+        let mtbf = mtbfs[i / modes.len()];
+        let mode = modes[i % modes.len()].0;
+        row(out, "faults", &format!("{mode}_tput_tok_s"), mtbf, r.throughput);
+        row(out, "faults", &format!("{mode}_goodput_tok_s"), mtbf, r.goodput);
+        row(
+            out,
+            "faults",
+            &format!("{mode}_requests_recovered"),
+            mtbf,
+            r.requests_recovered as f64,
+        );
+        row(
+            out,
+            "faults",
+            &format!("{mode}_recompute_tokens"),
+            mtbf,
+            r.recompute_tokens_replayed as f64,
+        );
+        row(out, "faults", &format!("{mode}_degraded_time_s"), mtbf, r.degraded_time_s);
+    }
+
+    // (b) One scripted prefill crash mid-run: the health timeline is the
+    // recovery chart (strided to ~60 points like the other timelines).
+    let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 20.0);
+    cfg.duration_s = 120.0;
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.fault = Some(FaultConfig {
+        script: vec![ScriptedFault {
+            kind: FaultKind::PrefillCrash,
+            instance: 0,
+            at_s: 40.0,
+            down_s: 10.0,
+        }],
+        ..FaultConfig::default()
+    });
+    let r = ClusterSim::new(cfg).run();
+    let pts = r.health_timeline.points();
+    let stride = (pts.len() / 60).max(1);
+    for (t, v) in pts.iter().step_by(stride) {
+        row(out, "faults", "crash_health_frac", *t, *v);
+    }
+    row(out, "faults", "crash_requests_recovered", 0.0, r.requests_recovered as f64);
+    row(out, "faults", "crash_recompute_tokens", 0.0, r.recompute_tokens_replayed as f64);
+    row(out, "faults", "crash_degraded_time_s", 0.0, r.degraded_time_s);
 }
 
 /// §3.4.2 flexibility: prefill-pool scaling. Eq 1's OB_mem is linear in

@@ -87,6 +87,102 @@ impl Default for BoundsFeedbackConfig {
     }
 }
 
+/// Fault kinds the injection plane can schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A prefill instance — and the attention executor colocated on it —
+    /// goes down; offloaded requests resident there lose their attention
+    /// KV and must recompute (`engine::recovery::RecoveryAction`).
+    PrefillCrash,
+    /// A decode instance goes down; its requests re-route to survivors.
+    DecodeCrash,
+    /// One prefill instance's executor runs slow for a window: the
+    /// offloaded-attention component of decode steps touching it is
+    /// multiplied by `FaultConfig::straggler_factor`.
+    Straggler,
+}
+
+impl FaultKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::PrefillCrash => "prefill_crash",
+            FaultKind::DecodeCrash => "decode_crash",
+            FaultKind::Straggler => "straggler",
+        }
+    }
+}
+
+/// One scripted fault: `instance` enters `kind` at `at_s` and recovers
+/// `down_s` seconds later.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedFault {
+    pub kind: FaultKind,
+    pub instance: usize,
+    pub at_s: f64,
+    pub down_s: f64,
+}
+
+/// Fault-injection plane (ISSUE 6). `None` on [`ServingConfig`] is
+/// structurally inert: no fault events are scheduled, no RNG is consumed,
+/// and runs are bit-identical to a simulator without the plane (pinned by
+/// `rust/tests/faults.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Scripted fault schedule, applied on top of any stochastic faults.
+    pub script: Vec<ScriptedFault>,
+    /// Mean time between stochastic prefill-instance crashes, seconds
+    /// (exponential, per instance, from the dedicated fault RNG stream).
+    /// `None` = no stochastic prefill crashes.
+    pub prefill_mtbf_s: Option<f64>,
+    /// Mean time to repair a stochastic prefill crash, seconds.
+    pub prefill_mttr_s: f64,
+    /// Mean time between stochastic decode-instance crashes, seconds.
+    pub decode_mtbf_s: Option<f64>,
+    /// Mean time to repair a stochastic decode crash, seconds.
+    pub decode_mttr_s: f64,
+    /// Probability that any single KV-transfer attempt (prefill→decode
+    /// handoff or migration) fails transiently and must retry.
+    pub transfer_fail_prob: f64,
+    /// Retry attempts before a transfer gives up and the request falls
+    /// back to local recompute (re-prefill through the dispatch path).
+    pub transfer_max_retries: u64,
+    /// Initial retry backoff, seconds; doubles per attempt.
+    pub transfer_backoff_s: f64,
+    /// Backoff ceiling, seconds.
+    pub transfer_backoff_cap_s: f64,
+    /// Slowdown multiplier a `Straggler` window applies to the
+    /// offloaded-attention component of affected decode steps.
+    pub straggler_factor: f64,
+    /// Proxy heartbeat period, seconds: health transitions are observed
+    /// on `HealthTick` boundaries, which also sample the health timeline.
+    pub heartbeat_s: f64,
+    /// Health-aware degraded routing (the graceful mode). `false` is the
+    /// naive fail-and-recompute baseline: the proxy keeps routing new
+    /// work toward crashed instances and only the crash-time recompute
+    /// path saves the requests (the protocol EXPERIMENTS.md §Faults
+    /// compares against).
+    pub health_aware: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            script: Vec::new(),
+            prefill_mtbf_s: None,
+            prefill_mttr_s: 5.0,
+            decode_mtbf_s: None,
+            decode_mttr_s: 5.0,
+            transfer_fail_prob: 0.0,
+            transfer_max_retries: 3,
+            transfer_backoff_s: 0.05,
+            transfer_backoff_cap_s: 1.0,
+            straggler_factor: 2.0,
+            heartbeat_s: 0.25,
+            health_aware: true,
+        }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -140,6 +236,10 @@ pub struct ServingConfig {
     /// hooks fire and no refresh ticks are scheduled (pinned by
     /// `rust/tests/bounds_feedback.rs`).
     pub bounds_feedback: Option<BoundsFeedbackConfig>,
+    /// Fault injection. `None` (the default) schedules no fault events,
+    /// consumes no RNG, and leaves every run bit-identical to a simulator
+    /// without the plane (pinned by `rust/tests/faults.rs`).
+    pub fault: Option<FaultConfig>,
 }
 
 impl Default for ServingConfig {
@@ -159,6 +259,7 @@ impl Default for ServingConfig {
             no_leap: false,
             rebalance: None,
             bounds_feedback: None,
+            fault: None,
         }
     }
 }
@@ -219,6 +320,11 @@ impl ServingConfig {
         };
         bucket_field("decode_buckets", &mut cfg.decode_buckets)?;
         bucket_field("offload_buckets", &mut cfg.offload_buckets)?;
+        // Validate the executable-bucket grid here, where a bad config
+        // file surfaces as a proper `Err`, instead of letting it reach
+        // `GraphCache::new`'s panic mid-setup.
+        crate::coordinator::GraphCache::try_new(&cfg.decode_buckets, &cfg.offload_buckets, None)
+            .map(|_| ())?;
         if let Some(n) = v.get("b_max").and_then(Json::as_u64) {
             cfg.b_max_override = Some(n as usize);
         }
@@ -302,6 +408,127 @@ impl ServingConfig {
             }
             Some(other) => anyhow::bail!("bad bounds_feedback config: {other}"),
         }
+        // Same object-or-null discipline for the fault plane.
+        match v.get("fault") {
+            None | Some(Json::Null) => {}
+            Some(ft @ Json::Obj(_)) => {
+                let mut f = FaultConfig::default();
+                if let Some(arr) = ft.get("script") {
+                    let arr = arr
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("bad fault script: {arr}"))?;
+                    f.script = arr
+                        .iter()
+                        .map(|e| -> crate::Result<ScriptedFault> {
+                            let kind = match e.get("kind").and_then(Json::as_str) {
+                                Some("prefill_crash") => FaultKind::PrefillCrash,
+                                Some("decode_crash") => FaultKind::DecodeCrash,
+                                Some("straggler") => FaultKind::Straggler,
+                                _ => anyhow::bail!("bad fault kind in script entry: {e}"),
+                            };
+                            let instance = e
+                                .get("instance")
+                                .and_then(Json::as_u64)
+                                .ok_or_else(|| anyhow::anyhow!("bad fault instance: {e}"))?
+                                as usize;
+                            let at_s = e
+                                .get("at_s")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| anyhow::anyhow!("bad fault at_s: {e}"))?;
+                            let down_s = e
+                                .get("down_s")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| anyhow::anyhow!("bad fault down_s: {e}"))?;
+                            anyhow::ensure!(
+                                at_s.is_finite() && at_s >= 0.0,
+                                "fault at_s must be finite and >= 0"
+                            );
+                            anyhow::ensure!(
+                                down_s.is_finite() && down_s > 0.0,
+                                "fault down_s must be positive and finite"
+                            );
+                            Ok(ScriptedFault { kind, instance, at_s, down_s })
+                        })
+                        .collect::<crate::Result<_>>()?;
+                }
+                let f64_field = |key: &str, out: &mut f64| -> crate::Result<()> {
+                    if let Some(x) = ft.get(key) {
+                        *out = x
+                            .as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("bad fault {key}: {x}"))?;
+                    }
+                    Ok(())
+                };
+                // MTBFs spell "off" as null (or absence), like the
+                // top-level plane toggles.
+                let mtbf_field = |key: &str, out: &mut Option<f64>| -> crate::Result<()> {
+                    match ft.get(key) {
+                        None | Some(Json::Null) => {}
+                        Some(x) => {
+                            let m = x
+                                .as_f64()
+                                .ok_or_else(|| anyhow::anyhow!("bad fault {key}: {x}"))?;
+                            anyhow::ensure!(
+                                m.is_finite() && m > 0.0,
+                                "fault {key} must be positive and finite"
+                            );
+                            *out = Some(m);
+                        }
+                    }
+                    Ok(())
+                };
+                mtbf_field("prefill_mtbf_s", &mut f.prefill_mtbf_s)?;
+                f64_field("prefill_mttr_s", &mut f.prefill_mttr_s)?;
+                mtbf_field("decode_mtbf_s", &mut f.decode_mtbf_s)?;
+                f64_field("decode_mttr_s", &mut f.decode_mttr_s)?;
+                f64_field("transfer_fail_prob", &mut f.transfer_fail_prob)?;
+                if let Some(x) = ft.get("transfer_max_retries") {
+                    f.transfer_max_retries = x.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("bad fault transfer_max_retries: {x}")
+                    })?;
+                }
+                f64_field("transfer_backoff_s", &mut f.transfer_backoff_s)?;
+                f64_field("transfer_backoff_cap_s", &mut f.transfer_backoff_cap_s)?;
+                f64_field("straggler_factor", &mut f.straggler_factor)?;
+                f64_field("heartbeat_s", &mut f.heartbeat_s)?;
+                if let Some(x) = ft.get("health_aware") {
+                    f.health_aware = x
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("bad fault health_aware: {x}"))?;
+                }
+                anyhow::ensure!(
+                    f.prefill_mttr_s.is_finite() && f.prefill_mttr_s > 0.0,
+                    "fault prefill_mttr_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    f.decode_mttr_s.is_finite() && f.decode_mttr_s > 0.0,
+                    "fault decode_mttr_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&f.transfer_fail_prob),
+                    "fault transfer_fail_prob must be in [0, 1]"
+                );
+                anyhow::ensure!(
+                    f.transfer_backoff_s.is_finite() && f.transfer_backoff_s > 0.0,
+                    "fault transfer_backoff_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    f.transfer_backoff_cap_s.is_finite()
+                        && f.transfer_backoff_cap_s >= f.transfer_backoff_s,
+                    "fault transfer_backoff_cap_s must be finite and >= transfer_backoff_s"
+                );
+                anyhow::ensure!(
+                    f.straggler_factor.is_finite() && f.straggler_factor >= 1.0,
+                    "fault straggler_factor must be finite and >= 1"
+                );
+                anyhow::ensure!(
+                    f.heartbeat_s.is_finite() && f.heartbeat_s > 0.0,
+                    "fault heartbeat_s must be positive and finite"
+                );
+                cfg.fault = Some(f);
+            }
+            Some(other) => anyhow::bail!("bad fault config: {other}"),
+        }
         Ok(cfg)
     }
 
@@ -361,6 +588,46 @@ impl ServingConfig {
             fb.insert("min_observations".into(), Json::Num(f.min_observations as f64));
             o.insert("bounds_feedback".into(), Json::Obj(fb));
         }
+        if let Some(f) = &self.fault {
+            let mut ft = BTreeMap::new();
+            if !f.script.is_empty() {
+                ft.insert(
+                    "script".into(),
+                    Json::Arr(
+                        f.script
+                            .iter()
+                            .map(|s| {
+                                let mut e = BTreeMap::new();
+                                e.insert("kind".into(), Json::Str(s.kind.as_str().into()));
+                                e.insert("instance".into(), Json::Num(s.instance as f64));
+                                e.insert("at_s".into(), Json::Num(s.at_s));
+                                e.insert("down_s".into(), Json::Num(s.down_s));
+                                Json::Obj(e)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            if let Some(m) = f.prefill_mtbf_s {
+                ft.insert("prefill_mtbf_s".into(), Json::Num(m));
+            }
+            ft.insert("prefill_mttr_s".into(), Json::Num(f.prefill_mttr_s));
+            if let Some(m) = f.decode_mtbf_s {
+                ft.insert("decode_mtbf_s".into(), Json::Num(m));
+            }
+            ft.insert("decode_mttr_s".into(), Json::Num(f.decode_mttr_s));
+            ft.insert("transfer_fail_prob".into(), Json::Num(f.transfer_fail_prob));
+            ft.insert(
+                "transfer_max_retries".into(),
+                Json::Num(f.transfer_max_retries as f64),
+            );
+            ft.insert("transfer_backoff_s".into(), Json::Num(f.transfer_backoff_s));
+            ft.insert("transfer_backoff_cap_s".into(), Json::Num(f.transfer_backoff_cap_s));
+            ft.insert("straggler_factor".into(), Json::Num(f.straggler_factor));
+            ft.insert("heartbeat_s".into(), Json::Num(f.heartbeat_s));
+            ft.insert("health_aware".into(), Json::Bool(f.health_aware));
+            o.insert("fault".into(), Json::Obj(ft));
+        }
         Json::Obj(o).to_string()
     }
 }
@@ -412,6 +679,31 @@ mod tests {
                     min_observations: 4,
                 }),
                 rebalance: Some(RebalanceConfig::default()),
+                ..Default::default()
+            },
+            ServingConfig { fault: Some(FaultConfig::default()), ..Default::default() },
+            ServingConfig {
+                fault: Some(FaultConfig {
+                    script: vec![
+                        ScriptedFault {
+                            kind: FaultKind::PrefillCrash,
+                            instance: 0,
+                            at_s: 10.0,
+                            down_s: 5.0,
+                        },
+                        ScriptedFault {
+                            kind: FaultKind::Straggler,
+                            instance: 1,
+                            at_s: 20.0,
+                            down_s: 8.0,
+                        },
+                    ],
+                    prefill_mtbf_s: Some(60.0),
+                    decode_mtbf_s: Some(90.0),
+                    transfer_fail_prob: 0.1,
+                    health_aware: false,
+                    ..Default::default()
+                }),
                 ..Default::default()
             },
         ] {
@@ -502,6 +794,69 @@ mod tests {
         assert!(
             ServingConfig::from_json(r#"{"bounds_feedback": {"min_observations": 1.5}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn fault_defaults_off_and_json_validates() {
+        assert!(ServingConfig::default().fault.is_none(), "fault injection is opt-in");
+        let cfg = ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "decode_crash", "instance": 0, "at_s": 5, "down_s": 2}]}}"#,
+        )
+        .unwrap();
+        let f = cfg.fault.expect("object enables the fault plane");
+        assert_eq!(f.script.len(), 1);
+        assert_eq!(f.script[0].kind, FaultKind::DecodeCrash);
+        assert_eq!(f.script[0].at_s, 5.0);
+        assert_eq!(f.heartbeat_s, FaultConfig::default().heartbeat_s);
+        assert!(f.health_aware, "graceful degradation is the default");
+        // null spells "off"; malformed values are errors, never silent
+        // defaults.
+        let off = ServingConfig::from_json(r#"{"fault": null}"#).unwrap();
+        assert!(off.fault.is_none());
+        assert!(ServingConfig::from_json(r#"{"fault": true}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"script": 3}}"#).is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "meteor", "instance": 0, "at_s": 1, "down_s": 1}]}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "straggler", "instance": 0, "at_s": -1, "down_s": 1}]}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "straggler", "instance": 0, "at_s": 1, "down_s": 0}]}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"prefill_mtbf_s": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"prefill_mttr_s": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"transfer_fail_prob": 1.5}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"transfer_max_retries": 0.5}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"transfer_backoff_s": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"transfer_backoff_s": 1.0, "transfer_backoff_cap_s": 0.5}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"straggler_factor": 0.5}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"heartbeat_s": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fault": {"health_aware": "yes"}}"#).is_err());
+        // MTBF null spells "off" inside the object too.
+        let f = ServingConfig::from_json(r#"{"fault": {"prefill_mtbf_s": null}}"#)
+            .unwrap()
+            .fault
+            .unwrap();
+        assert!(f.prefill_mtbf_s.is_none());
+    }
+
+    #[test]
+    fn bad_bucket_grid_fails_at_json_validation_not_midsetup() {
+        // Satellite: a malformed executable-bucket grid must surface as a
+        // proper Err from config parsing, not a GraphCache::new panic when
+        // the sim or server is later constructed.
+        assert!(ServingConfig::from_json(r#"{"decode_buckets": []}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"offload_buckets": [0, 2]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"decode_buckets": [4, 2]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"decode_buckets": [2, 2, 4]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"decode_buckets": [1, 2, 4, 8]}"#).is_ok());
     }
 
     #[test]

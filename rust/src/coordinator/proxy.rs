@@ -31,6 +31,16 @@ pub struct Proxy {
     meta: Vec<RuntimeMetadata>,
     n_prefill: usize,
     rr_prefill: usize,
+    /// Heartbeat-observed prefill health (fault plane). Sizes stay fixed:
+    /// a crashed instance is masked out of routing, never removed, so the
+    /// per-instance executor-pool vectors elsewhere keep their indices.
+    prefill_healthy: Vec<bool>,
+    /// Heartbeat-observed decode health.
+    decode_healthy: Vec<bool>,
+    /// Graceful degradation toggle (`FaultConfig::health_aware`). When
+    /// `false` the proxy records health but neither masks routing nor
+    /// rescales bounds — the naive fail-and-recompute baseline.
+    health_aware: bool,
     /// Fresh-arrival decision counters: (c1, c2, local). One increment per
     /// arriving request, so the sum always equals the arrival count.
     pub decision_counts: (u64, u64, u64),
@@ -48,6 +58,9 @@ impl Proxy {
             meta: vec![RuntimeMetadata::new(); n_decode],
             n_prefill,
             rr_prefill: 0,
+            prefill_healthy: vec![true; n_prefill],
+            decode_healthy: vec![true; n_decode],
+            health_aware: true,
             decision_counts: (0, 0, 0),
             decision_counts_rerouted: (0, 0, 0),
         }
@@ -94,13 +107,33 @@ impl Proxy {
     }
 
     fn route_at(&mut self, req: &Request, used_token: usize, rerouted: bool) -> RouteDecision {
-        let prefill_instance = self.rr_prefill;
-        self.rr_prefill = (self.rr_prefill + 1) % self.n_prefill;
+        // Degraded routing: with health-aware mode on and at least one
+        // live instance, crashed instances are skipped. With every
+        // instance down (or in naive mode) the pre-fault paths run
+        // unchanged — all-healthy runs stay bit-identical to a proxy
+        // without the health plane.
+        let mask_prefill =
+            self.health_aware && self.prefill_healthy.iter().any(|&h| !h)
+                && self.prefill_healthy.iter().any(|&h| h);
+        let prefill_instance = if mask_prefill {
+            let mut pick = self.rr_prefill;
+            while !self.prefill_healthy[pick] {
+                pick = (pick + 1) % self.n_prefill;
+            }
+            self.rr_prefill = (pick + 1) % self.n_prefill;
+            pick
+        } else {
+            let pick = self.rr_prefill;
+            self.rr_prefill = (self.rr_prefill + 1) % self.n_prefill;
+            pick
+        };
 
+        let mask_decode = self.health_aware && self.decode_healthy.iter().any(|&h| h);
         let decode_instance = self
             .meta
             .iter()
             .enumerate()
+            .filter(|(i, _)| !mask_decode || self.decode_healthy[*i])
             .min_by_key(|(_, m)| m.decode_used_tokens() + m.attn_used_tokens())
             .map(|(i, _)| i)
             .expect("at least one decode instance");
@@ -152,6 +185,36 @@ impl Proxy {
         self.meta[instance].set_offloaded(id, offloaded)
     }
 
+    /// A decode instance crashed while `id`'s attention was offloaded: its
+    /// KV lives in a *prefill* instance's executor HBM, so the request
+    /// survives the crash — move its metadata off the dead instance onto
+    /// the least-loaded survivor and return the new home. Known-unhealthy
+    /// survivors are masked too (health-aware mode); with no other
+    /// instance at all the request re-admits on `from` and stalls until
+    /// recovery.
+    pub fn reroute_decode(
+        &mut self,
+        from: usize,
+        req: &Request,
+        used_token: usize,
+        offloaded: bool,
+    ) -> usize {
+        self.meta[from].remove(req.id);
+        let mask = self.health_aware
+            && self.decode_healthy.iter().enumerate().any(|(i, &h)| h && i != from);
+        let to = self
+            .meta
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != from && (!mask || self.decode_healthy[*i]))
+            .min_by_key(|(_, m)| m.decode_used_tokens() + m.attn_used_tokens())
+            .map(|(i, _)| i)
+            .unwrap_or(from);
+        let rm = ReqMeta { used_token, max_token: req.max_token().max(used_token) };
+        self.meta[to].admit(req.id, rm, offloaded);
+        to
+    }
+
     /// Would migrating tracked *local* request `id` to offloaded keep
     /// decode instance `instance` within Algorithm 1's OB bound? Unlike
     /// admission (where the candidate is in neither set), a migration
@@ -184,7 +247,53 @@ impl Proxy {
         let old = self.n_prefill as f64;
         self.n_prefill = n;
         self.rr_prefill %= n;
+        self.prefill_healthy.resize(n, true);
         self.scheduler.bounds.rescale_ob_mem(old, n as f64);
+    }
+
+    /// Switch between graceful (health-aware) and naive routing.
+    pub fn set_health_aware(&mut self, aware: bool) {
+        self.health_aware = aware;
+    }
+
+    /// Heartbeat-observed health transition for a prefill instance (and
+    /// the attention executor colocated on it). In health-aware mode a
+    /// crash masks the instance out of round-robin routing — so no new
+    /// offloads land on its executor — and rescales `OB_mem` for the
+    /// lost capacity (Eq 1 is linear in the live instance count);
+    /// recovery reverses both. Transitions through a fully-dead pool are
+    /// skipped symmetrically so the bound survives the round trip.
+    pub fn set_prefill_health(&mut self, instance: usize, healthy: bool) {
+        if self.prefill_healthy[instance] == healthy {
+            return;
+        }
+        let old = self.healthy_prefill_count();
+        self.prefill_healthy[instance] = healthy;
+        let new = self.healthy_prefill_count();
+        if self.health_aware && old > 0 && new > 0 {
+            self.scheduler.bounds.rescale_ob_mem(old as f64, new as f64);
+        }
+    }
+
+    /// Heartbeat-observed health transition for a decode instance.
+    pub fn set_decode_health(&mut self, instance: usize, healthy: bool) {
+        self.decode_healthy[instance] = healthy;
+    }
+
+    pub fn is_prefill_healthy(&self, instance: usize) -> bool {
+        self.prefill_healthy[instance]
+    }
+
+    pub fn is_decode_healthy(&self, instance: usize) -> bool {
+        self.decode_healthy[instance]
+    }
+
+    pub fn healthy_prefill_count(&self) -> usize {
+        self.prefill_healthy.iter().filter(|&&h| h).count()
+    }
+
+    pub fn healthy_decode_count(&self) -> usize {
+        self.decode_healthy.iter().filter(|&&h| h).count()
     }
 
     /// Offloaded fraction among currently-running requests (Fig 15's knob,
@@ -371,6 +480,99 @@ mod tests {
         assert!(p.on_migrated(0, 1, false));
         assert!(!p.metadata(0).is_offloaded(1));
         assert!(!p.on_migrated(0, 99, true));
+    }
+
+    #[test]
+    fn unhealthy_prefill_skipped_then_readmitted() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 3, 1);
+        p.set_prefill_health(1, false);
+        let picks: Vec<usize> =
+            (0..4).map(|i| p.route(&req(i, 10, 10)).prefill_instance).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "crashed instance must be routed around");
+        p.set_prefill_health(1, true);
+        let picks: Vec<usize> =
+            (4..7).map(|i| p.route(&req(i, 10, 10)).prefill_instance).collect();
+        assert!(picks.contains(&1), "recovery must re-admit the instance: {picks:?}");
+    }
+
+    #[test]
+    fn prefill_health_rescales_ob_mem_round_trip() {
+        let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 2, 1);
+        let before = p.bounds().ob_mem;
+        p.set_prefill_health(0, false);
+        assert!((p.bounds().ob_mem / before - 0.5).abs() < 1e-9, "half the executor capacity");
+        assert_eq!(p.healthy_prefill_count(), 1);
+        // Idempotent: repeating the same observation must not re-scale.
+        p.set_prefill_health(0, false);
+        assert!((p.bounds().ob_mem / before - 0.5).abs() < 1e-9);
+        p.set_prefill_health(0, true);
+        assert!((p.bounds().ob_mem / before - 1.0).abs() < 1e-9, "recovery restores the bound");
+        // A trip through a fully-dead pool also round-trips.
+        p.set_prefill_health(0, false);
+        p.set_prefill_health(1, false);
+        p.set_prefill_health(0, true);
+        p.set_prefill_health(1, true);
+        assert!((p.bounds().ob_mem / before - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unhealthy_decode_avoided_until_recovery() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 2);
+        p.set_decode_health(0, false);
+        for id in 0..3u64 {
+            assert_eq!(p.route(&req(id, 10, 10)).decode_instance, 1);
+        }
+        p.set_decode_health(0, true);
+        // Instance 0 is empty, instance 1 holds three requests: the
+        // least-loaded pick must return to the recovered instance.
+        assert_eq!(p.route(&req(3, 10, 10)).decode_instance, 0);
+    }
+
+    #[test]
+    fn naive_mode_ignores_health() {
+        let mut p = Proxy::new(OffloadPolicy::LoadAware, bounds(), 2, 2);
+        p.set_health_aware(false);
+        let before = p.bounds().ob_mem;
+        p.set_prefill_health(0, false);
+        p.set_decode_health(0, false);
+        assert_eq!(p.bounds().ob_mem, before, "naive mode never rescales");
+        let picks: Vec<usize> =
+            (0..4).map(|i| p.route(&req(i, 10, 10)).prefill_instance).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1], "naive mode keeps routing to the crash");
+        let mut q = Proxy::new(OffloadPolicy::LoadAware, bounds(), 2, 2);
+        q.set_health_aware(false);
+        q.set_decode_health(0, false);
+        assert_eq!(
+            q.route(&req(0, 10, 10)).decode_instance,
+            0,
+            "naive least-loaded pick still lands on the crashed instance"
+        );
+    }
+
+    #[test]
+    fn reroute_decode_moves_metadata_to_survivor() {
+        let mut p = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 3);
+        let r = req(0, 100, 50);
+        let home = p.route(&r).decode_instance;
+        for _ in 0..30 {
+            p.on_token(home, 0);
+        }
+        // Load a survivor so the least-loaded pick is disambiguated.
+        let heavy = (home + 1) % 3;
+        p.set_decode_health(home, false);
+        let mut q = Proxy::new(OffloadPolicy::Disabled, bounds(), 1, 1);
+        q.route(&req(7, 2000, 10));
+        // (separate proxy just exercises the single-instance fallback below)
+        p.meta[heavy].admit(99, ReqMeta { used_token: 5000, max_token: 5000 }, false);
+        let to = p.reroute_decode(home, &r, 130, true);
+        assert_ne!(to, home, "victim must leave the crashed instance");
+        assert_ne!(to, heavy, "least-loaded survivor wins");
+        assert_eq!(p.metadata(home).total_count(), 0);
+        assert_eq!(p.metadata(to).used_token_of(0), Some(130), "resumed length re-admitted");
+        assert!(p.metadata(to).is_offloaded(0), "offloaded residency survives the move");
+        // Single decode instance: nowhere to go — re-admit in place.
+        q.on_preempted(0, 7);
+        assert_eq!(q.reroute_decode(0, &req(7, 2000, 10), 2010, false), 0);
     }
 
     #[test]

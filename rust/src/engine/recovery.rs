@@ -7,7 +7,13 @@
 //! This is deliberately the same mechanism vLLM uses for preempted
 //! requests (recompute), so the decode engine needs no new state: the
 //! server drives it (see `Server::run_requests`' failure arm and the
-//! `executor_failure` integration test).
+//! `executor_failure_*` integration tests in `rust/tests/e2e_serving.rs` —
+//! in particular `executor_failure_arm_recomputes_offloaded_requests`,
+//! which kills the executor between decode steps via
+//! `Server::fail_executor_after_steps` and pins oracle-exact recovery).
+//! The cluster simulator mirrors this path at fleet scale: its fault
+//! plane (`sim/cluster.rs`, `FaultConfig`) recomputes crash victims with
+//! the same prompt-plus-generated replay.
 
 use crate::workload::RequestId;
 

@@ -69,6 +69,11 @@ pub struct Server {
     executor_alive: bool,
     /// Executor-failure recoveries performed (observability/tests).
     pub recoveries: u64,
+    /// Failure injection for tests: once the decode engine has taken this
+    /// many steps, the prefill-instance thread is killed *between* steps,
+    /// so the next offloaded batch fails mid-flight and the recovery arm
+    /// in [`Server::run_requests`] must re-prefill locally.
+    pub fail_executor_after_steps: Option<u64>,
 }
 
 impl Server {
@@ -117,6 +122,7 @@ impl Server {
             cfg,
             executor_alive: true,
             recoveries: 0,
+            fail_executor_after_steps: None,
         })
     }
 
@@ -306,6 +312,11 @@ impl Server {
             }
 
             // One decode step over the whole active batch.
+            if let Some(n) = self.fail_executor_after_steps {
+                if self.executor_alive && self.decode.stats.steps >= n {
+                    self.kill_executor();
+                }
+            }
             let ids: Vec<u64> = active.iter().map(|a| a.id).collect();
             let outcome = match self.decode.step(&ids, Some(&self.executor)) {
                 Ok(o) => o,

@@ -94,6 +94,12 @@ pub struct CostModel {
     sync_total_s: f64,
     /// Extra CPU launch overhead per step (eager ablation; 0 with graphs).
     eager_launch_overhead_s: f64,
+    /// Per-executor-partition straggler multipliers (the fault plane's
+    /// slowdown windows). Empty until a window ever opens — the
+    /// structurally-inert default: [`CostModel::decode_step`] then never
+    /// touches a multiplier, so fault-free runs keep the exact pre-fault
+    /// f64 op order bit for bit.
+    executor_slowdown: Vec<f64>,
     /// Reusable scratch for [`CostModel::decode_step_series`]: the
     /// advancing per-partition ctx sums and the per-step executor-time
     /// staging buffer (no allocation after warm-up).
@@ -129,8 +135,25 @@ impl CostModel {
             interconnect_bw: rl_whole.gpu.interconnect_bw,
             sync_total_s: sync_overhead_s * model.n_layers as f64,
             eager_launch_overhead_s,
+            executor_slowdown: Vec::new(),
             series_ctx: Vec::new(),
             series_exec: Vec::new(),
+        }
+    }
+
+    /// Open a straggler window on executor partition `pi`: its offloaded
+    /// attention times are multiplied by `factor` until cleared.
+    pub fn set_executor_slowdown(&mut self, pi: usize, factor: f64) {
+        if self.executor_slowdown.len() <= pi {
+            self.executor_slowdown.resize(pi + 1, 1.0);
+        }
+        self.executor_slowdown[pi] = factor;
+    }
+
+    /// Close the straggler window on `pi` (multiplier back to 1).
+    pub fn clear_executor_slowdown(&mut self, pi: usize) {
+        if let Some(s) = self.executor_slowdown.get_mut(pi) {
+            *s = 1.0;
         }
     }
 
@@ -273,7 +296,15 @@ impl CostModel {
             } else {
                 0
             };
-            let t = self.executor.attention(ctx + pad);
+            let mut t = self.executor.attention(ctx + pad);
+            // Straggler windows (fault plane): a lagging executor's
+            // attention stretches by its slowdown factor. Gated on != 1.0
+            // so fault-free runs keep the exact pre-fault f64 op order.
+            if let Some(&s) = self.executor_slowdown.get(pi) {
+                if s != 1.0 {
+                    t *= s;
+                }
+            }
             executor_times_out[pi] = t;
             remote_attention_s = remote_attention_s.max(t);
         }
@@ -620,6 +651,26 @@ mod tests {
             assert_eq!(cost.step_s.to_bits(), step.to_bits(), "step ({lr},{lc})");
             assert_eq!(cost.flops.to_bits(), flops.to_bits(), "flops ({lr},{lc})");
         }
+    }
+
+    #[test]
+    fn straggler_slowdown_scales_remote_attention_and_clears() {
+        let mut cm = setup(CostMode::Exact);
+        let mut out = Vec::new();
+        let base = cm.decode_step(4, 4 * 500, &[6, 3], &[6 * 800, 3 * 800], &mut out);
+        let base_exec = out.clone();
+
+        cm.set_executor_slowdown(1, 2.0);
+        let slow = cm.decode_step(4, 4 * 500, &[6, 3], &[6 * 800, 3 * 800], &mut out);
+        assert_eq!(out[0].to_bits(), base_exec[0].to_bits(), "healthy partition unchanged");
+        assert_eq!(out[1].to_bits(), (base_exec[1] * 2.0).to_bits(), "straggler doubled");
+        assert!(slow.step_s >= base.step_s);
+        // FLOPs count useful work — a straggler burns time, not work.
+        assert_eq!(slow.flops.to_bits(), base.flops.to_bits());
+
+        cm.clear_executor_slowdown(1);
+        let back = cm.decode_step(4, 4 * 500, &[6, 3], &[6 * 800, 3 * 800], &mut out);
+        assert_eq!(back.step_s.to_bits(), base.step_s.to_bits(), "cleared window restores base");
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! * **Dispatch gating.** A prompt is only dispatched to prefill when its
 //!   KV has a home (decode pool for local, executor pool for offloaded) —
 //!   queueing at high rate is what blows up vLLM's TTFT in Fig 11a.
+//! * **Faults.** `ServingConfig::fault` (default `None` → structurally
+//!   inert: no fault state, events, or RNG draws exist) arms scripted
+//!   and/or seeded-stochastic instance crashes, transient KV-transfer
+//!   failures (exponential backoff, recompute fallback), and executor
+//!   straggler windows — the failure domain attention disaggregation
+//!   creates (an offloaded request's KV lives in a *prefill* instance's
+//!   executor HBM). See the fault-plane section below and
+//!   `rust/tests/faults.rs`.
 //!
 //! # Hot path (EXPERIMENTS.md §Perf)
 //!
@@ -49,7 +57,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterSpec, ModelSpec, ServingConfig};
+use crate::config::{ClusterSpec, FaultConfig, FaultKind, ModelSpec, ServingConfig};
 use crate::coordinator::{BucketPair, OffloadBounds, Proxy, RebalanceController, RebalanceMode};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
@@ -57,6 +65,7 @@ use crate::gpu_model::{
     InterferenceModel, Roofline, PREFILL_BW_FRAC,
 };
 use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
+use crate::util::rng::Rng;
 use crate::workload::{ArrivalPattern, Request, RequestId, TraceGenerator, WorkloadKind};
 
 use super::events::EventQueue;
@@ -159,6 +168,11 @@ const DUTY_TAU_S: f64 = 10.0;
 /// Sentinel for "not in any running set".
 const NO_SLOT: usize = usize::MAX;
 
+/// Salt for the fault plane's dedicated RNG stream: faults draw from
+/// `seed ^ SALT`, so enabling them never perturbs the workload trace —
+/// a faulted run and its fault-free control see identical arrivals.
+const FAULT_RNG_SALT: u64 = 0xFA17_1A7E_D15A_57E5;
+
 /// Upper bound on decode steps committed per leap (bounds scratch-buffer
 /// growth). A leap truncated here simply continues on the next pass, so
 /// the cap never changes results — only the collapse granularity of very
@@ -179,6 +193,16 @@ struct SimReq {
     /// Re-prefill length after preemption (prompt + generated).
     effective_prompt: usize,
     preemptions: u32,
+    /// Rollback generation: bumped on every preemption and fault-recovery
+    /// recompute. Per-request events (`PrefillDone` / `TransferDone` /
+    /// `MigrationDone` / `TransferRetry`) carry the epoch they were
+    /// scheduled under and are dropped stale on mismatch — a crash can
+    /// leave a dead instance's completions in the queue. Always 0 with
+    /// `fault: None` and no preemption.
+    epoch: u32,
+    /// KV-transfer retry attempts for the in-flight transfer (fault
+    /// plane; reset at each transfer start).
+    transfer_attempts: u32,
     /// Position in its decode instance's `running` vec (`NO_SLOT` when not
     /// running). Back-pointer for O(1) swap-remove.
     run_slot: usize,
@@ -215,6 +239,10 @@ struct DecodeInst {
     /// Reserved (dispatched) tokens not yet admitted.
     reserved: usize,
     step_in_flight: bool,
+    /// Step generation: bumped on a decode crash so a dead batch's queued
+    /// `DecodeStepEnd` cannot clear a post-recovery step's `step_in_flight`
+    /// or grant its tokens. Always 0 with `fault: None`.
+    step_epoch: u32,
     /// Accumulated (flops, seconds) for compute-utilization accounting.
     flops_done: f64,
     busy_s: f64,
@@ -244,12 +272,12 @@ impl DecodeInst {
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     Arrival(RequestId),
-    PrefillDone { inst: usize, id: RequestId },
-    TransferDone { id: RequestId },
-    DecodeStepEnd { inst: usize },
+    PrefillDone { inst: usize, id: RequestId, epoch: u32 },
+    TransferDone { id: RequestId, epoch: u32 },
+    DecodeStepEnd { inst: usize, epoch: u32 },
     /// A rebalance migration's KV transfer finished; the request rejoins
     /// its decode instance's waiting queue on the new side.
-    MigrationDone { id: RequestId },
+    MigrationDone { id: RequestId, epoch: u32 },
     /// Periodic rebalance-controller tick (only scheduled when
     /// `ServingConfig::rebalance` is set and offloading is enabled).
     RebalanceTick,
@@ -258,6 +286,19 @@ enum Ev {
     /// and no rebalancer runs (with rebalancing on, refreshes ride the
     /// rebalance ticks instead of duplicating the event stream).
     BoundsRefreshTick,
+    // ----- fault plane (only ever scheduled when `fault` is Some) -------
+    /// An instance (or one executor's step cost, for `Straggler`) fails at
+    /// this instant for `down_s` seconds. The handler pushes the matching
+    /// `InstanceUp`; `stochastic` marks the MTBF/MTTR chain's events so
+    /// only that chain's recoveries draw + schedule the next failure.
+    InstanceDown { kind: FaultKind, inst: usize, down_s: f64, stochastic: bool },
+    InstanceUp { kind: FaultKind, inst: usize, stochastic: bool },
+    /// A failed KV transfer's backoff expired: redraw the attempt.
+    TransferRetry { id: RequestId, epoch: u32 },
+    /// Heartbeat: the proxy reconciles its health view with the sim's
+    /// down-state (detection latency <= `FaultConfig::heartbeat_s`) and
+    /// the health timeline samples.
+    HealthTick,
 }
 
 /// Post-run report.
@@ -273,7 +314,8 @@ pub struct SimReport {
     pub finished: usize,
     pub preemptions: u64,
     /// Sum of per-request preemption counters — always equals
-    /// `preemptions` (checked by the conservation tests).
+    /// `preemptions` (checked by the conservation tests). Fault
+    /// recoveries count under `requests_recovered`, not here.
     pub req_preemptions_total: u64,
     /// Token-accounting invariant: every finished request produced exactly
     /// the tokens the recorder saw for it (and at least its `output_len`),
@@ -363,9 +405,71 @@ pub struct SimReport {
     /// Fresh-arrival offload decisions (C1, C2, Local) — sums to
     /// `arrived` once every request has been routed.
     pub decision_counts: (u64, u64, u64),
-    /// Preemption re-route decisions (C1, C2, Local) — sums to
-    /// `preemptions` (one recompute re-admission per preemption).
+    /// Re-route decisions (C1, C2, Local) for requests re-admitted via the
+    /// recompute path — sums to `preemptions` plus the fault plane's
+    /// recompute recoveries (one re-admission per rollback).
     pub decision_counts_rerouted: (u64, u64, u64),
+    // ----- fault plane (all zero / empty with `fault: None`) ------------
+    /// Fault windows opened: scripted + stochastic down events and
+    /// straggler windows.
+    pub faults_injected: u64,
+    /// Requests carried through fault recovery: crash recomputes, decode
+    /// re-routes of executor-resident victims, and transfer-retry
+    /// exhaustion recomputes.
+    pub requests_recovered: u64,
+    /// Prompt + generated tokens re-prefilled by fault recomputes.
+    pub recompute_tokens_replayed: u64,
+    /// KV-transfer retry attempts performed (prefill→decode + migration).
+    pub transfer_retries: u64,
+    /// Wall time with at least one fault window active.
+    pub degraded_time_s: f64,
+    /// Fraction of instances (prefill + decode) healthy, sampled at every
+    /// `HealthTick`.
+    pub health_timeline: Timeline,
+}
+
+/// Runtime state of the fault-injection plane (`ServingConfig::fault`).
+/// Lives behind `Option` on [`ClusterSim`], so `fault: None` pays no
+/// state and takes no new branches on the hot path.
+struct FaultPlane {
+    cfg: FaultConfig,
+    /// Dedicated RNG stream (seed ^ [`FAULT_RNG_SALT`]): stochastic fault
+    /// schedules and transfer-failure draws never perturb the trace.
+    rng: Rng,
+    /// Per-instance down depth — overlapping scripted windows nest, so a
+    /// crash acts only on 0→1 and a recovery only on 1→0.
+    prefill_down: Vec<u32>,
+    decode_down: Vec<u32>,
+    straggler_depth: Vec<u32>,
+    /// Currently-open fault windows (degraded-time bookkeeping).
+    active: u32,
+    degraded_since: Option<f64>,
+    degraded_time_s: f64,
+    faults_injected: u64,
+    requests_recovered: u64,
+    recompute_tokens_replayed: u64,
+    transfer_retries: u64,
+    health_timeline: Timeline,
+}
+
+impl FaultPlane {
+    fn new(cfg: FaultConfig, seed: u64, n_prefill: usize, n_decode: usize) -> Self {
+        FaultPlane {
+            rng: Rng::seed_from_u64(seed ^ FAULT_RNG_SALT),
+            cfg,
+            prefill_down: vec![0; n_prefill],
+            decode_down: vec![0; n_decode],
+            straggler_depth: vec![0; n_prefill],
+            active: 0,
+            degraded_since: None,
+            degraded_time_s: 0.0,
+            faults_injected: 0,
+            requests_recovered: 0,
+            recompute_tokens_replayed: 0,
+            transfer_retries: 0,
+            health_timeline: Timeline::new(),
+        }
+    }
 }
 
 /// The cluster simulator.
@@ -402,6 +506,8 @@ pub struct ClusterSim {
     rebalancer: Option<RebalanceController>,
     /// Online B_TPOT estimator (None = offline bounds stay frozen).
     b_tpot_est: Option<BTpotEstimator>,
+    /// Fault-injection plane (None = no fault state, no fault events).
+    fault: Option<FaultPlane>,
     /// Per-prefill-instance decayed executor duty estimators (the
     /// interference model's "recent duty cycle").
     duty: Vec<DutyCycleEstimator>,
@@ -447,12 +553,39 @@ impl ClusterSim {
         if let Some(b) = cfg.serving.b_max_override {
             bounds.b_max = b;
         }
-        let proxy = Proxy::new(
+        let mut proxy = Proxy::new(
             cfg.serving.offload,
             bounds,
             cfg.cluster.n_prefill as usize,
             cfg.cluster.n_decode as usize,
         );
+
+        // Fault plane: validate scripted targets against this topology
+        // (JSON validation cannot — it does not know the cluster) and set
+        // the proxy's graceful-vs-naive mode.
+        let fault = cfg.serving.fault.clone().map(|fc| {
+            for f in &fc.script {
+                let limit = match f.kind {
+                    FaultKind::DecodeCrash => cfg.cluster.n_decode as usize,
+                    FaultKind::PrefillCrash | FaultKind::Straggler => {
+                        cfg.cluster.n_prefill as usize
+                    }
+                };
+                assert!(
+                    f.instance < limit,
+                    "scripted {} targets instance {} but the cluster has {limit}",
+                    f.kind.as_str(),
+                    f.instance
+                );
+            }
+            proxy.set_health_aware(fc.health_aware);
+            FaultPlane::new(
+                fc,
+                cfg.seed,
+                cfg.cluster.n_prefill as usize,
+                cfg.cluster.n_decode as usize,
+            )
+        });
 
         let hbm_budget = HbmUsage::kv_token_budget(&cfg.cluster, &cfg.model) as usize;
         let kv_budget = cfg.serving.decode_kv_capacity_tokens.unwrap_or(hbm_budget);
@@ -482,6 +615,7 @@ impl ClusterSim {
                 kv: KvPool::new(BlockAllocator::new(kv_budget / block_tokens, block_tokens)),
                 reserved: 0,
                 step_in_flight: false,
+                step_epoch: 0,
                 flops_done: 0.0,
                 busy_s: 0.0,
                 local_rows: 0,
@@ -574,6 +708,7 @@ impl ClusterSim {
             leap: !no_leap,
             rebalancer,
             b_tpot_est,
+            fault,
             duty,
             migrations_to_offload: 0,
             migrations_to_local: 0,
@@ -615,6 +750,8 @@ impl ClusterSim {
                 prefill_instance: 0,
                 decode_instance: 0,
                 preemptions: 0,
+                epoch: 0,
+                transfer_attempts: 0,
                 run_slot: NO_SLOT,
                 admit_seq: 0,
             });
@@ -632,6 +769,60 @@ impl ClusterSim {
                 self.events.push(fb.interval_s, Ev::BoundsRefreshTick);
             }
         }
+        if self.fault.is_some() && !self.reqs.is_empty() {
+            // Fault plane: scripted windows are pushed whole (each Down
+            // handler schedules its own Up); stochastic chains seed one
+            // first failure per instance per configured class, draw order
+            // fixed (prefill class then decode, instance ascending, TTF
+            // then MTTR) so schedules are seed-deterministic. Every fault
+            // is an ordinary queued event, so the leap engine's strict
+            // next-event horizon already fences them.
+            let fc = self.fault.as_ref().expect("checked above").cfg.clone();
+            for f in &fc.script {
+                self.events.push(
+                    f.at_s,
+                    Ev::InstanceDown {
+                        kind: f.kind,
+                        inst: f.instance,
+                        down_s: f.down_s,
+                        stochastic: false,
+                    },
+                );
+            }
+            if let Some(mtbf) = fc.prefill_mtbf_s {
+                for pi in 0..self.prefill.len() {
+                    let rng = &mut self.fault.as_mut().expect("checked above").rng;
+                    let ttf = rng.exp(1.0 / mtbf);
+                    let down_s = rng.exp(1.0 / fc.prefill_mttr_s);
+                    self.events.push(
+                        ttf,
+                        Ev::InstanceDown {
+                            kind: FaultKind::PrefillCrash,
+                            inst: pi,
+                            down_s,
+                            stochastic: true,
+                        },
+                    );
+                }
+            }
+            if let Some(mtbf) = fc.decode_mtbf_s {
+                for d in 0..self.decode.len() {
+                    let rng = &mut self.fault.as_mut().expect("checked above").rng;
+                    let ttf = rng.exp(1.0 / mtbf);
+                    let down_s = rng.exp(1.0 / fc.decode_mttr_s);
+                    self.events.push(
+                        ttf,
+                        Ev::InstanceDown {
+                            kind: FaultKind::DecodeCrash,
+                            inst: d,
+                            down_s,
+                            stochastic: true,
+                        },
+                    );
+                }
+            }
+            self.events.push(fc.heartbeat_s, Ev::HealthTick);
+        }
 
         let hard_stop = self.hard_stop();
         while let Some((t, ev)) = self.events.pop() {
@@ -641,12 +832,20 @@ impl ClusterSim {
             }
             match ev {
                 Ev::Arrival(id) => self.on_arrival(t, id),
-                Ev::PrefillDone { inst, id } => self.on_prefill_done(t, inst, id),
-                Ev::TransferDone { id } => self.on_transfer_done(t, id),
-                Ev::DecodeStepEnd { inst } => self.on_decode_step_end(t, inst),
-                Ev::MigrationDone { id } => self.on_migration_done(t, id),
+                Ev::PrefillDone { inst, id, epoch } => self.on_prefill_done(t, inst, id, epoch),
+                Ev::TransferDone { id, epoch } => self.on_transfer_done(t, id, epoch),
+                Ev::DecodeStepEnd { inst, epoch } => self.on_decode_step_end(t, inst, epoch),
+                Ev::MigrationDone { id, epoch } => self.on_migration_done(t, id, epoch),
                 Ev::RebalanceTick => self.on_rebalance_tick(t),
                 Ev::BoundsRefreshTick => self.on_bounds_refresh_tick(t),
+                Ev::InstanceDown { kind, inst, down_s, stochastic } => {
+                    self.on_instance_down(t, kind, inst, down_s, stochastic)
+                }
+                Ev::InstanceUp { kind, inst, stochastic } => {
+                    self.on_instance_up(t, kind, inst, stochastic)
+                }
+                Ev::TransferRetry { id, epoch } => self.on_transfer_retry(t, id, epoch),
+                Ev::HealthTick => self.on_health_tick(t),
             }
             // Global scheduling pass after every event: dispatch, then
             // admissions for every instance, then step starts. Admissions
@@ -799,7 +998,11 @@ impl ClusterSim {
     /// re-admitted after preemption resumes with the two exactly equal.
     /// The preemption re-route undercount (ISSUE 4) violated this: the
     /// proxy restarted at the bare prompt length while `kv_tokens` resumed
-    /// at `prompt + generated`.
+    /// at `prompt + generated`. The fault plane's recovery paths are held
+    /// to the same contract: a decode-crash re-route re-admits at exactly
+    /// `kv_tokens` ([`Proxy::reroute_decode`]), and a recompute recovery
+    /// re-routes at `effective_prompt` just like the preemption path —
+    /// `rust/tests/faults.rs` runs crash schedules with these checks armed.
     #[cfg(debug_assertions)]
     fn assert_proxy_tokens(&self, d: usize) {
         let meta = self.proxy.metadata(d);
@@ -830,7 +1033,10 @@ impl ClusterSim {
         self.prefill[route.prefill_instance].queue.push_back(id);
     }
 
-    fn on_prefill_done(&mut self, t: f64, inst: usize, id: RequestId) {
+    fn on_prefill_done(&mut self, t: f64, inst: usize, id: RequestId, epoch: u32) {
+        if epoch != self.req(id).epoch {
+            return; // stale: the request rolled back after this was scheduled
+        }
         // First token exists as soon as prefill completes.
         let was_preempted = self.req(id).preemptions > 0;
         if !was_preempted || self.req(id).generated == 0 {
@@ -859,20 +1065,41 @@ impl ClusterSim {
             // NVLink transfer to the decode instance (cost plane;
             // bit-identical to the old inline bytes/bandwidth formula).
             sr.phase = Phase::Transferring;
-            let xfer = self.costs.kv_transfer_time(sr.kv_tokens as u64);
-            self.events.push(t + xfer, Ev::TransferDone { id });
+            sr.transfer_attempts = 0;
+            let kv = sr.kv_tokens as u64;
+            let epoch = sr.epoch;
+            if self.transfer_fails() {
+                // Failure detected immediately; the retry fires after the
+                // first backoff (fault plane only — the draw above is
+                // `false` without one).
+                let delay = self.transfer_backoff(0);
+                self.events.push(t + delay, Ev::TransferRetry { id, epoch });
+            } else {
+                let xfer = self.costs.kv_transfer_time(kv);
+                self.events.push(t + xfer, Ev::TransferDone { id, epoch });
+            }
         }
     }
 
-    fn on_transfer_done(&mut self, t: f64, id: RequestId) {
+    fn on_transfer_done(&mut self, t: f64, id: RequestId, epoch: u32) {
         let _ = t;
         let sr = self.req_mut(id);
+        if epoch != sr.epoch {
+            return; // stale: the request rolled back after this was scheduled
+        }
+        debug_assert_eq!(sr.phase, Phase::Transferring);
         sr.phase = Phase::Decoding;
         let d = sr.decode_instance;
         self.decode[d].waiting.push_back(id);
     }
 
-    fn on_decode_step_end(&mut self, t: f64, inst: usize) {
+    fn on_decode_step_end(&mut self, t: f64, inst: usize, epoch: u32) {
+        if epoch != self.decode[inst].step_epoch {
+            // A crash invalidated the batch this step was priced over;
+            // dropping the event keeps a stale completion from clearing a
+            // post-recovery step's in-flight flag or granting its tokens.
+            return;
+        }
         self.decode[inst].step_in_flight = false;
         if self.decode[inst].running.is_empty() {
             return;
@@ -1185,6 +1412,9 @@ impl ClusterSim {
             // for the burst cohort in flight.
             let mut target: Option<(f64, usize)> = None;
             for pi in 0..self.prefill.len() {
+                if self.prefill_is_down(pi) {
+                    continue; // never migrate KV into a crashed executor pool
+                }
                 let p = &self.prefill[pi];
                 if p.executor_kv_budget == 0 {
                     continue;
@@ -1276,14 +1506,27 @@ impl ClusterSim {
             self.reqs[id as usize].offloaded = false;
             self.record_prefill_occupancy(t);
         }
-        self.reqs[id as usize].phase = Phase::Migrating;
+        {
+            let sr = &mut self.reqs[id as usize];
+            sr.phase = Phase::Migrating;
+            sr.transfer_attempts = 0;
+        }
         let _tracked = self.proxy.on_migrated(d, id, to_offload);
         debug_assert!(_tracked, "migrating request must be tracked by the proxy");
-        let xfer = self.costs.kv_transfer_time(kv as u64);
-        self.events.push(t + xfer, Ev::MigrationDone { id });
+        let epoch = self.reqs[id as usize].epoch;
+        if self.transfer_fails() {
+            let delay = self.transfer_backoff(0);
+            self.events.push(t + delay, Ev::TransferRetry { id, epoch });
+        } else {
+            let xfer = self.costs.kv_transfer_time(kv as u64);
+            self.events.push(t + xfer, Ev::MigrationDone { id, epoch });
+        }
     }
 
-    fn on_migration_done(&mut self, t: f64, id: RequestId) {
+    fn on_migration_done(&mut self, t: f64, id: RequestId, epoch: u32) {
+        if epoch != self.reqs[id as usize].epoch {
+            return; // stale: the request rolled back after this was scheduled
+        }
         let (offloaded, d, kv, pi) = {
             let sr = &self.reqs[id as usize];
             debug_assert_eq!(sr.phase, Phase::Migrating);
@@ -1304,6 +1547,436 @@ impl ClusterSim {
         self.migration_tokens_moved += kv as u64;
         self.reqs[id as usize].phase = Phase::Decoding;
         self.decode[d].waiting.push_back(id);
+    }
+
+    // ----- fault plane ------------------------------------------------------
+    //
+    // Attention disaggregation creates a failure domain classical PD
+    // serving does not have: an offloaded decode request's KV lives in a
+    // *prefill* instance's HBM, so a prefill crash kills in-flight decode
+    // requests that instance never admitted. The sim models three fault
+    // kinds (`FaultConfig`): instance crash/recover (prefill or decode),
+    // transient KV-transfer failure with exponential backoff + recompute
+    // fallback, and an executor straggler window (slowdown factor on one
+    // executor's offloaded-attention step cost). Recovery drives
+    // `engine::recovery::RecoveryPlan`'s semantics at sim scale:
+    // `RecomputeLocal` is `recompute_request` (the preemption/re-route
+    // path, `Proxy::route_resumed` token accounting included), and
+    // `KeepLocal` is the health-aware decode-crash re-route that keeps
+    // executor-resident KV alive. Every fault is an ordinary queued
+    // event, so PR 5's leap engine needs no new fences — the strict
+    // next-event horizon already stops a leap at the next fault.
+
+    #[inline]
+    fn prefill_is_down(&self, pi: usize) -> bool {
+        self.fault.as_ref().map_or(false, |f| f.prefill_down[pi] > 0)
+    }
+
+    #[inline]
+    fn decode_is_down(&self, d: usize) -> bool {
+        self.fault.as_ref().map_or(false, |f| f.decode_down[d] > 0)
+    }
+
+    /// Draw one transfer-failure Bernoulli (always `false` without a
+    /// fault plane or with `transfer_fail_prob: 0` — no RNG consumed, so
+    /// those runs stay bit-identical).
+    fn transfer_fails(&mut self) -> bool {
+        match self.fault.as_mut() {
+            Some(fp) if fp.cfg.transfer_fail_prob > 0.0 => {
+                fp.rng.f64() < fp.cfg.transfer_fail_prob
+            }
+            _ => false,
+        }
+    }
+
+    /// Exponential backoff before retry `attempt` (0-based), capped.
+    fn transfer_backoff(&self, attempt: u32) -> f64 {
+        let fc = &self.fault.as_ref().expect("transfer failures imply a fault plane").cfg;
+        (fc.transfer_backoff_s * (attempt as f64).exp2()).min(fc.transfer_backoff_cap_s)
+    }
+
+    fn on_instance_down(
+        &mut self,
+        t: f64,
+        kind: FaultKind,
+        inst: usize,
+        down_s: f64,
+        stochastic: bool,
+    ) {
+        let Some(fp) = self.fault.as_mut() else { return };
+        fp.faults_injected += 1;
+        if fp.active == 0 {
+            fp.degraded_since = Some(t);
+        }
+        fp.active += 1;
+        // Overlapping scripted windows nest: only the 0→1 edge acts.
+        let first = match kind {
+            FaultKind::PrefillCrash => {
+                fp.prefill_down[inst] += 1;
+                fp.prefill_down[inst] == 1
+            }
+            FaultKind::DecodeCrash => {
+                fp.decode_down[inst] += 1;
+                fp.decode_down[inst] == 1
+            }
+            FaultKind::Straggler => {
+                fp.straggler_depth[inst] += 1;
+                fp.straggler_depth[inst] == 1
+            }
+        };
+        // The failure schedules its own recovery — scripted and
+        // stochastic windows behave identically once open.
+        self.events.push(t + down_s, Ev::InstanceUp { kind, inst, stochastic });
+        if first {
+            match kind {
+                FaultKind::PrefillCrash => self.crash_prefill(t, inst),
+                FaultKind::DecodeCrash => self.crash_decode(t, inst),
+                FaultKind::Straggler => {
+                    let factor =
+                        self.fault.as_ref().expect("fault handler").cfg.straggler_factor;
+                    self.costs.set_executor_slowdown(inst, factor);
+                }
+            }
+        }
+    }
+
+    fn on_instance_up(&mut self, t: f64, kind: FaultKind, inst: usize, stochastic: bool) {
+        let Some(fp) = self.fault.as_mut() else { return };
+        fp.active = fp.active.saturating_sub(1);
+        if fp.active == 0 {
+            if let Some(since) = fp.degraded_since.take() {
+                fp.degraded_time_s += t - since;
+            }
+        }
+        let depth = match kind {
+            FaultKind::PrefillCrash => {
+                fp.prefill_down[inst] = fp.prefill_down[inst].saturating_sub(1);
+                fp.prefill_down[inst]
+            }
+            FaultKind::DecodeCrash => {
+                fp.decode_down[inst] = fp.decode_down[inst].saturating_sub(1);
+                fp.decode_down[inst]
+            }
+            FaultKind::Straggler => {
+                fp.straggler_depth[inst] = fp.straggler_depth[inst].saturating_sub(1);
+                fp.straggler_depth[inst]
+            }
+        };
+        if depth == 0 && matches!(kind, FaultKind::Straggler) {
+            self.costs.clear_executor_slowdown(inst);
+        }
+        // A recovered crash needs no explicit action: dispatch, admission
+        // and step starts read the depth counters and the post-event
+        // scheduling pass restarts work at this very timestamp; the proxy
+        // re-admits the instance at the next heartbeat.
+        if stochastic && self.finished_total < self.reqs.len() {
+            // The stochastic chain reschedules only off its own recovery
+            // (never off scripted windows), and stops once the run has
+            // drained — otherwise an MTBF chain would tick forever.
+            let (mtbf, mttr) = {
+                let fc = &self.fault.as_ref().expect("fault handler").cfg;
+                match kind {
+                    FaultKind::PrefillCrash => (fc.prefill_mtbf_s, fc.prefill_mttr_s),
+                    FaultKind::DecodeCrash => (fc.decode_mtbf_s, fc.decode_mttr_s),
+                    FaultKind::Straggler => (None, 0.0),
+                }
+            };
+            if let Some(mtbf) = mtbf {
+                let rng = &mut self.fault.as_mut().expect("fault handler").rng;
+                let ttf = rng.exp(1.0 / mtbf);
+                let down_s = rng.exp(1.0 / mttr);
+                self.events
+                    .push(t + ttf, Ev::InstanceDown { kind, inst, down_s, stochastic: true });
+            }
+        }
+    }
+
+    /// One failed transfer attempt's backoff expired: redraw. Gives up
+    /// into recompute once `transfer_max_retries` retries have failed.
+    fn on_transfer_retry(&mut self, t: f64, id: RequestId, epoch: u32) {
+        if epoch != self.reqs[id as usize].epoch {
+            return; // stale: the request rolled back (e.g. its endpoint crashed)
+        }
+        let phase = self.reqs[id as usize].phase;
+        debug_assert!(matches!(phase, Phase::Transferring | Phase::Migrating));
+        let max_retries = self.fault.as_ref().map_or(0, |f| f.cfg.transfer_max_retries);
+        let attempts = {
+            let sr = &mut self.reqs[id as usize];
+            sr.transfer_attempts += 1;
+            sr.transfer_attempts
+        };
+        if u64::from(attempts) > max_retries {
+            // Retries exhausted: the link is treated as lost and the
+            // request falls back to local recompute
+            // (`RecoveryAction::RecomputeLocal`).
+            self.recompute_request(t, id);
+            return;
+        }
+        if let Some(fp) = self.fault.as_mut() {
+            fp.transfer_retries += 1;
+        }
+        if self.transfer_fails() {
+            let delay = self.transfer_backoff(attempts);
+            self.events.push(t + delay, Ev::TransferRetry { id, epoch });
+        } else {
+            let xfer = self.costs.kv_transfer_time(self.reqs[id as usize].kv_tokens as u64);
+            match phase {
+                Phase::Transferring => {
+                    self.events.push(t + xfer, Ev::TransferDone { id, epoch });
+                }
+                Phase::Migrating => {
+                    self.events.push(t + xfer, Ev::MigrationDone { id, epoch });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Heartbeat: reconcile the proxy's health view with the sim's
+    /// down-state (so detection latency is bounded by `heartbeat_s`, and
+    /// `OB_mem` rescales at observation time, not crash time), then sample
+    /// the health timeline.
+    fn on_health_tick(&mut self, t: f64) {
+        if self.fault.is_none() {
+            return;
+        }
+        let (n_p, n_d) = (self.prefill.len(), self.decode.len());
+        let mut healthy = 0usize;
+        for pi in 0..n_p {
+            let up = !self.prefill_is_down(pi);
+            self.proxy.set_prefill_health(pi, up);
+            healthy += usize::from(up);
+        }
+        for d in 0..n_d {
+            let up = !self.decode_is_down(d);
+            self.proxy.set_decode_health(d, up);
+            healthy += usize::from(up);
+        }
+        let frac = healthy as f64 / (n_p + n_d) as f64;
+        let fp = self.fault.as_mut().expect("checked above");
+        fp.health_timeline.push(t, frac);
+        let hb = fp.cfg.heartbeat_s;
+        if self.finished_total < self.reqs.len() {
+            self.events.push_in(hb, Ev::HealthTick);
+        }
+    }
+
+    /// A prefill instance died: its prefill pipeline and its colocated
+    /// attention executor's HBM vanish together, so every request with KV
+    /// or in-flight work there rolls back through the recompute path —
+    /// including offloaded *decode* requests this instance never admitted,
+    /// the failure domain attention disaggregation creates.
+    fn crash_prefill(&mut self, t: f64, pi: usize) {
+        // The mid-flight batch died with the instance (its queued
+        // `PrefillDone` events go stale via the victims' epoch bumps).
+        // Busy seconds pre-credited at dispatch stay credited: crashed
+        // work still occupied the hardware.
+        self.prefill[pi].busy_until = t;
+        let mut victims: Vec<RequestId> = Vec::new(); // cold path; crashes are rare
+        for (i, sr) in self.reqs.iter().enumerate() {
+            let hit = match sr.phase {
+                // Prefilling there, transferring out of it, or migrating
+                // KV in either direction against its executor pool.
+                Phase::Prefilling | Phase::Transferring | Phase::Migrating => {
+                    sr.prefill_instance == pi
+                }
+                // The disaggregation domain: decoding elsewhere with
+                // attention KV resident in this instance's executor HBM.
+                Phase::Decoding => sr.offloaded && sr.prefill_instance == pi,
+                Phase::WaitingDispatch | Phase::Done => false,
+            };
+            if hit {
+                victims.push(i as RequestId);
+            }
+        }
+        for id in victims {
+            self.recompute_request(t, id);
+        }
+        debug_assert_eq!(
+            self.prefill[pi].executor_kv_tokens, 0,
+            "prefill crash must clear executor residency"
+        );
+        debug_assert_eq!(
+            self.prefill[pi].executor_reserved, 0,
+            "prefill crash must clear executor reservations"
+        );
+    }
+
+    /// A decode instance died: its KV pool contents and in-flight step
+    /// are lost. Local victims roll back through recompute. Offloaded
+    /// victims' KV lives in executor HBM and survives the crash — in
+    /// health-aware mode they re-route to a surviving decode instance
+    /// with residency intact (the `RecoveryAction::KeepLocal` analogue);
+    /// the naive baseline recomputes them too.
+    fn crash_decode(&mut self, t: f64, d: usize) {
+        // Invalidate the in-flight step (its queued end-event must not
+        // grant tokens for a batch that no longer exists).
+        self.decode[d].step_epoch = self.decode[d].step_epoch.wrapping_add(1);
+        self.decode[d].step_in_flight = false;
+        let health_aware = self.fault.as_ref().map_or(false, |f| f.cfg.health_aware);
+        let mut victims: Vec<RequestId> = Vec::new(); // cold path
+        for (i, sr) in self.reqs.iter().enumerate() {
+            let hit = match sr.phase {
+                // Running or waiting here, or KV in flight toward/against
+                // this instance's pool.
+                Phase::Decoding | Phase::Transferring | Phase::Migrating => {
+                    sr.decode_instance == d
+                }
+                Phase::WaitingDispatch | Phase::Prefilling | Phase::Done => false,
+            };
+            if hit {
+                victims.push(i as RequestId);
+            }
+        }
+        for id in victims {
+            let sr = &self.reqs[id as usize];
+            if health_aware && sr.phase == Phase::Decoding && sr.offloaded {
+                self.reroute_offloaded_victim(t, d, id);
+            } else {
+                self.recompute_request(t, id);
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            let dec = &self.decode[d];
+            assert!(dec.running.is_empty(), "decode crash must empty the batch");
+            assert_eq!(dec.kv.resident_tokens(), 0, "decode crash must clear the pool");
+            // With a single decode instance, re-routed offloaded victims
+            // land back in this queue and stall until recovery.
+            for &w in &dec.waiting {
+                assert!(
+                    self.reqs[w as usize].offloaded,
+                    "only re-routed offloaded victims may remain queued"
+                );
+            }
+        }
+    }
+
+    /// Decode-crash recovery for an offloaded victim: its attention KV is
+    /// resident in a live executor pool, so nothing re-prefills — the
+    /// proxy moves it to a surviving decode instance and it rejoins that
+    /// instance's waiting queue, phase unchanged.
+    fn reroute_offloaded_victim(&mut self, t: f64, from: usize, id: RequestId) {
+        let _ = t;
+        if self.reqs[id as usize].run_slot != NO_SLOT {
+            Self::agg_sub(&mut self.decode[from], &self.reqs[id as usize]);
+            self.remove_from_running(from, id);
+        } else {
+            let dec = &mut self.decode[from];
+            if let Some(pos) = dec.waiting.iter().position(|&w| w == id) {
+                dec.waiting.remove(pos);
+            }
+        }
+        debug_assert!(self.reqs[id as usize].offloaded);
+        let kv = self.reqs[id as usize].kv_tokens;
+        let to = self.proxy.reroute_decode(from, &self.reqs[id as usize].req, kv, true);
+        self.reqs[id as usize].decode_instance = to;
+        self.decode[to].waiting.push_back(id);
+        if let Some(fp) = self.fault.as_mut() {
+            fp.requests_recovered += 1;
+        }
+    }
+
+    /// Roll `id` back to `WaitingDispatch` and re-admit it through the
+    /// recompute path — the fault plane's `RecoveryAction::RecomputeLocal`
+    /// at sim scale. Mirrors [`ClusterSim::preempt`]'s rollback shape
+    /// (including `Proxy::route_resumed`'s resumed-length accounting) but
+    /// must additionally release holdings for *every* phase a fault can
+    /// strike in, and counts under the recovery metrics rather than the
+    /// preemption counters.
+    fn recompute_request(&mut self, t: f64, id: RequestId) {
+        let _ = t;
+        let (phase, offloaded, pi, d, kv, run_slot) = {
+            let sr = &self.reqs[id as usize];
+            (
+                sr.phase,
+                sr.offloaded,
+                sr.prefill_instance,
+                sr.decode_instance,
+                sr.kv_tokens,
+                sr.run_slot,
+            )
+        };
+        match phase {
+            Phase::Prefilling => {
+                // The dispatch reservation rolls back with the dead batch.
+                let need = self.reqs[id as usize].effective_prompt;
+                if offloaded {
+                    let p = &mut self.prefill[pi];
+                    p.executor_reserved = p.executor_reserved.saturating_sub(need);
+                } else {
+                    let dec = &mut self.decode[d];
+                    dec.reserved = dec.reserved.saturating_sub(need);
+                }
+            }
+            Phase::Transferring => {
+                // Local-only phase: the decode-side reservation (taken at
+                // dispatch, `== kv_tokens` after prefill) rolls back.
+                let dec = &mut self.decode[d];
+                dec.reserved = dec.reserved.saturating_sub(kv);
+            }
+            Phase::Decoding => {
+                if run_slot != NO_SLOT {
+                    Self::agg_sub(&mut self.decode[d], &self.reqs[id as usize]);
+                    self.remove_from_running(d, id);
+                } else {
+                    let dec = &mut self.decode[d];
+                    if let Some(pos) = dec.waiting.iter().position(|&w| w == id) {
+                        dec.waiting.remove(pos);
+                    }
+                }
+                if offloaded {
+                    let p = &mut self.prefill[pi];
+                    p.executor_kv_tokens = p.executor_kv_tokens.saturating_sub(kv);
+                } else if run_slot != NO_SLOT {
+                    let _ = self.decode[d].kv.release(id);
+                } else {
+                    // Waiting local: the transfer landed but admission
+                    // never converted the reservation to block residency.
+                    let dec = &mut self.decode[d];
+                    dec.reserved = dec.reserved.saturating_sub(kv);
+                }
+            }
+            Phase::Migrating => {
+                if offloaded {
+                    // To-offload: the executor-side reservation rolls back
+                    // (the decode pool already released at migration start).
+                    let p = &mut self.prefill[pi];
+                    p.executor_reserved = p.executor_reserved.saturating_sub(kv);
+                } else {
+                    // To-local: the decode-side reservation rolls back (the
+                    // executor pool already released at migration start).
+                    let dec = &mut self.decode[d];
+                    dec.reserved = dec.reserved.saturating_sub(kv);
+                }
+            }
+            Phase::WaitingDispatch | Phase::Done => return,
+        }
+        self.proxy.on_preempted(d, id);
+        {
+            let sr = &mut self.reqs[id as usize];
+            // The epoch bump strands every event still queued for the old
+            // incarnation (PrefillDone / TransferDone / MigrationDone /
+            // TransferRetry).
+            sr.epoch = sr.epoch.wrapping_add(1);
+            sr.kv_tokens = 0;
+            sr.transfer_attempts = 0;
+            sr.effective_prompt = sr.req.prompt_len + sr.generated;
+            sr.phase = Phase::WaitingDispatch;
+        }
+        let eff = self.reqs[id as usize].effective_prompt;
+        let route = self.proxy.route_resumed(&self.reqs[id as usize].req, eff);
+        {
+            let sr = &mut self.reqs[id as usize];
+            sr.offloaded = route.offload.offloaded();
+            sr.prefill_instance = route.prefill_instance;
+            sr.decode_instance = route.decode_instance;
+        }
+        self.prefill[route.prefill_instance].queue.push_back(id);
+        if let Some(fp) = self.fault.as_mut() {
+            fp.requests_recovered += 1;
+            fp.recompute_tokens_replayed += eff as u64;
+        }
     }
 
     // ----- actions ----------------------------------------------------------
@@ -1349,6 +2022,11 @@ impl ClusterSim {
         Self::agg_sub(&mut self.decode[inst], &self.reqs[id as usize]);
         let sr = &mut self.reqs[id as usize];
         sr.preemptions += 1;
+        // Strand any queued events for the preempted incarnation (none
+        // exist on this path today — preemption only hits running decode
+        // rows — but the rollback invariant is uniform with the fault
+        // plane's: a rollback always bumps the epoch).
+        sr.epoch = sr.epoch.wrapping_add(1);
         if sr.offloaded {
             self.prefill[sr.prefill_instance].executor_kv_tokens =
                 self.prefill[sr.prefill_instance].executor_kv_tokens.saturating_sub(sr.kv_tokens);
@@ -1384,6 +2062,9 @@ impl ClusterSim {
         for pi in 0..self.prefill.len() {
             if self.prefill[pi].busy_until > t {
                 continue;
+            }
+            if self.prefill_is_down(pi) {
+                continue; // crashed: queued prompts stall until recovery
             }
             let budget = self.cfg.serving.max_prefill_tokens;
             batch.clear();
@@ -1432,7 +2113,8 @@ impl ClusterSim {
             self.duty[pi].record_prefill(t, exec_time);
             self.prefill[pi].busy_until = t + exec_time;
             for &id in &batch {
-                self.events.push(t + exec_time, Ev::PrefillDone { inst: pi, id });
+                let epoch = self.reqs[id as usize].epoch;
+                self.events.push(t + exec_time, Ev::PrefillDone { inst: pi, id, epoch });
             }
         }
         batch.clear();
@@ -1442,6 +2124,9 @@ impl ClusterSim {
     /// Admit waiting requests into the decode batch (KV already resident or
     /// reserved; admission consumes the reservation for local requests).
     fn admit_waiters(&mut self, t: f64, d: usize) {
+        if self.decode_is_down(d) {
+            return; // crashed: waiters (re-routed victims included) stall
+        }
         let mut admitted = false;
         while let Some(&id) = self.decode[d].waiting.front() {
             if self.decode[d].running.len() >= self.cfg.serving.max_batch {
@@ -1524,6 +2209,9 @@ impl ClusterSim {
     fn maybe_start_step(&mut self, t: f64, d: usize, sole_starter: bool) {
         if self.decode[d].step_in_flight || self.decode[d].running.is_empty() {
             return;
+        }
+        if self.decode_is_down(d) {
+            return; // crashed: no steps until recovery
         }
         #[cfg(debug_assertions)]
         self.assert_aggregates(d);
@@ -1614,7 +2302,8 @@ impl ClusterSim {
                 // with a queued event — the per-step handler owns all of
                 // that, unchanged.
                 self.decode[d].step_in_flight = true;
-                self.events.push(t_end, Ev::DecodeStepEnd { inst: d });
+                let epoch = self.decode[d].step_epoch;
+                self.events.push(t_end, Ev::DecodeStepEnd { inst: d, epoch });
             }
         }
         if k > 0 {
@@ -1875,6 +2564,32 @@ impl ClusterSim {
             .map(|i| self.proxy.metadata(i).total_count())
             .sum();
 
+        // Fault plane: close a still-open degraded window at sim end so
+        // `degraded_time_s` covers crashes the run never recovered from.
+        let (
+            faults_injected,
+            requests_recovered,
+            recompute_tokens_replayed,
+            transfer_retries,
+            degraded_time_s,
+            health_timeline,
+        ) = match self.fault.take() {
+            Some(mut fp) => {
+                if let Some(since) = fp.degraded_since.take() {
+                    fp.degraded_time_s += end - since;
+                }
+                (
+                    fp.faults_injected,
+                    fp.requests_recovered,
+                    fp.recompute_tokens_replayed,
+                    fp.transfer_retries,
+                    fp.degraded_time_s,
+                    fp.health_timeline,
+                )
+            }
+            None => (0, 0, 0, 0, 0.0, Timeline::new()),
+        };
+
         SimReport {
             ttft: self.metrics.ttft_stats(),
             tpot: self.metrics.tpot_stats(),
@@ -1923,6 +2638,12 @@ impl ClusterSim {
             b_tpot_observations: self.b_tpot_est.as_ref().map_or(0, |e| e.observations()),
             decision_counts: self.proxy.decision_counts,
             decision_counts_rerouted: self.proxy.decision_counts_rerouted,
+            faults_injected,
+            requests_recovered,
+            recompute_tokens_replayed,
+            transfer_retries,
+            degraded_time_s,
+            health_timeline,
         }
     }
 }
@@ -1940,6 +2661,14 @@ mod tests {
             SimConfig::baseline(model, WorkloadKind::ShareGpt, rate)
         };
         cfg.duration_s = duration;
+        ClusterSim::new(cfg).run()
+    }
+
+    fn quick_fault(rate: f64, duration: f64, fc: crate::config::FaultConfig) -> SimReport {
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = duration;
+        cfg.serving.fault = Some(fc);
         ClusterSim::new(cfg).run()
     }
 
@@ -2219,5 +2948,132 @@ mod tests {
         assert!(r.finished > 0);
         assert!(r.tokens_conserved);
         assert_eq!(r.preemptions, r.req_preemptions_total);
+    }
+
+    #[test]
+    fn fault_none_reports_zero_fault_metrics() {
+        let r = quick(true, 1.0, 30.0);
+        assert_eq!(r.faults_injected, 0);
+        assert_eq!(r.requests_recovered, 0);
+        assert_eq!(r.recompute_tokens_replayed, 0);
+        assert_eq!(r.transfer_retries, 0);
+        assert_eq!(r.degraded_time_s, 0.0);
+        assert!(r.health_timeline.is_empty());
+    }
+
+    #[test]
+    fn scripted_prefill_crash_recovers_every_request() {
+        use crate::config::{FaultConfig, FaultKind, ScriptedFault};
+        // Crash prefill 0 mid-run with a survivor available: the offloaded
+        // residents it carried must re-prefill via the recompute path and
+        // the run must still drain completely with exact token accounting.
+        let fc = FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::PrefillCrash,
+                instance: 0,
+                at_s: 10.0,
+                down_s: 8.0,
+            }],
+            ..FaultConfig::default()
+        };
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 1.0);
+        cfg.duration_s = 40.0;
+        cfg.cluster.n_prefill = 2;
+        cfg.serving.fault = Some(fc);
+        let r = ClusterSim::new(cfg).run();
+        assert_eq!(r.finished, r.arrived, "no request may be lost to a crash");
+        assert!(r.tokens_conserved);
+        assert_eq!(r.faults_injected, 1);
+        assert!(r.degraded_time_s >= 8.0 - 1e-9, "window spans the scripted down_s");
+        assert!(!r.health_timeline.is_empty());
+        let dipped = r.health_timeline.min_value().unwrap_or(1.0) < 1.0;
+        assert!(dipped, "heartbeats must observe the crash window");
+        // Crash recoveries are NOT preemptions: the rerouted decision sum
+        // covers preemptions plus recompute recoveries.
+        assert_eq!(r.preemptions, r.req_preemptions_total);
+        let re = r.decision_counts_rerouted;
+        assert!(re.0 + re.1 + re.2 >= r.preemptions);
+    }
+
+    #[test]
+    fn scripted_decode_crash_drains_with_two_instances() {
+        use crate::config::{FaultConfig, FaultKind, ScriptedFault};
+        let fc = FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::DecodeCrash,
+                instance: 0,
+                at_s: 10.0,
+                down_s: 6.0,
+            }],
+            ..FaultConfig::default()
+        };
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 1.0);
+        cfg.duration_s = 40.0;
+        cfg.cluster.n_decode = 2;
+        cfg.serving.fault = Some(fc);
+        let r = ClusterSim::new(cfg).run();
+        assert_eq!(r.finished, r.arrived, "survivor must absorb the victims");
+        assert!(r.tokens_conserved);
+        assert_eq!(r.faults_injected, 1);
+        assert!(r.requests_recovered > 0, "the crash must have struck live work");
+    }
+
+    #[test]
+    fn transfer_failures_retry_and_still_drain() {
+        use crate::config::FaultConfig;
+        let fc = FaultConfig {
+            transfer_fail_prob: 0.5,
+            transfer_max_retries: 20,
+            ..FaultConfig::default()
+        };
+        let r = quick_fault(1.0, 40.0, fc);
+        assert_eq!(r.finished, r.arrived);
+        assert!(r.tokens_conserved);
+        assert!(r.transfer_retries > 0, "p=0.5 over a 40 s run must retry");
+        assert_eq!(r.faults_injected, 0, "link flaps are not instance faults");
+    }
+
+    #[test]
+    fn straggler_window_degrades_but_conserves() {
+        use crate::config::{FaultConfig, FaultKind, ScriptedFault};
+        let fc = FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::Straggler,
+                instance: 0,
+                at_s: 5.0,
+                down_s: 10.0,
+            }],
+            straggler_factor: 4.0,
+            ..FaultConfig::default()
+        };
+        let r = quick_fault(2.0, 40.0, fc);
+        assert!(r.finished > 0);
+        assert!(r.tokens_conserved);
+        assert_eq!(r.faults_injected, 1);
+        assert!((r.degraded_time_s - 10.0).abs() < 1e-6);
+        assert_eq!(r.requests_recovered, 0, "a straggler slows, it does not kill");
+    }
+
+    #[test]
+    fn stochastic_fault_schedule_is_seed_deterministic() {
+        use crate::config::FaultConfig;
+        let fc = FaultConfig {
+            prefill_mtbf_s: Some(15.0),
+            prefill_mttr_s: 3.0,
+            decode_mtbf_s: Some(20.0),
+            decode_mttr_s: 3.0,
+            ..FaultConfig::default()
+        };
+        let a = quick_fault(1.0, 40.0, fc.clone());
+        let b = quick_fault(1.0, 40.0, fc);
+        assert_eq!(a.faults_injected, b.faults_injected);
+        assert_eq!(a.requests_recovered, b.requests_recovered);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!((a.degraded_time_s - b.degraded_time_s).abs() < 1e-12);
+        assert!(a.faults_injected > 0, "MTBF 15 s over 40 s must fire");
+        assert_eq!(a.finished, a.arrived, "no request may be lost");
+        assert!(a.tokens_conserved);
     }
 }

@@ -1,4 +1,12 @@
 //! Typed discrete-event queue (min-heap over f64 timestamps).
+//!
+//! Everything the simulator does flows through this queue — including the
+//! fault plane's crash/recovery/retry/heartbeat events, which are ordinary
+//! entries with no special priority: insertion-order tie-breaking makes a
+//! crash landing at the same instant as a step end or transfer resolve in
+//! one deterministic order, and the decode leap engine's strict
+//! before-[`EventQueue::peek_time`] horizon fences leaps off upcoming
+//! faults with no extra machinery.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -224,6 +224,34 @@ fn executor_failure_mid_flight_recovers() {
 }
 
 #[test]
+fn executor_failure_arm_recomputes_offloaded_requests() {
+    // The `RecoveryPlan` arm proper (engine/recovery.rs): the executor
+    // dies *between* decode steps while offloaded KV is resident, so the
+    // next step fails mid-flight. The server must classify the batch,
+    // re-prefill each offloaded request locally from prompt + the tokens
+    // generated so far, count them in `recoveries`, finish the run in
+    // degraded local-only mode — and still emit the oracle's exact
+    // streams, because recompute-prefill of the extended prompt is
+    // bit-identical to the decode step it replaces.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cases = reference_cases();
+    let reqs = requests_from_cases(&cases);
+    let mut server = Server::start(&artifact_dir(), ServingConfig::default()).unwrap();
+    server.fail_executor_after_steps = Some(2);
+    let report = server.run_requests(&reqs, Some(true)).unwrap();
+    assert!(!server.executor_alive(), "injected failure must stick");
+    assert!(
+        server.recoveries > 0,
+        "the failure arm must have recomputed at least one offloaded request"
+    );
+    assert_eq!(report.offloaded_requests, reqs.len(), "all were admitted offloaded");
+    check_against_reference(&cases, &report.completions);
+}
+
+#[test]
 fn kv_capacity_limits_respected() {
     // Small KV budgets: offloaded requests overflow the executor pool and
     // fall back to local; the local pool serializes admissions. Everything

@@ -1,0 +1,395 @@
+//! Fault-injection plane (ISSUE 6) — crashes, retries, degradation.
+//!
+//! Four contracts pinned here:
+//!
+//! 1. **No request is lost.** Any fault schedule — scripted crashes,
+//!    stochastic MTBF/MTTR chains, flaky transfers, stragglers — must
+//!    still drain every request with exact token accounting (the
+//!    recompute/re-route recovery paths, plus the debug-build proxy
+//!    `used_token` vs sim `kv_tokens` lock-step checks armed in every
+//!    run below).
+//! 2. **Leap bit-identity with faults enabled.** Faults are ordinary
+//!    queued events, so PR 5's strict next-event horizon must fence
+//!    them with no new machinery: a leap run's `SimReport` matches the
+//!    `ServingConfig::no_leap` reference bit for bit on everything but
+//!    `events_processed`, across the fault scenario matrix. CI re-runs
+//!    this suite under `ADRENALINE_NO_LEAP=1` so both modes stay green.
+//! 3. **A no-op `FaultConfig` changes observation, not physics.** Arming
+//!    the plane with nothing to inject adds heartbeat events and the
+//!    health timeline — every step, token, preemption, migration and
+//!    routing decision stays identical to `fault: None`.
+//! 4. **Graceful beats naive.** Health-aware degradation (mask crashed
+//!    instances out of routing, keep executor-resident KV on a decode
+//!    crash) must dominate the naive baseline (`health_aware: false`)
+//!    on crash traces — higher drain throughput, less recompute replay.
+
+use adrenaline::config::{FaultConfig, FaultKind, ModelSpec, ScriptedFault};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{parallel_map, ClusterSim, SimConfig, SimReport};
+use adrenaline::workload::WorkloadKind;
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Run `cfg` with leaping on and off; returns (leap, reference).
+fn leap_pair(cfg: &SimConfig) -> (SimReport, SimReport) {
+    let mut on = cfg.clone();
+    on.serving.no_leap = false;
+    let mut off = cfg.clone();
+    off.serving.no_leap = true;
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { on.clone() } else { off.clone() }).run()
+    });
+    let off = runs.pop().expect("two runs");
+    let on = runs.pop().expect("two runs");
+    (on, off)
+}
+
+/// Everything in the report except `events_processed` must match bit for
+/// bit between the leap run `a` and the per-step reference `b` — the
+/// step_leap.rs contract, fault fields included.
+fn assert_bit_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.req_preemptions_total, b.req_preemptions_total);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.ttft_slo_attainment, b.ttft_slo_attainment));
+    assert!(feq(a.tpot_slo_attainment, b.tpot_slo_attainment));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("prefill_occupancy", &a.prefill_occupancy, &b.prefill_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_eq!(a.metadata_residual, b.metadata_residual);
+    assert_eq!(a.decision_counts, b.decision_counts);
+    assert_eq!(a.decision_counts_rerouted, b.decision_counts_rerouted);
+    // Fault plane: schedules, recoveries, retry chains and health
+    // sampling must replay identically through leaps.
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert_eq!(a.recompute_tokens_replayed, b.recompute_tokens_replayed);
+    assert_eq!(a.transfer_retries, b.transfer_retries);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+    assert!(
+        a.events_processed <= b.events_processed,
+        "leaping must never add events: {} vs {}",
+        a.events_processed,
+        b.events_processed
+    );
+}
+
+fn base_cfg(rate: f64, duration: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = duration;
+    cfg
+}
+
+#[test]
+fn scripted_crash_matrix_leap_bit_identity() {
+    // All three fault kinds in one run: a prefill crash (offloaded
+    // residents recompute), a decode crash (offloaded victims re-route),
+    // and a straggler window (slowdown inside leaps) — every recovery
+    // path exercised under leaping.
+    let mut cfg = base_cfg(4.0, 50.0);
+    cfg.cluster.n_prefill = 2;
+    cfg.cluster.n_decode = 2;
+    cfg.serving.fault = Some(FaultConfig {
+        script: vec![
+            ScriptedFault { kind: FaultKind::PrefillCrash, instance: 0, at_s: 12.0, down_s: 6.0 },
+            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 5.0 },
+            ScriptedFault { kind: FaultKind::Straggler, instance: 1, at_s: 30.0, down_s: 8.0 },
+        ],
+        ..FaultConfig::default()
+    });
+    let (on, off) = leap_pair(&cfg);
+    assert_eq!(on.faults_injected, 3);
+    assert_eq!(on.finished, on.arrived, "no request may be lost");
+    assert!(on.tokens_conserved);
+    assert!(on.degraded_time_s > 0.0);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn stochastic_mtbf_leap_bit_identity() {
+    // Seeded MTBF/MTTR chains on both instance classes: failures keep
+    // firing for the whole run and every schedule draw must replay
+    // identically whether or not decode steps leap between them.
+    let mut cfg = base_cfg(2.0, 45.0);
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.fault = Some(FaultConfig {
+        prefill_mtbf_s: Some(12.0),
+        prefill_mttr_s: 2.0,
+        decode_mtbf_s: Some(18.0),
+        decode_mttr_s: 2.0,
+        ..FaultConfig::default()
+    });
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.faults_injected > 0, "MTBF 12 s over 45 s must fire");
+    assert_eq!(on.finished, on.arrived, "no request may be lost");
+    assert!(on.tokens_conserved);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn transfer_failure_leap_bit_identity() {
+    // Flaky KV links: retry chains (exponential backoff) interleave with
+    // leaps, and exhausted retries fall back to recompute.
+    let mut cfg = base_cfg(2.0, 40.0);
+    cfg.serving.fault = Some(FaultConfig {
+        transfer_fail_prob: 0.4,
+        transfer_max_retries: 2,
+        transfer_backoff_s: 0.02,
+        ..FaultConfig::default()
+    });
+    let (on, off) = leap_pair(&cfg);
+    assert!(on.transfer_retries > 0, "p=0.4 over 40 s must retry");
+    assert_eq!(on.finished, on.arrived, "no request may be lost");
+    assert!(on.tokens_conserved);
+    assert_bit_identical(&on, &off);
+}
+
+#[test]
+fn noop_fault_config_changes_observation_not_physics() {
+    // An armed-but-empty fault plane adds heartbeat events and the
+    // health timeline; everything the requests experience is identical.
+    // (Event-clock-derived readouts — `sim_end_s`, the report-time
+    // occupancy closing sample — may trail by up to one heartbeat, since
+    // the final tick pops after the last finish.)
+    let plain_cfg = base_cfg(2.0, 40.0);
+    let mut armed_cfg = plain_cfg.clone();
+    armed_cfg.serving.fault = Some(FaultConfig::default());
+    let plain = ClusterSim::new(plain_cfg).run();
+    let armed = ClusterSim::new(armed_cfg).run();
+
+    assert_eq!(armed.faults_injected, 0);
+    assert_eq!(armed.requests_recovered, 0);
+    assert_eq!(armed.recompute_tokens_replayed, 0);
+    assert_eq!(armed.transfer_retries, 0);
+    assert!(feq(armed.degraded_time_s, 0.0));
+
+    assert_eq!(armed.arrived, plain.arrived);
+    assert_eq!(armed.finished, plain.finished);
+    assert_eq!(armed.preemptions, plain.preemptions);
+    assert_eq!(armed.req_preemptions_total, plain.req_preemptions_total);
+    assert_eq!(armed.tokens_conserved, plain.tokens_conserved);
+    assert_eq!(armed.steps_simulated, plain.steps_simulated);
+    assert!(feq(armed.offloaded_fraction, plain.offloaded_fraction));
+    assert_stats_eq("ttft", &armed.ttft, &plain.ttft);
+    assert_stats_eq("tpot", &armed.tpot, &plain.tpot);
+    assert_timeline_eq("decode_occupancy", &armed.decode_occupancy, &plain.decode_occupancy);
+    assert_timeline_eq("batch_size", &armed.batch_size, &plain.batch_size);
+    assert_eq!(armed.migrations_total, plain.migrations_total);
+    assert_eq!(armed.decision_counts, plain.decision_counts);
+    assert_eq!(armed.decision_counts_rerouted, plain.decision_counts_rerouted);
+    assert_eq!(armed.metadata_residual, plain.metadata_residual);
+
+    // The additions: heartbeat events and the (all-healthy) timeline.
+    assert!(armed.events_processed > plain.events_processed);
+    assert!(plain.health_timeline.is_empty());
+    assert!(!armed.health_timeline.is_empty());
+    assert!(feq(armed.health_timeline.min_value().expect("sampled"), 1.0));
+    let hb = FaultConfig::default().heartbeat_s;
+    assert!(armed.sim_end_s >= plain.sim_end_s - 1e-9);
+    assert!(
+        armed.sim_end_s <= plain.sim_end_s + hb + 1e-9,
+        "trailing heartbeat bounded by one interval: {} vs {}",
+        armed.sim_end_s,
+        plain.sim_end_s
+    );
+}
+
+#[test]
+fn graceful_degradation_beats_naive_on_prefill_crash() {
+    // Two prefill instances, one crashes across the trace's tail. Naive
+    // keeps round-robining arrivals onto the corpse — that cohort stalls
+    // until recovery at t=65, well past the last arrival, and stretches
+    // the drain. Graceful masks the instance at the next heartbeat and
+    // pushes everything through the survivor. Same work, same physics —
+    // graceful must drain at least as fast.
+    let mut cfg = base_cfg(6.0, 60.0);
+    cfg.cluster.n_prefill = 2;
+    let script = vec![ScriptedFault {
+        kind: FaultKind::PrefillCrash,
+        instance: 0,
+        at_s: 45.0,
+        down_s: 20.0,
+    }];
+    let mut g_cfg = cfg.clone();
+    g_cfg.serving.fault =
+        Some(FaultConfig { script: clone_script(&script), health_aware: true, ..FaultConfig::default() });
+    let mut n_cfg = cfg;
+    n_cfg.serving.fault =
+        Some(FaultConfig { script, health_aware: false, ..FaultConfig::default() });
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { g_cfg.clone() } else { n_cfg.clone() }).run()
+    });
+    let naive = runs.pop().expect("two runs");
+    let graceful = runs.pop().expect("two runs");
+
+    assert_eq!(graceful.finished, graceful.arrived, "graceful must drain");
+    assert_eq!(naive.finished, naive.arrived, "naive stalls but must not lose");
+    assert!(graceful.faults_injected == 1 && naive.faults_injected == 1);
+    // Requests-per-second over the drain: the throughput pin (window
+    // detection is not comparable across such different degradation
+    // shapes, drain rate is).
+    let g_rate = graceful.finished as f64 / graceful.sim_end_s;
+    let n_rate = naive.finished as f64 / naive.sim_end_s;
+    assert!(
+        g_rate >= n_rate,
+        "graceful must sustain >= naive throughput: {g_rate} vs {n_rate} req/s"
+    );
+    // The stalled-on-the-corpse cohort shows up in naive's tail latency.
+    let g_ttft = graceful.ttft.as_ref().expect("finished requests").p99;
+    let n_ttft = naive.ttft.as_ref().expect("finished requests").p99;
+    assert!(
+        g_ttft <= n_ttft,
+        "graceful must not worsen tail TTFT: {g_ttft} vs {n_ttft}"
+    );
+}
+
+fn clone_script(s: &[ScriptedFault]) -> Vec<ScriptedFault> {
+    s.to_vec()
+}
+
+#[test]
+fn graceful_decode_crash_keeps_offloaded_kv() {
+    // Offloaded victims' KV lives in executor HBM and survives a decode
+    // crash: graceful re-routes them with residency intact, naive
+    // replays every victim from scratch.
+    let mut cfg = base_cfg(4.0, 50.0);
+    cfg.cluster.n_decode = 2;
+    let script = vec![ScriptedFault {
+        kind: FaultKind::DecodeCrash,
+        instance: 0,
+        at_s: 20.0,
+        down_s: 6.0,
+    }];
+    let mut g_cfg = cfg.clone();
+    g_cfg.serving.fault =
+        Some(FaultConfig { script: clone_script(&script), health_aware: true, ..FaultConfig::default() });
+    let mut n_cfg = cfg;
+    n_cfg.serving.fault =
+        Some(FaultConfig { script, health_aware: false, ..FaultConfig::default() });
+    let graceful = ClusterSim::new(g_cfg).run();
+    let naive = ClusterSim::new(n_cfg).run();
+
+    assert_eq!(graceful.finished, graceful.arrived);
+    assert_eq!(naive.finished, naive.arrived);
+    assert!(graceful.tokens_conserved && naive.tokens_conserved);
+    assert!(graceful.requests_recovered > 0, "the crash must strike live work");
+    assert!(
+        naive.recompute_tokens_replayed > 0,
+        "naive must replay its victims"
+    );
+    assert!(
+        graceful.recompute_tokens_replayed < naive.recompute_tokens_replayed,
+        "keeping executor-resident KV must save replay: {} vs {}",
+        graceful.recompute_tokens_replayed,
+        naive.recompute_tokens_replayed
+    );
+}
+
+#[test]
+fn fault_runs_are_deterministic() {
+    // Same seed, same schedule — stochastic chains, retry draws and
+    // recovery interleavings included.
+    let mut cfg = base_cfg(2.0, 35.0);
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.fault = Some(FaultConfig {
+        prefill_mtbf_s: Some(10.0),
+        prefill_mttr_s: 2.0,
+        transfer_fail_prob: 0.2,
+        ..FaultConfig::default()
+    });
+    let a = ClusterSim::new(cfg.clone()).run();
+    let b = ClusterSim::new(cfg).run();
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_bit_identical(&a, &b);
+}
+
+#[test]
+fn property_no_request_lost_under_random_fault_schedules() {
+    // Random topologies x random scripts x random stochastic chains x
+    // random link flakiness: every schedule must drain every request
+    // with exact token accounting (and, in debug builds, with the
+    // aggregate/proxy-token invariants armed on every step start).
+    adrenaline::util::prop::check("faults_no_request_lost", 5, |rng| {
+        let mut cfg = base_cfg(0.5 + rng.f64() * 1.5, 15.0 + rng.f64() * 10.0);
+        cfg.seed = rng.next_u64();
+        cfg.cluster.n_prefill = 1 + rng.range_usize(0, 2) as u32;
+        cfg.cluster.n_decode = 1 + rng.range_usize(0, 2) as u32;
+        let mut fc = FaultConfig::default();
+        for _ in 0..(1 + rng.range_usize(0, 3)) {
+            let kind = match rng.range_usize(0, 3) {
+                0 => FaultKind::PrefillCrash,
+                1 => FaultKind::DecodeCrash,
+                _ => FaultKind::Straggler,
+            };
+            let limit = match kind {
+                FaultKind::DecodeCrash => cfg.cluster.n_decode as usize,
+                _ => cfg.cluster.n_prefill as usize,
+            };
+            fc.script.push(ScriptedFault {
+                kind,
+                instance: rng.range_usize(0, limit),
+                at_s: 2.0 + rng.f64() * (cfg.duration_s - 4.0),
+                down_s: 1.0 + rng.f64() * 8.0,
+            });
+        }
+        if rng.range_usize(0, 2) == 0 {
+            fc.transfer_fail_prob = rng.f64() * 0.5;
+        }
+        if rng.range_usize(0, 2) == 0 {
+            fc.prefill_mtbf_s = Some(10.0 + rng.f64() * 20.0);
+            fc.prefill_mttr_s = 1.0 + rng.f64() * 3.0;
+        }
+        if rng.range_usize(0, 2) == 0 {
+            fc.decode_mtbf_s = Some(10.0 + rng.f64() * 20.0);
+            fc.decode_mttr_s = 1.0 + rng.f64() * 3.0;
+        }
+        fc.health_aware = rng.range_usize(0, 2) == 0;
+        cfg.serving.fault = Some(fc);
+        let r = ClusterSim::new(cfg).run();
+        assert_eq!(r.finished, r.arrived, "no request may be lost under faults");
+        assert!(r.tokens_conserved, "recovery must keep token accounting exact");
+    });
+}

@@ -126,6 +126,14 @@ fn assert_bit_identical(a: &SimReport, b: &SimReport) {
     assert_eq!(a.b_tpot_observations, b.b_tpot_observations);
     assert_eq!(a.decision_counts, b.decision_counts);
     assert_eq!(a.decision_counts_rerouted, b.decision_counts_rerouted);
+    // Fault-plane availability metrics (ISSUE 6): crash schedules, retry
+    // chains and health sampling must replay identically through leaps.
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert_eq!(a.recompute_tokens_replayed, b.recompute_tokens_replayed);
+    assert_eq!(a.transfer_retries, b.transfer_retries);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
     // The one allowed difference; equality is fine too (under
     // ADRENALINE_NO_LEAP=1 both runs take the reference path).
     assert!(
