@@ -1,0 +1,105 @@
+//! Within-run parallelism scaling (ISSUE 7): simulated decode steps per
+//! wall second as a function of the pricing worker count, on a fixed
+//! saturated 8-decode-instance scenario.
+//!
+//! One row per `ServingConfig::par_workers` setting in 1, 2, 4, 8
+//! (total pricing concurrency including the sim thread; 1 ≡ the inline
+//! `no_par` path). Every setting must simulate the identical step count
+//! — worker count picks concurrency, never results (the bit-identity
+//! contract is pinned by `rust/tests/par_run.rs`; this bench asserts the
+//! cheap scalar as a smoke check) — so steps/s compares cleanly across
+//! rows. Written to `BENCH_par.json` (override: env `BENCH_PAR_JSON`)
+//! and uploaded as a CI artifact so the scaling curve is tracked across
+//! PRs. Absolute speedups depend on the runner's core count (CI runners
+//! may cap the thread budget well below 8): the rows carry the measured
+//! budget context (`available_parallelism`) so curves from different
+//! machines are comparable.
+//!
+//! CI smoke knobs shared with `sim_throughput`: `SIM_BENCH_ITERS` and
+//! `SIM_BENCH_DURATION_S`.
+
+use std::collections::BTreeMap;
+
+use adrenaline::config::ModelSpec;
+use adrenaline::sim::{par_config, ClusterSim, SimConfig, SimReport};
+use adrenaline::util::bench::{figure_row, Bench, BenchStats};
+use adrenaline::util::json::Json;
+use adrenaline::workload::WorkloadKind;
+
+const N_DECODE: u32 = 8;
+const RATE_RPS: f64 = 64.0;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn run_workers(
+    m: ModelSpec,
+    par_workers: usize,
+    duration: f64,
+    iters: usize,
+) -> (BenchStats, SimReport) {
+    let label = format!("par_scaling/workers_{par_workers}");
+    let mut last: Option<SimReport> = None;
+    let stats = Bench::new(1, iters).run(&label, || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, RATE_RPS);
+        cfg.duration_s = duration;
+        cfg.cluster.n_decode = N_DECODE;
+        cfg.serving.par_workers = par_workers;
+        last = Some(ClusterSim::new(cfg).run());
+    });
+    (stats, last.expect("bench ran at least once"))
+}
+
+fn main() {
+    let m = ModelSpec::llama2_7b();
+    let iters = env_usize("SIM_BENCH_ITERS", 5);
+    let duration = env_f64("SIM_BENCH_DURATION_S", 60.0);
+    let hw = par_config().hw_threads;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut baseline_sps: Option<f64> = None;
+    let mut baseline_steps: Option<u64> = None;
+
+    for par_workers in [1usize, 2, 4, 8] {
+        let (stats, report) = run_workers(m, par_workers, duration, iters);
+        if let Some(steps) = baseline_steps {
+            assert_eq!(
+                report.steps_simulated, steps,
+                "worker count must never change simulated results"
+            );
+        } else {
+            baseline_steps = Some(report.steps_simulated);
+        }
+        let sps = report.steps_simulated as f64 / stats.p50_s;
+        let base = *baseline_sps.get_or_insert(sps);
+        let speedup = if base > 0.0 { sps / base } else { 1.0 };
+        figure_row("par_scaling", "steps_per_second", par_workers as f64, sps);
+        figure_row("par_scaling", "speedup_vs_1_worker", par_workers as f64, speedup);
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str(format!("par_scaling/workers_{par_workers}")));
+        o.insert("par_workers".into(), Json::Num(par_workers as f64));
+        o.insert("n_decode".into(), Json::Num(N_DECODE as f64));
+        o.insert("rate_rps".into(), Json::Num(RATE_RPS));
+        o.insert("duration_s".into(), Json::Num(duration));
+        o.insert("hw_threads".into(), Json::Num(hw as f64));
+        o.insert("iters".into(), Json::Num(stats.iters as f64));
+        o.insert("p50_wall_s".into(), Json::Num(stats.p50_s));
+        o.insert("mean_wall_s".into(), Json::Num(stats.mean_s));
+        o.insert("steps_simulated".into(), Json::Num(report.steps_simulated as f64));
+        o.insert("steps_per_second".into(), Json::Num(sps));
+        o.insert("speedup_vs_1_worker".into(), Json::Num(speedup));
+        o.insert("finished".into(), Json::Num(report.finished as f64));
+        rows.push(Json::Obj(o));
+    }
+
+    let path = std::env::var("BENCH_PAR_JSON").unwrap_or_else(|_| "BENCH_par.json".into());
+    let payload = format!("{}\n", Json::Arr(rows));
+    match std::fs::write(&path, payload) {
+        Ok(()) => println!("bench rows written to {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

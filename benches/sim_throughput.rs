@@ -93,6 +93,15 @@ fn row(
     Json::Obj(o)
 }
 
+/// Insert an extra key into a row object (the par rows carry fields the
+/// shared `row` builder does not know about).
+fn patch(mut j: Json, key: &str, val: Json) -> Json {
+    if let Json::Obj(ref mut o) = j {
+        o.insert(key.into(), val);
+    }
+    j
+}
+
 /// Run one scenario in one leap mode; returns (stats, last report).
 /// `customize` is the scenario's config hook (topology, fault plane, …).
 #[allow(clippy::too_many_arguments)]
@@ -117,6 +126,34 @@ fn run_mode(
         cfg.duration_s = duration;
         cfg.serving.no_leap = no_leap;
         customize(&mut cfg);
+        last = Some(ClusterSim::new(cfg).run());
+    });
+    (stats, last.expect("bench ran at least once"))
+}
+
+/// Run one within-run-parallelism scenario in one par mode (leaping on
+/// in both — epochs only exist on the leap path); returns (stats, last
+/// report).
+fn run_par_mode(
+    m: ModelSpec,
+    name: &str,
+    n_decode: u32,
+    rate: f64,
+    duration: f64,
+    iters: usize,
+    no_par: bool,
+) -> (BenchStats, SimReport) {
+    let label = if no_par {
+        format!("sim_throughput/{name}_no_par")
+    } else {
+        format!("sim_throughput/{name}")
+    };
+    let mut last: Option<SimReport> = None;
+    let stats = Bench::new(1, iters).run(&label, || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = duration;
+        cfg.cluster.n_decode = n_decode;
+        cfg.serving.no_par = no_par;
         last = Some(ClusterSim::new(cfg).run());
     });
     (stats, last.expect("bench ran at least once"))
@@ -192,6 +229,57 @@ fn main() {
             &ref_report,
             None,
         ));
+    }
+
+    // Within-run parallelism rows (ISSUE 7): paired par-on/par-off runs
+    // at 1, 2 and 8 decode instances, load scaled with the topology so
+    // every instance stays saturated. Both sides leap (epochs only exist
+    // on the leap path) and are bit-identical by rust/tests/par_run.rs,
+    // so `steps_simulated` compares cleanly; the par-on row carries
+    // `par_speedup_steps_per_s` — the acceptance metric for the epoch
+    // engine. The 1-instance row pins the no-regression side: epochs
+    // never fire there, so its speedup should sit at ~1.0. Speedups are
+    // informational (they depend on the runner's core count); the CI
+    // floor gate still reads only `saturated_32rps`.
+    let par_scenarios: [(&str, u32, f64); 3] = [
+        ("par_1dec_8rps", 1, 8.0),
+        ("par_2dec_16rps", 2, 16.0),
+        ("par_8dec_64rps", 8, 64.0),
+    ];
+    for (name, n_decode, rate) in par_scenarios {
+        // Inline reference first so the paired par-on row carries the
+        // ratio; it is the slow side, so its iterations are capped.
+        let ref_iters = iters.clamp(1, 2);
+        let (ref_stats, ref_report) =
+            run_par_mode(m, name, n_decode, rate, duration, ref_iters, true);
+        let (par_stats, par_report) =
+            run_par_mode(m, name, n_decode, rate, duration, iters, false);
+        assert_eq!(
+            par_report.steps_simulated,
+            ref_report.steps_simulated,
+            "par and no_par must simulate identical step counts"
+        );
+        let ref_sps = ref_report.steps_simulated as f64 / ref_stats.p50_s;
+        let par_sps = par_report.steps_simulated as f64 / par_stats.p50_s;
+        let speedup = if ref_sps > 0.0 { par_sps / ref_sps } else { 1.0 };
+        figure_row("sim_perf", &format!("{name}_steps_per_second"), rate, par_sps);
+        figure_row("sim_perf", &format!("{name}_steps_per_second_no_par"), rate, ref_sps);
+        figure_row("sim_perf", &format!("{name}_par_speedup"), rate, speedup);
+        let on = row(name, rate, duration, true, &par_stats, &par_report, None);
+        let on = patch(on, "n_decode", Json::Num(n_decode as f64));
+        let on = patch(on, "par", Json::Bool(true));
+        rows.push(patch(on, "par_speedup_steps_per_s", Json::Num(speedup)));
+        let off = row(
+            &format!("{name}_no_par"),
+            rate,
+            duration,
+            true,
+            &ref_stats,
+            &ref_report,
+            None,
+        );
+        let off = patch(off, "n_decode", Json::Num(n_decode as f64));
+        rows.push(patch(off, "par", Json::Bool(false)));
     }
 
     let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());

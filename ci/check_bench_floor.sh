@@ -13,7 +13,10 @@
 # When the paired `saturated_32rps_no_leap` reference row is present,
 # the script also prints the leap-on/leap-off steps/s ratio — the leap
 # engine's acceptance metric (informational, not gated: it tracks
-# machine-dependent event/step timing ratios).
+# machine-dependent event/step timing ratios). Likewise, when the
+# `par_8dec_64rps` / `par_8dec_64rps_no_par` pair is present, it prints
+# the within-run parallelism speedup (ISSUE 7) — also informational,
+# since it scales with the runner's core count.
 #
 # Floor calibration protocol (EXPERIMENTS.md §Perf):
 #   * the floor lives in ci/sim_bench_floor.txt and is deliberately set
@@ -44,11 +47,17 @@ with open(path) as f:
     rows = json.load(f)
 sps = None
 ref_sps = None
+par_sps = None
+par_ref_sps = None
 for row in rows:
     if row.get("bench") == "sim_throughput/saturated_32rps":
         sps = float(row["steps_per_second"])
     elif row.get("bench") == "sim_throughput/saturated_32rps_no_leap":
         ref_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/par_8dec_64rps":
+        par_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/par_8dec_64rps_no_par":
+        par_ref_sps = float(row.get("steps_per_second", 0.0))
 if sps is None:
     print(f"bench gate: saturated_32rps row missing from {path}", file=sys.stderr)
     sys.exit(1)
@@ -57,6 +66,12 @@ if ref_sps:
     print(
         f"bench gate: leap speedup = {sps / ref_sps:.2f}x "
         f"(leap-off reference = {ref_sps:.0f} steps/s)"
+    )
+if par_sps and par_ref_sps:
+    print(
+        f"bench gate: par speedup (8 decode instances) = "
+        f"{par_sps / par_ref_sps:.2f}x "
+        f"(inline reference = {par_ref_sps:.0f} steps/s)"
     )
 if sps >= floor:
     print("bench gate: PASS")

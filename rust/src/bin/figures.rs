@@ -12,13 +12,14 @@
 //! EXPERIMENTS.md for the paper-vs-measured mapping.
 //!
 //! Parallelism happens at two levels, both through [`parallel_map`]:
-//! `figures all` fans the figure *groups* themselves out (capped, since
-//! each sweep group fans out again internally; each group buffers its
-//! rows and the buffers print in the fixed group order), and the
-//! sweep-driven groups fan their sweep points across all cores. Every
-//! simulation is seed-deterministic, so the output is bit-identical to a
-//! serial run. Set `ADRENALINE_SERIAL=1` to force serial execution at
-//! both levels.
+//! `figures all` fans the figure *groups* themselves out (each group
+//! buffers its rows and the buffers print in the fixed group order), and
+//! the sweep-driven groups fan their sweep points out again internally.
+//! Both levels (plus any within-run epoch workers the sims spawn) draw
+//! from one process-wide thread budget, so nested fan-out stays near the
+//! core count on any host instead of groups × cores. Every simulation is
+//! seed-deterministic, so the output is bit-identical to a serial run.
+//! Set `ADRENALINE_SERIAL=1` to force serial execution at every level.
 //!
 //! Simulated step costs default to the bucket-padded model (the 2-D
 //! executable grid, §3.2.2); set `ADRENALINE_EXACT_COSTS=1` to reproduce
@@ -34,8 +35,7 @@ use adrenaline::gpu_model::{
     PrefillKernelTimes, Roofline,
 };
 use adrenaline::sim::{
-    parallel_map, parallel_map_capped, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig,
-    SimReport,
+    parallel_map, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig, SimReport,
 };
 use adrenaline::util::bench::figure_row_str;
 use adrenaline::workload::{ArrivalPattern, WorkloadKind};
@@ -75,11 +75,11 @@ fn main() {
         eprintln!("  all {}", GROUPS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(" "));
         std::process::exit(2);
     }
-    // The sweep-driven groups fan out again internally, so the group
-    // level is capped: two groups in flight overlap the cheap analytic
-    // groups with the sim-heavy ones while keeping live simulations near
-    // the core count (groups × cores would thrash memory on big hosts).
-    let outputs = parallel_map_capped(selected.len(), 2, |i| {
+    // The sweep-driven groups fan out again internally; the process-wide
+    // thread budget inside `parallel_map` keeps total live threads near
+    // the core count no matter how the levels nest, so the group level
+    // needs no ad-hoc cap (it previously hard-coded 2).
+    let outputs = parallel_map(selected.len(), |i| {
         let mut out = String::new();
         (selected[i].1)(&mut out);
         out

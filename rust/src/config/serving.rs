@@ -227,6 +227,23 @@ pub struct ServingConfig {
     /// regression bisection, and the paired perf rows in BENCH_sim.json.
     /// Env `ADRENALINE_NO_LEAP=1` forces it regardless of this field.
     pub no_leap: bool,
+    /// Disable within-run parallelism: the epoch engine still runs (so the
+    /// leap-mode execution order is unchanged) but prices every instance's
+    /// step series inline on the simulation thread instead of on the
+    /// worker pool. The parallel path is bit-identical to this serial
+    /// reference on every reported quantity (pinned by
+    /// `rust/tests/par_run.rs`); the switch exists for debugging,
+    /// regression bisection, and the paired perf rows in BENCH_sim.json.
+    /// Env `ADRENALINE_NO_PAR=1` forces it regardless of this field.
+    pub no_par: bool,
+    /// Requested pricing concurrency for the within-run epoch pool,
+    /// *including* the simulation thread (the pool spawns `par_workers−1`
+    /// persistent workers, subject to the process-wide thread budget).
+    /// `0` (the default) sizes automatically from the decode-instance
+    /// count; `1` is equivalent to `no_par`. Exists for the BENCH_par
+    /// scaling sweep — bit-identity holds at every worker count, so this
+    /// knob has no effect on reported results, only on wall-clock.
+    pub par_workers: usize,
     /// Runtime offload rebalancing. `None` (the default) keeps the
     /// one-shot admission-time split — bit-identical to the
     /// pre-rebalancer simulator (pinned by `rust/tests/rebalance.rs`).
@@ -257,6 +274,8 @@ impl Default for ServingConfig {
             decode_kv_capacity_tokens: None,
             exact_costs: false,
             no_leap: false,
+            no_par: false,
+            par_workers: 0,
             rebalance: None,
             bounds_feedback: None,
             fault: None,
@@ -339,6 +358,12 @@ impl ServingConfig {
         }
         if let Some(b) = v.get("no_leap").and_then(Json::as_bool) {
             cfg.no_leap = b;
+        }
+        if let Some(b) = v.get("no_par").and_then(Json::as_bool) {
+            cfg.no_par = b;
+        }
+        if let Some(n) = v.get("par_workers").and_then(Json::as_u64) {
+            cfg.par_workers = n as usize;
         }
         // Only an *object* enables the controller: `"rebalance": null`
         // (the natural spelling of "off") stays off, and anything else is
@@ -571,6 +596,8 @@ impl ServingConfig {
         }
         o.insert("exact_costs".into(), Json::Bool(self.exact_costs));
         o.insert("no_leap".into(), Json::Bool(self.no_leap));
+        o.insert("no_par".into(), Json::Bool(self.no_par));
+        o.insert("par_workers".into(), Json::Num(self.par_workers as f64));
         if let Some(r) = self.rebalance {
             let mut rb = BTreeMap::new();
             rb.insert("interval_s".into(), Json::Num(r.interval_s));
@@ -738,6 +765,19 @@ mod tests {
         assert_eq!(cfg, back);
         let off = ServingConfig::from_json(r#"{"no_leap": false}"#).unwrap();
         assert!(!off.no_leap);
+    }
+
+    #[test]
+    fn json_no_par_roundtrip_and_defaults_off() {
+        assert!(!ServingConfig::default().no_par, "within-run parallelism is the default");
+        assert_eq!(ServingConfig::default().par_workers, 0, "pool auto-sizes by default");
+        let cfg = ServingConfig::from_json(r#"{"no_par": true, "par_workers": 4}"#).unwrap();
+        assert!(cfg.no_par);
+        assert_eq!(cfg.par_workers, 4);
+        let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        let off = ServingConfig::from_json(r#"{"no_par": false}"#).unwrap();
+        assert!(!off.no_par);
     }
 
     #[test]

@@ -171,15 +171,43 @@ impl GraphCache {
     /// both local and remote attention batches"). Returns `None` if either
     /// dimension exceeds the grid (the scheduler must split the step).
     pub fn select(&mut self, local: usize, offload: usize) -> Option<BucketPair> {
+        let pair = self.peek_select(local, offload)?;
+        self.record_selection(local, offload);
+        Some(pair)
+    }
+
+    /// [`select`] without recording statistics: the pure selection
+    /// function. The simulator's epoch engine prices steps speculatively
+    /// on cloned cost models (whose stats are discarded) and afterwards
+    /// records stats on the authoritative grid for exactly the steps that
+    /// actually started, via [`record_selection`] with the same arguments.
+    ///
+    /// [`select`]: GraphCache::select
+    /// [`record_selection`]: GraphCache::record_selection
+    pub fn peek_select(&self, local: usize, offload: usize) -> Option<BucketPair> {
         let li = self.local_buckets.iter().position(|&b| b >= local)?;
         let oi = self.offload_buckets.iter().position(|&b| b >= offload)?;
+        Some(BucketPair { local: self.local_buckets[li], offload: self.offload_buckets[oi] })
+    }
+
+    /// Record the statistics [`select`] would have recorded for
+    /// `(local, offload)`. No-op when the pair exceeds the grid (matching
+    /// [`select`], which mutates nothing on the oversize fallback).
+    ///
+    /// [`select`]: GraphCache::select
+    pub fn record_selection(&mut self, local: usize, offload: usize) {
+        let Some(li) = self.local_buckets.iter().position(|&b| b >= local) else {
+            return;
+        };
+        let Some(oi) = self.offload_buckets.iter().position(|&b| b >= offload) else {
+            return;
+        };
         let l = self.local_buckets[li];
         let o = self.offload_buckets[oi];
         self.stats.selections += 1;
         self.stats.used_slots += (local + offload) as u64;
         self.stats.padded_slots += ((l - local) + (o - offload)) as u64;
         self.hits[li * self.offload_buckets.len() + oi] += 1;
-        Some(BucketPair { local: l, offload: o })
     }
 
     /// Smallest captured offload capacity covering `n` rows, without
@@ -297,6 +325,21 @@ mod tests {
                 g.grid_size()
             );
         });
+    }
+
+    #[test]
+    fn peek_then_record_equals_select() {
+        let mut direct = GraphCache::new(&[1, 2, 4], &[1, 2, 4], None);
+        let mut split = direct.clone();
+        // Includes an oversize pair: select mutates nothing there, so the
+        // split path must not either.
+        for &(l, o) in &[(3usize, 0usize), (1, 2), (4, 4), (5, 0), (1, 1)] {
+            let sel = direct.select(l, o);
+            assert_eq!(split.peek_select(l, o), sel);
+            split.record_selection(l, o);
+        }
+        assert_eq!(direct.stats(), split.stats());
+        assert_eq!(direct.bucket_hits(), split.bucket_hits());
     }
 
     #[test]

@@ -398,6 +398,28 @@ impl CostModel {
         self.series_exec = exec;
         n
     }
+
+    /// Copy the straggler multipliers from `src`. Epoch pricers —
+    /// per-instance clones of the authoritative cost model that live on
+    /// worker threads — re-sync before each epoch, so fault-plane
+    /// slowdown windows opened or closed since the clone was taken price
+    /// bit-identically to the authoritative model.
+    pub fn sync_executor_slowdowns(&mut self, src: &CostModel) {
+        self.executor_slowdown.clear();
+        self.executor_slowdown.extend_from_slice(&src.executor_slowdown);
+    }
+
+    /// Record the executable-grid statistics [`CostModel::decode_step`]
+    /// would have recorded for one step with these aggregates. The epoch
+    /// merge calls this on the authoritative model for exactly the steps
+    /// that started: pricing ran on a clone (stats discarded), and steps
+    /// priced speculatively past the epoch horizon must not count — the
+    /// serial reference would only price them later, if at all.
+    pub fn record_decode_selection(&mut self, local_rows: u64, remote_rows_total: u64) {
+        if self.mode == CostMode::Bucketed {
+            self.grid.record_selection(local_rows as usize, remote_rows_total as usize);
+        }
+    }
 }
 
 /// Online B_TPOT estimator (§3.4.2) — the feedback half of the bounds

@@ -162,11 +162,25 @@ impl KvPool {
     /// histogram prices every step in O(1).
     pub fn plan_bulk_steps(&self, max_steps: usize, allocs_out: &mut Vec<u32>) -> usize {
         allocs_out.clear();
+        self.plan_bulk_inner(max_steps, Some(allocs_out))
+    }
+
+    /// [`KvPool::plan_bulk_steps`] without the allocation series — just
+    /// the largest feasible `k`. The sim's epoch engine uses this for
+    /// decode instances whose occupancy timeline is not reported (only
+    /// instance 0's is), skipping the series fill on the hot path.
+    pub fn bulk_horizon(&self, max_steps: usize) -> usize {
+        self.plan_bulk_inner(max_steps, None)
+    }
+
+    fn plan_bulk_inner(&self, max_steps: usize, mut allocs_out: Option<&mut Vec<u32>>) -> usize {
         if max_steps == 0 {
             return 0;
         }
         if self.seqs.is_empty() {
-            allocs_out.resize(max_steps, 0);
+            if let Some(out) = allocs_out {
+                out.resize(max_steps, 0);
+            }
             return max_steps;
         }
         let bt = self.alloc.block_tokens();
@@ -205,7 +219,9 @@ impl KvPool {
                 return i - 1;
             }
             free -= u64::from(allocs);
-            allocs_out.push(allocs);
+            if let Some(out) = allocs_out.as_deref_mut() {
+                out.push(allocs);
+            }
         }
         max_steps
     }
@@ -394,6 +410,7 @@ mod tests {
         let k = p.plan_bulk_steps(10, &mut allocs);
         assert_eq!(k, 2);
         assert_eq!(allocs, vec![1, 0]);
+        assert_eq!(p.bulk_horizon(10), 2, "fill-free variant agrees on the horizon");
         // With a bigger pool the plan runs to the horizon.
         let mut p = pool(16);
         p.admit(1, 16).unwrap();
@@ -433,6 +450,7 @@ mod tests {
             let mut allocs = Vec::new();
             let k = p.plan_bulk_steps(max_steps, &mut allocs);
             assert_eq!(allocs.len(), k);
+            assert_eq!(p.bulk_horizon(max_steps), k, "fill-free variant agrees");
             // Replay with per-token appends on a clone.
             let mut q = KvPool::new(BlockAllocator::new(blocks, bt));
             let ids: Vec<SeqId> = p.seq_ids().collect();

@@ -1,7 +1,5 @@
 //! Per-request latency bookkeeping and aggregate statistics.
 
-use std::collections::HashMap;
-
 use crate::workload::RequestId;
 
 /// Aggregated latency distribution.
@@ -87,7 +85,15 @@ impl RequestMetrics {
 /// integers).
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
-    requests: HashMap<RequestId, RequestMetrics>,
+    /// Dense per-request slab indexed by `RequestId`. Workload generators
+    /// hand out sequential ids on both the sim and real paths, so a flat
+    /// vector replaces the old hash map on the per-token hot path: no
+    /// hashing, no probe chains, and deterministic id-order iteration for
+    /// the aggregate queries (all of which are order-insensitive anyway —
+    /// the latency stats sort their samples before summing).
+    requests: Vec<Option<RequestMetrics>>,
+    /// Live entry count (`requests` holds `None` gaps for unseen ids).
+    n_requests: usize,
     /// `(time, tokens completed at or before time)`, strictly increasing
     /// in both components.
     token_cum: Vec<(f64, u64)>,
@@ -98,19 +104,38 @@ impl MetricsRecorder {
         Self::default()
     }
 
+    /// Slab lookup-or-insert for `id` (grows the slab through `id`).
+    fn entry(&mut self, id: RequestId) -> &mut RequestMetrics {
+        let idx = id as usize;
+        if idx >= self.requests.len() {
+            self.requests.resize_with(idx + 1, || None);
+        }
+        let slot = &mut self.requests[idx];
+        if slot.is_none() {
+            *slot = Some(RequestMetrics::default());
+            self.n_requests += 1;
+        }
+        slot.as_mut().expect("slot filled above")
+    }
+
+    /// Iterate live request entries (in id order).
+    fn values(&self) -> impl Iterator<Item = &RequestMetrics> {
+        self.requests.iter().flatten()
+    }
+
     pub fn on_arrival(&mut self, id: RequestId, t: f64) {
-        self.requests.entry(id).or_default().arrival_s = t;
+        self.entry(id).arrival_s = t;
     }
 
     pub fn on_first_token(&mut self, id: RequestId, t: f64) {
-        let r = self.requests.entry(id).or_default();
+        let r = self.entry(id);
         debug_assert!(r.first_token_s.is_none(), "duplicate first token for {id}");
         r.first_token_s = Some(t);
         self.push_token_event(t, 1);
     }
 
     pub fn on_token(&mut self, id: RequestId, t: f64) {
-        self.requests.entry(id).or_default().token_times_s.push(t);
+        self.entry(id).token_times_s.push(t);
         self.push_token_event(t, 1);
     }
 
@@ -124,7 +149,7 @@ impl MetricsRecorder {
         if times.is_empty() {
             return;
         }
-        self.requests.entry(id).or_default().token_times_s.extend_from_slice(times);
+        self.entry(id).token_times_s.extend_from_slice(times);
     }
 
     /// Advance the cumulative token series by `n` tokens completing at
@@ -181,33 +206,32 @@ impl MetricsRecorder {
     }
 
     pub fn on_finished(&mut self, id: RequestId, t: f64) {
-        self.requests.entry(id).or_default().finished_s = Some(t);
+        self.entry(id).finished_s = Some(t);
     }
 
     pub fn request(&self, id: RequestId) -> Option<&RequestMetrics> {
-        self.requests.get(&id)
+        self.requests.get(id as usize).and_then(|r| r.as_ref())
     }
 
     pub fn n_requests(&self) -> usize {
-        self.requests.len()
+        self.n_requests
     }
 
     pub fn n_finished(&self) -> usize {
-        self.requests.values().filter(|r| r.finished_s.is_some()).count()
+        self.values().filter(|r| r.finished_s.is_some()).count()
     }
 
     pub fn total_output_tokens(&self) -> usize {
-        self.requests.values().map(|r| r.output_tokens()).sum()
+        self.values().map(|r| r.output_tokens()).sum()
     }
 
     pub fn ttft_stats(&self) -> Option<LatencyStats> {
-        let samples: Vec<f64> = self.requests.values().filter_map(|r| r.ttft()).collect();
+        let samples: Vec<f64> = self.values().filter_map(|r| r.ttft()).collect();
         LatencyStats::from_samples(&samples)
     }
 
     pub fn tpot_stats(&self) -> Option<LatencyStats> {
-        let samples: Vec<f64> =
-            self.requests.values().flat_map(|r| r.tpot_samples()).collect();
+        let samples: Vec<f64> = self.values().flat_map(|r| r.tpot_samples()).collect();
         LatencyStats::from_samples(&samples)
     }
 
@@ -280,6 +304,20 @@ mod tests {
         assert!((tput - 11.0).abs() < 1e-9, "tput = {tput}");
         assert_eq!(m.throughput_in_window(5.0, 6.0), 0.0);
         assert_eq!(m.throughput_in_window(2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn slab_handles_sparse_ids_and_counts_live_entries() {
+        let mut m = MetricsRecorder::new();
+        m.on_arrival(5, 1.0);
+        m.on_arrival(2, 0.5);
+        assert_eq!(m.n_requests(), 2, "gap slots must not count as requests");
+        assert!(m.request(0).is_none());
+        assert!(m.request(3).is_none());
+        assert!(m.request(9).is_none(), "past-the-slab lookups are None, not a panic");
+        assert_eq!(m.request(5).unwrap().arrival_s, 1.0);
+        m.on_arrival(5, 2.0);
+        assert_eq!(m.n_requests(), 2, "re-touching an id must not double-count");
     }
 
     #[test]

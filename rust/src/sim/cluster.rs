@@ -53,7 +53,16 @@
 //!   (O(1) scalar work per step plus one O(batch) bulk flush per leap)
 //!   and only the first interesting step is scheduled as an event — see
 //!   [`ClusterSim::maybe_start_step`]. `ServingConfig::no_leap` or
-//!   `ADRENALINE_NO_LEAP=1` keeps the bit-identical per-step reference.
+//!   `ADRENALINE_NO_LEAP=1` keeps the bit-identical per-step reference;
+//! * passes where **several** instances start a step run the within-run
+//!   parallel epoch engine instead: every starter's step series is
+//!   priced concurrently on a persistent worker pool (per-instance
+//!   clones of the cost plane — memo back-fills are value-transparent)
+//!   and committed through a deterministic merge that replays side
+//!   effects in exact serial event order, so the report stays
+//!   bit-identical to the `ADRENALINE_NO_PAR=1` inline path *and* to
+//!   the per-step reference — see [`ClusterSim::run_epoch`] and
+//!   `rust/tests/par_run.rs`.
 
 use std::collections::VecDeque;
 
@@ -69,6 +78,7 @@ use crate::util::rng::Rng;
 use crate::workload::{ArrivalPattern, Request, RequestId, TraceGenerator, WorkloadKind};
 
 use super::events::EventQueue;
+use super::run::{par_config, PoolTask, WorkerPool};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -472,6 +482,111 @@ impl FaultPlane {
     }
 }
 
+/// Persistent per-decode-instance pricing context for the within-run
+/// parallel epoch engine ([`ClusterSim::run_epoch`]). Owns a clone of
+/// the unified cost plane: memoized back-fills are value-identical to
+/// the authoritative model's, straggler multipliers re-sync before each
+/// epoch, and grid-selection statistics land on the clone and are
+/// discarded — the merge replays them on the authoritative model for
+/// exactly the steps that started. Inputs (the frozen aggregate
+/// snapshot and pricing window) and outputs (the priced series) live
+/// here too, so one owned value crosses the worker boundary and comes
+/// back, keeping the hot path allocation-free after warm-up.
+struct EpochPricer {
+    costs: CostModel,
+    // ----- inputs: frozen batch aggregates + pricing window -------------
+    local_rows: u64,
+    local_ctx: u64,
+    remote_rows: Vec<u64>,
+    remote_ctx: Vec<u64>,
+    t0: f64,
+    /// Strict event bound (the queue head at epoch open).
+    stop_before: Option<f64>,
+    hard_stop: f64,
+    /// Clean-step horizon + 1 (the series' last step is scheduled).
+    max_steps: usize,
+    // ----- outputs ------------------------------------------------------
+    step_costs: Vec<DecodeStepCost>,
+    /// Flattened per-step executor seconds (`n_prefill` per step).
+    exec: Vec<f64>,
+    n_steps: usize,
+    /// Committed interior end times, filled by the merge (the
+    /// per-request metrics flush reuses the buffer).
+    times: Vec<f64>,
+}
+
+impl EpochPricer {
+    fn new(costs: &CostModel) -> EpochPricer {
+        EpochPricer {
+            costs: costs.clone(),
+            local_rows: 0,
+            local_ctx: 0,
+            remote_rows: Vec::new(),
+            remote_ctx: Vec::new(),
+            t0: 0.0,
+            stop_before: None,
+            hard_stop: 0.0,
+            max_steps: 1,
+            step_costs: Vec::new(),
+            exec: Vec::new(),
+            n_steps: 0,
+            times: Vec::new(),
+        }
+    }
+
+    /// Price the loaded step series — the only part of an epoch that
+    /// runs off the sim thread. Pure given the loaded inputs, so where
+    /// it runs cannot affect the result.
+    fn price(mut self) -> EpochPricer {
+        self.n_steps = self.costs.decode_step_series(
+            self.t0,
+            self.stop_before,
+            self.hard_stop,
+            self.max_steps,
+            self.local_rows,
+            self.local_ctx,
+            &self.remote_rows,
+            &self.remote_ctx,
+            &mut self.step_costs,
+            &mut self.exec,
+        );
+        self
+    }
+}
+
+/// One lane's cursor in the epoch merge: which lane step is in flight,
+/// when it ends, and the virtual event sequence number standing in for
+/// the push-order tie-break the serial reference would have given its
+/// `DecodeStepEnd`. A lane is either a *starter* (an instance beginning
+/// a step at the pass time) or an *absorbed* in-flight instance whose
+/// already-scheduled clean step end was consumed off the queue head.
+struct EpochLane {
+    d: usize,
+    /// Index into the epoch's lane-ordered pricer results.
+    li: usize,
+    /// 0 for a starter lane (lane step 0 is priced and its start is
+    /// replayed at epoch open); 1 for an absorbed lane (lane step 0 is
+    /// the consumed pending step — already started, end time fixed by
+    /// its queue entry, only its continuation is priced). Lane step `i`
+    /// maps to priced-series index `i - shift`.
+    shift: usize,
+    /// [`ClusterSim::epoch_horizon`] plan bound for this lane (clean
+    /// steps startable from the *current* pool/row state; for an
+    /// absorbed lane the consumed pending step is the first of them).
+    cap: usize,
+    /// Lane-step index of the in-flight step.
+    i: usize,
+    /// In-flight step's end time.
+    t_end: f64,
+    /// Virtual push sequence of the in-flight step's end event.
+    seq: u64,
+    /// Batch rows (frozen across the epoch's clean steps).
+    rows: usize,
+    /// Total lane steps (`shift` + priced series length); the last one
+    /// must be scheduled, never committed inline.
+    n_steps: usize,
+}
+
 /// The cluster simulator.
 pub struct ClusterSim {
     cfg: SimConfig,
@@ -535,6 +650,28 @@ pub struct ClusterSim {
     scratch_leap_exec: Vec<f64>,
     scratch_leap_allocs: Vec<u32>,
     scratch_leap_times: Vec<f64>,
+    // ----- within-run parallel epoch engine (§Perf) ---------------------
+    /// Worker pool for epoch pricing. Created lazily at the first
+    /// epoch that prices lanes (runs that never see one pay nothing) and
+    /// `None` when the resolved worker target is zero or the process
+    /// thread budget was exhausted — pricing then runs inline, which is
+    /// also the `ADRENALINE_NO_PAR=1` reference path.
+    par_pool: Option<WorkerPool>,
+    /// Worker threads to request at pool creation: `par_workers` (or
+    /// one per decode instance when 0 = auto) minus the sim thread
+    /// itself; forced to 0 by `no_par` / `ADRENALINE_NO_PAR=1` /
+    /// `ADRENALINE_SERIAL=1` / `no_leap`.
+    par_workers_want: usize,
+    /// Pool creation attempted (a budget-exhausted first attempt must
+    /// not retry every epoch).
+    par_pool_init: bool,
+    /// Per-decode-instance epoch pricers, created on first use.
+    epoch_pricers: Vec<Option<EpochPricer>>,
+    /// Epoch scratch: starter ids in lane order, merge lanes, and the
+    /// per-executor-pool row totals across all starters.
+    scratch_epoch_starters: Vec<usize>,
+    scratch_epoch_lanes: Vec<EpochLane>,
+    scratch_epoch_rtotal: Vec<u64>,
 }
 
 impl ClusterSim {
@@ -685,6 +822,28 @@ impl ClusterSim {
         let no_leap = cfg.serving.no_leap
             || std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
 
+        // Within-run parallelism: scheduling passes on multi-decode
+        // topologies price every epoch lane's step series concurrently
+        // (the epoch engine; lanes = the pass's starters plus absorbed
+        // pending clean step ends). `no_par` / `ADRENALINE_NO_PAR=1` /
+        // the process-wide `ADRENALINE_SERIAL=1` keep the same epoch
+        // code but price inline on the sim thread — the bit-identity
+        // reference for `rust/tests/par_run.rs`. `par_workers` is the
+        // total pricing concurrency including the sim thread (0 = one
+        // per decode instance); the pool itself spawns one thread fewer
+        // and is capped at the lane count that could ever use it.
+        let no_par = cfg.serving.no_par
+            || std::env::var("ADRENALINE_NO_PAR").map_or(false, |v| v == "1")
+            || par_config().serial;
+        let n_decode = cfg.cluster.n_decode as usize;
+        let par_workers_want = if no_par || no_leap || n_decode < 2 {
+            0
+        } else {
+            let total =
+                if cfg.serving.par_workers > 0 { cfg.serving.par_workers } else { n_decode };
+            total.min(n_decode).saturating_sub(1)
+        };
+
         ClusterSim {
             cfg,
             reqs: Vec::new(),
@@ -727,6 +886,13 @@ impl ClusterSim {
             scratch_leap_exec: Vec::new(),
             scratch_leap_allocs: Vec::new(),
             scratch_leap_times: Vec::new(),
+            par_pool: None,
+            par_workers_want,
+            par_pool_init: false,
+            epoch_pricers: (0..n_decode).map(|_| None).collect(),
+            scratch_epoch_starters: Vec::new(),
+            scratch_epoch_lanes: Vec::new(),
+            scratch_epoch_rtotal: Vec::new(),
         }
     }
 
@@ -870,8 +1036,22 @@ impl ClusterSim {
                 }
             }
             let sole_starter = starters <= 1;
-            for d in 0..self.decode.len() {
-                self.maybe_start_step(t, d, sole_starter);
+            if self.leap && self.decode.len() >= 2 {
+                // Multiple decode instances: the within-run parallel
+                // epoch engine handles the pass. It prices every
+                // starter's step series concurrently, *absorbs* other
+                // instances' already-scheduled clean step ends off the
+                // queue head into the same epoch (without absorption the
+                // next instance's pending end would fence every leap to
+                // a single step and the sim would degrade to per-step),
+                // and merges all side effects back in exact serial event
+                // order. Passes with nothing to merge fall back to the
+                // plain per-instance path inside.
+                self.run_epoch(t);
+            } else {
+                for d in 0..self.decode.len() {
+                    self.maybe_start_step(t, d, sole_starter);
+                }
             }
         }
         self.report()
@@ -2438,6 +2618,496 @@ impl ClusterSim {
                 "executor pool residency out of lock-step on prefill instance {pi}"
             );
         }
+    }
+
+    // ----- within-run parallel epoch engine (§Perf) -------------------------
+
+    /// Create the epoch worker pool on first use. One attempt only: a
+    /// sim already running inside a saturated `parallel_map` sweep gets
+    /// no permits and stays inline for its whole run rather than
+    /// hammering the budget every epoch.
+    fn ensure_par_pool(&mut self) {
+        if self.par_pool_init {
+            return;
+        }
+        self.par_pool_init = true;
+        if self.par_workers_want > 0 {
+            let pool = WorkerPool::new(self.par_workers_want);
+            if pool.workers() > 0 {
+                self.par_pool = Some(pool);
+            }
+        }
+    }
+
+    /// Fill the epoch horizon's shared executor-pool row totals: per
+    /// prefill instance, the offloaded-row count summed over every live
+    /// decode instance with rows — the superset of every lane that could
+    /// join this epoch, whether as a starter or by absorption.
+    /// Eligibility must not feed back into the bound it is checked
+    /// against, and an instance that never becomes a lane only makes the
+    /// per-lane cap smaller, never wrong.
+    fn fill_epoch_rtotal(&self, r_total: &mut Vec<u64>) {
+        r_total.clear();
+        r_total.resize(self.prefill.len(), 0);
+        for d in 0..self.decode.len() {
+            if self.decode[d].running.is_empty() || self.decode_is_down(d) {
+                continue;
+            }
+            for (pi, &r) in self.decode[d].remote_rows.iter().enumerate() {
+                r_total[pi] += r;
+            }
+        }
+    }
+
+    /// Epoch variant of [`ClusterSim::leap_horizon`]: upper bound on the
+    /// clean steps instance `d` can commit inside one epoch, counted
+    /// from the current row/pool state (for an absorbed lane the
+    /// consumed pending step is the first of them, so a non-zero horizon
+    /// doubles as the proof that the pending grant is clean). The
+    /// per-row finish bound and the decode-pool plan are identical to
+    /// the leap's; the executor-pool bound divides each pool's headroom
+    /// by the pool's row total across *all* live instances with rows
+    /// (`r_total`), not just `d`'s own — every lane grows a shared pool
+    /// concurrently during the epoch, and capping each at
+    /// `headroom / total` keeps any interleaving of their committed
+    /// steps within budget.
+    fn epoch_horizon(&mut self, d: usize, r_total: &[u64]) -> usize {
+        let mut cap = MAX_LEAP_STEPS;
+        {
+            let dec = &self.decode[d];
+            for &id in &dec.running {
+                let sr = &self.reqs[id as usize];
+                let to_finish = sr.req.output_len.saturating_sub(sr.generated).max(1);
+                cap = cap.min(to_finish - 1);
+                if cap == 0 {
+                    return 0;
+                }
+            }
+            for (pi, p) in self.prefill.iter().enumerate() {
+                if p.executor_kv_tokens > p.executor_kv_budget {
+                    return 0;
+                }
+                if dec.remote_rows[pi] > 0 {
+                    let total = r_total[pi] as usize;
+                    cap = cap.min((p.executor_kv_budget - p.executor_kv_tokens) / total);
+                    if cap == 0 {
+                        return 0;
+                    }
+                }
+            }
+        }
+        if d == 0 {
+            // Instance 0's planned per-step allocation counts also
+            // replay the decode-occupancy timeline during the merge.
+            let mut allocs = std::mem::take(&mut self.scratch_leap_allocs);
+            let k = self.decode[0].kv.plan_bulk_steps(cap, &mut allocs);
+            self.scratch_leap_allocs = allocs;
+            k
+        } else {
+            self.decode[d].kv.bulk_horizon(cap)
+        }
+    }
+
+    /// Replay one step *start*'s side effects — exactly what
+    /// [`ClusterSim::maybe_start_step`]'s loop does when the serial
+    /// reference starts a step at `t_start`: executor busy time and duty
+    /// decay (ascending partition), the B_TPOT observation, the decode
+    /// instance's busy/FLOPs accumulators, and the batch-size timeline.
+    fn replay_step_start(
+        &mut self,
+        d: usize,
+        t_start: f64,
+        rows: usize,
+        step: DecodeStepCost,
+        exec_row: &[f64],
+    ) {
+        for (pi, &et) in exec_row.iter().enumerate() {
+            if et > 0.0 {
+                self.prefill[pi].executor_busy_s += et;
+                self.duty[pi].record_executor(t_start, et);
+            }
+        }
+        if let Some(est) = self.b_tpot_est.as_mut() {
+            est.observe_step(self.decode[d].local_rows as usize, step.step_s);
+        }
+        let dec = &mut self.decode[d];
+        dec.busy_s += step.step_s;
+        dec.flops_done += step.flops;
+        self.batch_size.push(t_start, rows as f64);
+    }
+
+    /// Scheduling pass under the within-run parallel epoch engine
+    /// (§Perf). One *epoch* spans the window from the pass time `t` to
+    /// the next shared-state synchronization point — the first queued
+    /// event that is anything other than a clean, strictly
+    /// time-separated decode step end. Two kinds of lane join the epoch:
+    ///
+    /// * **starters** — instances beginning a step this pass (the serial
+    ///   pass would start each and schedule one `DecodeStepEnd`);
+    /// * **absorbed** in-flight instances — their already-scheduled step
+    ///   ends are consumed off the queue head when provably clean (no
+    ///   row finishes on the grant, no pool overflows, epoch-current)
+    ///   and *strictly* earlier than every other queued event. Without
+    ///   absorption, each instance's pending end would fence every other
+    ///   instance's horizon to a single step and a saturated
+    ///   multi-instance run would degrade to per-step event processing —
+    ///   pending clean step ends are exactly the events that are *not*
+    ///   synchronization points.
+    ///
+    /// Each lane's independent work (pricing its frozen-composition step
+    /// series) runs concurrently on the persistent worker pool via
+    /// per-instance [`EpochPricer`] clones of the cost plane; everything
+    /// that touches shared order-sensitive state is then committed by a
+    /// deterministic merge on this thread.
+    ///
+    /// The merge replays side effects in the exact order the serial
+    /// reference produces them: virtual step-end events ordered by
+    /// `(end time, push sequence)` — the event queue's own ordering,
+    /// with absorbed lanes' seqs below all starters' (their real events
+    /// were pushed before this pass) — with each pop replaying the ended
+    /// step's effects and then the next step's start effects, precisely
+    /// the reference's pop-handler-then-pass sequence. The merge stops
+    /// at the first virtual event that cannot stay internal (a series'
+    /// scheduled last step — a finish, a pool overflow, or a queue
+    /// interleaving): the reference pops that event before every later
+    /// one and its handler may write anything, so each lane's in-flight
+    /// step then becomes a real `DecodeStepEnd`, pushed in
+    /// virtual-sequence order to keep queue ties resolving identically
+    /// (an absorbed lane that never advanced gets its consumed event
+    /// re-pushed at the same instant — safe precisely because absorption
+    /// required strict time separation). Per-row state committed by the
+    /// replay is settled in one bulk flush per lane, and grid-selection
+    /// statistics are recorded on the authoritative cost model for
+    /// exactly the *newly* started steps (speculatively priced steps
+    /// beyond the merge stop never count; an absorbed pending step was
+    /// recorded when it originally started). The result is bit-identical
+    /// to the `ADRENALINE_NO_PAR=1` inline path (same code, same thread
+    /// for pricing) *and* to the `ADRENALINE_NO_LEAP=1` per-step
+    /// reference (`rust/tests/par_run.rs`, `rust/tests/step_leap.rs`).
+    fn run_epoch(&mut self, t: f64) {
+        // -- collect the actual starters (the run-loop pass count
+        //    includes crashed instances, which never start) --------------
+        let mut starters = std::mem::take(&mut self.scratch_epoch_starters);
+        let mut lanes = std::mem::take(&mut self.scratch_epoch_lanes);
+        starters.clear();
+        lanes.clear();
+        for d in 0..self.decode.len() {
+            if self.decode[d].step_in_flight
+                || self.decode[d].running.is_empty()
+                || self.decode_is_down(d)
+            {
+                continue;
+            }
+            #[cfg(debug_assertions)]
+            {
+                self.assert_aggregates(d);
+                self.assert_proxy_tokens(d);
+            }
+            starters.push(d);
+        }
+
+        let hard_stop = self.hard_stop();
+        let n_prefill = self.prefill.len();
+
+        // Per-executor-pool row totals for the epoch horizon's
+        // conservative shared-pool bound, filled lazily on first horizon
+        // use (most passes merge nothing and should stay cheap). Empty ≡
+        // not yet filled; the fill reads only state that is frozen for
+        // the duration of the pass, so *when* it runs cannot change it.
+        let mut r_total = std::mem::take(&mut self.scratch_epoch_rtotal);
+        r_total.clear();
+
+        // -- absorption: consume clean pending step ends off the queue
+        //    head, in queue order, while each is strictly earlier than
+        //    everything else queued. Eligibility is evaluated on the
+        //    *current* state (preemptions or migrations since the step
+        //    started already updated rows/aggregates — exactly what the
+        //    reference handler would grant against at that timestamp).
+        //    The prefix rule keeps this exact: once a head is refused,
+        //    no later queue entry may be consumed either. ----------------
+        loop {
+            let (t_d, d) = match self.events.peek() {
+                Some((t_d, Ev::DecodeStepEnd { inst, epoch }))
+                    if *epoch == self.decode[*inst].step_epoch =>
+                {
+                    (t_d, *inst)
+                }
+                _ => break,
+            };
+            if t_d > hard_stop
+                || self.decode_is_down(d)
+                || self.decode[d].running.is_empty()
+                || self.events.second_min_time().map_or(false, |s2| s2 <= t_d)
+            {
+                break;
+            }
+            debug_assert!(
+                self.decode[d].step_in_flight,
+                "an epoch-current pending DecodeStepEnd implies an in-flight step"
+            );
+            if r_total.is_empty() {
+                self.fill_epoch_rtotal(&mut r_total);
+            }
+            // Horizon >= 1 means the pending step itself is clean: the
+            // per-row finish bound, the decode-pool plan, and the
+            // executor bound all count it as the first granted step.
+            let cap = self.epoch_horizon(d, &r_total);
+            if cap == 0 {
+                break;
+            }
+            #[cfg(debug_assertions)]
+            {
+                self.assert_aggregates(d);
+                self.assert_proxy_tokens(d);
+            }
+            let _ = self.events.pop_no_clock();
+            lanes.push(EpochLane {
+                d,
+                li: lanes.len(),
+                shift: 1,
+                cap,
+                i: 0,
+                t_end: t_d,
+                seq: lanes.len() as u64,
+                rows: self.decode[d].running.len(),
+                n_steps: 0,
+            });
+        }
+
+        if lanes.is_empty() && starters.len() <= 1 {
+            // Nothing to merge: no absorbable pending end and at most
+            // one live starter. The plain path (with its own leap
+            // engine) handles the pass; the starter, if any, is sole.
+            starters.clear();
+            self.scratch_epoch_starters = starters;
+            self.scratch_epoch_lanes = lanes;
+            self.scratch_epoch_rtotal = r_total;
+            for d in 0..self.decode.len() {
+                self.maybe_start_step(t, d, true);
+            }
+            return;
+        }
+
+        if r_total.is_empty() {
+            self.fill_epoch_rtotal(&mut r_total);
+        }
+
+        // -- append starter lanes after the absorbed ones: the serial
+        //    reference pushed every absorbed pending end before this
+        //    pass, so all absorbed virtual seqs must precede the
+        //    starters' ------------------------------------------------------
+        for &d in starters.iter() {
+            let cap = self.epoch_horizon(d, &r_total);
+            lanes.push(EpochLane {
+                d,
+                li: lanes.len(),
+                shift: 0,
+                cap,
+                i: 0,
+                t_end: t,
+                seq: lanes.len() as u64,
+                rows: self.decode[d].running.len(),
+                n_steps: 0,
+            });
+        }
+        self.scratch_epoch_rtotal = r_total;
+
+        // Lane-order instance list (indexes the priced results back into
+        // the per-instance pricer cache at epoch close).
+        starters.clear();
+        starters.extend(lanes.iter().map(|l| l.d));
+
+        self.ensure_par_pool();
+        // The epoch's strict event bound — taken AFTER absorption, so
+        // the window extends past every consumed pending end to the
+        // first real synchronization point.
+        let t_next = self.events.peek_time();
+
+        // -- load each lane's pricer: horizon, frozen aggregates,
+        //    pricing window, and the straggler-multiplier re-sync -------
+        let mut tasks: Vec<PoolTask<EpochPricer>> = Vec::with_capacity(lanes.len());
+        for lane in lanes.iter() {
+            let mut pricer = match self.epoch_pricers[lane.d].take() {
+                Some(p) => p,
+                None => EpochPricer::new(&self.costs),
+            };
+            pricer.costs.sync_executor_slowdowns(&self.costs);
+            let dec = &self.decode[lane.d];
+            debug_assert_eq!(
+                dec.local_rows + dec.remote_rows.iter().sum::<u64>(),
+                dec.running.len() as u64,
+                "row aggregates must cover the running set"
+            );
+            pricer.local_rows = dec.local_rows;
+            pricer.remote_rows.clear();
+            pricer.remote_rows.extend_from_slice(&dec.remote_rows);
+            pricer.remote_ctx.clear();
+            pricer.remote_ctx.extend_from_slice(&dec.remote_ctx);
+            if lane.shift == 1 {
+                // Absorbed lane: price the continuation after the
+                // consumed pending step's grant (one token per row),
+                // starting from that step's fixed end time.
+                pricer.local_ctx = dec.local_ctx + dec.local_rows;
+                for (pi, rc) in pricer.remote_ctx.iter_mut().enumerate() {
+                    *rc += dec.remote_rows[pi];
+                }
+                pricer.t0 = lane.t_end;
+            } else {
+                pricer.local_ctx = dec.local_ctx;
+                pricer.t0 = t;
+            }
+            pricer.stop_before = t_next;
+            pricer.hard_stop = hard_stop;
+            pricer.max_steps = lane.cap + 1 - lane.shift;
+            pricer.times.clear();
+            tasks.push(Box::new(move || pricer.price()));
+        }
+
+        // -- price every series: workers plus this thread, results in
+        //    lane order regardless of scheduling --------------------------
+        let mut priced: Vec<EpochPricer> = match &self.par_pool {
+            Some(pool) => pool.run_batch(tasks),
+            None => tasks.into_iter().map(|task| task()).collect(),
+        };
+
+        // -- replay the epoch-open step starts in ascending-d order (the
+        //    serial pass's own starter order). Absorbed lanes' in-flight
+        //    steps started before this pass — their start effects are
+        //    already in the books and their end times are fixed ----------
+        for lane in lanes.iter_mut() {
+            let p = &priced[lane.li];
+            lane.n_steps = p.n_steps + lane.shift;
+            if lane.shift == 0 {
+                let step = p.step_costs[0];
+                lane.t_end = t + step.step_s;
+                self.replay_step_start(lane.d, t, lane.rows, step, &p.exec[0..n_prefill]);
+            }
+        }
+        let mut next_seq = lanes.len() as u64;
+
+        // Instance 0's occupancy replay state (only lane 0 uses it).
+        let total_blocks0 = self.decode[0].kv.total_blocks();
+        let mut used_blocks0 = self.decode[0].kv.used_blocks();
+
+        // -- deterministic merge --------------------------------------
+        loop {
+            // Global minimum (end time, virtual seq) over in-flight
+            // steps; lanes ≤ n_decode, so a linear scan beats a heap.
+            let mut min = 0usize;
+            for j in 1..lanes.len() {
+                let ord = lanes[j]
+                    .t_end
+                    .total_cmp(&lanes[min].t_end)
+                    .then(lanes[j].seq.cmp(&lanes[min].seq));
+                if ord == std::cmp::Ordering::Less {
+                    min = j;
+                }
+            }
+            if lanes[min].i + 1 >= lanes[min].n_steps {
+                // The minimum is a series' scheduled last step: its end
+                // may finish rows, overflow a pool, or tie with a queued
+                // event, and the reference pops it before every later
+                // virtual end — nothing further can be replayed inline.
+                break;
+            }
+            let (d, li, i, shift, e, rows) = (
+                lanes[min].d,
+                lanes[min].li,
+                lanes[min].i,
+                lanes[min].shift,
+                lanes[min].t_end,
+                lanes[min].rows,
+            );
+
+            // End effects of lane step `i` at `e` (the reference's
+            // clean-step handler): token grant bookkeeping is deferred to
+            // the bulk flush; everything order-sensitive replays here.
+            // (An absorbed lane's step 0 is the consumed pending step —
+            // same effects, end time straight from its queue entry.)
+            self.steps_simulated += 1;
+            {
+                let dec = &mut self.decode[d];
+                dec.local_ctx += dec.local_rows;
+                for pi in 0..n_prefill {
+                    dec.remote_ctx[pi] += dec.remote_rows[pi];
+                }
+            }
+            self.metrics.on_step_tokens(e, rows as u64);
+            if d == 0 {
+                // `record_decode_occupancy`'s instance-0 policy, replayed
+                // from the planned allocation counts (the plan starts at
+                // the current pool state for both lane kinds, so lane
+                // step `i` always maps to `allocs[i]`).
+                used_blocks0 += self.scratch_leap_allocs[i] as usize;
+                let occ = KvPool::occupancy_of(used_blocks0, total_blocks0);
+                self.decode_occupancy.push(e, occ);
+            }
+            priced[li].times.push(e);
+
+            // Start effects of lane step `i + 1` at `e` (the reference's
+            // post-handler scheduling pass). Priced-series index is the
+            // lane-step index minus the absorbed shift.
+            let step = priced[li].step_costs[i + 1 - shift];
+            self.replay_step_start(
+                d,
+                e,
+                rows,
+                step,
+                &priced[li].exec[(i + 1 - shift) * n_prefill..(i + 2 - shift) * n_prefill],
+            );
+
+            let lane = &mut lanes[min];
+            lane.i += 1;
+            lane.t_end = e + step.step_s;
+            lane.seq = next_seq;
+            next_seq += 1;
+        }
+
+        // -- epoch close: every lane's in-flight step becomes a real
+        //    event, pushed in virtual-sequence order so queue ties keep
+        //    resolving exactly as the reference's push order would. An
+        //    absorbed lane that never advanced re-pushes its consumed
+        //    pending end at the same instant — its new seq cannot flip
+        //    any tie, because absorption required strict time separation
+        //    from everything still queued --------------------------------
+        lanes.sort_by_key(|l| l.seq);
+        for lane in lanes.iter() {
+            let d = lane.d;
+            self.decode[d].step_in_flight = true;
+            let epoch = self.decode[d].step_epoch;
+            self.events.push(lane.t_end, Ev::DecodeStepEnd { inst: d, epoch });
+        }
+
+        // -- settle per-row state and replay grid statistics (integer
+        //    accounting — order across instances is immaterial; keep
+        //    ascending d for readability) --------------------------------
+        lanes.sort_by_key(|l| l.d);
+        for lane in lanes.iter() {
+            let p = &priced[lane.li];
+            let remote_total: u64 = p.remote_rows.iter().sum();
+            // One selection per *newly started* step (interior commits
+            // plus the scheduled step), matching what pricing on the
+            // authoritative model would have recorded for exactly these
+            // steps. An absorbed lane's pending step was recorded when it
+            // originally started, so the shift subtracts it back out.
+            for _ in 0..(lane.i + 1 - lane.shift) {
+                self.costs.record_decode_selection(p.local_rows, remote_total);
+            }
+            if lane.i > 0 {
+                self.flush_leap(lane.d, lane.i, &p.times);
+                #[cfg(debug_assertions)]
+                self.assert_leap_residency(lane.d);
+            }
+        }
+
+        // -- return the pricers and scratch ----------------------------
+        for (li, pricer) in priced.into_iter().enumerate() {
+            self.epoch_pricers[starters[li]] = Some(pricer);
+        }
+        starters.clear();
+        lanes.clear();
+        self.scratch_epoch_starters = starters;
+        self.scratch_epoch_lanes = lanes;
     }
 
     /// Run-loop cutoff: an event popping past this instant ends the run

@@ -7,58 +7,84 @@
 //! one deterministic order, and the decode leap engine's strict
 //! before-[`EventQueue::peek_time`] horizon fences leaps off upcoming
 //! faults with no extra machinery.
+//!
+//! The heap is hand-rolled over a `Vec` rather than `std::collections::
+//! BinaryHeap` for one reason: the epoch-absorption engine
+//! (`ClusterSim::run_epoch`) needs [`EventQueue::second_min_time`] — the
+//! would-be head after removing the current head — to prove a pending
+//! decode step end is *strictly* time-separated from every other queued
+//! event before consuming it into an epoch. In a binary min-heap the
+//! second-smallest entry is always one of the root's two children, so the
+//! probe is O(1); `BinaryHeap` hides its layout. Pop order is a total
+//! order on `(time, seq)`, so any correct heap — std's or this one — pops
+//! the exact same sequence; determinism does not depend on the layout.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
-/// Heap entry: (time, seq) with reversed ordering for a min-heap; `seq`
-/// breaks ties deterministically (insertion order).
+/// Heap entry: ordered by `(time, seq)` ascending; `seq` breaks ties
+/// deterministically (insertion order).
 struct Entry<E> {
     time: f64,
     seq: u64,
     event: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap. `total_cmp` is total over all f64s, so the
-        // heap can never panic mid-sift: non-finite timestamps are rejected
-        // with a clear message at the `push` call site instead (the only
-        // place a bad timestamp can enter).
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 /// Deterministic min-time event queue.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    heap: Vec<Entry<E>>,
     next_seq: u64,
     clock: f64,
 }
 
 impl<E> Default for EventQueue<E> {
     fn default() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0, clock: 0.0 }
+        EventQueue { heap: Vec::new(), next_seq: 0, clock: 0.0 }
     }
 }
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Strict `(time, seq)` order. `total_cmp` is total over all f64s, so
+    /// the heap can never panic mid-sift: non-finite timestamps are
+    /// rejected with a clear message at the `push` call site instead (the
+    /// only place a bad timestamp can enter).
+    fn before(a: &Entry<E>, b: &Entry<E>) -> bool {
+        a.time.total_cmp(&b.time).then_with(|| a.seq.cmp(&b.seq)) == Ordering::Less
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::before(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let len = self.heap.len();
+        loop {
+            let mut smallest = i;
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            if l < len && Self::before(&self.heap[l], &self.heap[smallest]) {
+                smallest = l;
+            }
+            if r < len && Self::before(&self.heap[r], &self.heap[smallest]) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
     }
 
     /// Current simulation time (the timestamp of the last popped event).
@@ -93,6 +119,7 @@ impl<E> EventQueue<E> {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Entry { time: t, seq, event });
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Schedule `event` `delay` seconds after the current clock — the
@@ -103,10 +130,34 @@ impl<E> EventQueue<E> {
         self.push(self.clock + delay, event);
     }
 
+    fn pop_entry(&mut self) -> Option<Entry<E>> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let e = self.heap.pop();
+        self.sift_down(0);
+        e
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        let e = self.heap.pop()?;
+        let e = self.pop_entry()?;
         self.clock = e.time;
+        Some((e.time, e.event))
+    }
+
+    /// Pop the earliest event WITHOUT advancing the clock — the epoch
+    /// engine's absorption primitive. A consumed pending step end is
+    /// replayed inside the epoch merge at its own timestamp, but the
+    /// merge may also close lanes whose scheduled ends land *earlier*
+    /// than the absorbed time; leaving the clock at the pass time keeps
+    /// those pushes valid. The run loop's own pops restore the clock's
+    /// monotone march (everything left in the queue fires later than
+    /// every absorbed event, by the absorption loop's prefix rule).
+    pub fn pop_no_clock(&mut self) -> Option<(f64, E)> {
+        let e = self.pop_entry()?;
         Some((e.time, e.event))
     }
 
@@ -116,7 +167,40 @@ impl<E> EventQueue<E> {
     /// was pushed earlier, so it holds a smaller tie-breaking `seq` and
     /// the reference run pops it before that step's end.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+        self.heap.first().map(|e| e.time)
+    }
+
+    /// Earliest event (time + borrowed payload) without popping — the
+    /// epoch absorption loop's eligibility probe.
+    pub fn peek(&self) -> Option<(f64, &E)> {
+        self.heap.first().map(|e| (e.time, &e.event))
+    }
+
+    /// Timestamp of the entry that would become the head if the current
+    /// head were popped. In a binary min-heap the second-smallest entry
+    /// is always one of the root's children, so this is O(1). The epoch
+    /// absorption loop consumes the head only when this is *strictly*
+    /// later than the head's time: an exact tie means the serial
+    /// reference interleaves another handler at the same instant, and
+    /// re-pushing an unconsumed absorbed event would flip the `seq`
+    /// tie-break.
+    pub fn second_min_time(&self) -> Option<f64> {
+        match (self.heap.get(1), self.heap.get(2)) {
+            (Some(a), Some(b)) => Some(if Self::before(b, a) { b.time } else { a.time }),
+            (Some(a), None) => Some(a.time),
+            (None, _) => None,
+        }
+    }
+
+    /// Epoch-horizon probe for the within-run parallel engine: true iff a
+    /// queued event would pop at or before an epoch-internal step ending
+    /// at `t`. An event at *exactly* `t` was pushed before the epoch
+    /// opened, so it holds a smaller tie-breaking `seq` and the serial
+    /// reference pops it first — the step must become a scheduled event,
+    /// not an inline replay. Packaged here so call sites cannot get the
+    /// tie direction wrong.
+    pub fn fires_at_or_before(&self, t: f64) -> bool {
+        self.peek_time().map_or(false, |head| head <= t)
     }
 }
 
@@ -215,6 +299,67 @@ mod tests {
     }
 
     #[test]
+    fn peek_exposes_the_head_event() {
+        let mut q = EventQueue::new();
+        assert!(q.peek().is_none());
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        let (t, e) = q.peek().unwrap();
+        assert_eq!((t, *e), (1.0, "a"));
+        assert_eq!(q.len(), 2, "peeking must not pop");
+    }
+
+    #[test]
+    fn fires_at_or_before_is_inclusive() {
+        let mut q = EventQueue::new();
+        assert!(!q.fires_at_or_before(1.0), "empty queue never fires");
+        q.push(2.0, ());
+        assert!(!q.fires_at_or_before(1.5));
+        assert!(q.fires_at_or_before(2.0), "a tie means the queued event pops first");
+        assert!(q.fires_at_or_before(3.0));
+    }
+
+    #[test]
+    fn second_min_time_tracks_the_would_be_head() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.second_min_time(), None);
+        q.push(5.0, "only");
+        assert_eq!(q.second_min_time(), None, "a single entry has no runner-up");
+        q.push(3.0, "head");
+        assert_eq!(q.peek_time(), Some(3.0));
+        assert_eq!(q.second_min_time(), Some(5.0));
+        q.push(4.0, "middle");
+        assert_eq!(q.second_min_time(), Some(4.0));
+        // An exact tie with the head is reported (the absorption loop
+        // treats it as "not strictly separated" and stops).
+        q.push(3.0, "tied");
+        assert_eq!(q.second_min_time(), Some(3.0));
+        // And it stays consistent with actual pop order all the way down.
+        while q.len() >= 2 {
+            let second = q.second_min_time().unwrap();
+            q.pop();
+            assert_eq!(q.peek_time(), Some(second));
+        }
+    }
+
+    #[test]
+    fn pop_no_clock_leaves_the_clock_alone() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "pass");
+        q.push(4.0, "absorbed");
+        q.push(9.0, "later");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!((t, q.clock()), (2.0, 2.0));
+        let (t, e) = q.pop_no_clock().unwrap();
+        assert_eq!((t, e), (4.0, "absorbed"));
+        assert_eq!(q.clock(), 2.0, "absorption must not advance the clock");
+        // A lane closing earlier than the absorbed time stays schedulable.
+        q.push(3.0, "close-push");
+        assert_eq!(q.pop().unwrap(), (3.0, "close-push"));
+        assert_eq!(q.pop().unwrap(), (9.0, "later"));
+    }
+
+    #[test]
     fn property_always_sorted() {
         crate::util::prop::check("event_queue_sorted", 50, |rng| {
             let mut q = EventQueue::new();
@@ -225,6 +370,22 @@ mod tests {
             while let Some((t, _)) = q.pop() {
                 assert!(t >= prev);
                 prev = t;
+            }
+        });
+    }
+
+    #[test]
+    fn property_second_min_matches_pop_order() {
+        crate::util::prop::check("event_queue_second_min", 50, |rng| {
+            let mut q = EventQueue::new();
+            for i in 0..64u64 {
+                // Coarse grid so exact ties actually occur.
+                q.push((rng.range_usize(0, 16) as f64) * 0.5, i);
+            }
+            while q.len() >= 2 {
+                let second = q.second_min_time().unwrap();
+                q.pop();
+                assert_eq!(q.peek_time(), Some(second));
             }
         });
     }

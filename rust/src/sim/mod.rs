@@ -8,6 +8,7 @@ pub mod run;
 
 pub use cluster::{ClusterSim, SimConfig, SimReport};
 pub use run::{
-    parallel_map, parallel_map_capped, run_e2e, run_e2e_serial, run_ratio_sweep,
-    run_ratio_sweep_serial, E2eConfig, E2ePoint,
+    budget_acquire, budget_release, par_config, parallel_map, parallel_map_capped, run_e2e,
+    run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, E2eConfig, E2ePoint,
+    ParallelismConfig, PoolTask, WorkerPool,
 };

@@ -9,18 +9,78 @@
 //! force serial execution.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 use crate::config::{ModelSpec, OffloadPolicy};
 use crate::workload::WorkloadKind;
 
 use super::cluster::{ClusterSim, SimConfig, SimReport};
 
+/// Process-wide parallelism settings, resolved exactly once. Hot sweep
+/// loops call [`parallel_map`] per point; re-reading `ADRENALINE_SERIAL`
+/// and re-issuing the `available_parallelism` syscall on every call is
+/// waste, and the answers cannot change mid-process anyway.
+#[derive(Debug)]
+pub struct ParallelismConfig {
+    /// `ADRENALINE_SERIAL=1`: force every [`parallel_map`] serial.
+    pub serial: bool,
+    /// Detected hardware thread count (≥ 1).
+    pub hw_threads: usize,
+}
+
+/// The once-initialized [`ParallelismConfig`].
+pub fn par_config() -> &'static ParallelismConfig {
+    static CONFIG: OnceLock<ParallelismConfig> = OnceLock::new();
+    CONFIG.get_or_init(|| ParallelismConfig {
+        serial: std::env::var("ADRENALINE_SERIAL").map_or(false, |v| v == "1"),
+        hw_threads: std::thread::available_parallelism().map_or(1, |p| p.get()),
+    })
+}
+
+/// Process-wide thread-budget permits, seeded with the hardware thread
+/// count. Every layer that spawns workers — across-run [`parallel_map`]
+/// and the within-run [`WorkerPool`] — draws from this one pool, so
+/// nested fan-out (figure groups → sweeps → per-run epoch workers)
+/// degrades each inner level toward serial instead of oversubscribing
+/// the host with groups × sweeps × instances threads.
+fn thread_permits() -> &'static AtomicUsize {
+    static PERMITS: OnceLock<AtomicUsize> = OnceLock::new();
+    PERMITS.get_or_init(|| AtomicUsize::new(par_config().hw_threads))
+}
+
+/// Take up to `want` permits from the process-wide thread budget and
+/// return how many were actually granted (possibly 0). Never blocks.
+pub fn budget_acquire(want: usize) -> usize {
+    if want == 0 {
+        return 0;
+    }
+    let permits = thread_permits();
+    let mut cur = permits.load(Ordering::Relaxed);
+    loop {
+        let take = want.min(cur);
+        if take == 0 {
+            return 0;
+        }
+        match permits.compare_exchange(cur, cur - take, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return take,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Return `n` permits taken by [`budget_acquire`].
+pub fn budget_release(n: usize) {
+    if n > 0 {
+        thread_permits().fetch_add(n, Ordering::AcqRel);
+    }
+}
+
 /// Deterministic parallel map: computes `f(0)..f(n-1)` on a pool of
 /// worker threads and returns the results in index order. Each index is
 /// claimed exactly once off an atomic counter, so results depend only on
 /// `f`, never on scheduling. Falls back to serial for trivial inputs,
-/// single-core machines, or `ADRENALINE_SERIAL=1`.
+/// single-core machines, an exhausted thread budget, or
+/// `ADRENALINE_SERIAL=1`.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -29,21 +89,29 @@ where
     parallel_map_capped(n, usize::MAX, f)
 }
 
-/// [`parallel_map`] with an explicit worker cap. Callers whose work items
-/// fan out *again* internally (e.g. the `figures` binary runs figure
-/// groups that each drive parallel sweeps) cap the outer level so total
-/// live work stays near the core count instead of groups × cores.
+/// [`parallel_map`] with an explicit worker cap. Worker threads are drawn
+/// from the process-wide budget ([`budget_acquire`]), so callers whose
+/// work items fan out *again* internally (e.g. the `figures` binary runs
+/// figure groups that each drive parallel sweeps, whose sims may spawn
+/// within-run epoch workers) compose without oversubscription: inner
+/// levels see whatever permits the outer levels left and otherwise run
+/// serial. The explicit cap remains for callers that want *less* than
+/// their budget share.
 pub fn parallel_map_capped<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let force_serial = std::env::var("ADRENALINE_SERIAL").map_or(false, |v| v == "1");
-    let threads = std::thread::available_parallelism()
-        .map_or(1, |p| p.get())
-        .min(n)
-        .min(max_threads.max(1));
-    if force_serial || threads <= 1 {
+    let pc = par_config();
+    let want = pc.hw_threads.min(n).min(max_threads.max(1));
+    if pc.serial || want <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let threads = budget_acquire(want);
+    if threads <= 1 {
+        // A single extra worker plus an idle collector is no faster than
+        // the caller doing the work itself; give the permit back.
+        budget_release(threads);
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
@@ -71,9 +139,131 @@ where
             out[i] = Some(result);
         }
     });
+    budget_release(threads);
     out.into_iter()
         .map(|r| r.expect("every sweep point completes exactly once"))
         .collect()
+}
+
+type PoolJob = Box<dyn FnOnce() + Send>;
+
+/// One unit of work for [`WorkerPool::run_batch`]: an owned closure whose
+/// result is routed back to the submitting thread in input order.
+pub type PoolTask<T> = Box<dyn FnOnce() -> T + Send>;
+
+/// A persistent pool of worker threads for within-run parallelism
+/// (`ClusterSim` epoch pricing). Threads are spawned once per pool — a
+/// per-epoch dispatch costs two channel sends per task, not a thread
+/// spawn — and are drawn from the same process-wide permits as
+/// [`parallel_map`], so sweeps already running one sim per core hand
+/// their sims zero-worker pools (pure inline execution) instead of
+/// oversubscribing. A zero-worker pool is fully functional:
+/// [`WorkerPool::run_batch`] just runs every task on the calling thread,
+/// which is also the `ADRENALINE_NO_PAR=1` serial-reference path.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<PoolJob>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    permits: usize,
+}
+
+impl WorkerPool {
+    /// Spawn up to `want` persistent workers, bounded by the process-wide
+    /// thread budget. May legitimately return a pool with zero workers.
+    pub fn new(want: usize) -> WorkerPool {
+        let permits = budget_acquire(want);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(permits);
+        for _ in 0..permits {
+            let rx = Arc::clone(&rx);
+            handles.push(std::thread::spawn(move || loop {
+                let job = match rx.lock() {
+                    Ok(guard) => guard.recv(),
+                    Err(_) => break,
+                };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break,
+                }
+            }));
+        }
+        WorkerPool { tx: Some(tx), handles, permits }
+    }
+
+    /// Number of live worker threads (0 ⇒ `run_batch` is inline).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every task and return the results in task order. The calling
+    /// thread participates instead of idling, so a batch of `n` tasks on
+    /// a pool of `w` workers runs at concurrency `min(n, w + 1)`. Task
+    /// results must not depend on scheduling — callers get them back in
+    /// input order regardless of which thread ran what.
+    pub fn run_batch<T: Send + 'static>(&self, tasks: Vec<PoolTask<T>>) -> Vec<T> {
+        let n = tasks.len();
+        if self.workers() == 0 || n <= 1 {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let slots: Arc<Vec<Mutex<Option<PoolTask<T>>>>> =
+            Arc::new(tasks.into_iter().map(|t| Mutex::new(Some(t))).collect());
+        let next = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        // One drain job per worker; each claims task indices off the shared
+        // counter until the batch is exhausted, then returns the worker to
+        // the pool's job queue.
+        for _ in 0..self.workers().min(n - 1) {
+            let slots = Arc::clone(&slots);
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let job: PoolJob = Box::new(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let task = slots[i].lock().ok().and_then(|mut slot| slot.take());
+                if let Some(task) = task {
+                    if tx.send((i, task())).is_err() {
+                        break;
+                    }
+                }
+            });
+            self.tx
+                .as_ref()
+                .expect("pool sender lives until drop")
+                .send(job)
+                .expect("pool workers outlive the pool handle");
+        }
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= slots.len() {
+                break;
+            }
+            let task = slots[i].lock().ok().and_then(|mut slot| slot.take());
+            if let Some(task) = task {
+                let _ = tx.send((i, task()));
+            }
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        for (i, result) in rx {
+            out[i] = Some(result);
+        }
+        out.into_iter()
+            .map(|r| r.expect("every epoch task completes exactly once"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+        budget_release(self.permits);
+    }
 }
 
 /// One figure panel's configuration.
@@ -295,6 +485,37 @@ mod tests {
         }
         // cap 0 is clamped to 1 worker, not a deadlock.
         assert_eq!(parallel_map_capped(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn thread_budget_is_bounded_and_refundable() {
+        let got = budget_acquire(usize::MAX);
+        assert!(got <= par_config().hw_threads);
+        budget_release(got);
+        assert_eq!(budget_acquire(0), 0);
+    }
+
+    #[test]
+    fn worker_pool_returns_batch_results_in_order() {
+        let pool = WorkerPool::new(3);
+        // Several rounds over the same persistent pool: workers must
+        // return to the job queue between batches.
+        for round in 0..3usize {
+            let tasks: Vec<PoolTask<usize>> = (0..17usize)
+                .map(|i| -> PoolTask<usize> { Box::new(move || i * i + round) })
+                .collect();
+            let out = pool.run_batch(tasks);
+            assert_eq!(out, (0..17).map(|i| i * i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let tasks: Vec<PoolTask<usize>> =
+            (0..5usize).map(|i| -> PoolTask<usize> { Box::new(move || i + 1) }).collect();
+        assert_eq!(pool.run_batch(tasks), vec![1, 2, 3, 4, 5]);
     }
 
     /// NaN-tolerant exact equality (sweep points at unfinished rates can

@@ -1,0 +1,379 @@
+//! Within-run parallelism — the bit-identity contract (ISSUE 7).
+//!
+//! Scheduling passes on multi-decode topologies run the epoch engine:
+//! every starting decode instance's step series is priced concurrently
+//! on a worker pool, other instances' pending *provably clean* step
+//! ends are absorbed into the epoch as lanes (strict (time, seq)
+//! queue-prefix rule — see `ClusterSim::run_epoch`), and everything is
+//! committed through a deterministic merge. The contract is
+//! the strongest the house style has, and *stricter* than the leap
+//! engine's: a parallel run's `SimReport` must be bit-identical to the
+//! `ServingConfig::no_par` / `ADRENALINE_NO_PAR=1` inline run —
+//! **including `events_processed`** (the two modes execute the same
+//! epoch code; only the thread that prices each series differs) — and
+//! bit-identical except `events_processed` to the
+//! `ADRENALINE_NO_LEAP=1` per-step reference (collapsing events is the
+//! point).
+//!
+//! The scenario matrix leans on many-instance topologies (2, 4 and 8
+//! decode instances) because that is where epochs actually fire, and
+//! deliberately includes every shared structure the merge must replay
+//! in exact serial event order: B_TPOT estimator EMAs (bounds
+//! feedback), duty-cycle decay and executor busy time (offloaded rows),
+//! rebalance migrations (dense queued events truncating epochs),
+//! preemption churn under tiny pools (horizon exhaustion mid-epoch),
+//! fault windows (straggler multipliers re-synced into the pricer
+//! clones), and the exact cost plane (no grid, pure roofline pricing).
+//! CI re-runs the sim suites under `ADRENALINE_NO_PAR=1` and under the
+//! combined `ADRENALINE_NO_PAR=1 ADRENALINE_NO_LEAP=1` so every
+//! engine combination stays green.
+
+use adrenaline::config::{
+    BoundsFeedbackConfig, FaultConfig, FaultKind, ModelSpec, RebalanceConfig, ScriptedFault,
+};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{parallel_map, ClusterSim, SimConfig, SimReport};
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Everything in the report except `events_processed` must match bit
+/// for bit (the leap/epoch engines collapse events; callers that expect
+/// even the event counts to tie assert that separately).
+fn assert_bit_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.req_preemptions_total, b.req_preemptions_total);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.executor_bw_util, b.executor_bw_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.ttft_slo_attainment, b.ttft_slo_attainment));
+    assert!(feq(a.tpot_slo_attainment, b.tpot_slo_attainment));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    match (&a.window, &b.window) {
+        (Some(x), Some(y)) => {
+            assert!(feq(x.start, y.start) && feq(x.end, y.end), "window bounds");
+            assert_eq!(x.saturated, y.saturated);
+        }
+        (None, None) => {}
+        _ => panic!("stable-window presence differs"),
+    }
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("prefill_occupancy", &a.prefill_occupancy, &b.prefill_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.exact_costs, b.exact_costs);
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_used_slots, b.graph_used_slots);
+    assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
+    assert!(feq(a.graph_padding_overhead, b.graph_padding_overhead));
+    assert_eq!(a.graph_bucket_hits, b.graph_bucket_hits);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migrations_to_offload, b.migrations_to_offload);
+    assert_eq!(a.migrations_to_local, b.migrations_to_local);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_timeline_eq("offloaded_frac", &a.offloaded_frac_timeline, &b.offloaded_frac_timeline);
+    assert_timeline_eq(
+        "prefill_pressure",
+        &a.prefill_pressure_timeline,
+        &b.prefill_pressure_timeline,
+    );
+    assert_eq!(a.metadata_residual, b.metadata_residual);
+    assert_timeline_eq("b_tpot", &a.b_tpot_timeline, &b.b_tpot_timeline);
+    assert_timeline_eq("ob", &a.ob_timeline, &b.ob_timeline);
+    assert_eq!(a.bounds_refreshes, b.bounds_refreshes);
+    assert_eq!(a.b_tpot_observations, b.b_tpot_observations);
+    assert_eq!(a.decision_counts, b.decision_counts);
+    assert_eq!(a.decision_counts_rerouted, b.decision_counts_rerouted);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert_eq!(a.recompute_tokens_replayed, b.recompute_tokens_replayed);
+    assert_eq!(a.transfer_retries, b.transfer_retries);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+}
+
+/// Run `cfg` with parallel epoch pricing on and off; returns
+/// (parallel, inline). Leaping stays at the config's setting (default
+/// on — epochs only exist on the leap path).
+fn par_pair(cfg: &SimConfig) -> (SimReport, SimReport) {
+    let mut on = cfg.clone();
+    on.serving.no_par = false;
+    let mut off = cfg.clone();
+    off.serving.no_par = true;
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { on.clone() } else { off.clone() }).run()
+    });
+    let off = runs.pop().expect("two runs");
+    let on = runs.pop().expect("two runs");
+    (on, off)
+}
+
+/// The par/no-par contract: the two modes run the same epoch code, so
+/// even the event counts must tie exactly.
+fn assert_par_identical(on: &SimReport, off: &SimReport) {
+    assert_bit_identical(on, off);
+    assert_eq!(
+        on.events_processed, off.events_processed,
+        "par and no_par execute the same epoch schedule"
+    );
+}
+
+/// A saturated many-instance scenario: the epoch engine's home turf.
+fn many_instance_cfg(n_decode: u32, rate: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = 40.0;
+    cfg.cluster.n_decode = n_decode;
+    cfg
+}
+
+#[test]
+fn two_instance_par_bit_identity() {
+    let (on, off) = par_pair(&many_instance_cfg(2, 8.0));
+    assert!(on.finished > 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn four_instance_par_bit_identity() {
+    let (on, off) = par_pair(&many_instance_cfg(4, 16.0));
+    assert!(on.finished > 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn eight_instance_par_bit_identity() {
+    let (on, off) = par_pair(&many_instance_cfg(8, 32.0));
+    assert!(on.finished > 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn single_instance_never_epochs() {
+    // One decode instance never enters the epoch engine (the
+    // `decode.len() >= 2` gate): par and no_par are trivially the same
+    // run, and neither may perturb the solo leap path.
+    let (on, off) = par_pair(&many_instance_cfg(1, 4.0));
+    assert!(on.finished > 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn par_matches_per_step_reference() {
+    // Three-way anchor: the parallel run must also match the per-step
+    // no-leap reference bit for bit (except collapsed events) — the
+    // epoch merge replays exactly the serial handler sequence.
+    let cfg = many_instance_cfg(4, 16.0);
+    let mut par = cfg.clone();
+    par.serving.no_par = false;
+    let mut reference = cfg.clone();
+    reference.serving.no_leap = true;
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { par.clone() } else { reference.clone() }).run()
+    });
+    let reference = runs.pop().expect("two runs");
+    let par = runs.pop().expect("two runs");
+    assert!(par.finished > 0);
+    assert_bit_identical(&par, &reference);
+    assert!(
+        par.events_processed <= reference.events_processed,
+        "epochs must never add events: {} vs {}",
+        par.events_processed,
+        reference.events_processed
+    );
+}
+
+#[test]
+fn worker_count_is_unobservable() {
+    // `par_workers` picks concurrency, never results: 1 (≡ inline), 2,
+    // 3 and a saturating request must all produce one bit-identical
+    // report.
+    let cfg = many_instance_cfg(4, 16.0);
+    let reports: Vec<SimReport> = parallel_map(4, |i| {
+        let mut c = cfg.clone();
+        c.serving.par_workers = [1, 2, 3, 64][i];
+        ClusterSim::new(c).run()
+    });
+    for r in &reports[1..] {
+        assert_par_identical(r, &reports[0]);
+    }
+}
+
+#[test]
+fn bounds_feedback_par_bit_identity() {
+    // Per-step B_TPOT EMA observations are the most order-sensitive
+    // shared state the merge replays: any cross-instance reordering of
+    // step starts diverges the estimator and everything downstream.
+    let mut cfg = many_instance_cfg(4, 20.0);
+    cfg.duration_s = 45.0;
+    cfg.arrivals = ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 };
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.bounds_feedback = Some(BoundsFeedbackConfig::default());
+    let (on, off) = par_pair(&cfg);
+    assert!(on.b_tpot_observations > 0, "the estimator must observe steps");
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn rebalance_churn_par_bit_identity() {
+    // Rebalance ticks and migration completions land between epochs and
+    // truncate them; migrations also move rows across instances so the
+    // starter sets keep changing.
+    let mut cfg = many_instance_cfg(4, 24.0);
+    cfg.duration_s = 45.0;
+    cfg.arrivals = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
+    cfg.serving.rebalance = Some(RebalanceConfig::default());
+    let (on, off) = par_pair(&cfg);
+    assert!(on.finished > 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn preemption_churn_par_bit_identity() {
+    // Tiny pools: epoch horizons exhaust mid-window (the merge's
+    // stop-and-truncate path) and the shared executor-pool bound across
+    // starters is what keeps overflow preemptions on evented steps.
+    let mut cfg =
+        SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::OpenThoughts, 2.0);
+    cfg.duration_s = 20.0;
+    cfg.cluster.n_decode = 2;
+    cfg.serving.decode_kv_capacity_tokens = Some(16 * 1024);
+    cfg.serving.executor_kv_capacity_tokens = Some(8 * 1024);
+    let (on, off) = par_pair(&cfg);
+    assert!(on.preemptions > 0, "tiny pools must preempt");
+    assert!(on.tokens_conserved);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn fault_straggler_par_bit_identity() {
+    // Straggler windows mutate the authoritative cost plane's slowdown
+    // multipliers mid-run; the pricer clones re-sync at every epoch, so
+    // pre-, intra- and post-window epochs all price identically to the
+    // inline path. A decode crash also exercises the down-instance
+    // filter in the epoch starter scan.
+    let mut cfg = many_instance_cfg(4, 16.0);
+    cfg.duration_s = 45.0;
+    cfg.serving.fault = Some(FaultConfig {
+        script: vec![
+            ScriptedFault { kind: FaultKind::Straggler, instance: 0, at_s: 8.0, down_s: 12.0 },
+            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 6.0 },
+        ],
+        straggler_factor: 2.5,
+        ..FaultConfig::default()
+    });
+    let (on, off) = par_pair(&cfg);
+    assert!(on.faults_injected >= 2);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn exact_costs_par_bit_identity() {
+    // The exact (pre-bucketing) cost plane: no grid selections to
+    // replay, pure roofline pricing on the clones.
+    let mut cfg = many_instance_cfg(4, 16.0);
+    cfg.serving.exact_costs = true;
+    let (on, off) = par_pair(&cfg);
+    assert!(on.exact_costs && on.finished > 0);
+    assert_eq!(on.graph_selections, 0);
+    assert_par_identical(&on, &off);
+}
+
+#[test]
+fn epochs_still_collapse_events() {
+    // The perf claim behind the engine: a saturated 8-instance run must
+    // still process far fewer events than the per-step reference (the
+    // epoch merge commits interior steps inline, exactly like the solo
+    // leap does — and absorption keeps the window open past other
+    // instances' pending clean step ends, which at saturation would
+    // otherwise fence every epoch to a single step). Under
+    // ADRENALINE_NO_LEAP=1 both runs are the reference and the counts
+    // legitimately tie.
+    let cfg = many_instance_cfg(8, 32.0);
+    let mut leap = cfg.clone();
+    leap.serving.no_leap = false;
+    let mut reference = cfg.clone();
+    reference.serving.no_leap = true;
+    let mut runs: Vec<SimReport> = parallel_map(2, |i| {
+        ClusterSim::new(if i == 0 { leap.clone() } else { reference.clone() }).run()
+    });
+    let reference = runs.pop().expect("two runs");
+    let leap = runs.pop().expect("two runs");
+    assert_eq!(leap.steps_simulated, reference.steps_simulated);
+    let env_forced = std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
+    if env_forced {
+        assert_eq!(leap.events_processed, reference.events_processed);
+    } else {
+        assert!(
+            (leap.events_processed as f64) < reference.events_processed as f64 * 0.7,
+            "multi-instance runs must still collapse events: {} vs {}",
+            leap.events_processed,
+            reference.events_processed
+        );
+    }
+}
+
+#[test]
+fn property_par_bit_identity_random_configs() {
+    // Random topologies (1–6 decode instances), rates, seeds, pool
+    // budgets and durations: the epoch horizon must never commit a
+    // finish, an overflow, or a queued-event interleaving inline, and
+    // the merge must replay every interleaving the serial reference
+    // produces — any divergence fails the paired comparison.
+    adrenaline::util::prop::check("par_run_bit_identity", 5, |rng| {
+        let model = ModelSpec::llama2_7b();
+        let workload = if rng.range_usize(0, 2) == 0 {
+            WorkloadKind::ShareGpt
+        } else {
+            WorkloadKind::OpenThoughts
+        };
+        let mut cfg = SimConfig::paper_default(model, workload, 2.0 + rng.f64() * 14.0);
+        cfg.duration_s = 10.0 + rng.f64() * 10.0;
+        cfg.seed = rng.next_u64();
+        cfg.cluster.n_decode = 1 + rng.range_usize(0, 6) as u32;
+        if rng.range_usize(0, 2) == 0 {
+            let dec = 12 * 1024 + rng.range_usize(0, 32 * 1024);
+            let exe = 8 * 1024 + rng.range_usize(0, 16 * 1024);
+            cfg.serving.decode_kv_capacity_tokens = Some(dec);
+            cfg.serving.executor_kv_capacity_tokens = Some(exe);
+        }
+        let (on, off) = par_pair(&cfg);
+        assert_par_identical(&on, &off);
+    });
+}

@@ -237,8 +237,8 @@ fn two_decode_instances_bit_identity() {
 #[test]
 fn two_decode_instances_with_rebalance_bit_identity() {
     // Tick-driven migrations can free KV blocks on several decode
-    // instances inside one pass — the exact multi-starter scenario the
-    // sole-starter guard exists for.
+    // instances inside one pass — a multi-starter scenario, which the
+    // epoch engine now owns (prices all lanes, merges deterministically).
     let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 24.0);
     cfg.duration_s = 40.0;
     cfg.arrivals = ArrivalPattern::Bursty { period_s: 30.0, duty: 0.25, mult: 3.0 };
