@@ -2,7 +2,7 @@
 //! naive fixed-ratio policy, and the printed-vs-strict C1 variant.
 
 use adrenaline::config::{ModelSpec, OffloadPolicy};
-use adrenaline::sim::{run_ratio_sweep, ClusterSim, SimConfig};
+use adrenaline::sim::{run_ratio_sweep_with, ClusterSim, ExecMode, SimConfig};
 use adrenaline::util::bench::{figure_row, Bench};
 use adrenaline::workload::WorkloadKind;
 
@@ -26,7 +26,14 @@ fn main() {
     figure_row("ablation_admission", "strict_offl_frac", 0.0, strict.offloaded_fraction);
 
     // Naive fixed ratios (what an operator would hand-tune offline).
-    let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &[0.3, 0.5, 0.7, 0.9], 120.0);
+    let pts = run_ratio_sweep_with(
+        m,
+        WorkloadKind::ShareGpt,
+        rate,
+        &[0.3, 0.5, 0.7, 0.9],
+        120.0,
+        ExecMode::Parallel,
+    );
     let mut best = f64::MIN;
     for (ratio, r) in &pts {
         figure_row("ablation_admission", "fixed_tput", *ratio, r.throughput);

@@ -1,7 +1,7 @@
 //! Bench + data for Fig 11: the end-to-end ShareGPT + Llama-2 7B
 //! request-rate sweep, vLLM baseline vs Adrenaline (all four panels).
 
-use adrenaline::sim::{run_e2e, E2eConfig};
+use adrenaline::sim::{run_e2e_with, E2eConfig, ExecMode};
 use adrenaline::util::bench::{figure_row, Bench};
 
 fn main() {
@@ -10,7 +10,7 @@ fn main() {
         duration_s: 120.0,
         ..E2eConfig::fig11()
     };
-    let pts = run_e2e(&cfg);
+    let pts = run_e2e_with(&cfg, ExecMode::Parallel);
     for p in &pts {
         figure_row("fig11a", &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
         figure_row("fig11b", &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
@@ -30,6 +30,6 @@ fn main() {
     // Bench one sweep point end-to-end.
     Bench::new(1, 5).run("fig11/e2e_pair_at_24rps_120s", || {
         let cfg = E2eConfig { rates: vec![24.0], duration_s: 120.0, ..E2eConfig::fig11() };
-        let _ = run_e2e(&cfg);
+        let _ = run_e2e_with(&cfg, ExecMode::Parallel);
     });
 }

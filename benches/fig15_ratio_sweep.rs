@@ -2,7 +2,7 @@
 //! inflection and the resource-utilization panels.
 
 use adrenaline::config::ModelSpec;
-use adrenaline::sim::run_ratio_sweep;
+use adrenaline::sim::{run_ratio_sweep_with, ExecMode};
 use adrenaline::util::bench::{figure_row, Bench};
 use adrenaline::workload::WorkloadKind;
 
@@ -10,7 +10,14 @@ fn main() {
     let ratios = [0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
     for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
         let rate = if m.name == "llama2-7b" { 24.0 } else { 16.0 };
-        let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &ratios, 120.0);
+        let pts = run_ratio_sweep_with(
+            m,
+            WorkloadKind::ShareGpt,
+            rate,
+            &ratios,
+            120.0,
+            ExecMode::Parallel,
+        );
         for (ratio, r) in &pts {
             figure_row("fig15", &format!("{}_tput", m.name), *ratio, r.throughput);
             figure_row(
@@ -30,12 +37,13 @@ fn main() {
     }
 
     Bench::new(1, 3).run("fig15/ratio_point_sharegpt_7b", || {
-        let _ = run_ratio_sweep(
+        let _ = run_ratio_sweep_with(
             ModelSpec::llama2_7b(),
             WorkloadKind::ShareGpt,
             24.0,
             &[0.7],
             120.0,
+            ExecMode::Parallel,
         );
     });
 }

@@ -22,11 +22,13 @@
 
 use std::collections::BTreeMap;
 
-use adrenaline::config::{FaultConfig, FaultKind, ModelSpec, ScriptedFault};
-use adrenaline::sim::{ClusterSim, SimConfig, SimReport};
+use adrenaline::config::{
+    AutoscaleConfig, FaultConfig, FaultKind, FleetConfig, ModelSpec, RouterPolicy, ScriptedFault,
+};
+use adrenaline::sim::{ClusterSim, FleetReport, FleetSim, SimConfig, SimReport};
 use adrenaline::util::bench::{figure_row, Bench, BenchStats};
 use adrenaline::util::json::Json;
-use adrenaline::workload::WorkloadKind;
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -159,6 +161,85 @@ fn run_par_mode(
     (stats, last.expect("bench ran at least once"))
 }
 
+/// Run the fleet scenario (4 routed groups, diurnal trace, autoscaled
+/// prefill pools) in one leap mode; returns (stats, last report).
+fn run_fleet_mode(
+    m: ModelSpec,
+    name: &str,
+    rate: f64,
+    duration: f64,
+    iters: usize,
+    no_leap: bool,
+) -> (BenchStats, FleetReport) {
+    let label = if no_leap {
+        format!("sim_throughput/{name}_no_leap")
+    } else {
+        format!("sim_throughput/{name}")
+    };
+    let mut last: Option<FleetReport> = None;
+    let stats = Bench::new(1, iters).run(&label, || {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = duration;
+        cfg.serving.no_leap = no_leap;
+        cfg.arrivals = ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 };
+        cfg.cluster.n_prefill = 3;
+        cfg.serving.fleet = Some(FleetConfig {
+            groups: 4,
+            router: RouterPolicy::RoundRobin,
+            autoscale: Some(AutoscaleConfig {
+                min_prefill: 1,
+                max_prefill: 3,
+                ..AutoscaleConfig::default()
+            }),
+        });
+        last = Some(FleetSim::new(cfg).run());
+    });
+    (stats, last.expect("bench ran at least once"))
+}
+
+/// Fleet analogue of `row`: the leap-robust metrics the fleet report
+/// aggregates, plus the fleet-only counters.
+fn fleet_row(
+    name: &str,
+    rate: f64,
+    duration_s: f64,
+    leap: bool,
+    stats: &BenchStats,
+    report: &FleetReport,
+    leap_speedup: Option<f64>,
+) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str(format!("sim_throughput/{name}")));
+    o.insert("rate_rps".into(), Json::Num(rate));
+    o.insert("duration_s".into(), Json::Num(duration_s));
+    o.insert("leap".into(), Json::Bool(leap));
+    o.insert("iters".into(), Json::Num(stats.iters as f64));
+    o.insert("p50_wall_s".into(), Json::Num(stats.p50_s));
+    o.insert("mean_wall_s".into(), Json::Num(stats.mean_s));
+    o.insert(
+        "sim_seconds_per_wall_second".into(),
+        Json::Num(duration_s / stats.p50_s),
+    );
+    o.insert(
+        "steps_per_second".into(),
+        Json::Num(report.steps_simulated as f64 / stats.p50_s),
+    );
+    o.insert("steps_simulated".into(), Json::Num(report.steps_simulated as f64));
+    if let Some(s) = leap_speedup {
+        o.insert("leap_speedup_steps_per_s".into(), Json::Num(s));
+    }
+    o.insert(
+        "events_per_second".into(),
+        Json::Num(report.events_processed as f64 / stats.p50_s),
+    );
+    o.insert("events".into(), Json::Num(report.events_processed as f64));
+    o.insert("finished".into(), Json::Num(report.finished as f64));
+    o.insert("groups".into(), Json::Num(report.groups.len() as f64));
+    o.insert("scale_events".into(), Json::Num(report.scale_events as f64));
+    o.insert("fleet_goodput_tok_s".into(), Json::Num(report.fleet_goodput));
+    Json::Obj(o)
+}
+
 fn main() {
     let m = ModelSpec::llama2_7b();
     let iters = env_usize("SIM_BENCH_ITERS", 5);
@@ -280,6 +361,46 @@ fn main() {
         );
         let off = patch(off, "n_decode", Json::Num(n_decode as f64));
         rows.push(patch(off, "par", Json::Bool(false)));
+    }
+
+    // Fleet row (ISSUE 8): a 4-group diurnal fleet with per-group
+    // prefill-pool autoscaling, paired leap-on/off like every scenario.
+    // Informational — the CI floor gate still reads only
+    // `saturated_32rps` — but the `steps_simulated` assert doubles as
+    // the leap/fleet/autoscale composition check in the bench.
+    {
+        let name = "fleet_4grp_diurnal";
+        let rate = 64.0;
+        let ref_iters = iters.clamp(1, 2);
+        let (ref_stats, ref_report) = run_fleet_mode(m, name, rate, duration, ref_iters, true);
+        let (leap_stats, leap_report) = run_fleet_mode(m, name, rate, duration, iters, false);
+        assert_eq!(
+            leap_report.steps_simulated,
+            ref_report.steps_simulated,
+            "fleet leap and reference must simulate identical step counts"
+        );
+        let ref_sps = ref_report.steps_simulated as f64 / ref_stats.p50_s;
+        let leap_sps = leap_report.steps_simulated as f64 / leap_stats.p50_s;
+        let speedup = if ref_sps > 0.0 { leap_sps / ref_sps } else { 1.0 };
+        figure_row(
+            "sim_perf",
+            &format!("{name}_sim_seconds_per_wall_second"),
+            rate,
+            duration / leap_stats.p50_s,
+        );
+        figure_row("sim_perf", &format!("{name}_steps_per_second"), rate, leap_sps);
+        figure_row("sim_perf", &format!("{name}_steps_per_second_no_leap"), rate, ref_sps);
+        figure_row("sim_perf", &format!("{name}_leap_speedup"), rate, speedup);
+        rows.push(fleet_row(name, rate, duration, true, &leap_stats, &leap_report, Some(speedup)));
+        rows.push(fleet_row(
+            &format!("{name}_no_leap"),
+            rate,
+            duration,
+            false,
+            &ref_stats,
+            &ref_report,
+            None,
+        ));
     }
 
     let path = std::env::var("BENCH_SIM_JSON").unwrap_or_else(|_| "BENCH_sim.json".into());

@@ -16,7 +16,9 @@
 # machine-dependent event/step timing ratios). Likewise, when the
 # `par_8dec_64rps` / `par_8dec_64rps_no_par` pair is present, it prints
 # the within-run parallelism speedup (ISSUE 7) — also informational,
-# since it scales with the runner's core count.
+# since it scales with the runner's core count. The paired
+# `fleet_4grp_diurnal` rows (ISSUE 8) get the same treatment: the
+# 4-group lockstep fleet's leap speedup is printed, never gated.
 #
 # Floor calibration protocol (EXPERIMENTS.md §Perf):
 #   * the floor lives in ci/sim_bench_floor.txt and is deliberately set
@@ -49,6 +51,8 @@ sps = None
 ref_sps = None
 par_sps = None
 par_ref_sps = None
+fleet_sps = None
+fleet_ref_sps = None
 for row in rows:
     if row.get("bench") == "sim_throughput/saturated_32rps":
         sps = float(row["steps_per_second"])
@@ -58,6 +62,10 @@ for row in rows:
         par_sps = float(row.get("steps_per_second", 0.0))
     elif row.get("bench") == "sim_throughput/par_8dec_64rps_no_par":
         par_ref_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/fleet_4grp_diurnal":
+        fleet_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/fleet_4grp_diurnal_no_leap":
+        fleet_ref_sps = float(row.get("steps_per_second", 0.0))
 if sps is None:
     print(f"bench gate: saturated_32rps row missing from {path}", file=sys.stderr)
     sys.exit(1)
@@ -72,6 +80,12 @@ if par_sps and par_ref_sps:
         f"bench gate: par speedup (8 decode instances) = "
         f"{par_sps / par_ref_sps:.2f}x "
         f"(inline reference = {par_ref_sps:.0f} steps/s)"
+    )
+if fleet_sps and fleet_ref_sps:
+    print(
+        f"bench gate: fleet leap speedup (4-group diurnal) = "
+        f"{fleet_sps / fleet_ref_sps:.2f}x "
+        f"(leap-off reference = {fleet_ref_sps:.0f} steps/s)"
     )
 if sps >= floor:
     print("bench gate: PASS")

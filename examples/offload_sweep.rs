@@ -6,7 +6,7 @@
 
 use adrenaline::config::{ClusterSpec, ModelSpec, SloConfig};
 use adrenaline::coordinator::OffloadBounds;
-use adrenaline::sim::run_ratio_sweep;
+use adrenaline::sim::{run_ratio_sweep_with, ExecMode};
 use adrenaline::workload::WorkloadKind;
 
 fn main() {
@@ -18,7 +18,14 @@ fn main() {
         "{:>7} {:>14} {:>12} {:>12} {:>14} {:>14} {:>8}",
         "ratio", "tput(tok/s)", "TPOT(ms)", "TTFT(s)", "prefill-bw", "decode-comp", "preempt"
     );
-    let pts = run_ratio_sweep(model, WorkloadKind::ShareGpt, rate, &ratios, 120.0);
+    let pts = run_ratio_sweep_with(
+        model,
+        WorkloadKind::ShareGpt,
+        rate,
+        &ratios,
+        120.0,
+        ExecMode::Parallel,
+    );
     let mut best = (0.0, 0.0);
     for (ratio, r) in &pts {
         println!(

@@ -6,7 +6,7 @@
 //!     cargo run --release --example openthoughts_serving
 
 use adrenaline::config::ModelSpec;
-use adrenaline::sim::{run_e2e, E2eConfig};
+use adrenaline::sim::{run_e2e_with, E2eConfig, ExecMode};
 
 fn main() {
     for (label, cfg) in [
@@ -18,7 +18,7 @@ fn main() {
             "{:>6} {:>12} {:>12} {:>12} {:>12} {:>14} {:>8}",
             "rate", "system", "TTFT(s)", "TPOT(ms)", "P99(ms)", "tput(tok/s)", "preempt"
         );
-        let pts = run_e2e(&cfg);
+        let pts = run_e2e_with(&cfg, ExecMode::Parallel);
         for p in &pts {
             println!(
                 "{:>6.1} {:>12} {:>12.3} {:>12.2} {:>12.2} {:>14.0} {:>8}",

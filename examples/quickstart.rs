@@ -23,8 +23,12 @@ fn main() -> adrenaline::Result<()> {
 
     // 1) Stand up the stack. Each instance thread owns its own PJRT CPU
     //    client — the process analogue of the paper's separate GPU pools.
+    //    The builder validates the knob combination up front (a bad grid
+    //    or contradictory engine switches fail here, not mid-serve);
+    //    builder defaults equal `ServingConfig::default()`.
+    let serving = ServingConfig::builder().build()?;
     let t0 = std::time::Instant::now();
-    let mut server = Server::start(&dir, ServingConfig::default())?;
+    let mut server = Server::start(&dir, serving)?;
     println!("stack up in {:.2}s (artifact grid compiled on both instances)", t0.elapsed().as_secs_f64());
 
     // 2) A small chatbot-like workload, clipped to the tiny model's

@@ -3,7 +3,7 @@
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
 //!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
-//!                  rebalance|buckets|feedback|faults|all]`
+//!                  rebalance|buckets|feedback|faults|fleet|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -26,8 +26,8 @@
 //! the exact-cost ablation.
 
 use adrenaline::config::{
-    BoundsFeedbackConfig, ClusterSpec, FaultConfig, FaultKind, GpuSpec, ModelSpec,
-    RebalanceConfig, ScriptedFault, SloConfig,
+    AutoscaleConfig, BoundsFeedbackConfig, ClusterSpec, FaultConfig, FaultKind, FleetConfig,
+    GpuSpec, ModelSpec, RebalanceConfig, RouterPolicy, ScriptedFault, SloConfig,
 };
 use adrenaline::coordinator::OffloadBounds;
 use adrenaline::gpu_model::{
@@ -35,7 +35,8 @@ use adrenaline::gpu_model::{
     PrefillKernelTimes, Roofline,
 };
 use adrenaline::sim::{
-    parallel_map, run_e2e, run_ratio_sweep, ClusterSim, E2eConfig, SimConfig, SimReport,
+    parallel_map, run_e2e_with, run_ratio_sweep_with, ClusterSim, E2eConfig, ExecMode, FleetReport,
+    FleetSim, SimConfig, SimReport,
 };
 use adrenaline::util::bench::figure_row_str;
 use adrenaline::workload::{ArrivalPattern, WorkloadKind};
@@ -64,6 +65,7 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("buckets", buckets),
     ("feedback", feedback),
     ("faults", faults),
+    ("fleet", fleet),
 ];
 
 fn main() {
@@ -232,7 +234,7 @@ fn fig14(out: &mut String) {
 /// Figs 11–14: TTFT / TPOT / P99 TPOT / throughput vs request rate for
 /// both systems.
 fn e2e(out: &mut String, fig: &str, cfg: E2eConfig) {
-    for p in run_e2e(&cfg) {
+    for p in run_e2e_with(&cfg, ExecMode::Parallel) {
         row(out, &format!("{fig}a"), &format!("{}_ttft_s", p.system), p.rate, p.ttft_mean_s);
         row(out, &format!("{fig}b"), &format!("{}_tpot_s", p.system), p.rate, p.tpot_mean_s);
         row(
@@ -261,12 +263,13 @@ fn e2e(out: &mut String, fig: &str, cfg: E2eConfig) {
 
 /// Fig 15: E2E performance vs (fixed) offload ratio.
 fn fig15(out: &mut String) {
-    let pts = run_ratio_sweep(
+    let pts = run_ratio_sweep_with(
         ModelSpec::llama2_7b(),
         WorkloadKind::ShareGpt,
         24.0,
         &[0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
         120.0,
+        ExecMode::Parallel,
     );
     for (ratio, r) in &pts {
         row(out, "fig15", "tput_tok_s", *ratio, r.throughput);
@@ -303,7 +306,14 @@ fn fig16(out: &mut String) {
 fn fig17(out: &mut String) {
     for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
         let rate = if m.name == "llama2-7b" { 24.0 } else { 16.0 };
-        let pts = run_ratio_sweep(m, WorkloadKind::ShareGpt, rate, &[0.0, 0.4, 0.6, 0.8], 120.0);
+        let pts = run_ratio_sweep_with(
+            m,
+            WorkloadKind::ShareGpt,
+            rate,
+            &[0.0, 0.4, 0.6, 0.8],
+            120.0,
+            ExecMode::Parallel,
+        );
         for (ratio, r) in &pts {
             row(
                 out,
@@ -660,5 +670,98 @@ fn scaling(out: &mut String) {
         row(out, "scaling", "tput_tok_s", n as f64, r.throughput);
         row(out, "scaling", "offloaded_fraction", n as f64, r.offloaded_fraction);
         row(out, "scaling", "ttft_s", n as f64, r.ttft.map(|s| s.mean).unwrap_or(f64::NAN));
+    }
+}
+
+/// Fleet layer (ISSUE 8 / EXPERIMENTS.md §Fleet): (a) the three cluster
+/// router policies on a saturated 4-group diurnal fleet — least-loaded's
+/// live-headroom placement beats round-robin's blind striping on fleet
+/// goodput (the acceptance gate) — with per-group routing counts; (b)
+/// fleet-size scaling at a per-group-constant rate; (c) a 4-group
+/// autoscaled fleet's routable prefill-pool timeline tracking the
+/// diurnal wave, plus its goodput against the same fleet pinned at the
+/// pool ceiling (the capacity the autoscaler trades against).
+fn fleet(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let diurnal = ArrivalPattern::Diurnal { period_s: 40.0, depth: 0.8 };
+
+    // (a) Router-policy shootout: 4 groups, one shared diurnal trace at
+    // 4x the single-group saturating rate.
+    let policies =
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::SessionSticky];
+    let reports: Vec<FleetReport> = parallel_map(policies.len(), |i| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 64.0);
+        cfg.duration_s = 120.0;
+        cfg.arrivals = diurnal;
+        cfg.serving.fleet =
+            Some(FleetConfig { groups: 4, router: policies[i], autoscale: None });
+        FleetSim::new(cfg).run()
+    });
+    for (p, r) in policies.iter().zip(&reports) {
+        let name = p.name();
+        row(out, "fleet", &format!("{name}_tput_tok_s"), 0.0, r.fleet_throughput);
+        row(out, "fleet", &format!("{name}_goodput_tok_s"), 0.0, r.fleet_goodput);
+        row(
+            out,
+            "fleet",
+            &format!("{name}_ttft_s"),
+            0.0,
+            r.fleet_ttft.map(|s| s.mean).unwrap_or(f64::NAN),
+        );
+        row(
+            out,
+            "fleet",
+            &format!("{name}_tpot_p99_s"),
+            0.0,
+            r.fleet_tpot.map(|s| s.p99).unwrap_or(f64::NAN),
+        );
+        for (g, n) in r.router_decisions.iter().enumerate() {
+            row(out, "fleet", &format!("{name}_routed"), g as f64, *n as f64);
+        }
+    }
+
+    // (b) Fleet-size scaling: per-group rate held constant, so ideal
+    // scaling is linear fleet throughput in the group count.
+    let sizes = [1u32, 2, 4];
+    let scale_reports: Vec<FleetReport> = parallel_map(sizes.len(), |i| {
+        let g = sizes[i];
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 16.0 * g as f64);
+        cfg.duration_s = 120.0;
+        cfg.arrivals = diurnal;
+        cfg.serving.fleet =
+            Some(FleetConfig { groups: g, router: RouterPolicy::RoundRobin, autoscale: None });
+        FleetSim::new(cfg).run()
+    });
+    for (&g, r) in sizes.iter().zip(&scale_reports) {
+        row(out, "fleet", "size_tput_tok_s", g as f64, r.fleet_throughput);
+        row(out, "fleet", "size_goodput_tok_s", g as f64, r.fleet_goodput);
+    }
+
+    // (c) Autoscaler tracking: 3 prefills per group, pool floor 1 —
+    // the pool timeline should ride the diurnal wave (grow into peaks,
+    // drain through troughs). The fixed-ceiling twin run prices the
+    // capacity the autoscaler gives back.
+    let autoscaled: Vec<FleetReport> = parallel_map(2, |i| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 64.0);
+        cfg.duration_s = 120.0;
+        cfg.arrivals = diurnal;
+        cfg.cluster.n_prefill = 3;
+        let autoscale = if i == 0 {
+            Some(AutoscaleConfig { min_prefill: 1, max_prefill: 3, ..AutoscaleConfig::default() })
+        } else {
+            None // fixed at the full pool (the ceiling)
+        };
+        cfg.serving.fleet =
+            Some(FleetConfig { groups: 4, router: RouterPolicy::RoundRobin, autoscale });
+        FleetSim::new(cfg).run()
+    });
+    let (auto, fixed) = (&autoscaled[0], &autoscaled[1]);
+    row(out, "fleet", "autoscale_goodput_tok_s", 0.0, auto.fleet_goodput);
+    row(out, "fleet", "fixed_pool_goodput_tok_s", 0.0, fixed.fleet_goodput);
+    row(out, "fleet", "autoscale_scale_events", 0.0, auto.scale_events as f64);
+    let pts = auto.fleet_size_timeline.points();
+    let stride = (pts.len() / 60).max(1);
+    for (t, v) in pts.iter().step_by(stride) {
+        row(out, "fleet", "pool_size", *t, *v);
     }
 }

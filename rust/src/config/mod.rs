@@ -18,6 +18,6 @@ mod serving;
 pub use cluster::{ClusterSpec, GpuSpec};
 pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
 pub use serving::{
-    BoundsFeedbackConfig, FaultConfig, FaultKind, OffloadPolicy, RebalanceConfig, ScriptedFault,
-    ServingConfig, SloConfig,
+    AutoscaleConfig, BoundsFeedbackConfig, FaultConfig, FaultKind, FleetConfig, OffloadPolicy,
+    RebalanceConfig, RouterPolicy, ScriptedFault, ServingConfig, ServingConfigBuilder, SloConfig,
 };

@@ -183,6 +183,94 @@ impl Default for FaultConfig {
     }
 }
 
+/// Cluster-router policy for a fleet of P/D groups (ISSUE 8). Decides
+/// which group's proxy a new request lands on; the per-group proxy then
+/// routes within the group exactly as today.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    /// Cycle through groups in order (the stateless baseline).
+    #[default]
+    RoundRobin,
+    /// Pick the group with the most offload/KV headroom — DistServe-style
+    /// cluster-level goodput routing above the per-group proxies.
+    LeastLoaded,
+    /// Hash a session key (consecutive request-id blocks stand in for
+    /// sessions in the trace plane) to a fixed group — the KV-affinity
+    /// policy prefix caches would want.
+    SessionSticky,
+}
+
+impl RouterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::SessionSticky => "session_sticky",
+        }
+    }
+}
+
+/// Prefill-pool autoscaler knobs (ISSUE 8). The pool scales between
+/// `min_prefill` and `max_prefill` instances on sustained queue-pressure
+/// thresholds with a cooldown; scale-down drains the victim through the
+/// health plane (PR 6's machinery), so `OB_mem` rescales exactly as on a
+/// crash.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Pool floor, instances (never drained below).
+    pub min_prefill: u32,
+    /// Pool ceiling, instances (clamped to the topology's `n_prefill`).
+    pub max_prefill: u32,
+    /// Starting pool size. `None` ⇒ start at `min_prefill`.
+    pub initial_prefill: Option<u32>,
+    /// Queue pressure (queued prompt tokens / `max_prefill_tokens`,
+    /// averaged over active instances) above which the pool grows.
+    pub scale_up_pressure: f64,
+    /// Pressure below which the pool shrinks.
+    pub scale_down_pressure: f64,
+    /// Seconds a threshold must hold continuously before acting.
+    pub sustain_s: f64,
+    /// Minimum seconds between scaling actions.
+    pub cooldown_s: f64,
+    /// Autoscaler tick period, seconds.
+    pub tick_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_prefill: 1,
+            max_prefill: u32::MAX,
+            initial_prefill: None,
+            scale_up_pressure: 0.5,
+            scale_down_pressure: 0.1,
+            sustain_s: 2.0,
+            cooldown_s: 5.0,
+            tick_s: 0.5,
+        }
+    }
+}
+
+/// Fleet layer (ISSUE 8). `None` on [`ServingConfig`] is structurally
+/// inert: no router, no autoscaler state, no extra events — runs are
+/// bit-identical to a simulator without the layer (pinned by
+/// `rust/tests/fleet.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    /// Number of independent P/D groups behind the cluster router.
+    pub groups: u32,
+    /// Cluster-level routing policy.
+    pub router: RouterPolicy,
+    /// Per-group prefill-pool autoscaling. `None` = fixed pools.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { groups: 1, router: RouterPolicy::RoundRobin, autoscale: None }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -257,6 +345,11 @@ pub struct ServingConfig {
     /// consumes no RNG, and leaves every run bit-identical to a simulator
     /// without the plane (pinned by `rust/tests/faults.rs`).
     pub fault: Option<FaultConfig>,
+    /// Fleet layer: cluster router over N P/D groups plus prefill-pool
+    /// autoscaling. `None` (the default) is structurally inert — no
+    /// router, no scaler, bit-identical to the single-group simulator
+    /// (pinned by `rust/tests/fleet.rs`).
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Default for ServingConfig {
@@ -279,6 +372,7 @@ impl Default for ServingConfig {
             rebalance: None,
             bounds_feedback: None,
             fault: None,
+            fleet: None,
         }
     }
 }
@@ -554,6 +648,93 @@ impl ServingConfig {
             }
             Some(other) => anyhow::bail!("bad fault config: {other}"),
         }
+        // Same object-or-null discipline for the fleet layer.
+        match v.get("fleet") {
+            None | Some(Json::Null) => {}
+            Some(fl @ Json::Obj(_)) => {
+                let mut f = FleetConfig::default();
+                if let Some(x) = fl.get("groups") {
+                    f.groups = x
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("bad fleet groups: {x}"))?
+                        as u32;
+                }
+                if let Some(x) = fl.get("router") {
+                    f.router = match x.as_str() {
+                        Some("round_robin") => RouterPolicy::RoundRobin,
+                        Some("least_loaded") => RouterPolicy::LeastLoaded,
+                        Some("session_sticky") => RouterPolicy::SessionSticky,
+                        _ => anyhow::bail!("bad fleet router policy: {x}"),
+                    };
+                }
+                match fl.get("autoscale") {
+                    None | Some(Json::Null) => {}
+                    Some(a @ Json::Obj(_)) => {
+                        let mut s = AutoscaleConfig::default();
+                        let u32_field = |key: &str, out: &mut u32| -> crate::Result<()> {
+                            if let Some(x) = a.get(key) {
+                                *out = x
+                                    .as_u64()
+                                    .ok_or_else(|| anyhow::anyhow!("bad autoscale {key}: {x}"))?
+                                    as u32;
+                            }
+                            Ok(())
+                        };
+                        let f64_field = |key: &str, out: &mut f64| -> crate::Result<()> {
+                            if let Some(x) = a.get(key) {
+                                *out = x
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow::anyhow!("bad autoscale {key}: {x}"))?;
+                            }
+                            Ok(())
+                        };
+                        u32_field("min_prefill", &mut s.min_prefill)?;
+                        u32_field("max_prefill", &mut s.max_prefill)?;
+                        if let Some(x) = a.get("initial_prefill") {
+                            match x {
+                                Json::Null => {}
+                                _ => {
+                                    s.initial_prefill = Some(x.as_u64().ok_or_else(|| {
+                                        anyhow::anyhow!("bad autoscale initial_prefill: {x}")
+                                    })?
+                                        as u32)
+                                }
+                            }
+                        }
+                        f64_field("scale_up_pressure", &mut s.scale_up_pressure)?;
+                        f64_field("scale_down_pressure", &mut s.scale_down_pressure)?;
+                        f64_field("sustain_s", &mut s.sustain_s)?;
+                        f64_field("cooldown_s", &mut s.cooldown_s)?;
+                        f64_field("tick_s", &mut s.tick_s)?;
+                        anyhow::ensure!(
+                            s.min_prefill >= 1,
+                            "autoscale min_prefill must be >= 1"
+                        );
+                        anyhow::ensure!(
+                            s.max_prefill >= s.min_prefill,
+                            "autoscale max_prefill must be >= min_prefill"
+                        );
+                        anyhow::ensure!(
+                            s.tick_s.is_finite() && s.tick_s > 0.0,
+                            "autoscale tick_s must be positive and finite"
+                        );
+                        anyhow::ensure!(
+                            s.sustain_s.is_finite() && s.sustain_s >= 0.0,
+                            "autoscale sustain_s must be finite and >= 0"
+                        );
+                        anyhow::ensure!(
+                            s.cooldown_s.is_finite() && s.cooldown_s >= 0.0,
+                            "autoscale cooldown_s must be finite and >= 0"
+                        );
+                        f.autoscale = Some(s);
+                    }
+                    Some(other) => anyhow::bail!("bad fleet autoscale config: {other}"),
+                }
+                anyhow::ensure!(f.groups >= 1, "fleet groups must be >= 1");
+                cfg.fleet = Some(f);
+            }
+            Some(other) => anyhow::bail!("bad fleet config: {other}"),
+        }
         Ok(cfg)
     }
 
@@ -655,7 +836,190 @@ impl ServingConfig {
             ft.insert("health_aware".into(), Json::Bool(f.health_aware));
             o.insert("fault".into(), Json::Obj(ft));
         }
+        if let Some(f) = &self.fleet {
+            let mut fl = BTreeMap::new();
+            fl.insert("groups".into(), Json::Num(f.groups as f64));
+            fl.insert("router".into(), Json::Str(f.router.name().into()));
+            if let Some(s) = f.autoscale {
+                let mut a = BTreeMap::new();
+                a.insert("min_prefill".into(), Json::Num(s.min_prefill as f64));
+                a.insert("max_prefill".into(), Json::Num(s.max_prefill as f64));
+                if let Some(n) = s.initial_prefill {
+                    a.insert("initial_prefill".into(), Json::Num(n as f64));
+                }
+                a.insert("scale_up_pressure".into(), Json::Num(s.scale_up_pressure));
+                a.insert("scale_down_pressure".into(), Json::Num(s.scale_down_pressure));
+                a.insert("sustain_s".into(), Json::Num(s.sustain_s));
+                a.insert("cooldown_s".into(), Json::Num(s.cooldown_s));
+                a.insert("tick_s".into(), Json::Num(s.tick_s));
+                fl.insert("autoscale".into(), Json::Obj(a));
+            }
+            o.insert("fleet".into(), Json::Obj(fl));
+        }
         Json::Obj(o).to_string()
+    }
+
+    /// Start a typed, validating [`ServingConfigBuilder`] — the
+    /// intended alternative to hand-mutating pub fields in tests and
+    /// examples. Builder defaults equal [`ServingConfig::default`].
+    pub fn builder() -> ServingConfigBuilder {
+        ServingConfigBuilder { cfg: ServingConfig::default() }
+    }
+}
+
+/// Typed builder for [`ServingConfig`] (ISSUE 8). Setters stage values;
+/// [`ServingConfigBuilder::build`] validates the combination (knob
+/// conflicts, bucket grids, fleet shape) and returns a proper `Err`
+/// instead of letting a bad config panic mid-setup.
+#[derive(Debug, Clone)]
+pub struct ServingConfigBuilder {
+    cfg: ServingConfig,
+}
+
+impl ServingConfigBuilder {
+    pub fn slo(mut self, slo: SloConfig) -> Self {
+        self.cfg.slo = slo;
+        self
+    }
+
+    pub fn offload(mut self, policy: OffloadPolicy) -> Self {
+        self.cfg.offload = policy;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    pub fn max_prefill_tokens(mut self, n: usize) -> Self {
+        self.cfg.max_prefill_tokens = n;
+        self
+    }
+
+    pub fn kv_block_tokens(mut self, n: usize) -> Self {
+        self.cfg.kv_block_tokens = n;
+        self
+    }
+
+    pub fn decode_buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.cfg.decode_buckets = buckets;
+        self
+    }
+
+    pub fn offload_buckets(mut self, buckets: Vec<usize>) -> Self {
+        self.cfg.offload_buckets = buckets;
+        self
+    }
+
+    pub fn b_max_override(mut self, b: usize) -> Self {
+        self.cfg.b_max_override = Some(b);
+        self
+    }
+
+    pub fn executor_kv_capacity_tokens(mut self, n: usize) -> Self {
+        self.cfg.executor_kv_capacity_tokens = Some(n);
+        self
+    }
+
+    pub fn decode_kv_capacity_tokens(mut self, n: usize) -> Self {
+        self.cfg.decode_kv_capacity_tokens = Some(n);
+        self
+    }
+
+    pub fn exact_costs(mut self, on: bool) -> Self {
+        self.cfg.exact_costs = on;
+        self
+    }
+
+    pub fn no_leap(mut self, on: bool) -> Self {
+        self.cfg.no_leap = on;
+        self
+    }
+
+    pub fn no_par(mut self, on: bool) -> Self {
+        self.cfg.no_par = on;
+        self
+    }
+
+    pub fn par_workers(mut self, n: usize) -> Self {
+        self.cfg.par_workers = n;
+        self
+    }
+
+    pub fn rebalance(mut self, r: RebalanceConfig) -> Self {
+        self.cfg.rebalance = Some(r);
+        self
+    }
+
+    pub fn bounds_feedback(mut self, f: BoundsFeedbackConfig) -> Self {
+        self.cfg.bounds_feedback = Some(f);
+        self
+    }
+
+    pub fn fault(mut self, f: FaultConfig) -> Self {
+        self.cfg.fault = Some(f);
+        self
+    }
+
+    pub fn fleet(mut self, f: FleetConfig) -> Self {
+        self.cfg.fleet = Some(f);
+        self
+    }
+
+    /// Validate the staged combination and produce the config.
+    pub fn build(self) -> crate::Result<ServingConfig> {
+        let cfg = self.cfg;
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(cfg.max_prefill_tokens >= 1, "max_prefill_tokens must be >= 1");
+        anyhow::ensure!(cfg.kv_block_tokens >= 1, "kv_block_tokens must be >= 1");
+        anyhow::ensure!(
+            !(cfg.no_par && cfg.par_workers > 1),
+            "par_workers > 1 contradicts no_par (pick one)"
+        );
+        // Same grid validation the JSON plane runs: malformed buckets are
+        // a build error, not a GraphCache panic mid-setup.
+        crate::coordinator::GraphCache::try_new(&cfg.decode_buckets, &cfg.offload_buckets, None)
+            .map(|_| ())?;
+        if let Some(f) = &cfg.fleet {
+            anyhow::ensure!(f.groups >= 1, "fleet groups must be >= 1");
+            if let Some(s) = &f.autoscale {
+                anyhow::ensure!(s.min_prefill >= 1, "autoscale min_prefill must be >= 1");
+                anyhow::ensure!(
+                    s.max_prefill >= s.min_prefill,
+                    "autoscale max_prefill must be >= min_prefill"
+                );
+                anyhow::ensure!(
+                    s.tick_s.is_finite() && s.tick_s > 0.0,
+                    "autoscale tick_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    s.sustain_s.is_finite() && s.sustain_s >= 0.0,
+                    "autoscale sustain_s must be finite and >= 0"
+                );
+                anyhow::ensure!(
+                    s.cooldown_s.is_finite() && s.cooldown_s >= 0.0,
+                    "autoscale cooldown_s must be finite and >= 0"
+                );
+            }
+        }
+        if let Some(r) = &cfg.rebalance {
+            anyhow::ensure!(
+                r.interval_s.is_finite() && r.interval_s > 0.0,
+                "rebalance interval_s must be positive and finite"
+            );
+        }
+        if let Some(f) = &cfg.bounds_feedback {
+            anyhow::ensure!(
+                f.interval_s.is_finite() && f.interval_s > 0.0,
+                "bounds_feedback interval_s must be positive and finite"
+            );
+            anyhow::ensure!(
+                f.alpha > 0.0 && f.alpha <= 1.0,
+                "bounds_feedback alpha must be in (0, 1]"
+            );
+        }
+        Ok(cfg)
     }
 }
 
@@ -897,6 +1261,120 @@ mod tests {
         assert!(ServingConfig::from_json(r#"{"decode_buckets": [4, 2]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"decode_buckets": [2, 2, 4]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"decode_buckets": [1, 2, 4, 8]}"#).is_ok());
+    }
+
+    #[test]
+    fn fleet_defaults_off_and_json_validates() {
+        assert!(ServingConfig::default().fleet.is_none(), "the fleet layer is opt-in");
+        let cfg = ServingConfig::from_json(
+            r#"{"fleet": {"groups": 4, "router": "least_loaded"}}"#,
+        )
+        .unwrap();
+        let f = cfg.fleet.expect("object enables the fleet layer");
+        assert_eq!(f.groups, 4);
+        assert_eq!(f.router, RouterPolicy::LeastLoaded);
+        assert!(f.autoscale.is_none(), "autoscale is opt-in inside the fleet object");
+        // null spells "off"; malformed values are errors, never silent
+        // defaults.
+        let off = ServingConfig::from_json(r#"{"fleet": null}"#).unwrap();
+        assert!(off.fleet.is_none());
+        assert!(ServingConfig::from_json(r#"{"fleet": true}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"groups": 0}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"router": "chaotic"}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"groups": 1.5}}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"autoscale": 3}}"#).is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"autoscale": {"min_prefill": 0}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"autoscale": {"min_prefill": 3, "max_prefill": 2}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"autoscale": {"tick_s": 0}}}"#).is_err());
+        let with_scale = ServingConfig::from_json(
+            r#"{"fleet": {"groups": 2, "autoscale": {"min_prefill": 1, "max_prefill": 3,
+                "initial_prefill": 2, "scale_up_pressure": 0.8, "tick_s": 0.25}}}"#,
+        )
+        .unwrap();
+        let s = with_scale.fleet.unwrap().autoscale.unwrap();
+        assert_eq!(s.min_prefill, 1);
+        assert_eq!(s.max_prefill, 3);
+        assert_eq!(s.initial_prefill, Some(2));
+        assert_eq!(s.scale_up_pressure, 0.8);
+        assert_eq!(s.tick_s, 0.25);
+        assert_eq!(s.cooldown_s, AutoscaleConfig::default().cooldown_s);
+    }
+
+    #[test]
+    fn fleet_json_roundtrip() {
+        for cfg in [
+            ServingConfig { fleet: Some(FleetConfig::default()), ..Default::default() },
+            ServingConfig {
+                fleet: Some(FleetConfig {
+                    groups: 4,
+                    router: RouterPolicy::SessionSticky,
+                    autoscale: Some(AutoscaleConfig {
+                        min_prefill: 1,
+                        max_prefill: 3,
+                        initial_prefill: Some(2),
+                        ..Default::default()
+                    }),
+                }),
+                ..Default::default()
+            },
+        ] {
+            let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn builder_defaults_equal_default() {
+        assert_eq!(ServingConfig::builder().build().unwrap(), ServingConfig::default());
+    }
+
+    #[test]
+    fn builder_stages_and_validates() {
+        let cfg = ServingConfig::builder()
+            .offload(OffloadPolicy::FixedRatio(0.5))
+            .max_batch(64)
+            .no_leap(true)
+            .fleet(FleetConfig { groups: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        assert_eq!(cfg.offload, OffloadPolicy::FixedRatio(0.5));
+        assert_eq!(cfg.max_batch, 64);
+        assert!(cfg.no_leap);
+        assert_eq!(cfg.fleet.unwrap().groups, 2);
+    }
+
+    #[test]
+    fn builder_rejects_contradictions() {
+        // par_workers with no_par is a contradiction, not a silent pick.
+        assert!(ServingConfig::builder().no_par(true).par_workers(4).build().is_err());
+        // par_workers == 1 *means* serial pricing, so it composes.
+        assert!(ServingConfig::builder().no_par(true).par_workers(1).build().is_ok());
+        // Zero-group fleets and inverted autoscale ranges are errors.
+        assert!(ServingConfig::builder()
+            .fleet(FleetConfig { groups: 0, ..Default::default() })
+            .build()
+            .is_err());
+        assert!(ServingConfig::builder()
+            .fleet(FleetConfig {
+                groups: 1,
+                router: RouterPolicy::RoundRobin,
+                autoscale: Some(AutoscaleConfig {
+                    min_prefill: 4,
+                    max_prefill: 2,
+                    ..Default::default()
+                }),
+            })
+            .build()
+            .is_err());
+        // Malformed bucket grids fail at build, not mid-setup.
+        assert!(ServingConfig::builder().decode_buckets(vec![4, 2]).build().is_err());
+        assert!(ServingConfig::builder().max_batch(0).build().is_err());
     }
 
     #[test]

@@ -5,9 +5,11 @@
 pub mod bounds;
 pub mod graph_cache;
 pub mod proxy;
+pub mod router;
 pub mod scheduler;
 
 pub use bounds::OffloadBounds;
 pub use graph_cache::{BucketPair, GraphCache, GraphCacheStats};
 pub use proxy::{Proxy, RouteDecision};
+pub use router::ClusterRouter;
 pub use scheduler::{OffloadScheduler, RebalanceController, RebalanceMode, RuntimeMetadata};

@@ -1,0 +1,135 @@
+//! Cluster-level router (ISSUE 8): picks which P/D *group* a request
+//! lands on, one layer above the per-group [`crate::coordinator::Proxy`]
+//! (which keeps routing within its group exactly as before). DistServe
+//! (PAPERS.md) is the motivation: cluster goodput is decided by
+//! placement above the group proxies, not inside them.
+
+use crate::config::RouterPolicy;
+use crate::workload::RequestId;
+
+/// Requests whose ids share a block of this size count as one "session"
+/// for [`RouterPolicy::SessionSticky`]. The trace plane has no real
+/// session ids, so consecutive-id blocks stand in: a multi-turn user
+/// whose requests arrive close together in the trace stays on one
+/// group, which is the KV-affinity property the policy models.
+pub const SESSION_BLOCK: u64 = 8;
+
+/// Deterministic cluster router. Stateless apart from the round-robin
+/// cursor and the decision tally, so fleet runs stay seed-deterministic.
+#[derive(Debug, Clone)]
+pub struct ClusterRouter {
+    policy: RouterPolicy,
+    groups: usize,
+    rr: usize,
+    /// Requests routed to each group (reported as
+    /// `FleetReport::router_decisions`).
+    pub decisions: Vec<u64>,
+}
+
+impl ClusterRouter {
+    pub fn new(policy: RouterPolicy, groups: usize) -> Self {
+        assert!(groups >= 1, "a fleet needs at least one group");
+        ClusterRouter { policy, groups, rr: 0, decisions: vec![0; groups] }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick the group for `id`. `headroom[g]` is group g's current
+    /// offload/KV headroom in tokens (only consulted by
+    /// [`RouterPolicy::LeastLoaded`]; pass anything for the static
+    /// policies — they never look).
+    pub fn route(&mut self, id: RequestId, headroom: &[f64]) -> usize {
+        let g = match self.policy {
+            RouterPolicy::RoundRobin => {
+                let g = self.rr;
+                self.rr = (self.rr + 1) % self.groups;
+                g
+            }
+            RouterPolicy::SessionSticky => {
+                (splitmix(id / SESSION_BLOCK) % self.groups as u64) as usize
+            }
+            RouterPolicy::LeastLoaded => {
+                debug_assert_eq!(headroom.len(), self.groups);
+                // Argmax headroom; ties break toward the lowest index so
+                // the decision is deterministic.
+                let mut best = 0usize;
+                for (i, &h) in headroom.iter().enumerate().skip(1) {
+                    if h > headroom[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.decisions[g] += 1;
+        g
+    }
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed session hash (seed-free,
+/// so routing is reproducible across runs and processes).
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = ClusterRouter::new(RouterPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..7).map(|id| r.route(id, &[])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.decisions, vec![3, 2, 2]);
+    }
+
+    #[test]
+    fn least_loaded_takes_argmax_with_low_index_ties() {
+        let mut r = ClusterRouter::new(RouterPolicy::LeastLoaded, 3);
+        assert_eq!(r.route(0, &[1.0, 5.0, 2.0]), 1);
+        assert_eq!(r.route(1, &[4.0, 4.0, 4.0]), 0, "ties break to the lowest index");
+        assert_eq!(r.route(2, &[-1.0, -2.0, 0.0]), 2);
+        assert_eq!(r.decisions.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn session_sticky_pins_id_blocks() {
+        let mut r = ClusterRouter::new(RouterPolicy::SessionSticky, 4);
+        // All ids inside one SESSION_BLOCK land on the same group.
+        let base = 3 * SESSION_BLOCK;
+        let first = r.route(base, &[]);
+        for id in base + 1..base + SESSION_BLOCK {
+            assert_eq!(r.route(id, &[]), first);
+        }
+        // Across many sessions every group gets traffic (the hash mixes).
+        let mut seen = vec![false; 4];
+        for session in 0..64u64 {
+            seen[r.route(session * SESSION_BLOCK, &[])] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 sessions must cover 4 groups");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        for policy in [RouterPolicy::RoundRobin, RouterPolicy::SessionSticky] {
+            let mut a = ClusterRouter::new(policy, 3);
+            let mut b = ClusterRouter::new(policy, 3);
+            for id in 0..100 {
+                assert_eq!(a.route(id, &[]), b.route(id, &[]));
+            }
+            assert_eq!(a.decisions, b.decisions);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_groups_panics() {
+        ClusterRouter::new(RouterPolicy::RoundRobin, 0);
+    }
+}

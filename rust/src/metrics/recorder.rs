@@ -28,6 +28,37 @@ impl LatencyStats {
             max: *sorted.last().unwrap(),
         })
     }
+
+    /// Count-weighted merge of per-partition stats (the fleet's
+    /// cluster-wide TTFT/TPOT aggregate). `count`, `mean`, and `max` are
+    /// exact; `p50`/`p99` are count-weighted means of the per-partition
+    /// percentiles — an approximation, since exact fleet percentiles
+    /// would need the raw samples, which reports deliberately do not
+    /// retain. `None` when no partition has samples.
+    pub fn merged<'a, I>(parts: I) -> Option<Self>
+    where
+        I: IntoIterator<Item = &'a LatencyStats>,
+    {
+        let mut count = 0usize;
+        let (mut mean, mut p50, mut p99) = (0.0f64, 0.0f64, 0.0f64);
+        let mut max = f64::NEG_INFINITY;
+        for s in parts {
+            if s.count == 0 {
+                continue;
+            }
+            let w = s.count as f64;
+            count += s.count;
+            mean += w * s.mean;
+            p50 += w * s.p50;
+            p99 += w * s.p99;
+            max = max.max(s.max);
+        }
+        if count == 0 {
+            return None;
+        }
+        let n = count as f64;
+        Some(LatencyStats { count, mean: mean / n, p50: p50 / n, p99: p99 / n, max })
+    }
 }
 
 /// Nearest-rank percentile on a pre-sorted slice.

@@ -66,7 +66,9 @@
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterSpec, FaultConfig, FaultKind, ModelSpec, ServingConfig};
+use crate::config::{
+    AutoscaleConfig, ClusterSpec, FaultConfig, FaultKind, ModelSpec, ServingConfig,
+};
 use crate::coordinator::{BucketPair, OffloadBounds, Proxy, RebalanceController, RebalanceMode};
 use crate::kv::{BlockAllocator, KvPool};
 use crate::gpu_model::{
@@ -77,8 +79,9 @@ use crate::metrics::{LatencyStats, MetricsRecorder, StableWindow, Timeline};
 use crate::util::rng::Rng;
 use crate::workload::{ArrivalPattern, Request, RequestId, TraceGenerator, WorkloadKind};
 
+use super::engine_mode::EngineMode;
 use super::events::EventQueue;
-use super::run::{par_config, PoolTask, WorkerPool};
+use super::run::{PoolTask, WorkerPool};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -309,6 +312,17 @@ enum Ev {
     /// down-state (detection latency <= `FaultConfig::heartbeat_s`) and
     /// the health timeline samples.
     HealthTick,
+    /// Prefill-pool autoscaler tick (only scheduled when
+    /// `FleetConfig::autoscale` is set): assess mean queue pressure,
+    /// scale the active pool up/down, progress a pending drain.
+    AutoscaleTick,
+    /// Fleet lockstep horizon marker (pushed by `FleetSim` before every
+    /// co-simulated arrival; a no-op for the run loop). Its only job is
+    /// its timestamp: while it sits at the queue head, `pump(cap)` with
+    /// `cap` at its time cannot pop past it, so the leap engine's strict
+    /// next-event horizon fences every leap off the upcoming injection
+    /// with no new engine code.
+    Fence,
 }
 
 /// Post-run report.
@@ -436,6 +450,15 @@ pub struct SimReport {
     /// Fraction of instances (prefill + decode) healthy, sampled at every
     /// `HealthTick`.
     pub health_timeline: Timeline,
+    // ----- prefill-pool autoscaler (empty / zero without
+    // `FleetConfig::autoscale`) ------------------------------------------
+    /// Routable prefill-pool size (active, non-draining instances),
+    /// sampled at t=0 and at every `AutoscaleTick`.
+    pub prefill_pool_timeline: Timeline,
+    /// Completed scale-up actions.
+    pub scale_ups: u64,
+    /// Initiated scale-down (drain) actions.
+    pub scale_downs: u64,
 }
 
 /// Runtime state of the fault-injection plane (`ServingConfig::fault`).
@@ -479,6 +502,81 @@ impl FaultPlane {
             transfer_retries: 0,
             health_timeline: Timeline::new(),
         }
+    }
+}
+
+/// Runtime state of the prefill-pool autoscaler
+/// (`FleetConfig::autoscale`). Lives behind `Option` on [`ClusterSim`]
+/// like the fault plane, so `autoscale: None` pays no state and takes no
+/// new branches — `fleet: None` runs stay bit-identical to a simulator
+/// without the subsystem.
+///
+/// Scaling rides the existing health machinery: an inactive or draining
+/// instance is marked proxy-unhealthy, so health-aware routing masks it
+/// and `OB_mem` rescales exactly as it does when a heartbeat observes a
+/// crash. Drain-before-down means a victim keeps serving its queued
+/// prompts and its executor-resident KV until both are gone; only then
+/// does it leave the pool.
+struct Scaler {
+    cfg: AutoscaleConfig,
+    /// Per-prefill-instance pool membership. A draining instance stays
+    /// `active` (it still owns work) but is no longer routable.
+    active: Vec<bool>,
+    /// Instance currently draining toward deactivation, if any. One
+    /// drain at a time: no other scaling action fires until it lands.
+    draining: Option<usize>,
+    /// Instant mean pressure first held at/above the scale-up threshold.
+    over_since: Option<f64>,
+    /// Instant mean pressure first held at/below the scale-down threshold.
+    under_since: Option<f64>,
+    last_scale_at: f64,
+    pool_timeline: Timeline,
+    scale_ups: u64,
+    scale_downs: u64,
+}
+
+impl Scaler {
+    fn new(cfg: AutoscaleConfig, n_prefill: usize) -> Self {
+        let floor = (cfg.min_prefill as usize).clamp(1, n_prefill);
+        let ceil = (cfg.max_prefill as usize).clamp(floor, n_prefill);
+        let initial = cfg
+            .initial_prefill
+            .map_or(floor, |i| i as usize)
+            .clamp(floor, ceil);
+        Scaler {
+            cfg,
+            active: (0..n_prefill).map(|pi| pi < initial).collect(),
+            draining: None,
+            over_since: None,
+            under_since: None,
+            last_scale_at: 0.0,
+            pool_timeline: Timeline::new(),
+            scale_ups: 0,
+            scale_downs: 0,
+        }
+    }
+
+    /// Pool floor/ceiling in instances, clamped to the topology.
+    fn floor(&self) -> usize {
+        (self.cfg.min_prefill as usize).clamp(1, self.active.len())
+    }
+
+    fn ceil(&self) -> usize {
+        (self.cfg.max_prefill as usize).clamp(self.floor(), self.active.len())
+    }
+
+    /// Instances in the pool (draining included — it still owns work).
+    fn pool_size(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Instances the proxy may route new prompts to.
+    fn routable(&self, pi: usize) -> bool {
+        self.active[pi] && self.draining != Some(pi)
+    }
+
+    fn routable_count(&self) -> usize {
+        (0..self.active.len()).filter(|&pi| self.routable(pi)).count()
     }
 }
 
@@ -623,6 +721,15 @@ pub struct ClusterSim {
     b_tpot_est: Option<BTpotEstimator>,
     /// Fault-injection plane (None = no fault state, no fault events).
     fault: Option<FaultPlane>,
+    /// Prefill-pool autoscaler (None = fixed pool, no autoscale events).
+    scaler: Option<Scaler>,
+    /// Fleet lockstep mode: arrivals are injected by `FleetSim` rather
+    /// than seeded from the trace, and periodic controllers keep ticking
+    /// while the injection window is open even though the slab may
+    /// momentarily look drained.
+    lockstep_open: bool,
+    /// The run hit its hard stop; further `pump` calls are no-ops.
+    stopped: bool,
     /// Per-prefill-instance decayed executor duty estimators (the
     /// interference model's "recent duty cycle").
     duty: Vec<DutyCycleEstimator>,
@@ -678,13 +785,40 @@ impl ClusterSim {
     pub fn new(cfg: SimConfig) -> Self {
         let mut gen = TraceGenerator::new(cfg.workload, cfg.rate, cfg.seed)
             .with_arrivals(cfg.arrivals);
-        let trace: VecDeque<Request> = gen.trace(cfg.duration_s).into();
+        let trace = gen.trace(cfg.duration_s);
+        Self::with_trace(cfg, trace)
+    }
 
+    /// Build against an explicit trace instead of generating one — the
+    /// fleet's pre-partition path hands each group its slice of one
+    /// shared trace. Ids must be dense and sequential (the caller
+    /// renumbers after partitioning); `ClusterSim::new` is exactly
+    /// `with_trace` over the generated trace, so a one-group fleet is
+    /// bit-identical to a bare sim.
+    pub fn with_trace(cfg: SimConfig, trace: Vec<Request>) -> Self {
         let avg_seq = if trace.is_empty() {
             1024
         } else {
             (trace.iter().map(|r| r.total_tokens()).sum::<usize>() / trace.len().max(1)) as u64
         };
+        Self::build(cfg, trace.into(), avg_seq, false)
+    }
+
+    /// Build an empty-trace group for fleet lockstep co-simulation:
+    /// `FleetSim` injects arrivals one at a time (load-aware routing
+    /// needs each group's live state at the arrival instant). `avg_seq`
+    /// comes from the full shared trace so the offload bounds match a
+    /// whole-trace build of the same topology.
+    pub(crate) fn lockstep(cfg: SimConfig, avg_seq: u64) -> Self {
+        Self::build(cfg, VecDeque::new(), avg_seq.max(1), true)
+    }
+
+    fn build(
+        cfg: SimConfig,
+        trace: VecDeque<Request>,
+        avg_seq: u64,
+        lockstep_open: bool,
+    ) -> Self {
         let mut bounds =
             OffloadBounds::compute(&cfg.cluster, &cfg.model, &cfg.serving.slo, avg_seq.max(1));
         if let Some(b) = cfg.serving.b_max_override {
@@ -769,13 +903,18 @@ impl ClusterSim {
             cfg.cluster.attn_executor_sm_frac.max(1e-3),
         );
 
+        // Engine-mode resolution happens exactly once, here: config knobs
+        // plus the `ADRENALINE_*` escape hatches fold into one typed
+        // answer (`EngineMode`), and nothing below ever consults the
+        // environment again.
+        let mode = EngineMode::from_config(&cfg.serving);
+
         // The cost plane: the executable-bucket grid (extended to cover
         // `max_batch` the way real capture must span the servable range)
         // plus the memoized decode/prefill roofline tables, warmed at the
         // captured capacities. Bucketed charging is the default; the exact
         // pre-bucketing model stays available for ablation/regression.
-        let exact = cfg.serving.exact_costs
-            || std::env::var("ADRENALINE_EXACT_COSTS").map_or(false, |v| v == "1");
+        let exact = mode.exact_costs;
         let grid = CostModel::build_grid(
             &cfg.serving.decode_buckets,
             &cfg.serving.offload_buckets,
@@ -816,11 +955,20 @@ impl ClusterSim {
         };
         let duty = (0..n_prefill).map(|_| DutyCycleEstimator::new(DUTY_TAU_S)).collect();
 
+        // Prefill-pool autoscaler (`FleetConfig::autoscale`): like the
+        // fault plane and the rebalancer, `None` builds no state — the
+        // default `fleet: None` config is structurally inert.
+        let scaler = cfg
+            .serving
+            .fleet
+            .as_ref()
+            .and_then(|f| f.autoscale)
+            .map(|ac| Scaler::new(ac, n_prefill));
+
         // Steady-state decode leaping is the default; the per-step
         // reference path stays reachable for ablation/regression, same
         // contract shape as `exact_costs`.
-        let no_leap = cfg.serving.no_leap
-            || std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
+        let no_leap = !mode.leap;
 
         // Within-run parallelism: scheduling passes on multi-decode
         // topologies price every epoch lane's step series concurrently
@@ -832,9 +980,7 @@ impl ClusterSim {
         // total pricing concurrency including the sim thread (0 = one
         // per decode instance); the pool itself spawns one thread fewer
         // and is capped at the lane count that could ever use it.
-        let no_par = cfg.serving.no_par
-            || std::env::var("ADRENALINE_NO_PAR").map_or(false, |v| v == "1")
-            || par_config().serial;
+        let no_par = !mode.par;
         let n_decode = cfg.cluster.n_decode as usize;
         let par_workers_want = if no_par || no_leap || n_decode < 2 {
             0
@@ -868,6 +1014,9 @@ impl ClusterSim {
             rebalancer,
             b_tpot_est,
             fault,
+            scaler,
+            lockstep_open,
+            stopped: false,
             duty,
             migrations_to_offload: 0,
             migrations_to_local: 0,
@@ -899,6 +1048,15 @@ impl ClusterSim {
     /// Run to completion (trace drained and all requests finished or the
     /// hard cap hit) and report.
     pub fn run(mut self) -> SimReport {
+        self.prime();
+        self.pump(f64::INFINITY);
+        self.report()
+    }
+
+    /// Seed the request slab, arrival events, and periodic controllers.
+    /// Called exactly once before the first [`ClusterSim::pump`] (`run`
+    /// does both; the fleet's lockstep path primes each group itself).
+    pub(crate) fn prime(&mut self) {
         // Seed the request slab and arrival events. Trace ids are dense
         // and sequential, so slab index == request id.
         self.reqs.reserve(self.trace.len());
@@ -923,19 +1081,39 @@ impl ClusterSim {
             });
             self.events.push(t, Ev::Arrival(id));
         }
+        // Periodic controllers skip empty runs — except a lockstep group,
+        // which starts empty by construction (arrivals are injected after
+        // priming) but must still tick.
+        let live = !self.reqs.is_empty() || self.lockstep_open;
         if let Some(ctl) = &self.rebalancer {
-            if !self.reqs.is_empty() {
+            if live {
                 self.events.push(ctl.interval_s(), Ev::RebalanceTick);
             }
         } else if self.b_tpot_est.is_some() {
             // Standalone refresh ticks only when no rebalancer runs; with
             // rebalancing on, refreshes ride the rebalance ticks.
             let fb = self.cfg.serving.bounds_feedback.expect("estimator implies config");
-            if !self.reqs.is_empty() {
+            if live {
                 self.events.push(fb.interval_s, Ev::BoundsRefreshTick);
             }
         }
-        if self.fault.is_some() && !self.reqs.is_empty() {
+        if self.scaler.is_some() && live {
+            // Autoscaling rides the health plane: instances outside the
+            // initial pool are masked exactly as a heartbeat-observed
+            // crash would be, so routing avoids them and `OB_mem`
+            // rescales through the same `Proxy::set_prefill_health`
+            // path.
+            self.proxy.set_health_aware(true);
+            for pi in 0..self.prefill.len() {
+                if !self.scaler.as_ref().expect("checked above").routable(pi) {
+                    self.proxy.set_prefill_health(pi, false);
+                }
+            }
+            let s = self.scaler.as_mut().expect("checked above");
+            s.pool_timeline.push(0.0, s.routable_count() as f64);
+            self.events.push(s.cfg.tick_s, Ev::AutoscaleTick);
+        }
+        if self.fault.is_some() && live {
             // Fault plane: scripted windows are pushed whole (each Down
             // handler schedules its own Up); stochastic chains seed one
             // first failure per instance per configured class, draw order
@@ -989,11 +1167,26 @@ impl ClusterSim {
             }
             self.events.push(fc.heartbeat_s, Ev::HealthTick);
         }
+    }
 
+    /// Process queued events with timestamps strictly before `cap`
+    /// (`f64::INFINITY` = drain the queue, which is exactly the old run
+    /// loop). The fleet's lockstep loop passes each arrival instant as
+    /// `cap` so a group never advances past the state the cluster router
+    /// is about to read. Strict `<` matters: an event at exactly `cap`
+    /// ties with the injected arrival and must resolve through queue
+    /// `seq` order on the next pump, not fire early here.
+    pub(crate) fn pump(&mut self, cap: f64) {
         let hard_stop = self.hard_stop();
-        while let Some((t, ev)) = self.events.pop() {
+        while !self.stopped {
+            match self.events.peek_time() {
+                Some(t) if t < cap => {}
+                _ => break,
+            }
+            let (t, ev) = self.events.pop().expect("peeked above");
             self.events_processed += 1;
             if t > hard_stop {
+                self.stopped = true;
                 break;
             }
             match ev {
@@ -1012,6 +1205,11 @@ impl ClusterSim {
                 }
                 Ev::TransferRetry { id, epoch } => self.on_transfer_retry(t, id, epoch),
                 Ev::HealthTick => self.on_health_tick(t),
+                Ev::AutoscaleTick => self.on_autoscale_tick(t),
+                // A lockstep horizon marker is pure timestamp: popping it
+                // does nothing (the scheduling pass below still runs, as
+                // it does after every event).
+                Ev::Fence => {}
             }
             // Global scheduling pass after every event: dispatch, then
             // admissions for every instance, then step starts. Admissions
@@ -1054,7 +1252,90 @@ impl ClusterSim {
                 }
             }
         }
-        self.report()
+    }
+
+    // ----- fleet lockstep surface (`sim::fleet::FleetSim`) ------------------
+
+    /// Inject one arrival into a lockstep group. The request is
+    /// renumbered onto this group's dense slab (cluster-level ids belong
+    /// to the fleet; per-group metrics and routing only ever see the
+    /// local id) and its arrival event queued at its arrival time.
+    pub(crate) fn inject(&mut self, mut req: Request) {
+        debug_assert!(self.lockstep_open, "inject requires a lockstep-built sim");
+        let id = self.reqs.len() as u64;
+        req.id = id;
+        let t = req.arrival_s;
+        self.reqs.push(SimReq {
+            effective_prompt: req.prompt_len,
+            req,
+            phase: Phase::WaitingDispatch,
+            generated: 0,
+            kv_tokens: 0,
+            offloaded: false,
+            prefill_instance: 0,
+            decode_instance: 0,
+            preemptions: 0,
+            epoch: 0,
+            transfer_attempts: 0,
+            run_slot: NO_SLOT,
+            admit_seq: 0,
+        });
+        self.events.push(t, Ev::Arrival(id));
+    }
+
+    /// Queue a lockstep horizon marker at `t` (the next arrival's
+    /// instant). Pushed *before* that arrival is injected anywhere, so
+    /// every group holds an event at `t` with a `seq` smaller than the
+    /// arrival's — the leap engine's strict next-event horizon therefore
+    /// fences all leaps off the injection, and a step ending exactly at
+    /// `t` is scheduled (never committed inline), exactly as in a
+    /// whole-trace run where the arrival itself is the queued event.
+    pub(crate) fn fence(&mut self, t: f64) {
+        debug_assert!(self.lockstep_open, "fence requires a lockstep-built sim");
+        self.events.push(t, Ev::Fence);
+    }
+
+    /// The fleet finished injecting arrivals: periodic controllers may
+    /// now stop rescheduling once the slab drains.
+    pub(crate) fn close_arrivals(&mut self) {
+        self.lockstep_open = false;
+    }
+
+    /// Whether periodic controllers should keep ticking: requests remain
+    /// unfinished, or the fleet may still inject more.
+    fn more_work_expected(&self) -> bool {
+        self.lockstep_open || self.finished_total < self.reqs.len()
+    }
+
+    /// Cluster-router load signal: free KV headroom (executor pools on
+    /// routable prefill instances + decode pools on up instances) minus
+    /// prompt tokens still queued for dispatch anywhere in the group.
+    /// Queued work counts against the group even on non-routable
+    /// instances — it still consumes the group's capacity.
+    pub(crate) fn router_headroom(&self) -> f64 {
+        let mut headroom = 0.0f64;
+        for pi in 0..self.prefill.len() {
+            if self.scaler_routable(pi) && !self.prefill_is_down(pi) {
+                let p = &self.prefill[pi];
+                headroom += p
+                    .executor_kv_budget
+                    .saturating_sub(p.executor_kv_tokens + p.executor_reserved)
+                    as f64;
+            }
+            for &id in &self.prefill[pi].queue {
+                let sr = &self.reqs[id as usize];
+                if sr.phase == Phase::WaitingDispatch {
+                    headroom -= sr.effective_prompt as f64;
+                }
+            }
+        }
+        for d in 0..self.decode.len() {
+            if !self.decode_is_down(d) {
+                let dec = &self.decode[d];
+                headroom += dec.kv_budget().saturating_sub(dec.kv_tokens() + dec.reserved) as f64;
+            }
+        }
+        headroom
     }
 
     // ----- slab access ------------------------------------------------------
@@ -1439,7 +1720,7 @@ impl ClusterSim {
         }
         self.refresh_bounds(t);
         let interval = self.cfg.serving.bounds_feedback.expect("tick implies config").interval_s;
-        if self.finished_total < self.reqs.len() {
+        if self.more_work_expected() {
             self.events.push_in(interval, Ev::BoundsRefreshTick);
         }
     }
@@ -1483,7 +1764,7 @@ impl ClusterSim {
             self.offload_more(t, &mut budget);
         }
         self.offloaded_frac_timeline.push(t, self.proxy.offloaded_fraction());
-        if self.finished_total < self.reqs.len() {
+        if self.more_work_expected() {
             self.events.push_in(interval, Ev::RebalanceTick);
         }
     }
@@ -1757,6 +2038,117 @@ impl ClusterSim {
         self.fault.as_ref().map_or(false, |f| f.decode_down[d] > 0)
     }
 
+    /// Whether the autoscaler lets routing target prefill instance `pi`
+    /// (always true without a scaler). Draining instances still *serve*
+    /// their queues — only new placements are masked.
+    #[inline]
+    fn scaler_routable(&self, pi: usize) -> bool {
+        self.scaler.as_ref().map_or(true, |s| s.routable(pi))
+    }
+
+    /// Autoscaler tick: finish a pending drain when the victim is idle,
+    /// then act on sustained mean queue pressure (scale-up first — a
+    /// backlog beats a shrink), then sample the pool timeline.
+    fn on_autoscale_tick(&mut self, t: f64) {
+        let Some(s) = self.scaler.as_ref() else { return };
+        let ac = s.cfg;
+
+        // A draining victim leaves the pool only when it owes nothing:
+        // queue empty, prefill pipeline idle, and no executor-resident or
+        // reserved KV (offloaded decodes it hosts must finish first) —
+        // drain-before-down, so no request is ever dropped by scaling.
+        if let Some(pi) = s.draining {
+            let p = &self.prefill[pi];
+            let idle = self.prefill[pi].queue.is_empty()
+                && p.busy_until <= t
+                && p.executor_kv_tokens == 0
+                && p.executor_reserved == 0;
+            if idle {
+                let s = self.scaler.as_mut().expect("checked above");
+                s.active[pi] = false;
+                s.draining = None;
+            }
+        }
+
+        // Mean queue pressure over routable instances — the rebalancer's
+        // per-instance signal (queued prompt tokens / max_prefill_tokens),
+        // averaged so the threshold is pool-size-invariant.
+        let max_prefill_tokens = self.cfg.serving.max_prefill_tokens.max(1);
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for pi in 0..self.prefill.len() {
+            if !self.scaler_routable(pi) {
+                continue;
+            }
+            let mut queued = 0usize;
+            for &id in &self.prefill[pi].queue {
+                let sr = &self.reqs[id as usize];
+                if sr.phase == Phase::WaitingDispatch {
+                    queued += sr.effective_prompt;
+                }
+            }
+            sum += queued as f64 / max_prefill_tokens as f64;
+            n += 1;
+        }
+        let pressure = sum / n.max(1) as f64;
+
+        let s = self.scaler.as_mut().expect("checked above");
+        s.over_since = if pressure >= ac.scale_up_pressure {
+            Some(s.over_since.unwrap_or(t))
+        } else {
+            None
+        };
+        s.under_since = if pressure <= ac.scale_down_pressure {
+            Some(s.under_since.unwrap_or(t))
+        } else {
+            None
+        };
+        let sustained_up = s.over_since.is_some_and(|t0| t - t0 >= ac.sustain_s);
+        let sustained_down = s.under_since.is_some_and(|t0| t - t0 >= ac.sustain_s);
+        let cooled = t - s.last_scale_at >= ac.cooldown_s;
+        let pool = s.pool_size();
+
+        // One action per tick, none while a drain is pending (a drain in
+        // flight is already a scaling action).
+        if s.draining.is_none() && cooled {
+            if sustained_up && pool < s.ceil() {
+                // Activate the lowest-index inactive instance: its health
+                // flips up, routing sees it immediately, and OB_mem
+                // rescales up through the same path a crash recovery
+                // takes.
+                let pi = (0..s.active.len())
+                    .find(|&pi| !s.active[pi])
+                    .expect("pool below ceiling implies an inactive instance");
+                s.active[pi] = true;
+                s.scale_ups += 1;
+                s.last_scale_at = t;
+                s.over_since = None;
+                let up = !self.prefill_is_down(pi);
+                self.proxy.set_prefill_health(pi, up);
+            } else if sustained_down && pool > s.floor() {
+                // Drain the highest-index active instance — never
+                // instance 0, which anchors the report's occupancy and
+                // pressure timelines. Masked from routing now;
+                // deactivated once idle.
+                if let Some(pi) =
+                    (1..s.active.len()).rev().find(|&pi| s.active[pi] && s.draining != Some(pi))
+                {
+                    s.draining = Some(pi);
+                    s.scale_downs += 1;
+                    s.last_scale_at = t;
+                    s.under_since = None;
+                    self.proxy.set_prefill_health(pi, false);
+                }
+            }
+        }
+
+        let s = self.scaler.as_mut().expect("checked above");
+        s.pool_timeline.push(t, s.routable_count() as f64);
+        if self.more_work_expected() {
+            self.events.push_in(ac.tick_s, Ev::AutoscaleTick);
+        }
+    }
+
     /// Draw one transfer-failure Bernoulli (always `false` without a
     /// fault plane or with `transfer_fail_prob: 0` — no RNG consumed, so
     /// those runs stay bit-identical).
@@ -1849,7 +2241,7 @@ impl ClusterSim {
         // and step starts read the depth counters and the post-event
         // scheduling pass restarts work at this very timestamp; the proxy
         // re-admits the instance at the next heartbeat.
-        if stochastic && self.finished_total < self.reqs.len() {
+        if stochastic && self.more_work_expected() {
             // The stochastic chain reschedules only off its own recovery
             // (never off scripted windows), and stops once the run has
             // drained — otherwise an MTBF chain would tick forever.
@@ -1923,7 +2315,9 @@ impl ClusterSim {
         let (n_p, n_d) = (self.prefill.len(), self.decode.len());
         let mut healthy = 0usize;
         for pi in 0..n_p {
-            let up = !self.prefill_is_down(pi);
+            // AND with the scaler's view: a heartbeat must not resurrect
+            // an instance the autoscaler scaled down or is draining.
+            let up = !self.prefill_is_down(pi) && self.scaler_routable(pi);
             self.proxy.set_prefill_health(pi, up);
             healthy += usize::from(up);
         }
@@ -1936,7 +2330,7 @@ impl ClusterSim {
         let fp = self.fault.as_mut().expect("checked above");
         fp.health_timeline.push(t, frac);
         let hb = fp.cfg.heartbeat_s;
-        if self.finished_total < self.reqs.len() {
+        if self.more_work_expected() {
             self.events.push_in(hb, Ev::HealthTick);
         }
     }
@@ -3149,7 +3543,7 @@ impl ClusterSim {
         self.prefill_occupancy.push(t, (used / self.cfg.cluster.gpu.hbm_capacity).min(1.0));
     }
 
-    fn report(mut self) -> SimReport {
+    pub(crate) fn report(mut self) -> SimReport {
         let end = self.events.clock();
         self.record_prefill_occupancy(end);
         let window = StableWindow::detect(&self.decode_occupancy, &self.batch_size);
@@ -3260,6 +3654,11 @@ impl ClusterSim {
             None => (0, 0, 0, 0, 0.0, Timeline::new()),
         };
 
+        let (prefill_pool_timeline, scale_ups, scale_downs) = match self.scaler.take() {
+            Some(s) => (s.pool_timeline, s.scale_ups, s.scale_downs),
+            None => (Timeline::new(), 0, 0),
+        };
+
         SimReport {
             ttft: self.metrics.ttft_stats(),
             tpot: self.metrics.tpot_stats(),
@@ -3314,6 +3713,9 @@ impl ClusterSim {
             transfer_retries,
             degraded_time_s,
             health_timeline,
+            prefill_pool_timeline,
+            scale_ups,
+            scale_downs,
         }
     }
 }
@@ -3472,7 +3874,7 @@ mod tests {
         assert!(refr.events_processed >= refr.steps_simulated);
         // Leap: clean steps no longer cost events (unless the env switch
         // forces the reference path process-wide, when the counts tie).
-        if std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1") {
+        if crate::sim::engine_env().no_leap {
             assert_eq!(leap.events_processed, refr.events_processed);
         } else {
             assert!(
@@ -3499,6 +3901,33 @@ mod tests {
         assert!(r.tokens_conserved, "token accounting must survive preemption churn");
         assert_eq!(r.preemptions, r.req_preemptions_total);
         assert!(r.finished > 0);
+    }
+
+    #[test]
+    fn fleet_config_without_autoscale_is_structurally_inert() {
+        // `fleet: Some(..)` with `autoscale: None` must build no scaler,
+        // schedule no autoscale events, and leave the physics untouched —
+        // the per-group half of the fleet:None inertness contract
+        // (rust/tests/fleet.rs pins the FleetSim half).
+        use crate::config::FleetConfig;
+        let model = ModelSpec::llama2_7b();
+        let mk = |fleet: Option<FleetConfig>| {
+            let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 2.0);
+            cfg.duration_s = 20.0;
+            cfg.serving.fleet = fleet;
+            ClusterSim::new(cfg).run()
+        };
+        let off = mk(None);
+        let on = mk(Some(FleetConfig::default()));
+        assert_eq!(off.finished, on.finished);
+        assert_eq!(off.steps_simulated, on.steps_simulated);
+        assert_eq!(off.events_processed, on.events_processed);
+        assert_eq!(off.throughput.to_bits(), on.throughput.to_bits());
+        assert_eq!(off.goodput.to_bits(), on.goodput.to_bits());
+        for r in [&off, &on] {
+            assert!(r.prefill_pool_timeline.is_empty());
+            assert_eq!((r.scale_ups, r.scale_downs), (0, 0));
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! The engine-mode API (ISSUE 8): one typed struct answering "which
+//! simulator engines are on for this run", resolved **once** at run
+//! start from `ServingConfig` plus the `ADRENALINE_*` escape-hatch
+//! environment variables.
+//!
+//! Before this module the four escape hatches — `ADRENALINE_NO_LEAP`,
+//! `ADRENALINE_NO_PAR`, `ADRENALINE_EXACT_COSTS`, `ADRENALINE_SERIAL` —
+//! were each read at their own call site with the precedence rule
+//! (env forces the hatch regardless of config) re-implemented inline.
+//! Now [`EngineEnv::from_process_env`] is the **only** code site that
+//! reads them (grep-enforced in CI's lint job), and
+//! [`EngineMode::resolve`] is the only place the env-vs-config
+//! precedence lives. `ClusterSim` resolves its mode in its constructor;
+//! `parallel_map`'s process-wide serial switch reads [`engine_env`].
+//!
+//! Every hatch keeps its exact pre-redesign meaning, so the bit-identity
+//! suites (`step_leap`, `par_run`, `faults`) pin the refactor.
+
+use crate::config::ServingConfig;
+use std::sync::OnceLock;
+
+/// Snapshot of the `ADRENALINE_*` engine escape hatches. Plain data so
+/// tests can resolve modes from synthetic environments without touching
+/// the process env.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineEnv {
+    /// `ADRENALINE_NO_LEAP=1`: force the per-step decode reference path.
+    pub no_leap: bool,
+    /// `ADRENALINE_NO_PAR=1`: force inline (single-thread) epoch pricing.
+    pub no_par: bool,
+    /// `ADRENALINE_EXACT_COSTS=1`: force exact (pre-bucketing) step costs.
+    pub exact_costs: bool,
+    /// `ADRENALINE_SERIAL=1`: force every `parallel_map` sweep serial
+    /// (which also implies `no_par` inside a run).
+    pub serial: bool,
+}
+
+impl EngineEnv {
+    /// Read the process environment. The **single** `ADRENALINE_*`
+    /// engine-mode read site in the codebase — add no others.
+    pub fn from_process_env() -> Self {
+        let on = |key: &str| std::env::var(key).map_or(false, |v| v == "1");
+        EngineEnv {
+            no_leap: on("ADRENALINE_NO_LEAP"),
+            no_par: on("ADRENALINE_NO_PAR"),
+            exact_costs: on("ADRENALINE_EXACT_COSTS"),
+            serial: on("ADRENALINE_SERIAL"),
+        }
+    }
+}
+
+/// The process-wide [`EngineEnv`] snapshot, read once. Sweeps and tests
+/// within one process see a stable answer even if the environment
+/// mutates mid-run (mirrors the old `par_config` OnceLock semantics).
+pub fn engine_env() -> &'static EngineEnv {
+    static ENV: OnceLock<EngineEnv> = OnceLock::new();
+    ENV.get_or_init(EngineEnv::from_process_env)
+}
+
+/// Which engines a simulator run drives, fully resolved — consumers
+/// never look at `ServingConfig::{no_leap,no_par,exact_costs}` or the
+/// environment again after construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineMode {
+    /// Steady-state decode leaping (default on).
+    pub leap: bool,
+    /// Within-run parallel epoch pricing (default on).
+    pub par: bool,
+    /// Exact (unbucketed) step costs instead of the executable grid.
+    pub exact_costs: bool,
+    /// Process-wide serial sweeps (`parallel_map` runs inline).
+    pub serial: bool,
+}
+
+impl EngineMode {
+    /// The one env-vs-config precedence rule: each env hatch *forces*
+    /// its engine off (or exact costs on) regardless of config; config
+    /// alone can do the same per run. `serial` comes only from the env
+    /// (it is a process property, not a per-run one) and implies `par`
+    /// off, exactly like the old `par_config().serial` check inside the
+    /// run loop.
+    pub fn resolve(cfg: &ServingConfig, env: &EngineEnv) -> Self {
+        let serial = env.serial;
+        EngineMode {
+            leap: !(cfg.no_leap || env.no_leap),
+            par: !(cfg.no_par || env.no_par || serial),
+            exact_costs: cfg.exact_costs || env.exact_costs,
+            serial,
+        }
+    }
+
+    /// Resolve against the process environment snapshot.
+    pub fn from_config(cfg: &ServingConfig) -> Self {
+        Self::resolve(cfg, engine_env())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_enable_both_engines() {
+        let m = EngineMode::resolve(&ServingConfig::default(), &EngineEnv::default());
+        assert!(m.leap && m.par);
+        assert!(!m.exact_costs && !m.serial);
+    }
+
+    #[test]
+    fn config_knobs_disable_per_run() {
+        let cfg = ServingConfig {
+            no_leap: true,
+            no_par: true,
+            exact_costs: true,
+            ..Default::default()
+        };
+        let m = EngineMode::resolve(&cfg, &EngineEnv::default());
+        assert!(!m.leap && !m.par && m.exact_costs && !m.serial);
+    }
+
+    #[test]
+    fn env_forces_regardless_of_config() {
+        // Config says "engines on"; every env hatch must still win.
+        let cfg = ServingConfig::default();
+        let m = EngineMode::resolve(
+            &cfg,
+            &EngineEnv { no_leap: true, no_par: true, exact_costs: true, serial: false },
+        );
+        assert!(!m.leap && !m.par && m.exact_costs);
+    }
+
+    #[test]
+    fn serial_implies_no_par_but_not_no_leap() {
+        let m = EngineMode::resolve(
+            &ServingConfig::default(),
+            &EngineEnv { serial: true, ..Default::default() },
+        );
+        assert!(m.serial && !m.par, "serial sweeps must also run epochs inline");
+        assert!(m.leap, "serial does not touch the leap engine");
+    }
+
+    #[test]
+    fn env_and_config_compose_independently() {
+        // no_leap from config + no_par from env: each hatch acts alone.
+        let cfg = ServingConfig { no_leap: true, ..Default::default() };
+        let m = EngineMode::resolve(&cfg, &EngineEnv { no_par: true, ..Default::default() });
+        assert!(!m.leap && !m.par && !m.exact_costs && !m.serial);
+    }
+
+    #[test]
+    fn from_config_matches_resolve_on_process_env() {
+        let cfg = ServingConfig::default();
+        assert_eq!(EngineMode::from_config(&cfg), EngineMode::resolve(&cfg, engine_env()));
+    }
+}

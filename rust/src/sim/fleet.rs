@@ -1,0 +1,291 @@
+//! Fleet-scale serving (ISSUE 8): N independent P/D groups — each an
+//! ordinary [`ClusterSim`] topology — sharing one arrival trace behind a
+//! cluster-level [`ClusterRouter`], with optional per-group prefill-pool
+//! autoscaling (`FleetConfig::autoscale`, handled inside each group's
+//! sim). DistServe (PAPERS.md) motivates the layer: at fleet scale,
+//! goodput is decided by *placement above* the per-group proxies, which
+//! keep routing within their group exactly as before.
+//!
+//! Two execution strategies, chosen by the router policy:
+//!
+//! * **Pre-partition** (round-robin, session-sticky, or a single group):
+//!   the policy is a pure function of the request id, so the whole trace
+//!   is routed upfront, each group's slice is renumbered onto a dense
+//!   local id space, and the groups run as completely independent sims —
+//!   one per core via [`parallel_map`], bit-identical to running them
+//!   serially. A one-group fleet is exactly `ClusterSim::with_trace`
+//!   over the generated trace, i.e. bit-identical to a bare sim (pinned
+//!   by `rust/tests/fleet.rs`).
+//! * **Lockstep co-simulation** (least-loaded with ≥ 2 groups): the
+//!   router needs every group's *live* headroom at each arrival instant,
+//!   so the groups advance together. Before injecting an arrival at
+//!   `t`, every group receives a [`ClusterSim::fence`] at `t` and is
+//!   pumped strictly past its events before `t`; the fence holds a
+//!   smaller queue `seq` than the injected arrival, so the decode leap
+//!   engine's strict next-event horizon fences every leap off the
+//!   injection with no new engine machinery. The schedule is fully
+//!   deterministic: same seed, same trace, same routing, same reports.
+
+use std::sync::Mutex;
+
+use crate::config::{FleetConfig, RouterPolicy};
+use crate::coordinator::ClusterRouter;
+use crate::metrics::{LatencyStats, Timeline};
+use crate::workload::{Request, TraceGenerator};
+
+use super::cluster::{ClusterSim, SimConfig, SimReport};
+use super::run::parallel_map;
+
+/// Seed stride between groups: group 0 keeps the fleet seed (so a
+/// one-group fleet is bit-identical to a bare sim); further groups get
+/// decorrelated fault/jitter RNG streams. The trace itself is generated
+/// once from the fleet seed and shared, so routing — not seeding —
+/// decides what each group serves.
+const GROUP_SEED_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Post-run fleet report: the per-group [`SimReport`]s plus fleet-wide
+/// aggregates.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Per-group reports, group-index order.
+    pub groups: Vec<SimReport>,
+    /// Requests the cluster router sent to each group.
+    pub router_decisions: Vec<u64>,
+    /// Sum of per-group stable-window throughputs, tok/s.
+    pub fleet_throughput: f64,
+    /// Sum of per-group goodputs (DistServe metric), tok/s.
+    pub fleet_goodput: f64,
+    /// Count-weighted merge of per-group TTFT stats
+    /// ([`LatencyStats::merged`]; percentiles approximate).
+    pub fleet_ttft: Option<LatencyStats>,
+    /// Count-weighted merge of per-group TPOT stats.
+    pub fleet_tpot: Option<LatencyStats>,
+    pub arrived: usize,
+    pub finished: usize,
+    pub steps_simulated: u64,
+    pub events_processed: u64,
+    /// Fleet-wide routable prefill-pool size over time: the step-function
+    /// sum of every group's `prefill_pool_timeline` (empty without
+    /// autoscaling).
+    pub fleet_size_timeline: Timeline,
+    /// Total scaling actions across the fleet (scale-ups + initiated
+    /// scale-downs).
+    pub scale_events: u64,
+}
+
+/// The fleet simulator. Owns one [`SimConfig`] describing every group's
+/// topology (groups are homogeneous — heterogeneous fleets are a listed
+/// follow-on) plus the shared trace parameters.
+pub struct FleetSim {
+    cfg: SimConfig,
+    fleet: FleetConfig,
+}
+
+impl FleetSim {
+    /// `cfg.serving.fleet` decides the shape; `None` behaves as the
+    /// default one-group round-robin fleet (bit-identical to a bare
+    /// [`ClusterSim`] run — `rust/tests/fleet.rs` pins it).
+    pub fn new(cfg: SimConfig) -> Self {
+        let fleet = cfg.serving.fleet.unwrap_or_default();
+        assert!(fleet.groups >= 1, "a fleet needs at least one group");
+        FleetSim { cfg, fleet }
+    }
+
+    pub fn run(self) -> FleetReport {
+        let groups = self.fleet.groups.max(1) as usize;
+        let mut gen = TraceGenerator::new(self.cfg.workload, self.cfg.rate, self.cfg.seed)
+            .with_arrivals(self.cfg.arrivals);
+        let trace = gen.trace(self.cfg.duration_s);
+        let mut router = ClusterRouter::new(self.fleet.router, groups);
+
+        let reports = if groups >= 2 && self.fleet.router == RouterPolicy::LeastLoaded {
+            Self::run_lockstep(&self.cfg, trace, &mut router, groups)
+        } else {
+            Self::run_partitioned(&self.cfg, trace, &mut router, groups)
+        };
+
+        let fleet_size_timeline =
+            stepwise_sum(&reports.iter().map(|r| &r.prefill_pool_timeline).collect::<Vec<_>>());
+        let fleet_ttft = LatencyStats::merged(reports.iter().filter_map(|r| r.ttft.as_ref()));
+        let fleet_tpot = LatencyStats::merged(reports.iter().filter_map(|r| r.tpot.as_ref()));
+        FleetReport {
+            router_decisions: router.decisions.clone(),
+            fleet_throughput: reports.iter().map(|r| r.throughput).sum(),
+            fleet_goodput: reports.iter().map(|r| r.goodput).sum(),
+            fleet_ttft,
+            fleet_tpot,
+            arrived: reports.iter().map(|r| r.arrived).sum(),
+            finished: reports.iter().map(|r| r.finished).sum(),
+            steps_simulated: reports.iter().map(|r| r.steps_simulated).sum(),
+            events_processed: reports.iter().map(|r| r.events_processed).sum(),
+            fleet_size_timeline,
+            scale_events: reports.iter().map(|r| r.scale_ups + r.scale_downs).sum(),
+            groups: reports,
+        }
+    }
+
+    /// Per-group config: identical topology/serving knobs; group 0 keeps
+    /// the fleet seed, others get decorrelated RNG streams.
+    fn group_config(cfg: &SimConfig, g: usize) -> SimConfig {
+        let mut c = cfg.clone();
+        if g > 0 {
+            c.seed = cfg.seed.wrapping_add((g as u64).wrapping_mul(GROUP_SEED_STRIDE));
+        }
+        c
+    }
+
+    /// Static policies: route the whole trace upfront, renumber each
+    /// slice dense, run the groups independently (one per core).
+    fn run_partitioned(
+        cfg: &SimConfig,
+        trace: Vec<Request>,
+        router: &mut ClusterRouter,
+        groups: usize,
+    ) -> Vec<SimReport> {
+        let mut parts: Vec<Vec<Request>> = (0..groups).map(|_| Vec::new()).collect();
+        for req in trace {
+            let g = router.route(req.id, &[]);
+            parts[g].push(req);
+        }
+        for part in &mut parts {
+            for (i, r) in part.iter_mut().enumerate() {
+                r.id = i as u64;
+            }
+        }
+        let cfgs: Vec<SimConfig> = (0..groups).map(|g| Self::group_config(cfg, g)).collect();
+        // `parallel_map` wants `Fn`, not `FnOnce`; each group's slice is
+        // handed over through a take-once slot.
+        let slots: Vec<Mutex<Option<Vec<Request>>>> =
+            parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        parallel_map(groups, |g| {
+            let part = slots[g]
+                .lock()
+                .expect("no panics while holding a slot")
+                .take()
+                .expect("each group runs exactly once");
+            ClusterSim::with_trace(cfgs[g].clone(), part).run()
+        })
+    }
+
+    /// Least-loaded: co-simulate the groups in lockstep so every routing
+    /// decision reads each group's state *at the arrival instant*.
+    fn run_lockstep(
+        cfg: &SimConfig,
+        trace: Vec<Request>,
+        router: &mut ClusterRouter,
+        groups: usize,
+    ) -> Vec<SimReport> {
+        // Offload bounds derive from the mean sequence length; use the
+        // full shared trace so every group prices against the same
+        // bounds a whole-trace build would.
+        let avg_seq = if trace.is_empty() {
+            1024
+        } else {
+            (trace.iter().map(|r| r.total_tokens()).sum::<usize>() / trace.len()) as u64
+        };
+        let mut sims: Vec<ClusterSim> = (0..groups)
+            .map(|g| ClusterSim::lockstep(Self::group_config(cfg, g), avg_seq))
+            .collect();
+        for sim in &mut sims {
+            sim.prime();
+        }
+        let mut headroom = vec![0.0f64; groups];
+        let mut last_t = f64::NEG_INFINITY;
+        for req in trace {
+            let t = req.arrival_s;
+            debug_assert!(t >= last_t, "lockstep needs a time-sorted trace");
+            last_t = t;
+            // Fence first, then pump strictly past events before `t`:
+            // after this, every group's clock is < `t` and no group has
+            // committed state at or beyond the injection instant.
+            for sim in &mut sims {
+                sim.fence(t);
+                sim.pump(t);
+            }
+            for (g, sim) in sims.iter().enumerate() {
+                headroom[g] = sim.router_headroom();
+            }
+            let g = router.route(req.id, &headroom);
+            sims[g].inject(req);
+        }
+        sims.into_iter()
+            .map(|mut sim| {
+                sim.close_arrivals();
+                sim.pump(f64::INFINITY);
+                sim.report()
+            })
+            .collect()
+    }
+}
+
+/// Step-function sum of several timelines: at every sample time in any
+/// input, emit the sum of each input's most recent value at or before
+/// that time (inputs are carried forward between their own samples).
+/// Pool timelines all start with a t=0 sample, so the carry-forward is
+/// well-defined from the origin.
+fn stepwise_sum(lines: &[&Timeline]) -> Timeline {
+    let mut idx = vec![0usize; lines.len()];
+    let mut cur = vec![0.0f64; lines.len()];
+    let mut out = Timeline::new();
+    loop {
+        let mut next: Option<f64> = None;
+        for (i, l) in lines.iter().enumerate() {
+            if let Some(&(t, _)) = l.points().get(idx[i]) {
+                next = Some(next.map_or(t, |n: f64| n.min(t)));
+            }
+        }
+        let Some(t) = next else { break };
+        for (i, l) in lines.iter().enumerate() {
+            while let Some(&(pt, v)) = l.points().get(idx[i]) {
+                if pt <= t {
+                    cur[i] = v;
+                    idx[i] += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        out.push(t, cur.iter().sum());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl(points: &[(f64, f64)]) -> Timeline {
+        let mut t = Timeline::new();
+        for &(x, v) in points {
+            t.push(x, v);
+        }
+        t
+    }
+
+    #[test]
+    fn stepwise_sum_carries_values_forward() {
+        let a = tl(&[(0.0, 2.0), (1.0, 3.0), (4.0, 1.0)]);
+        let b = tl(&[(0.0, 4.0), (2.0, 5.0)]);
+        let s = stepwise_sum(&[&a, &b]);
+        assert_eq!(
+            s.points(),
+            &[(0.0, 6.0), (1.0, 7.0), (2.0, 8.0), (4.0, 6.0)],
+            "each sample time sums the latest value of every input"
+        );
+        assert!(stepwise_sum(&[]).is_empty());
+        let empty = Timeline::new();
+        assert_eq!(stepwise_sum(&[&a, &empty]).points(), a.points());
+    }
+
+    #[test]
+    fn group_config_keeps_group_zero_seed() {
+        use crate::config::ModelSpec;
+        use crate::workload::WorkloadKind;
+        let cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 1.0);
+        assert_eq!(FleetSim::group_config(&cfg, 0).seed, cfg.seed);
+        let s1 = FleetSim::group_config(&cfg, 1).seed;
+        let s2 = FleetSim::group_config(&cfg, 2).seed;
+        assert_ne!(s1, cfg.seed);
+        assert_ne!(s1, s2, "groups get decorrelated RNG streams");
+    }
+}

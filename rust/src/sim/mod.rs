@@ -1,14 +1,25 @@
 //! Discrete-event cluster simulator for the A100-scale evaluation
 //! (Figs 1–3, 5–6, 9–18). See DESIGN.md §1 for why the paper's testbed is
 //! simulated and §4 for the per-figure index.
+//!
+//! The engine-mode API ([`EngineMode`]) resolves every engine switch
+//! (leap, within-run parallelism, exact costs, process-wide serial) once
+//! per run from config + the `ADRENALINE_*` escape hatches;
+//! [`FleetSim`] scales the single-cluster sim to N routed P/D groups
+//! with prefill-pool autoscaling (EXPERIMENTS.md §Fleet).
 
 pub mod cluster;
+pub mod engine_mode;
 pub mod events;
+pub mod fleet;
 pub mod run;
 
 pub use cluster::{ClusterSim, SimConfig, SimReport};
+pub use engine_mode::{engine_env, EngineEnv, EngineMode};
+pub use fleet::{FleetReport, FleetSim};
+#[allow(deprecated)]
+pub use run::{run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial};
 pub use run::{
-    budget_acquire, budget_release, par_config, parallel_map, parallel_map_capped, run_e2e,
-    run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, E2eConfig, E2ePoint,
-    ParallelismConfig, PoolTask, WorkerPool,
+    budget_acquire, budget_release, par_config, parallel_map, parallel_map_capped, run_e2e_with,
+    run_ratio_sweep_with, E2eConfig, E2ePoint, ExecMode, ParallelismConfig, PoolTask, WorkerPool,
 };

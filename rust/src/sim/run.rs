@@ -1,12 +1,16 @@
 //! End-to-end sweep harness: the request-rate sweeps behind Figs 11–14
 //! and the offload-ratio sweep behind Figs 15/17.
 //!
-//! Sweep points are independent, seed-deterministic simulations, so the
-//! default drivers fan them out across all cores with [`parallel_map`] and
-//! produce output **bit-identical** to the serial paths
-//! ([`run_e2e_serial`] / [`run_ratio_sweep_serial`], kept for the
-//! equivalence tests and for debugging). Set `ADRENALINE_SERIAL=1` to
-//! force serial execution.
+//! Sweep points are independent, seed-deterministic simulations, so one
+//! driver serves both execution strategies: [`run_e2e_with`] /
+//! [`run_ratio_sweep_with`] take an [`ExecMode`] and produce
+//! **bit-identical** output whether points fan out across all cores
+//! (`ExecMode::Parallel`, the default) or run inline
+//! (`ExecMode::Serial`, the equivalence-test reference). The old
+//! `run_e2e`/`run_e2e_serial` (and ratio-sweep) pairs survive as thin
+//! deprecated wrappers. Set `ADRENALINE_SERIAL=1` to force every
+//! [`parallel_map`] serial process-wide (resolved once, through
+//! [`engine_env`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
@@ -15,6 +19,7 @@ use crate::config::{ModelSpec, OffloadPolicy};
 use crate::workload::WorkloadKind;
 
 use super::cluster::{ClusterSim, SimConfig, SimReport};
+use super::engine_mode::engine_env;
 
 /// Process-wide parallelism settings, resolved exactly once. Hot sweep
 /// loops call [`parallel_map`] per point; re-reading `ADRENALINE_SERIAL`
@@ -28,11 +33,13 @@ pub struct ParallelismConfig {
     pub hw_threads: usize,
 }
 
-/// The once-initialized [`ParallelismConfig`].
+/// The once-initialized [`ParallelismConfig`]. The serial switch comes
+/// from the engine-mode env snapshot ([`engine_env`]) — the single
+/// `ADRENALINE_*` read site.
 pub fn par_config() -> &'static ParallelismConfig {
     static CONFIG: OnceLock<ParallelismConfig> = OnceLock::new();
     CONFIG.get_or_init(|| ParallelismConfig {
-        serial: std::env::var("ADRENALINE_SERIAL").map_or(false, |v| v == "1"),
+        serial: engine_env().serial,
         hw_threads: std::thread::available_parallelism().map_or(1, |p| p.get()),
     })
 }
@@ -356,32 +363,49 @@ fn e2e_point_config(cfg: &E2eConfig, rate: f64, system: &str) -> SimConfig {
     c
 }
 
-/// Run the vLLM-baseline and Adrenaline systems across the sweep, one
-/// simulation per core. Output order (and every value) is identical to
-/// [`run_e2e_serial`].
-pub fn run_e2e(cfg: &E2eConfig) -> Vec<E2ePoint> {
+/// How a sweep executes. Points are seed-deterministic and independent,
+/// so both modes produce bit-identical output — `Serial` exists as the
+/// equivalence-test reference and for debugging, not as a different
+/// semantics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One simulation per core via [`parallel_map`] (the default).
+    #[default]
+    Parallel,
+    /// Every point inline on the calling thread.
+    Serial,
+}
+
+/// Run the vLLM-baseline and Adrenaline systems across the sweep under
+/// the given [`ExecMode`]. Output order (and every value) is identical
+/// across modes.
+pub fn run_e2e_with(cfg: &E2eConfig, mode: ExecMode) -> Vec<E2ePoint> {
     let jobs: Vec<(f64, &'static str)> = cfg
         .rates
         .iter()
         .flat_map(|&rate| [(rate, "vllm"), (rate, "adrenaline")])
         .collect();
-    parallel_map(jobs.len(), |i| {
+    let point = |i: usize| {
         let (rate, system) = jobs[i];
         let report = ClusterSim::new(e2e_point_config(cfg, rate, system)).run();
         E2ePoint::from_report(rate, system, &report)
-    })
+    };
+    match mode {
+        ExecMode::Parallel => parallel_map(jobs.len(), point),
+        ExecMode::Serial => (0..jobs.len()).map(point).collect(),
+    }
 }
 
-/// Serial reference driver for [`run_e2e`].
+/// Thin wrapper kept for source compatibility.
+#[deprecated(note = "use `run_e2e_with(cfg, ExecMode::Parallel)`")]
+pub fn run_e2e(cfg: &E2eConfig) -> Vec<E2ePoint> {
+    run_e2e_with(cfg, ExecMode::Parallel)
+}
+
+/// Thin wrapper kept for source compatibility.
+#[deprecated(note = "use `run_e2e_with(cfg, ExecMode::Serial)`")]
 pub fn run_e2e_serial(cfg: &E2eConfig) -> Vec<E2ePoint> {
-    let mut out = Vec::new();
-    for &rate in &cfg.rates {
-        for system in ["vllm", "adrenaline"] {
-            let report = ClusterSim::new(e2e_point_config(cfg, rate, system)).run();
-            out.push(E2ePoint::from_report(rate, system, &report));
-        }
-    }
-    out
+    run_e2e_with(cfg, ExecMode::Serial)
 }
 
 /// Build the SimConfig for one ratio-sweep point.
@@ -402,8 +426,29 @@ fn ratio_point_config(
     cfg
 }
 
-/// Offload-ratio sweep (Fig 15/17): fixed-ratio policies at one rate, one
-/// simulation per core. Identical output to [`run_ratio_sweep_serial`].
+/// Offload-ratio sweep (Fig 15/17): fixed-ratio policies at one rate,
+/// under the given [`ExecMode`]. Output is identical across modes.
+pub fn run_ratio_sweep_with(
+    model: ModelSpec,
+    workload: WorkloadKind,
+    rate: f64,
+    ratios: &[f64],
+    duration_s: f64,
+    mode: ExecMode,
+) -> Vec<(f64, SimReport)> {
+    let point = |i: usize| {
+        let ratio = ratios[i];
+        let cfg = ratio_point_config(model, workload, rate, ratio, duration_s);
+        (ratio, ClusterSim::new(cfg).run())
+    };
+    match mode {
+        ExecMode::Parallel => parallel_map(ratios.len(), point),
+        ExecMode::Serial => (0..ratios.len()).map(point).collect(),
+    }
+}
+
+/// Thin wrapper kept for source compatibility.
+#[deprecated(note = "use `run_ratio_sweep_with(.., ExecMode::Parallel)`")]
 pub fn run_ratio_sweep(
     model: ModelSpec,
     workload: WorkloadKind,
@@ -411,14 +456,11 @@ pub fn run_ratio_sweep(
     ratios: &[f64],
     duration_s: f64,
 ) -> Vec<(f64, SimReport)> {
-    parallel_map(ratios.len(), |i| {
-        let ratio = ratios[i];
-        let cfg = ratio_point_config(model, workload, rate, ratio, duration_s);
-        (ratio, ClusterSim::new(cfg).run())
-    })
+    run_ratio_sweep_with(model, workload, rate, ratios, duration_s, ExecMode::Parallel)
 }
 
-/// Serial reference driver for [`run_ratio_sweep`].
+/// Thin wrapper kept for source compatibility.
+#[deprecated(note = "use `run_ratio_sweep_with(.., ExecMode::Serial)`")]
 pub fn run_ratio_sweep_serial(
     model: ModelSpec,
     workload: WorkloadKind,
@@ -426,13 +468,7 @@ pub fn run_ratio_sweep_serial(
     ratios: &[f64],
     duration_s: f64,
 ) -> Vec<(f64, SimReport)> {
-    ratios
-        .iter()
-        .map(|&ratio| {
-            let cfg = ratio_point_config(model, workload, rate, ratio, duration_s);
-            (ratio, ClusterSim::new(cfg).run())
-        })
-        .collect()
+    run_ratio_sweep_with(model, workload, rate, ratios, duration_s, ExecMode::Serial)
 }
 
 #[cfg(test)]
@@ -446,7 +482,7 @@ mod tests {
             duration_s: 40.0,
             ..E2eConfig::fig11()
         };
-        let pts = run_e2e(&cfg);
+        let pts = run_e2e_with(&cfg, ExecMode::Parallel);
         assert_eq!(pts.len(), 4);
         assert!(pts.iter().any(|p| p.system == "vllm"));
         assert!(pts.iter().any(|p| p.system == "adrenaline"));
@@ -457,12 +493,13 @@ mod tests {
 
     #[test]
     fn ratio_sweep_monotone_offload_fraction() {
-        let pts = run_ratio_sweep(
+        let pts = run_ratio_sweep_with(
             ModelSpec::llama2_7b(),
             WorkloadKind::ShareGpt,
             2.0,
             &[0.0, 0.4, 0.8],
             40.0,
+            ExecMode::default(),
         );
         assert_eq!(pts.len(), 3);
         assert_eq!(pts[0].1.offloaded_fraction, 0.0);
@@ -531,8 +568,8 @@ mod tests {
             duration_s: 30.0,
             ..E2eConfig::fig11()
         };
-        let par = run_e2e(&cfg);
-        let ser = run_e2e_serial(&cfg);
+        let par = run_e2e_with(&cfg, ExecMode::Parallel);
+        let ser = run_e2e_with(&cfg, ExecMode::Serial);
         assert_eq!(par.len(), ser.len());
         for (p, s) in par.iter().zip(&ser) {
             assert_eq!(p.rate, s.rate);
@@ -545,6 +582,35 @@ mod tests {
             assert_eq!(p.preemptions, s.preemptions);
             assert!(feq(p.offloaded_fraction, s.offloaded_fraction));
             assert!(feq(p.graph_padding_overhead, s.graph_padding_overhead));
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_match_the_unified_entry_points() {
+        let cfg = E2eConfig { rates: vec![2.0], duration_s: 20.0, ..E2eConfig::fig11() };
+        let old = run_e2e_serial(&cfg);
+        let new = run_e2e_with(&cfg, ExecMode::Serial);
+        assert_eq!(old.len(), new.len());
+        for (o, n) in old.iter().zip(&new) {
+            assert_eq!(o.system, n.system);
+            assert!(feq(o.throughput_tok_s, n.throughput_tok_s));
+            assert_eq!(o.finished, n.finished);
+        }
+        let model = ModelSpec::llama2_7b();
+        let old = run_ratio_sweep_serial(model, WorkloadKind::ShareGpt, 2.0, &[0.0, 0.5], 20.0);
+        let new = run_ratio_sweep_with(
+            model,
+            WorkloadKind::ShareGpt,
+            2.0,
+            &[0.0, 0.5],
+            20.0,
+            ExecMode::Serial,
+        );
+        for (o, n) in old.iter().zip(&new) {
+            assert_eq!(o.0, n.0);
+            assert!(feq(o.1.throughput, n.1.throughput));
+            assert_eq!(o.1.finished, n.1.finished);
         }
     }
 }

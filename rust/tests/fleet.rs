@@ -1,0 +1,379 @@
+//! Fleet layer contracts (ISSUE 8).
+//!
+//! The fleet is an *aggregation* layer: it must add routing and
+//! autoscaling without perturbing the per-group physics. The contracts
+//! pin that from both ends:
+//!
+//! * **Structural inertness** — `fleet: None` and a one-group fleet are
+//!   bit-identical to a bare [`ClusterSim`] run (same trace generator,
+//!   same report, bit for bit).
+//! * **Determinism** — every router policy (including the lockstep
+//!   least-loaded co-simulation) replays bit-identically run over run.
+//! * **Engine composition** — the decode-leap and within-run-parallelism
+//!   engines stay bit-identical through the lockstep fence/pump/inject
+//!   surface (CI re-runs this suite under `ADRENALINE_NO_LEAP=1` and
+//!   `ADRENALINE_NO_PAR=1`).
+//! * **Autoscaler safety** — unreachable thresholds never act (physics
+//!   match a fixed pool), and aggressive scale-down drains never lose a
+//!   request.
+
+use adrenaline::config::{AutoscaleConfig, FleetConfig, ModelSpec, RouterPolicy};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{parallel_map, ClusterSim, FleetReport, FleetSim, SimConfig, SimReport};
+use adrenaline::workload::{ArrivalPattern, WorkloadKind};
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Full-report bitwise equality (`step_leap.rs` house style). Unlike the
+/// leap contract there is no allowed difference here: both sides of
+/// every pairing in this suite take the same engine path, so even
+/// `events_processed` must match.
+fn assert_report_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.req_preemptions_total, b.req_preemptions_total);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert_eq!(a.events_processed, b.events_processed, "event counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.executor_bw_util, b.executor_bw_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.ttft_slo_attainment, b.ttft_slo_attainment));
+    assert!(feq(a.tpot_slo_attainment, b.tpot_slo_attainment));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("prefill_occupancy", &a.prefill_occupancy, &b.prefill_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_used_slots, b.graph_used_slots);
+    assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_eq!(a.bounds_refreshes, b.bounds_refreshes);
+    assert_eq!(a.b_tpot_observations, b.b_tpot_observations);
+    assert_eq!(a.decision_counts, b.decision_counts);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+    assert_timeline_eq("prefill_pool", &a.prefill_pool_timeline, &b.prefill_pool_timeline);
+    assert_eq!(a.scale_ups, b.scale_ups);
+    assert_eq!(a.scale_downs, b.scale_downs);
+}
+
+/// Leap contract variant: bit-identical physics, `events_processed`
+/// allowed to shrink on the leap side `a`.
+fn assert_leap_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_timeline_eq("prefill_pool", &a.prefill_pool_timeline, &b.prefill_pool_timeline);
+    assert_eq!(a.scale_ups, b.scale_ups);
+    assert_eq!(a.scale_downs, b.scale_downs);
+    assert!(
+        a.events_processed <= b.events_processed,
+        "leaping must never add events: {} vs {}",
+        a.events_processed,
+        b.events_processed
+    );
+}
+
+fn base_cfg(rate: f64, duration_s: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = duration_s;
+    cfg
+}
+
+/// A fleet run and a bare [`ClusterSim`] run over the same config must
+/// produce the same single-group report, bit for bit: `ClusterSim::new`
+/// and the fleet's shared-trace generation are the same code path.
+fn assert_fleet_matches_bare(fleet: &FleetReport, bare: &SimReport) {
+    assert_eq!(fleet.groups.len(), 1);
+    assert_report_identical(&fleet.groups[0], bare);
+    assert!(feq(fleet.fleet_throughput, bare.throughput));
+    assert!(feq(fleet.fleet_goodput, bare.goodput));
+    assert_stats_eq("fleet_ttft", &fleet.fleet_ttft, &bare.ttft);
+    assert_stats_eq("fleet_tpot", &fleet.fleet_tpot, &bare.tpot);
+    assert_eq!(fleet.arrived, bare.arrived);
+    assert_eq!(fleet.finished, bare.finished);
+    assert_eq!(fleet.steps_simulated, bare.steps_simulated);
+    assert_eq!(fleet.events_processed, bare.events_processed);
+    assert_eq!(fleet.scale_events, 0);
+    assert!(fleet.fleet_size_timeline.is_empty(), "no autoscaler, no pool timeline");
+    assert_eq!(fleet.router_decisions, vec![bare.arrived as u64]);
+}
+
+#[test]
+fn fleet_none_is_bit_identical_to_bare_sim() {
+    // `fleet: None` resolves to the default one-group round-robin fleet;
+    // the acceptance gate says it must be structurally inert.
+    let cfg = base_cfg(8.0, 30.0);
+    assert!(cfg.serving.fleet.is_none(), "paper default must not enable the fleet layer");
+    let fleet = FleetSim::new(cfg.clone()).run();
+    let bare = ClusterSim::new(cfg).run();
+    assert!(bare.finished > 0);
+    assert_fleet_matches_bare(&fleet, &bare);
+}
+
+#[test]
+fn one_group_fleet_is_bit_identical_to_bare_sim_under_every_policy() {
+    // With one group every policy routes everything to group 0, so the
+    // policy must be unobservable in the report.
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::SessionSticky]
+    {
+        let mut cfg = base_cfg(8.0, 30.0);
+        cfg.serving.fleet = Some(FleetConfig { groups: 1, router, autoscale: None });
+        let fleet = FleetSim::new(cfg.clone()).run();
+        cfg.serving.fleet = None;
+        let bare = ClusterSim::new(cfg).run();
+        assert!(bare.finished > 0);
+        assert_fleet_matches_bare(&fleet, &bare);
+    }
+}
+
+#[test]
+fn every_router_policy_replays_deterministically() {
+    // Same config, two runs, bit-identical fleet reports — including the
+    // least-loaded lockstep co-simulation, whose routing depends on live
+    // headroom reads at every arrival instant.
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::SessionSticky]
+    {
+        let mut cfg = base_cfg(24.0, 20.0);
+        cfg.arrivals = ArrivalPattern::Bursty { period_s: 10.0, duty: 0.25, mult: 3.0 };
+        cfg.serving.fleet = Some(FleetConfig { groups: 3, router, autoscale: None });
+        let mut runs: Vec<FleetReport> =
+            parallel_map(2, |_| FleetSim::new(cfg.clone()).run());
+        let b = runs.pop().expect("two runs");
+        let a = runs.pop().expect("two runs");
+        assert!(a.finished > 0, "{}: trace must finish work", router.name());
+        assert_eq!(a.router_decisions, b.router_decisions, "{} routing", router.name());
+        assert_eq!(
+            a.router_decisions.iter().sum::<u64>(),
+            a.arrived as u64,
+            "{}: every arrival routes exactly once",
+            router.name()
+        );
+        for (ga, gb) in a.groups.iter().zip(&b.groups) {
+            assert_report_identical(ga, gb);
+        }
+    }
+}
+
+#[test]
+fn lockstep_least_loaded_is_leap_and_par_safe() {
+    // The lockstep fence/pump/inject surface must compose with both
+    // engines: the fence pins the leap horizon at each injection instant,
+    // so leap-on, leap-off and par-off runs all agree bit for bit —
+    // including the routing itself (identical headroom reads).
+    let mk = |no_leap: bool, no_par: bool| {
+        let mut cfg = base_cfg(24.0, 25.0);
+        cfg.arrivals = ArrivalPattern::Diurnal { period_s: 15.0, depth: 0.8 };
+        cfg.serving.no_leap = no_leap;
+        cfg.serving.no_par = no_par;
+        cfg.serving.fleet =
+            Some(FleetConfig { groups: 2, router: RouterPolicy::LeastLoaded, autoscale: None });
+        cfg
+    };
+    let on = FleetSim::new(mk(false, false)).run();
+    let no_leap = FleetSim::new(mk(true, false)).run();
+    let no_par = FleetSim::new(mk(false, true)).run();
+    assert!(on.finished > 0);
+    assert_eq!(on.router_decisions, no_leap.router_decisions, "leap must not change routing");
+    assert_eq!(on.router_decisions, no_par.router_decisions, "par must not change routing");
+    assert!(
+        on.router_decisions.iter().all(|&n| n > 0),
+        "least-loaded must spread a saturating trace: {:?}",
+        on.router_decisions
+    );
+    for (ga, gb) in on.groups.iter().zip(&no_leap.groups) {
+        assert_leap_identical(ga, gb);
+    }
+    for (ga, gb) in on.groups.iter().zip(&no_par.groups) {
+        assert_report_identical(ga, gb);
+    }
+}
+
+#[test]
+fn unreachable_thresholds_keep_the_pool_pinned() {
+    // An autoscaler that can never fire must not perturb the physics:
+    // same arrivals, same finishes, same step series and latency stats
+    // as a fixed pool. (Tick events do land in the queue, so
+    // `events_processed` legitimately differs — everything physical must
+    // not.)
+    let autoscale = AutoscaleConfig {
+        min_prefill: 2,
+        max_prefill: 2,
+        initial_prefill: None,
+        scale_up_pressure: 1e9,
+        scale_down_pressure: -1.0,
+        ..AutoscaleConfig::default()
+    };
+    let mut cfg = base_cfg(48.0, 30.0);
+    cfg.cluster.n_prefill = 2;
+    cfg.serving.fleet = Some(FleetConfig {
+        groups: 2,
+        router: RouterPolicy::RoundRobin,
+        autoscale: Some(autoscale),
+    });
+    let with = FleetSim::new(cfg.clone()).run();
+    cfg.serving.fleet =
+        Some(FleetConfig { groups: 2, router: RouterPolicy::RoundRobin, autoscale: None });
+    let without = FleetSim::new(cfg).run();
+    assert!(with.finished > 0);
+    assert_eq!(with.scale_events, 0, "unreachable thresholds must never act");
+    assert_eq!(with.arrived, without.arrived);
+    assert_eq!(with.finished, without.finished);
+    assert_eq!(with.steps_simulated, without.steps_simulated);
+    assert_stats_eq("ttft", &with.fleet_ttft, &without.fleet_ttft);
+    assert_stats_eq("tpot", &with.fleet_tpot, &without.fleet_tpot);
+    for (ga, gb) in with.groups.iter().zip(&without.groups) {
+        // Per-request physics are identical; the run-end clock is not
+        // (the final idle tick extends it by up to `tick_s`), so the
+        // window-based rates compare only when the stable window — a
+        // pure function of the identical per-step timelines — exists.
+        assert_eq!(ga.arrived, gb.arrived);
+        assert_eq!(ga.finished, gb.finished);
+        assert_eq!(ga.steps_simulated, gb.steps_simulated);
+        assert_stats_eq("group ttft", &ga.ttft, &gb.ttft);
+        assert_stats_eq("group tpot", &ga.tpot, &gb.tpot);
+        assert_timeline_eq("decode_occupancy", &ga.decode_occupancy, &gb.decode_occupancy);
+        assert_timeline_eq("batch_size", &ga.batch_size, &gb.batch_size);
+        match (&ga.window, &gb.window) {
+            (Some(x), Some(y)) => {
+                assert!(feq(x.start, y.start) && feq(x.end, y.end), "window bounds");
+                assert!(feq(ga.throughput, gb.throughput));
+                assert!(feq(ga.goodput, gb.goodput));
+            }
+            (None, None) => {}
+            _ => panic!("stable-window presence differs"),
+        }
+    }
+    // The pinned pool's timeline exists and never moves off 2 per group
+    // (4 fleet-wide).
+    assert!(!with.fleet_size_timeline.is_empty());
+    assert!(
+        with.fleet_size_timeline.points().iter().all(|&(_, v)| v == 4.0),
+        "pool must stay pinned at the floor=ceiling size"
+    );
+    assert!(without.fleet_size_timeline.is_empty());
+}
+
+#[test]
+fn aggressive_scale_down_drains_without_losing_requests() {
+    // Thresholds rigged so the pool always wants to shrink: the scaler
+    // must drain victims through the health plane — requests already
+    // queued on a draining instance still complete — and land every
+    // request, with token conservation intact in every group.
+    let autoscale = AutoscaleConfig {
+        min_prefill: 1,
+        max_prefill: 3,
+        initial_prefill: Some(3),
+        scale_up_pressure: 1e9,
+        scale_down_pressure: 1e9, // always satisfied => shrink to the floor
+        sustain_s: 0.5,
+        cooldown_s: 1.0,
+        tick_s: 0.25,
+    };
+    let mut cfg = base_cfg(16.0, 30.0);
+    cfg.cluster.n_prefill = 3;
+    cfg.serving.fleet = Some(FleetConfig {
+        groups: 2,
+        router: RouterPolicy::RoundRobin,
+        autoscale: Some(autoscale),
+    });
+    let r = FleetSim::new(cfg).run();
+    assert!(r.arrived > 0);
+    assert_eq!(r.finished, r.arrived, "drains must not lose requests");
+    assert!(r.scale_events >= 2, "both groups must shrink: {}", r.scale_events);
+    for g in &r.groups {
+        assert!(g.tokens_conserved, "drain must conserve tokens");
+        assert!(g.scale_downs >= 1);
+        assert_eq!(g.scale_ups, 0, "scale-up threshold is unreachable");
+    }
+    // The fleet pool timeline starts at the full 6 (3 per group) and
+    // shrinks toward the floor.
+    let pts = r.fleet_size_timeline.points();
+    assert!(!pts.is_empty());
+    assert_eq!(pts[0].1, 6.0, "pools start at initial_prefill");
+    let min = pts.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min);
+    assert!(min < 6.0, "the pool must actually shrink");
+}
+
+#[test]
+fn autoscaler_tracks_a_diurnal_wave() {
+    // The acceptance-gate scenario shape: a diurnal trace against pools
+    // that start at the floor. Peaks must pull the pool up; the timeline
+    // must move in both directions across the run.
+    let autoscale = AutoscaleConfig {
+        min_prefill: 1,
+        max_prefill: 3,
+        initial_prefill: None,
+        scale_up_pressure: 0.2,
+        scale_down_pressure: 0.05,
+        sustain_s: 1.0,
+        cooldown_s: 2.0,
+        tick_s: 0.25,
+    };
+    let mut cfg = base_cfg(32.0, 40.0);
+    cfg.arrivals = ArrivalPattern::Diurnal { period_s: 20.0, depth: 0.9 };
+    cfg.cluster.n_prefill = 3;
+    cfg.serving.fleet = Some(FleetConfig {
+        groups: 2,
+        router: RouterPolicy::RoundRobin,
+        autoscale: Some(autoscale),
+    });
+    let r = FleetSim::new(cfg).run();
+    assert!(r.finished > 0);
+    let ups: u64 = r.groups.iter().map(|g| g.scale_ups).sum();
+    assert!(ups >= 1, "diurnal peaks must trigger scale-ups");
+    let pts = r.fleet_size_timeline.points();
+    let max = pts.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max);
+    let min = pts.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min);
+    assert!(max > min, "the pool must move with the wave: min={min} max={max}");
+    assert_eq!(pts[0].1, 2.0, "pools start at the floor (1 per group)");
+}

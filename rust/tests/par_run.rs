@@ -336,7 +336,7 @@ fn epochs_still_collapse_events() {
     let reference = runs.pop().expect("two runs");
     let leap = runs.pop().expect("two runs");
     assert_eq!(leap.steps_simulated, reference.steps_simulated);
-    let env_forced = std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
+    let env_forced = adrenaline::sim::engine_env().no_leap;
     if env_forced {
         assert_eq!(leap.events_processed, reference.events_processed);
     } else {

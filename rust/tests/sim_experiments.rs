@@ -14,7 +14,7 @@
 //! the pre-refactor numbers bit-for-bit).
 
 use adrenaline::config::ModelSpec;
-use adrenaline::sim::{run_e2e, ClusterSim, E2eConfig, SimConfig};
+use adrenaline::sim::{run_e2e_with, ClusterSim, E2eConfig, ExecMode, SimConfig};
 use adrenaline::workload::WorkloadKind;
 
 fn quick(model: ModelSpec, workload: WorkloadKind, on: bool, rate: f64, dur: f64) -> adrenaline::sim::SimReport {
@@ -141,7 +141,7 @@ fn llama13b_same_shapes() {
     assert!(adre.prefill_hbm_capacity_util > base.prefill_hbm_capacity_util);
 }
 
-/// run_e2e produces both systems at every rate (the figure-driver path).
+/// The e2e driver produces both systems at every rate (the figure path).
 #[test]
 fn e2e_driver_integrity() {
     let cfg = E2eConfig {
@@ -149,7 +149,7 @@ fn e2e_driver_integrity() {
         duration_s: 60.0,
         ..E2eConfig::fig11()
     };
-    let pts = run_e2e(&cfg);
+    let pts = run_e2e_with(&cfg, ExecMode::Parallel);
     assert_eq!(pts.len(), 4);
     for p in &pts {
         assert!(p.finished > 0);

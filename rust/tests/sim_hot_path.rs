@@ -12,8 +12,7 @@
 use adrenaline::config::{GpuSpec, ModelSpec};
 use adrenaline::gpu_model::{CostMode, CostModel, InterferenceModel, Roofline};
 use adrenaline::sim::{
-    parallel_map, run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial, ClusterSim,
-    SimConfig, SimReport,
+    parallel_map, run_e2e_with, run_ratio_sweep_with, ClusterSim, ExecMode, SimConfig, SimReport,
 };
 use adrenaline::util::prop;
 use adrenaline::workload::WorkloadKind;
@@ -115,8 +114,10 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport) {
 fn ratio_sweep_parallel_matches_serial_bitwise() {
     let m = ModelSpec::llama2_7b();
     let ratios = [0.0, 0.4, 0.8];
-    let par = run_ratio_sweep(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0);
-    let ser = run_ratio_sweep_serial(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0);
+    let par =
+        run_ratio_sweep_with(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0, ExecMode::Parallel);
+    let ser =
+        run_ratio_sweep_with(m, WorkloadKind::ShareGpt, 8.0, &ratios, 30.0, ExecMode::Serial);
     assert_eq!(par.len(), ser.len());
     for ((rp, p), (rs, s)) in par.iter().zip(&ser) {
         assert_eq!(rp, rs, "ratio order must match the serial driver");
@@ -235,8 +236,8 @@ fn e2e_sweep_parallel_matches_serial() {
         duration_s: 30.0,
         ..adrenaline::sim::E2eConfig::fig13()
     };
-    let par = run_e2e(&cfg);
-    let ser = run_e2e_serial(&cfg);
+    let par = run_e2e_with(&cfg, ExecMode::Parallel);
+    let ser = run_e2e_with(&cfg, ExecMode::Serial);
     assert_eq!(par.len(), ser.len());
     for (p, s) in par.iter().zip(&ser) {
         assert_eq!((p.rate, p.system), (s.rate, s.system));

@@ -298,7 +298,7 @@ fn leap_collapses_events_on_quiet_traces() {
     cfg.duration_s = 30.0;
     let (on, off) = leap_pair(&cfg);
     assert_eq!(on.steps_simulated, off.steps_simulated);
-    let env_forced = std::env::var("ADRENALINE_NO_LEAP").map_or(false, |v| v == "1");
+    let env_forced = adrenaline::sim::engine_env().no_leap;
     if env_forced {
         assert_eq!(on.events_processed, off.events_processed);
     } else {
