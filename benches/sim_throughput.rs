@@ -23,7 +23,8 @@
 use std::collections::BTreeMap;
 
 use adrenaline::config::{
-    AutoscaleConfig, FaultConfig, FaultKind, FleetConfig, ModelSpec, RouterPolicy, ScriptedFault,
+    AutoscaleConfig, DeviceProfile, DeviceProfiles, DeviceRole, FaultConfig, FaultKind,
+    FleetConfig, GpuSpec, ModelSpec, RouterPolicy, ScriptedFault,
 };
 use adrenaline::sim::{ClusterSim, FleetReport, FleetSim, SimConfig, SimReport};
 use adrenaline::util::bench::{figure_row, Bench, BenchStats};
@@ -191,6 +192,7 @@ fn run_fleet_mode(
                 max_prefill: 3,
                 ..AutoscaleConfig::default()
             }),
+            ..FleetConfig::default()
         });
         last = Some(FleetSim::new(cfg).run());
     });
@@ -266,12 +268,25 @@ fn main() {
         });
     };
 
+    // Heterogeneous-offload row (ISSUE 9): offloaded KV on a standalone
+    // memory-rich H20-class executor instead of the colocated SM share.
+    // Informational like the fault row — the CI floor gate still reads
+    // only `saturated_32rps` — but it tracks the per-device cost plane's
+    // hot-path cost across PRs.
+    let hetero_offload: fn(&mut SimConfig) = |cfg| {
+        cfg.cluster.profiles = Some(DeviceProfiles {
+            executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+            ..DeviceProfiles::default()
+        });
+    };
+
     let scenarios = [
         ("light_4rps", WorkloadKind::ShareGpt, 4.0, iters, noop),
         ("saturated_32rps", WorkloadKind::ShareGpt, 32.0, iters, noop),
         // OpenThoughts generates ~10x the decode steps per request.
         ("openthoughts_2rps", WorkloadKind::OpenThoughts, 2.0, iters.min(3), noop),
         ("saturated_32rps_fault_crash", WorkloadKind::ShareGpt, 32.0, iters, fault_crash),
+        ("hetero_offload_16rps", WorkloadKind::ShareGpt, 16.0, iters, hetero_offload),
     ];
     for (name, workload, rate, iters, customize) in scenarios {
         // Reference first so the paired leap-on row can carry the ratio.

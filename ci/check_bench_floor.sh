@@ -18,7 +18,13 @@
 # the within-run parallelism speedup (ISSUE 7) — also informational,
 # since it scales with the runner's core count. The paired
 # `fleet_4grp_diurnal` rows (ISSUE 8) get the same treatment: the
-# 4-group lockstep fleet's leap speedup is printed, never gated.
+# 4-group lockstep fleet's leap speedup is printed, never gated. So do
+# the paired `hetero_offload_16rps` rows (ISSUE 9): the standalone-
+# executor cost plane's leap speedup is printed, never gated.
+#
+# To help the ratchet protocol along, the gate also prints a suggested
+# floor (20% of the measured saturated_32rps steps/s) — copy it into
+# ci/sim_bench_floor.txt when ratcheting from a CI artifact.
 #
 # Floor calibration protocol (EXPERIMENTS.md §Perf):
 #   * the floor lives in ci/sim_bench_floor.txt and is deliberately set
@@ -53,6 +59,8 @@ par_sps = None
 par_ref_sps = None
 fleet_sps = None
 fleet_ref_sps = None
+hetero_sps = None
+hetero_ref_sps = None
 for row in rows:
     if row.get("bench") == "sim_throughput/saturated_32rps":
         sps = float(row["steps_per_second"])
@@ -66,6 +74,10 @@ for row in rows:
         fleet_sps = float(row.get("steps_per_second", 0.0))
     elif row.get("bench") == "sim_throughput/fleet_4grp_diurnal_no_leap":
         fleet_ref_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/hetero_offload_16rps":
+        hetero_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/hetero_offload_16rps_no_leap":
+        hetero_ref_sps = float(row.get("steps_per_second", 0.0))
 if sps is None:
     print(f"bench gate: saturated_32rps row missing from {path}", file=sys.stderr)
     sys.exit(1)
@@ -87,6 +99,13 @@ if fleet_sps and fleet_ref_sps:
         f"{fleet_sps / fleet_ref_sps:.2f}x "
         f"(leap-off reference = {fleet_ref_sps:.0f} steps/s)"
     )
+if hetero_sps and hetero_ref_sps:
+    print(
+        f"bench gate: hetero leap speedup (standalone executor) = "
+        f"{hetero_sps / hetero_ref_sps:.2f}x "
+        f"(leap-off reference = {hetero_ref_sps:.0f} steps/s)"
+    )
+print(f"bench gate: suggested ratchet floor = {0.2 * sps:.0f} (20% of measured)")
 if sps >= floor:
     print("bench gate: PASS")
 else:

@@ -3,7 +3,7 @@
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
 //!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
-//!                  rebalance|buckets|feedback|faults|fleet|all]`
+//!                  rebalance|buckets|feedback|faults|fleet|hetero|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -66,6 +66,7 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("feedback", feedback),
     ("faults", faults),
     ("fleet", fleet),
+    ("hetero", hetero),
 ];
 
 fn main() {
@@ -694,7 +695,7 @@ fn fleet(out: &mut String) {
         cfg.duration_s = 120.0;
         cfg.arrivals = diurnal;
         cfg.serving.fleet =
-            Some(FleetConfig { groups: 4, router: policies[i], autoscale: None });
+            Some(FleetConfig { groups: 4, router: policies[i], ..FleetConfig::default() });
         FleetSim::new(cfg).run()
     });
     for (p, r) in policies.iter().zip(&reports) {
@@ -728,8 +729,7 @@ fn fleet(out: &mut String) {
         let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 16.0 * g as f64);
         cfg.duration_s = 120.0;
         cfg.arrivals = diurnal;
-        cfg.serving.fleet =
-            Some(FleetConfig { groups: g, router: RouterPolicy::RoundRobin, autoscale: None });
+        cfg.serving.fleet = Some(FleetConfig { groups: g, ..FleetConfig::default() });
         FleetSim::new(cfg).run()
     });
     for (&g, r) in sizes.iter().zip(&scale_reports) {
@@ -751,8 +751,7 @@ fn fleet(out: &mut String) {
         } else {
             None // fixed at the full pool (the ceiling)
         };
-        cfg.serving.fleet =
-            Some(FleetConfig { groups: 4, router: RouterPolicy::RoundRobin, autoscale });
+        cfg.serving.fleet = Some(FleetConfig { groups: 4, autoscale, ..FleetConfig::default() });
         FleetSim::new(cfg).run()
     });
     let (auto, fixed) = (&autoscaled[0], &autoscaled[1]);
@@ -763,5 +762,87 @@ fn fleet(out: &mut String) {
     let stride = (pts.len() / 60).max(1);
     for (t, v) in pts.iter().step_by(stride) {
         row(out, "fleet", "pool_size", *t, *v);
+    }
+}
+
+/// Relative street-price units for the equal-hardware-cost comparison in
+/// the `hetero` group: A100-80G = 1.0 by definition; an H20-class
+/// memory-rich part trades at very roughly 0.45 of an A100 (compute is
+/// cut ~4x while HBM capacity/bandwidth grow — the pricing asymmetry
+/// arXiv 2405.01814 exploits). The absolute ratio is informational; the
+/// per-cost series just needs a fixed, documented normalization.
+const A100_COST_UNITS: f64 = 1.0;
+const H20_COST_UNITS: f64 = 0.45;
+
+/// Heterogeneous device profiles (ISSUE 9 / EXPERIMENTS.md
+/// §Heterogeneous): three ways to buy attention capacity, compared at
+/// their actual hardware cost:
+///
+/// * `homogeneous` — the paper's deployment: 1 prefill + 1 decode A100,
+///   executor colocated on prefill SMs (2.0 A100 units);
+/// * `hetero_offload` — the same A100 pair plus a standalone memory-rich
+///   H20-class executor holding the offloaded KV (2.45 units);
+/// * `intra_split` — one A100 statically split 45 % prefill / 55 %
+///   decode SMs, no offload (Nexus-style, 1.0 unit).
+///
+/// Per-scenario rows: throughput, goodput and throughput *per cost unit*
+/// over a rate sweep, plus each scenario's Eq 1 OB_mem and cost.
+fn hetero(out: &mut String) {
+    use adrenaline::config::{DeviceProfile, DeviceProfiles, DeviceRole};
+
+    let m = ModelSpec::llama2_7b();
+    let a100 = GpuSpec::a100_80g();
+    let offload_profiles = DeviceProfiles {
+        executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+        ..DeviceProfiles::default()
+    };
+    let split_profiles = DeviceProfiles {
+        prefill: Some(DeviceProfile::partitioned(a100, DeviceRole::Prefill, 0.45)),
+        decode: Some(DeviceProfile::partitioned(a100, DeviceRole::Decode, 0.55)),
+        executor: None,
+    };
+    let scenarios: [(&str, Option<DeviceProfiles>, bool, f64); 3] = [
+        ("homogeneous", None, true, 2.0 * A100_COST_UNITS),
+        ("hetero_offload", Some(offload_profiles), true, 2.0 * A100_COST_UNITS + H20_COST_UNITS),
+        ("intra_split", Some(split_profiles), false, A100_COST_UNITS),
+    ];
+
+    let rates = [8.0, 16.0, 24.0];
+    let jobs: Vec<(usize, f64)> =
+        scenarios.iter().enumerate().flat_map(|(s, _)| rates.map(|r| (s, r))).collect();
+    let reports: Vec<SimReport> = parallel_map(jobs.len(), |i| {
+        let (s, rate) = jobs[i];
+        let (_, profiles, offload, _) = scenarios[s];
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rate);
+        cfg.duration_s = 60.0;
+        cfg.cluster.profiles = profiles;
+        if !offload {
+            cfg.serving.offload = adrenaline::config::OffloadPolicy::Disabled;
+        }
+        ClusterSim::new(cfg).run()
+    });
+
+    for (i, r) in reports.iter().enumerate() {
+        let (s, rate) = jobs[i];
+        let (name, _, _, cost) = scenarios[s];
+        row(out, "hetero", &format!("{name}_tput_tok_s"), rate, r.throughput);
+        row(out, "hetero", &format!("{name}_goodput_tok_s"), rate, r.goodput);
+        row(out, "hetero", &format!("{name}_tput_per_cost"), rate, r.throughput / cost);
+        row(
+            out,
+            "hetero",
+            &format!("{name}_ttft_s"),
+            rate,
+            r.ttft.map(|s| s.mean).unwrap_or(f64::NAN),
+        );
+    }
+
+    // Static per-scenario context: the cost normalization and Eq 1's
+    // memory-side offload bound on each scenario's cluster.
+    for (name, profiles, _, cost) in scenarios {
+        let mut cluster = ClusterSpec::paper_default();
+        cluster.profiles = profiles;
+        row(out, "hetero", &format!("{name}_cost_units"), 0.0, cost);
+        row(out, "hetero", &format!("{name}_ob_mem"), 0.0, OffloadBounds::ob_mem(&cluster, &m));
     }
 }

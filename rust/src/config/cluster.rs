@@ -1,4 +1,4 @@
-//! GPU hardware specs and cluster topology.
+//! GPU hardware specs, per-role device profiles, and cluster topology.
 
 /// A single accelerator's capabilities. Defaults model the paper's testbed
 /// (NVIDIA A100-80GB SXM).
@@ -37,12 +37,101 @@ impl GpuSpec {
             bw_eff: 0.83,
         }
     }
+
+    /// NVIDIA H20: the compute-cut, memory-rich Hopper variant — the
+    /// canonical "cheaper, memory-richer" attention-executor device the
+    /// model-attention-disaggregation line (arXiv 2405.01814) targets:
+    /// less than half the A100's dense FLOPs, but 2x the HBM bandwidth
+    /// and more capacity.
+    pub const fn h20_96g() -> Self {
+        GpuSpec {
+            name: "H20-96GB",
+            peak_flops: 148e12,
+            hbm_bw: 4.0e12,
+            hbm_capacity: 96e9,
+            num_sms: 78,
+            interconnect_bw: 900e9,
+            compute_eff: 0.60,
+            bw_eff: 0.83,
+        }
+    }
+
+    /// Preset lookup by `name` — the device vocabulary of the JSON config
+    /// plane (`FleetConfig::group_profiles` carries GPUs by name).
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        [Self::a100_80g(), Self::h20_96g()].into_iter().find(|g| g.name == name)
+    }
 }
 
 impl Default for GpuSpec {
     fn default() -> Self {
         Self::a100_80g()
     }
+}
+
+/// Which instance class a [`DeviceProfile`] prices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceRole {
+    /// Prefill instances (prompt processing).
+    Prefill,
+    /// Decode instances (token generation, non-attention + local attention).
+    Decode,
+    /// The offloaded-attention executor. Colocated on the prefill GPU by
+    /// default (the paper's deployment); a standalone profile models the
+    /// memory-rich dedicated device of arXiv 2405.01814.
+    Executor,
+}
+
+impl DeviceRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceRole::Prefill => "prefill",
+            DeviceRole::Decode => "decode",
+            DeviceRole::Executor => "executor",
+        }
+    }
+}
+
+/// One instance class's device: a GPU plus an optional SM partition it
+/// runs inside (the intra-GPU disaggregation of Nexus / RAPID-Serve,
+/// priced through `gpu_model/partition.rs`). `sm_frac: None` means the
+/// role owns the whole GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub gpu: GpuSpec,
+    pub role: DeviceRole,
+    /// SM fraction the role is confined to, in (0, 1]. `None` = whole GPU.
+    pub sm_frac: Option<f64>,
+}
+
+impl DeviceProfile {
+    /// A role owning the whole GPU.
+    pub const fn whole(gpu: GpuSpec, role: DeviceRole) -> Self {
+        DeviceProfile { gpu, role, sm_frac: None }
+    }
+
+    /// A role confined to an SM partition of the GPU.
+    pub const fn partitioned(gpu: GpuSpec, role: DeviceRole, sm_frac: f64) -> Self {
+        DeviceProfile { gpu, role, sm_frac: Some(sm_frac) }
+    }
+}
+
+/// Per-role device overrides. Every slot is optional: `None` keeps the
+/// role on [`ClusterSpec::gpu`] exactly as before the refactor, so the
+/// all-`None` value (the default) is structurally inert — pinned
+/// bit-identical by `rust/tests/hetero.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceProfiles {
+    /// Prefill instances' device. A partitioned profile models the
+    /// intra-GPU SM split (prefill pays `prefill_slowdown(sm_frac)`).
+    pub prefill: Option<DeviceProfile>,
+    /// Decode instances' device.
+    pub decode: Option<DeviceProfile>,
+    /// Attention executor's device. `None` = colocated on the prefill
+    /// GPU at `attn_executor_sm_frac` (the paper's deployment); `Some` =
+    /// a standalone executor device (no interference with prefill, KV
+    /// pool sized from its own HBM).
+    pub executor: Option<DeviceProfile>,
 }
 
 /// Cluster topology for a PD-disaggregated deployment.
@@ -57,13 +146,18 @@ pub struct ClusterSpec {
     /// `gpu_memory_utilization`; the paper uses 0.8).
     pub memory_utilization: f64,
     /// SM fraction granted to the attention executor on prefill GPUs
-    /// (Adrenaline's configurable MPS knob, §3.3.2).
+    /// (Adrenaline's configurable MPS knob, §3.3.2). Only meaningful
+    /// while the executor is colocated (`profiles.executor` unset).
     ///
     /// Calibration: Fig 18a reports the executor sustaining 83 % of the
     /// bandwidth-capacity limit while active, which on the Fig 9 curve
     /// requires roughly half the SMs (bw_frac(0.5) ≈ 0.80); Fig 10 shows
     /// prefill tolerating that reservation. 0.5 reproduces both panels.
     pub attn_executor_sm_frac: f64,
+    /// Per-role device overrides. `None` (the default) prices every
+    /// instance class on `gpu` — bit-identical to the single-profile
+    /// cost plane (pinned by `rust/tests/hetero.rs`).
+    pub profiles: Option<DeviceProfiles>,
 }
 
 impl ClusterSpec {
@@ -76,6 +170,7 @@ impl ClusterSpec {
             n_decode: 1,
             memory_utilization: 0.8,
             attn_executor_sm_frac: 0.5,
+            profiles: None,
         }
     }
 
@@ -87,6 +182,47 @@ impl ClusterSpec {
     /// Usable HBM for KV + weights on one instance, bytes.
     pub fn usable_hbm(&self) -> f64 {
         self.gpu.hbm_capacity * self.memory_utilization
+    }
+
+    /// Usable HBM on an arbitrary device under this cluster's
+    /// `memory_utilization` (the per-profile variant of [`usable_hbm`]).
+    ///
+    /// [`usable_hbm`]: ClusterSpec::usable_hbm
+    pub fn usable_hbm_of(&self, gpu: &GpuSpec) -> f64 {
+        gpu.hbm_capacity * self.memory_utilization
+    }
+
+    /// The prefill instances' resolved device profile.
+    pub fn prefill_profile(&self) -> DeviceProfile {
+        self.profiles
+            .and_then(|p| p.prefill)
+            .unwrap_or(DeviceProfile { gpu: self.gpu, role: DeviceRole::Prefill, sm_frac: None })
+    }
+
+    /// The decode instances' resolved device profile.
+    pub fn decode_profile(&self) -> DeviceProfile {
+        self.profiles
+            .and_then(|p| p.decode)
+            .unwrap_or(DeviceProfile { gpu: self.gpu, role: DeviceRole::Decode, sm_frac: None })
+    }
+
+    /// The attention executor's resolved device profile. Colocated by
+    /// default: the prefill device's GPU at `attn_executor_sm_frac` (the
+    /// `max(1e-3)` clamp mirrors the sim's historical guard against a
+    /// zero partition).
+    pub fn executor_profile(&self) -> DeviceProfile {
+        self.profiles.and_then(|p| p.executor).unwrap_or(DeviceProfile {
+            gpu: self.prefill_profile().gpu,
+            role: DeviceRole::Executor,
+            sm_frac: Some(self.attn_executor_sm_frac.max(1e-3)),
+        })
+    }
+
+    /// Whether the executor shares the prefill GPU (the paper's
+    /// deployment). Standalone executor profiles (arXiv 2405.01814) do
+    /// not slow prefill down and size their KV pool from their own HBM.
+    pub fn executor_is_colocated(&self) -> bool {
+        self.profiles.is_none_or(|p| p.executor.is_none())
     }
 }
 
@@ -109,9 +245,30 @@ mod tests {
     }
 
     #[test]
+    fn h20_is_memory_rich_and_compute_cut() {
+        let a = GpuSpec::a100_80g();
+        let h = GpuSpec::h20_96g();
+        assert!(h.peak_flops < a.peak_flops / 2.0, "the executor device is cheap on compute");
+        assert!(h.hbm_bw > a.hbm_bw, "but richer on bandwidth");
+        assert!(h.hbm_capacity > a.hbm_capacity, "and capacity");
+    }
+
+    #[test]
+    fn preset_lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("A100-80GB-SXM"), Some(GpuSpec::a100_80g()));
+        assert_eq!(GpuSpec::by_name("H20-96GB"), Some(GpuSpec::h20_96g()));
+        assert_eq!(GpuSpec::by_name("TPUv9"), None);
+    }
+
+    #[test]
     fn usable_hbm_honors_utilization() {
         let c = ClusterSpec::paper_default();
         assert!((c.usable_hbm() - 64e9).abs() < 1e9);
+        assert_eq!(
+            c.usable_hbm_of(&c.gpu).to_bits(),
+            c.usable_hbm().to_bits(),
+            "the per-profile variant is the same expression"
+        );
     }
 
     #[test]
@@ -120,5 +277,34 @@ mod tests {
         c.n_prefill = 3;
         c.n_decode = 2;
         assert!((c.prefill_per_decode() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_profiles_resolve_to_the_cluster_gpu() {
+        let c = ClusterSpec::paper_default();
+        assert!(c.profiles.is_none(), "per-role profiles are opt-in");
+        assert_eq!(c.prefill_profile(), DeviceProfile::whole(c.gpu, DeviceRole::Prefill));
+        assert_eq!(c.decode_profile(), DeviceProfile::whole(c.gpu, DeviceRole::Decode));
+        let exec = c.executor_profile();
+        assert_eq!(exec.gpu, c.gpu);
+        assert_eq!(exec.sm_frac, Some(c.attn_executor_sm_frac));
+        assert!(c.executor_is_colocated());
+    }
+
+    #[test]
+    fn explicit_profiles_override_per_role() {
+        let mut c = ClusterSpec::paper_default();
+        c.profiles = Some(DeviceProfiles {
+            prefill: Some(DeviceProfile::partitioned(c.gpu, DeviceRole::Prefill, 0.45)),
+            decode: None,
+            executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+        });
+        assert_eq!(c.prefill_profile().sm_frac, Some(0.45));
+        assert_eq!(c.decode_profile().gpu, c.gpu, "unset slots keep the cluster GPU");
+        assert_eq!(c.executor_profile().gpu, GpuSpec::h20_96g());
+        assert!(!c.executor_is_colocated());
+        // An explicit all-None profile set is colocated too.
+        c.profiles = Some(DeviceProfiles::default());
+        assert!(c.executor_is_colocated());
     }
 }

@@ -15,7 +15,7 @@ mod cluster;
 mod model;
 mod serving;
 
-pub use cluster::{ClusterSpec, GpuSpec};
+pub use cluster::{ClusterSpec, DeviceProfile, DeviceProfiles, DeviceRole, GpuSpec};
 pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
 pub use serving::{
     AutoscaleConfig, BoundsFeedbackConfig, FaultConfig, FaultKind, FleetConfig, OffloadPolicy,

@@ -1,5 +1,7 @@
 //! Serving policy: SLOs, offload policy, batching and bucketing parameters.
 
+use super::cluster::{DeviceProfile, DeviceProfiles, DeviceRole, GpuSpec};
+
 /// Latency service-level objectives (the paper's TTFT / TPOT targets).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloConfig {
@@ -255,7 +257,7 @@ impl Default for AutoscaleConfig {
 /// inert: no router, no autoscaler state, no extra events — runs are
 /// bit-identical to a simulator without the layer (pinned by
 /// `rust/tests/fleet.rs`).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
     /// Number of independent P/D groups behind the cluster router.
     pub groups: u32,
@@ -263,11 +265,22 @@ pub struct FleetConfig {
     pub router: RouterPolicy,
     /// Per-group prefill-pool autoscaling. `None` = fixed pools.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Per-group device profiles (ISSUE 9): entry `g` overrides group
+    /// `g`'s `ClusterSpec::profiles`, so a fleet can mix homogeneous and
+    /// heterogeneous groups. `None` entries — and groups past the end of
+    /// the list — keep the base cluster's devices. Empty (the default) is
+    /// structurally inert.
+    pub group_profiles: Vec<Option<DeviceProfiles>>,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { groups: 1, router: RouterPolicy::RoundRobin, autoscale: None }
+        FleetConfig {
+            groups: 1,
+            router: RouterPolicy::RoundRobin,
+            autoscale: None,
+            group_profiles: Vec::new(),
+        }
     }
 }
 
@@ -730,7 +743,88 @@ impl ServingConfig {
                     }
                     Some(other) => anyhow::bail!("bad fleet autoscale config: {other}"),
                 }
+                // Per-group device profiles: an array of group entries,
+                // each `null` (base devices) or an object with optional
+                // `prefill` / `decode` / `executor` slots, each `null` or
+                // `{"gpu": "<preset name>", "sm_frac": <num>|null}`.
+                match fl.get("group_profiles") {
+                    None | Some(Json::Null) => {}
+                    Some(Json::Arr(entries)) => {
+                        let mut gp = Vec::with_capacity(entries.len());
+                        for e in entries {
+                            match e {
+                                Json::Null => gp.push(None),
+                                Json::Obj(_) => {
+                                    let mut p = DeviceProfiles::default();
+                                    for (slot, role) in [
+                                        ("prefill", DeviceRole::Prefill),
+                                        ("decode", DeviceRole::Decode),
+                                        ("executor", DeviceRole::Executor),
+                                    ] {
+                                        match e.get(slot) {
+                                            None | Some(Json::Null) => {}
+                                            Some(d @ Json::Obj(_)) => {
+                                                let name = d
+                                                    .get("gpu")
+                                                    .and_then(Json::as_str)
+                                                    .ok_or_else(|| {
+                                                        anyhow::anyhow!(
+                                                            "device profile {slot} needs a gpu name"
+                                                        )
+                                                    })?;
+                                                let gpu =
+                                                    GpuSpec::by_name(name).ok_or_else(|| {
+                                                        anyhow::anyhow!(
+                                                            "unknown gpu preset: {name}"
+                                                        )
+                                                    })?;
+                                                let sm_frac = match d.get("sm_frac") {
+                                                    None | Some(Json::Null) => None,
+                                                    Some(s) => {
+                                                        Some(s.as_f64().ok_or_else(|| {
+                                                            anyhow::anyhow!(
+                                                                "bad {slot} sm_frac: {s}"
+                                                            )
+                                                        })?)
+                                                    }
+                                                };
+                                                if let Some(sf) = sm_frac {
+                                                    anyhow::ensure!(
+                                                        sf.is_finite() && sf > 0.0 && sf <= 1.0,
+                                                        "{slot} sm_frac must be in (0, 1], \
+                                                         got {sf}"
+                                                    );
+                                                }
+                                                let dp = DeviceProfile { gpu, role, sm_frac };
+                                                match role {
+                                                    DeviceRole::Prefill => p.prefill = Some(dp),
+                                                    DeviceRole::Decode => p.decode = Some(dp),
+                                                    DeviceRole::Executor => {
+                                                        p.executor = Some(dp)
+                                                    }
+                                                }
+                                            }
+                                            Some(other) => anyhow::bail!(
+                                                "bad {slot} device profile: {other}"
+                                            ),
+                                        }
+                                    }
+                                    gp.push(Some(p));
+                                }
+                                other => anyhow::bail!("bad group_profiles entry: {other}"),
+                            }
+                        }
+                        f.group_profiles = gp;
+                    }
+                    Some(other) => anyhow::bail!("bad fleet group_profiles: {other}"),
+                }
                 anyhow::ensure!(f.groups >= 1, "fleet groups must be >= 1");
+                anyhow::ensure!(
+                    f.group_profiles.len() <= f.groups as usize,
+                    "fleet group_profiles lists {} entries for {} groups",
+                    f.group_profiles.len(),
+                    f.groups
+                );
                 cfg.fleet = Some(f);
             }
             Some(other) => anyhow::bail!("bad fleet config: {other}"),
@@ -853,6 +947,38 @@ impl ServingConfig {
                 a.insert("cooldown_s".into(), Json::Num(s.cooldown_s));
                 a.insert("tick_s".into(), Json::Num(s.tick_s));
                 fl.insert("autoscale".into(), Json::Obj(a));
+            }
+            if !f.group_profiles.is_empty() {
+                let dev = |dp: &DeviceProfile| {
+                    let mut d = BTreeMap::new();
+                    d.insert("gpu".into(), Json::Str(dp.gpu.name.into()));
+                    d.insert(
+                        "sm_frac".into(),
+                        dp.sm_frac.map_or(Json::Null, Json::Num),
+                    );
+                    Json::Obj(d)
+                };
+                let entries = f
+                    .group_profiles
+                    .iter()
+                    .map(|gp| match gp {
+                        None => Json::Null,
+                        Some(p) => {
+                            let mut g = BTreeMap::new();
+                            for (key, slot) in [
+                                ("prefill", p.prefill),
+                                ("decode", p.decode),
+                                ("executor", p.executor),
+                            ] {
+                                if let Some(dp) = slot {
+                                    g.insert(key.into(), dev(&dp));
+                                }
+                            }
+                            Json::Obj(g)
+                        }
+                    })
+                    .collect();
+                fl.insert("group_profiles".into(), Json::Arr(entries));
             }
             o.insert("fleet".into(), Json::Obj(fl));
         }
@@ -983,6 +1109,22 @@ impl ServingConfigBuilder {
             .map(|_| ())?;
         if let Some(f) = &cfg.fleet {
             anyhow::ensure!(f.groups >= 1, "fleet groups must be >= 1");
+            anyhow::ensure!(
+                f.group_profiles.len() <= f.groups as usize,
+                "fleet group_profiles lists {} entries for {} groups",
+                f.group_profiles.len(),
+                f.groups
+            );
+            for p in f.group_profiles.iter().flatten() {
+                for dp in [p.prefill, p.decode, p.executor].into_iter().flatten() {
+                    if let Some(s) = dp.sm_frac {
+                        anyhow::ensure!(
+                            s.is_finite() && s > 0.0 && s <= 1.0,
+                            "device profile sm_frac must be in (0, 1], got {s}"
+                        );
+                    }
+                }
+            }
             if let Some(s) = &f.autoscale {
                 anyhow::ensure!(s.min_prefill >= 1, "autoscale min_prefill must be >= 1");
                 anyhow::ensure!(
@@ -1320,6 +1462,29 @@ mod tests {
                         initial_prefill: Some(2),
                         ..Default::default()
                     }),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            ServingConfig {
+                fleet: Some(FleetConfig {
+                    groups: 3,
+                    group_profiles: vec![
+                        None,
+                        Some(DeviceProfiles {
+                            prefill: Some(DeviceProfile::partitioned(
+                                GpuSpec::a100_80g(),
+                                DeviceRole::Prefill,
+                                0.45,
+                            )),
+                            decode: None,
+                            executor: Some(DeviceProfile::whole(
+                                GpuSpec::h20_96g(),
+                                DeviceRole::Executor,
+                            )),
+                        }),
+                    ],
+                    ..Default::default()
                 }),
                 ..Default::default()
             },
@@ -1327,6 +1492,47 @@ mod tests {
             let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
             assert_eq!(cfg, back);
         }
+    }
+
+    #[test]
+    fn fleet_group_profiles_rejects_bad_shapes() {
+        // More profile entries than groups.
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"groups": 1, "group_profiles": [null, null]}}"#
+        )
+        .is_err());
+        // Unknown GPU preset.
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"groups": 1, "group_profiles": [{"decode": {"gpu": "TPUv9"}}]}}"#
+        )
+        .is_err());
+        // sm_frac out of (0, 1].
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"groups": 1,
+                "group_profiles": [{"prefill": {"gpu": "A100-80GB-SXM", "sm_frac": 1.5}}]}}"#
+        )
+        .is_err());
+        // Wrong-typed entry and wrong-typed slot are errors, not skips.
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"groups": 1, "group_profiles": [7]}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"groups": 1, "group_profiles": [{"executor": 7}]}}"#
+        )
+        .is_err());
+        // A valid heterogeneous entry parses.
+        let cfg = ServingConfig::from_json(
+            r#"{"fleet": {"groups": 2,
+                "group_profiles": [null, {"executor": {"gpu": "H20-96GB", "sm_frac": null}}]}}"#,
+        )
+        .unwrap();
+        let f = cfg.fleet.expect("fleet configured");
+        assert_eq!(f.group_profiles.len(), 2);
+        assert_eq!(f.group_profiles[0], None);
+        let p = f.group_profiles[1].expect("profiles for group 1");
+        assert_eq!(p.executor.expect("executor slot").gpu, GpuSpec::h20_96g());
+        assert_eq!(p.prefill, None);
     }
 
     #[test]
@@ -1369,6 +1575,16 @@ mod tests {
                     max_prefill: 2,
                     ..Default::default()
                 }),
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        // More group_profiles entries than groups is a build error too.
+        assert!(ServingConfig::builder()
+            .fleet(FleetConfig {
+                groups: 1,
+                group_profiles: vec![None, None],
+                ..Default::default()
             })
             .build()
             .is_err());

@@ -57,23 +57,35 @@ impl OffloadBounds {
         )
     }
 
-    /// Eq 1. `HBM_pi`: capacity each prefill instance can lend to its
-    /// attention executor (usable HBM minus weights/workspace). `BW_pi`:
-    /// bandwidth the executor's SM share sustains. Denominators are the
-    /// decode instance's KV capacity and attention bandwidth.
+    /// Eq 1. `HBM_pi`: capacity each prefill-side attention executor can
+    /// lend (colocated: the prefill GPU's usable HBM minus weights /
+    /// workspace; standalone executor device: its whole usable HBM — a
+    /// pure attention store holds no weights). `BW_pi`: the bandwidth the
+    /// executor sustains (colocated: its SM share's cap on the prefill
+    /// GPU; standalone: its own device's achievable bandwidth).
+    /// Denominators are the *decode device's* KV capacity and attention
+    /// bandwidth — each side now priced on its own profile.
     pub fn ob_mem(cluster: &ClusterSpec, model: &ModelSpec) -> f64 {
         let n = cluster.prefill_per_decode();
-        let gpu = cluster.gpu;
+        let pre = cluster.prefill_profile();
+        let dec = cluster.decode_profile();
 
-        let spare = cluster.usable_hbm()
+        let dec_spare = cluster.usable_hbm_of(&dec.gpu)
             - model.weight_bytes()
             - HbmUsage::activation_workspace(model);
-        let hbm_pi = spare.max(0.0);
-        let hbm_d = hbm_pi; // decode instance has the same budget for KV
+        let hbm_d = dec_spare.max(0.0);
+        let bw_d = dec.gpu.hbm_bw * dec.gpu.bw_eff; // decode attention gets its whole device
 
-        let interf = InterferenceModel::new(cluster.attn_executor_sm_frac);
-        let bw_pi = gpu.hbm_bw * interf.attn_bw_cap(gpu.bw_eff);
-        let bw_d = gpu.hbm_bw * gpu.bw_eff; // decode attention gets the whole GPU
+        let (hbm_pi, bw_pi) = if cluster.executor_is_colocated() {
+            let spare = cluster.usable_hbm_of(&pre.gpu)
+                - model.weight_bytes()
+                - HbmUsage::activation_workspace(model);
+            let interf = InterferenceModel::new(cluster.attn_executor_sm_frac);
+            (spare.max(0.0), pre.gpu.hbm_bw * interf.attn_bw_cap(pre.gpu.bw_eff))
+        } else {
+            let exec = cluster.executor_profile();
+            (cluster.usable_hbm_of(&exec.gpu), Roofline::for_profile(&exec).effective_bw())
+        };
 
         let mem_ratio = n * hbm_pi / hbm_d;
         let bw_ratio = n * bw_pi / bw_d;
@@ -96,7 +108,7 @@ impl OffloadBounds {
     const NON_ATTN_TPOT_SHARE: f64 = 0.5;
 
     pub fn b_max(cluster: &ClusterSpec, model: &ModelSpec, slo: &SloConfig) -> usize {
-        let rl = Roofline::whole(cluster.gpu);
+        let rl = Roofline::for_profile(&cluster.decode_profile());
         let floor = DecodeKernelTimes::compute(&rl, model, 1, 1).non_attention();
         let budget = (slo.tpot_s * Self::NON_ATTN_TPOT_SHARE).max(floor * 1.25);
         let fits = |b: usize| {
@@ -135,9 +147,10 @@ impl OffloadBounds {
         slo: &SloConfig,
         avg_seq: u64,
     ) -> usize {
-        let hbm_cap =
-            (HbmUsage::kv_token_budget(cluster, model) / avg_seq.max(1)).max(1) as usize;
-        let rl = Roofline::whole(cluster.gpu);
+        let dec = cluster.decode_profile();
+        let kv_budget = HbmUsage::kv_token_budget_in(cluster.usable_hbm_of(&dec.gpu), model);
+        let hbm_cap = (kv_budget / avg_seq.max(1)).max(1) as usize;
+        let rl = Roofline::for_profile(&dec);
         let mut best = 0usize;
         let mut b = 1usize;
         while b <= 4096 {
@@ -236,6 +249,43 @@ mod tests {
         c.n_prefill = 2;
         let ob2 = OffloadBounds::ob_mem(&c, &m);
         assert!((ob2 / ob1 - 2.0).abs() < 1e-9, "Eq 1 is linear in n");
+    }
+
+    #[test]
+    fn explicit_homogeneous_profiles_do_not_move_the_bounds() {
+        use crate::config::{DeviceProfile, DeviceProfiles, DeviceRole, GpuSpec};
+        let (c, m, slo) = setup();
+        let base = OffloadBounds::compute(&c, &m, &slo, 1024);
+        let mut with = c;
+        with.profiles = Some(DeviceProfiles {
+            prefill: Some(DeviceProfile::whole(GpuSpec::a100_80g(), DeviceRole::Prefill)),
+            decode: Some(DeviceProfile::whole(GpuSpec::a100_80g(), DeviceRole::Decode)),
+            executor: None,
+        });
+        assert_eq!(OffloadBounds::compute(&with, &m, &slo, 1024), base);
+        with.profiles = Some(DeviceProfiles::default());
+        assert_eq!(OffloadBounds::compute(&with, &m, &slo, 1024), base);
+    }
+
+    #[test]
+    fn standalone_memory_rich_executor_raises_ob_mem() {
+        use crate::config::{DeviceProfile, DeviceProfiles, DeviceRole, GpuSpec};
+        let (c, m, _) = setup();
+        let colocated = OffloadBounds::ob_mem(&c, &m);
+        let mut hetero = c;
+        hetero.profiles = Some(DeviceProfiles {
+            prefill: None,
+            decode: None,
+            executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+        });
+        let standalone = OffloadBounds::ob_mem(&hetero, &m);
+        // A whole memory-rich device holds more KV (no weights resident)
+        // and sustains more bandwidth than the colocated SM share, so the
+        // Eq 1 bound must strictly grow (arXiv 2405.01814's premise).
+        assert!(
+            standalone > colocated,
+            "standalone = {standalone}, colocated = {colocated}"
+        );
     }
 
     #[test]

@@ -72,19 +72,28 @@ pub struct DecodeStepCost {
 #[derive(Debug, Clone)]
 pub struct CostModel {
     mode: CostMode,
-    /// Decode-step costs on the decode instance's whole-GPU roofline.
+    /// Decode-step costs on the decode instance's device roofline.
     decode: DecodeCostTable,
-    /// Attention costs on the executor's SM partition.
+    /// Attention costs on the executor's device (an SM partition of the
+    /// prefill GPU when colocated, a whole standalone device otherwise).
     executor: DecodeCostTable,
-    /// Memoized prefill step times (whole-GPU roofline).
+    /// Memoized prefill step times on the prefill device's *whole-GPU*
+    /// roofline; static SM confinement is priced by
+    /// `prefill_sm_slowdown` below (partition.rs's Fig 10 curve, not a
+    /// naive roofline rescale).
     prefill: PrefillCostTable,
+    /// Static intra-GPU split multiplier on prefill steps:
+    /// `prefill_slowdown(sm_frac)` of the prefill device's partition,
+    /// exactly 1.0 for a whole-GPU prefill device (and then never
+    /// multiplied in, keeping the default bit-identical).
+    prefill_sm_slowdown: f64,
     /// The 2-D executable grid; selection statistics accumulate here.
     grid: GraphCache,
-    /// Colocation interference (None when offloading is disabled — the
-    /// prefill instance then runs unpartitioned).
+    /// Colocation interference (None when offloading is disabled or the
+    /// executor runs on its own device — prefill then has the GPU alone).
     interference: Option<InterferenceModel>,
-    /// The GPU's achievable-bandwidth efficiency (for the executor's
-    /// bandwidth cap inside the interference model).
+    /// The prefill GPU's achievable-bandwidth efficiency (for the
+    /// executor's bandwidth cap inside the interference model).
     gpu_bw_eff: f64,
     /// KV-cache bytes per token (all layers) — the unit of KV movement.
     kv_bytes_per_token: f64,
@@ -108,9 +117,17 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Build the cost plane from per-role device rooflines: prefill steps
+    /// price on `rl_prefill`, decode steps on `rl_decode`, offloaded
+    /// attention on `rl_executor`. The homogeneous default (every role on
+    /// the same whole GPU, colocated executor partition) reproduces the
+    /// single-`GpuSpec` model bit for bit; heterogeneous profiles
+    /// (arXiv 2405.01814's memory-rich executor, Nexus-style intra-GPU
+    /// prefill/decode splits) just pass different rooflines.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        rl_whole: &Roofline,
+        rl_prefill: &Roofline,
+        rl_decode: &Roofline,
         rl_executor: &Roofline,
         model: &ModelSpec,
         grid: GraphCache,
@@ -119,20 +136,33 @@ impl CostModel {
         sync_overhead_s: f64,
         eager_launch_overhead_s: f64,
     ) -> Self {
-        let mut decode = DecodeCostTable::new(rl_whole, model);
+        let mut decode = DecodeCostTable::new(rl_decode, model);
         // Warm at the captured capacities (the graph-capture analogue);
         // everything else backfills lazily and exactly.
         decode.warm(grid.local_buckets());
+        // A partitioned prefill device pays the Fig 10 slowdown curve,
+        // not a naive roofline rescale (prefill has a non-GPU fraction
+        // and sublinear compute sensitivity — partition.rs). Computed
+        // only off the 1.0 whole-GPU case: `prefill_slowdown(1.0)` is
+        // *mathematically* 1 but not guaranteed bit-exactly 1.0 in f64,
+        // and the default path must stay untouched.
+        let prefill_sm_slowdown = if rl_prefill.sm_frac != 1.0 {
+            super::partition::prefill_slowdown(rl_prefill.sm_frac)
+        } else {
+            1.0
+        };
         CostModel {
             mode,
             decode,
             executor: DecodeCostTable::new(rl_executor, model),
-            prefill: PrefillCostTable::new(rl_whole, model),
+            prefill: PrefillCostTable::new(&Roofline::whole(rl_prefill.gpu), model),
+            prefill_sm_slowdown,
             grid,
             interference,
-            gpu_bw_eff: rl_whole.gpu.bw_eff,
+            gpu_bw_eff: rl_prefill.gpu.bw_eff,
             kv_bytes_per_token: model.kv_bytes_per_token(),
-            interconnect_bw: rl_whole.gpu.interconnect_bw,
+            // KV moves prefill->decode: the path's bottleneck link.
+            interconnect_bw: rl_prefill.gpu.interconnect_bw.min(rl_decode.gpu.interconnect_bw),
             sync_total_s: sync_overhead_s * model.n_layers as f64,
             eager_launch_overhead_s,
             executor_slowdown: Vec::new(),
@@ -215,7 +245,12 @@ impl CostModel {
     /// reservation always applies, bandwidth contention in proportion to
     /// the duty cycle.
     pub fn prefill_time(&mut self, tokens: u64, executor_duty: f64) -> f64 {
-        let base = self.prefill.total(tokens);
+        let mut base = self.prefill.total(tokens);
+        // Static SM confinement (intra-GPU prefill/decode split). Gated
+        // on != 1.0 so whole-GPU prefill keeps the exact legacy op order.
+        if self.prefill_sm_slowdown != 1.0 {
+            base *= self.prefill_sm_slowdown;
+        }
         let Some(interference) = self.interference else {
             return base;
         };
@@ -604,6 +639,7 @@ mod tests {
         let grid = CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256);
         CostModel::new(
             &rl,
+            &rl,
             &rl_exec,
             &m,
             grid,
@@ -942,6 +978,7 @@ mod tests {
         let interference = InterferenceModel::new(0.25);
         let mut with = CostModel::new(
             &rl,
+            &rl,
             &rl_exec,
             &m,
             grid.clone(),
@@ -951,7 +988,7 @@ mod tests {
             0.0,
         );
         let mut without =
-            CostModel::new(&rl, &rl_exec, &m, grid, CostMode::Bucketed, None, 15e-6, 0.0);
+            CostModel::new(&rl, &rl, &rl_exec, &m, grid, CostMode::Bucketed, None, 15e-6, 0.0);
         let base = crate::gpu_model::PrefillKernelTimes::compute(&rl, &m, 2048).total();
         // No interference model: the raw roofline time, bit-identical.
         assert_eq!(without.prefill_time(2048, 0.7).to_bits(), base.to_bits());
@@ -963,6 +1000,81 @@ mod tests {
         assert!(busy >= idle);
         // Memoized: same value again.
         assert_eq!(with.prefill_time(2048, 0.0).to_bits(), idle.to_bits());
+    }
+
+    #[test]
+    fn partitioned_prefill_pays_the_fig10_slowdown_curve() {
+        // An intra-GPU split (Nexus-style): prefill confined to 45% of
+        // the SMs pays exactly prefill_slowdown(0.45) over the whole-GPU
+        // time — partition.rs's curve, wired into priced steps.
+        let gpu = GpuSpec::a100_80g();
+        let m = ModelSpec::llama2_7b();
+        let rl_whole = Roofline::whole(gpu);
+        let rl_part = Roofline::partition(gpu, 0.45);
+        let rl_exec = Roofline::partition(gpu, 0.25);
+        let mk = |rl_prefill: &Roofline| {
+            CostModel::new(
+                rl_prefill,
+                &rl_whole,
+                &rl_exec,
+                &m,
+                CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
+                CostMode::Bucketed,
+                None,
+                15e-6,
+                0.0,
+            )
+        };
+        let mut whole = mk(&rl_whole);
+        let mut split = mk(&rl_part);
+        for tokens in [128u64, 1024, 4096] {
+            let base = whole.prefill_time(tokens, 0.0);
+            let slowed = split.prefill_time(tokens, 0.0);
+            let want = base * crate::gpu_model::partition::prefill_slowdown(0.45);
+            assert_eq!(slowed.to_bits(), want.to_bits(), "tokens={tokens}");
+            assert!(slowed > base);
+        }
+    }
+
+    #[test]
+    fn per_role_rooflines_price_each_side_on_its_own_device() {
+        // Heterogeneous offload (arXiv 2405.01814): a memory-rich
+        // standalone executor beats the colocated A100 half-partition on
+        // attention, and a decode device with more bandwidth shrinks
+        // decode steps. Also: the KV link is the min of both ends.
+        let a100 = GpuSpec::a100_80g();
+        let h20 = GpuSpec::h20_96g();
+        let m = ModelSpec::llama2_7b();
+        let mk = |rl_decode: &Roofline, rl_exec: &Roofline| {
+            CostModel::new(
+                &Roofline::whole(a100),
+                rl_decode,
+                rl_exec,
+                &m,
+                CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
+                CostMode::Exact,
+                None,
+                15e-6,
+                0.0,
+            )
+        };
+        let mut colocated = mk(&Roofline::whole(a100), &Roofline::partition(a100, 0.5));
+        let mut hetero = mk(&Roofline::whole(a100), &Roofline::whole(h20));
+        let mut out = Vec::new();
+        // Pure-offload step: remote attention dominates.
+        let c = colocated.decode_step(0, 0, &[32], &[32 * 1500], &mut out);
+        let h = hetero.decode_step(0, 0, &[32], &[32 * 1500], &mut out);
+        assert!(
+            h.remote_attention_s < c.remote_attention_s,
+            "H20 executor ({}) must beat the A100 half-partition ({})",
+            h.remote_attention_s,
+            c.remote_attention_s
+        );
+        // The interconnect is the bottleneck of the two ends' links.
+        let h20_decode = mk(&Roofline::whole(h20), &Roofline::whole(h20));
+        let want = 1_000_000u64 as f64 * m.kv_bytes_per_token()
+            / a100.interconnect_bw.min(h20.interconnect_bw);
+        assert_eq!(h20_decode.kv_transfer_time(1_000_000).to_bits(), want.to_bits());
     }
 
     // ----- BTpotEstimator ---------------------------------------------------

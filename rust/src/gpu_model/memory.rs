@@ -18,11 +18,20 @@ pub struct HbmUsage {
 impl HbmUsage {
     /// Usage for an instance serving `model` with `kv_tokens` of KV resident.
     pub fn for_instance(cluster: &ClusterSpec, model: &ModelSpec, kv_tokens: u64) -> Self {
+        Self::on_capacity(cluster.gpu.hbm_capacity, model, kv_tokens)
+    }
+
+    /// Usage on a specific device's HBM capacity — the per-profile variant
+    /// of [`for_instance`] (heterogeneous instance classes each account
+    /// against their own device).
+    ///
+    /// [`for_instance`]: HbmUsage::for_instance
+    pub fn on_capacity(capacity: f64, model: &ModelSpec, kv_tokens: u64) -> Self {
         HbmUsage {
             weights: model.weight_bytes(),
             activations: Self::activation_workspace(model),
             kv_cache: kv_tokens as f64 * model.kv_bytes_per_token(),
-            capacity: cluster.gpu.hbm_capacity,
+            capacity,
         }
     }
 
@@ -56,7 +65,16 @@ impl HbmUsage {
         cluster: &ClusterSpec,
         model: &ModelSpec,
     ) -> u64 {
-        let budget = cluster.usable_hbm()
+        Self::kv_token_budget_in(cluster.usable_hbm(), model)
+    }
+
+    /// KV-token budget inside an explicit usable-HBM allowance — the
+    /// per-profile variant of [`kv_token_budget`] (pair with
+    /// [`ClusterSpec::usable_hbm_of`] for a role's own device).
+    ///
+    /// [`kv_token_budget`]: HbmUsage::kv_token_budget
+    pub fn kv_token_budget_in(usable_hbm: f64, model: &ModelSpec) -> u64 {
+        let budget = usable_hbm
             - model.weight_bytes()
             - Self::activation_workspace(model);
         (budget.max(0.0) / model.kv_bytes_per_token()) as u64
@@ -105,6 +123,20 @@ mod tests {
         let m = ModelSpec::llama2_7b();
         let u = HbmUsage::for_instance(&c, &m, u64::MAX / 1024);
         assert!(u.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn per_device_budget_matches_cluster_path_and_scales_with_hbm() {
+        use crate::config::GpuSpec;
+        let c = ClusterSpec::paper_default();
+        let m = ModelSpec::llama2_7b();
+        assert_eq!(
+            HbmUsage::kv_token_budget_in(c.usable_hbm(), &m),
+            HbmUsage::kv_token_budget(&c, &m),
+            "delegation is the same expression"
+        );
+        let richer = HbmUsage::kv_token_budget_in(c.usable_hbm_of(&GpuSpec::h20_96g()), &m);
+        assert!(richer > HbmUsage::kv_token_budget(&c, &m), "more HBM, more KV tokens");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Roofline kernel timing: t = max(flops / F_eff, bytes / B_eff).
 
-use crate::config::GpuSpec;
+use crate::config::{DeviceProfile, GpuSpec};
 
 /// FLOP and HBM-byte cost of one kernel invocation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,6 +40,16 @@ impl Roofline {
     pub fn partition(gpu: GpuSpec, sm_frac: f64) -> Self {
         assert!(sm_frac > 0.0 && sm_frac <= 1.0, "sm_frac in (0,1], got {sm_frac}");
         Roofline { gpu, sm_frac }
+    }
+
+    /// Roofline for a resolved device profile. A `sm_frac: None` profile is
+    /// the whole device; `whole(gpu)` and `partition(gpu, 1.0)` are the same
+    /// value (`sm_frac: 1.0`), so the dispatch is bit-transparent either way.
+    pub fn for_profile(profile: &DeviceProfile) -> Self {
+        match profile.sm_frac {
+            None => Roofline::whole(profile.gpu),
+            Some(f) => Roofline::partition(profile.gpu, f),
+        }
     }
 
     /// Effective compute throughput for this partition, FLOP/s. Compute
@@ -151,5 +161,20 @@ mod tests {
     #[test]
     fn intensity() {
         assert!((KernelCost::new(100.0, 50.0).intensity() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn for_profile_dispatches_whole_vs_partition() {
+        use crate::config::{DeviceProfile, DeviceRole};
+        let g = GpuSpec::a100_80g();
+        let whole = Roofline::for_profile(&DeviceProfile::whole(g, DeviceRole::Decode));
+        assert_eq!(whole.sm_frac.to_bits(), 1.0f64.to_bits());
+        let part =
+            Roofline::for_profile(&DeviceProfile::partitioned(g, DeviceRole::Prefill, 0.45));
+        assert_eq!(part.sm_frac.to_bits(), 0.45f64.to_bits());
+        // whole(g) ≡ partition(g, 1.0): identical effective rates, bitwise.
+        let unit = Roofline::partition(g, 1.0);
+        assert_eq!(whole.effective_flops().to_bits(), unit.effective_flops().to_bits());
+        assert_eq!(whole.effective_bw().to_bits(), unit.effective_bw().to_bits());
     }
 }

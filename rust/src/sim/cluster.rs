@@ -138,7 +138,11 @@ impl SimConfig {
     /// past the Fig 10 sweet spot).
     pub fn with_adaptive_partition(mut self, avg_prompt: u64) -> Self {
         use crate::gpu_model::PrefillProfile;
-        let profile = PrefillProfile::default_grid(&self.cluster.gpu, &self.model);
+        // Profile on the *prefill* device — the instance class the SM
+        // reservation actually runs on (same GPU as `cluster.gpu` unless
+        // a heterogeneous profile overrides it).
+        let profile =
+            PrefillProfile::default_grid(&self.cluster.prefill_profile().gpu, &self.model);
         // Leave queueing headroom: prefill must fit in half the TTFT SLO.
         let exec = profile.executor_sm_frac(avg_prompt.max(1), self.serving.slo.ttft_s * 0.5);
         self.cluster.attn_executor_sm_frac = exec.clamp(0.05, 0.5);
@@ -858,10 +862,36 @@ impl ClusterSim {
             )
         });
 
-        let hbm_budget = HbmUsage::kv_token_budget(&cfg.cluster, &cfg.model) as usize;
+        // Every instance class prices and budgets on its own device
+        // profile. The default (no `profiles` configured) resolves all
+        // three to `cfg.cluster.gpu` with the executor colocated at
+        // `attn_executor_sm_frac` — bit-identical to the single-GpuSpec
+        // plane (pinned by `rust/tests/hetero.rs`).
+        let dev_prefill = cfg.cluster.prefill_profile();
+        let dev_decode = cfg.cluster.decode_profile();
+        let dev_executor = cfg.cluster.executor_profile();
+        let colocated = cfg.cluster.executor_is_colocated();
+
+        let hbm_budget = HbmUsage::kv_token_budget_in(
+            cfg.cluster.usable_hbm_of(&dev_decode.gpu),
+            &cfg.model,
+        ) as usize;
         let kv_budget = cfg.serving.decode_kv_capacity_tokens.unwrap_or(hbm_budget);
+        let default_executor_budget = if colocated {
+            // The executor borrows the prefill GPU's spare HBM (usable
+            // minus weights and workspace, like any serving instance).
+            HbmUsage::kv_token_budget_in(
+                cfg.cluster.usable_hbm_of(&dev_prefill.gpu),
+                &cfg.model,
+            ) as usize
+        } else {
+            // A standalone executor device is a pure attention store: no
+            // weights resident, its whole usable HBM holds KV.
+            (cfg.cluster.usable_hbm_of(&dev_executor.gpu) / cfg.model.kv_bytes_per_token())
+                as usize
+        };
         let executor_budget = if cfg.serving.offload.is_enabled() {
-            cfg.serving.executor_kv_capacity_tokens.unwrap_or(hbm_budget)
+            cfg.serving.executor_kv_capacity_tokens.unwrap_or(default_executor_budget)
         } else {
             0
         };
@@ -896,12 +926,10 @@ impl ClusterSim {
             })
             .collect();
 
-        let rl_whole = Roofline::whole(cfg.cluster.gpu);
+        let rl_prefill = Roofline::for_profile(&dev_prefill);
+        let rl_decode = Roofline::for_profile(&dev_decode);
+        let rl_executor = Roofline::for_profile(&dev_executor);
         let interference = InterferenceModel::new(cfg.cluster.attn_executor_sm_frac);
-        let rl_executor = Roofline::partition(
-            cfg.cluster.gpu,
-            cfg.cluster.attn_executor_sm_frac.max(1e-3),
-        );
 
         // Engine-mode resolution happens exactly once, here: config knobs
         // plus the `ADRENALINE_*` escape hatches fold into one typed
@@ -920,13 +948,17 @@ impl ClusterSim {
             &cfg.serving.offload_buckets,
             cfg.serving.max_batch,
         );
+        // Colocation interference only exists when the executor actually
+        // shares the prefill GPU; a standalone executor device leaves
+        // prefill alone (the arXiv 2405.01814 deployment).
         let costs = CostModel::new(
-            &rl_whole,
+            &rl_prefill,
+            &rl_decode,
             &rl_executor,
             &cfg.model,
             grid,
             if exact { CostMode::Exact } else { CostMode::Bucketed },
-            cfg.serving.offload.is_enabled().then_some(interference),
+            (cfg.serving.offload.is_enabled() && colocated).then_some(interference),
             cfg.sync_overhead_s,
             cfg.eager_launch_overhead_s,
         );
@@ -3540,7 +3572,8 @@ impl ClusterSim {
         let used = m.weight_bytes()
             + HbmUsage::activation_workspace(m)
             + p.executor_kv_tokens as f64 * m.kv_bytes_per_token();
-        self.prefill_occupancy.push(t, (used / self.cfg.cluster.gpu.hbm_capacity).min(1.0));
+        let capacity = self.cfg.cluster.prefill_profile().gpu.hbm_capacity;
+        self.prefill_occupancy.push(t, (used / capacity).min(1.0));
     }
 
     pub(crate) fn report(mut self) -> SimReport {
@@ -3558,11 +3591,20 @@ impl ClusterSim {
             }
         };
 
-        // Prefill-instance utilization means (instance 0).
-        let gpu = self.cfg.cluster.gpu;
+        // Prefill-instance utilization means (instance 0), each class
+        // normalized by its own device's capability.
+        let pre_gpu = self.cfg.cluster.prefill_profile().gpu;
         let p0 = &self.prefill[0];
         let span = end.max(1e-9);
-        let exec_bw_frac = self.interference.attn_bw_cap(gpu.bw_eff);
+        let exec_bw_frac = if self.cfg.cluster.executor_is_colocated() {
+            self.interference.attn_bw_cap(pre_gpu.bw_eff)
+        } else {
+            // Standalone executor: its achievable fraction of its own
+            // device's peak bandwidth (streaming attention sustains
+            // bw_eff × the Fig 9 whole-device factor).
+            let dev = self.cfg.cluster.executor_profile();
+            Roofline::for_profile(&dev).effective_bw() / dev.gpu.hbm_bw
+        };
         let prefill_hbm_bw_util = (p0.prefill_busy_s * PREFILL_BW_FRAC
             + p0.executor_busy_s * exec_bw_frac)
             / span;
@@ -3570,7 +3612,7 @@ impl ClusterSim {
 
         let d0 = &self.decode[0];
         let decode_compute_util = if d0.busy_s > 0.0 {
-            (d0.flops_done / d0.busy_s) / gpu.peak_flops
+            (d0.flops_done / d0.busy_s) / self.cfg.cluster.decode_profile().gpu.peak_flops
         } else {
             0.0
         };

@@ -74,8 +74,9 @@ pub struct FleetReport {
 }
 
 /// The fleet simulator. Owns one [`SimConfig`] describing every group's
-/// topology (groups are homogeneous — heterogeneous fleets are a listed
-/// follow-on) plus the shared trace parameters.
+/// base topology plus the shared trace parameters; groups can override
+/// their device profiles via [`FleetConfig::group_profiles`]
+/// (heterogeneous fleets — ISSUE 9).
 pub struct FleetSim {
     cfg: SimConfig,
     fleet: FleetConfig,
@@ -86,8 +87,14 @@ impl FleetSim {
     /// default one-group round-robin fleet (bit-identical to a bare
     /// [`ClusterSim`] run — `rust/tests/fleet.rs` pins it).
     pub fn new(cfg: SimConfig) -> Self {
-        let fleet = cfg.serving.fleet.unwrap_or_default();
+        let fleet = cfg.serving.fleet.clone().unwrap_or_default();
         assert!(fleet.groups >= 1, "a fleet needs at least one group");
+        assert!(
+            fleet.group_profiles.len() <= fleet.groups as usize,
+            "group_profiles lists {} entries for {} groups",
+            fleet.group_profiles.len(),
+            fleet.groups
+        );
         FleetSim { cfg, fleet }
     }
 
@@ -130,6 +137,9 @@ impl FleetSim {
         let mut c = cfg.clone();
         if g > 0 {
             c.seed = cfg.seed.wrapping_add((g as u64).wrapping_mul(GROUP_SEED_STRIDE));
+        }
+        if let Some(Some(p)) = cfg.serving.fleet.as_ref().and_then(|f| f.group_profiles.get(g)) {
+            c.cluster.profiles = Some(*p);
         }
         c
     }

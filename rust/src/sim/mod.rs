@@ -17,8 +17,6 @@ pub mod run;
 pub use cluster::{ClusterSim, SimConfig, SimReport};
 pub use engine_mode::{engine_env, EngineEnv, EngineMode};
 pub use fleet::{FleetReport, FleetSim};
-#[allow(deprecated)]
-pub use run::{run_e2e, run_e2e_serial, run_ratio_sweep, run_ratio_sweep_serial};
 pub use run::{
     budget_acquire, budget_release, par_config, parallel_map, parallel_map_capped, run_e2e_with,
     run_ratio_sweep_with, E2eConfig, E2ePoint, ExecMode, ParallelismConfig, PoolTask, WorkerPool,

@@ -6,9 +6,8 @@
 //! [`run_ratio_sweep_with`] take an [`ExecMode`] and produce
 //! **bit-identical** output whether points fan out across all cores
 //! (`ExecMode::Parallel`, the default) or run inline
-//! (`ExecMode::Serial`, the equivalence-test reference). The old
-//! `run_e2e`/`run_e2e_serial` (and ratio-sweep) pairs survive as thin
-//! deprecated wrappers. Set `ADRENALINE_SERIAL=1` to force every
+//! (`ExecMode::Serial`, the equivalence-test reference). Set
+//! `ADRENALINE_SERIAL=1` to force every
 //! [`parallel_map`] serial process-wide (resolved once, through
 //! [`engine_env`]).
 
@@ -396,18 +395,6 @@ pub fn run_e2e_with(cfg: &E2eConfig, mode: ExecMode) -> Vec<E2ePoint> {
     }
 }
 
-/// Thin wrapper kept for source compatibility.
-#[deprecated(note = "use `run_e2e_with(cfg, ExecMode::Parallel)`")]
-pub fn run_e2e(cfg: &E2eConfig) -> Vec<E2ePoint> {
-    run_e2e_with(cfg, ExecMode::Parallel)
-}
-
-/// Thin wrapper kept for source compatibility.
-#[deprecated(note = "use `run_e2e_with(cfg, ExecMode::Serial)`")]
-pub fn run_e2e_serial(cfg: &E2eConfig) -> Vec<E2ePoint> {
-    run_e2e_with(cfg, ExecMode::Serial)
-}
-
 /// Build the SimConfig for one ratio-sweep point.
 fn ratio_point_config(
     model: ModelSpec,
@@ -445,30 +432,6 @@ pub fn run_ratio_sweep_with(
         ExecMode::Parallel => parallel_map(ratios.len(), point),
         ExecMode::Serial => (0..ratios.len()).map(point).collect(),
     }
-}
-
-/// Thin wrapper kept for source compatibility.
-#[deprecated(note = "use `run_ratio_sweep_with(.., ExecMode::Parallel)`")]
-pub fn run_ratio_sweep(
-    model: ModelSpec,
-    workload: WorkloadKind,
-    rate: f64,
-    ratios: &[f64],
-    duration_s: f64,
-) -> Vec<(f64, SimReport)> {
-    run_ratio_sweep_with(model, workload, rate, ratios, duration_s, ExecMode::Parallel)
-}
-
-/// Thin wrapper kept for source compatibility.
-#[deprecated(note = "use `run_ratio_sweep_with(.., ExecMode::Serial)`")]
-pub fn run_ratio_sweep_serial(
-    model: ModelSpec,
-    workload: WorkloadKind,
-    rate: f64,
-    ratios: &[f64],
-    duration_s: f64,
-) -> Vec<(f64, SimReport)> {
-    run_ratio_sweep_with(model, workload, rate, ratios, duration_s, ExecMode::Serial)
 }
 
 #[cfg(test)]
@@ -582,35 +545,6 @@ mod tests {
             assert_eq!(p.preemptions, s.preemptions);
             assert!(feq(p.offloaded_fraction, s.offloaded_fraction));
             assert!(feq(p.graph_padding_overhead, s.graph_padding_overhead));
-        }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_match_the_unified_entry_points() {
-        let cfg = E2eConfig { rates: vec![2.0], duration_s: 20.0, ..E2eConfig::fig11() };
-        let old = run_e2e_serial(&cfg);
-        let new = run_e2e_with(&cfg, ExecMode::Serial);
-        assert_eq!(old.len(), new.len());
-        for (o, n) in old.iter().zip(&new) {
-            assert_eq!(o.system, n.system);
-            assert!(feq(o.throughput_tok_s, n.throughput_tok_s));
-            assert_eq!(o.finished, n.finished);
-        }
-        let model = ModelSpec::llama2_7b();
-        let old = run_ratio_sweep_serial(model, WorkloadKind::ShareGpt, 2.0, &[0.0, 0.5], 20.0);
-        let new = run_ratio_sweep_with(
-            model,
-            WorkloadKind::ShareGpt,
-            2.0,
-            &[0.0, 0.5],
-            20.0,
-            ExecMode::Serial,
-        );
-        for (o, n) in old.iter().zip(&new) {
-            assert_eq!(o.0, n.0);
-            assert!(feq(o.1.throughput, n.1.throughput));
-            assert_eq!(o.1.finished, n.1.finished);
         }
     }
 }

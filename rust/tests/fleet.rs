@@ -167,7 +167,7 @@ fn one_group_fleet_is_bit_identical_to_bare_sim_under_every_policy() {
     for router in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::SessionSticky]
     {
         let mut cfg = base_cfg(8.0, 30.0);
-        cfg.serving.fleet = Some(FleetConfig { groups: 1, router, autoscale: None });
+        cfg.serving.fleet = Some(FleetConfig { groups: 1, router, ..FleetConfig::default() });
         let fleet = FleetSim::new(cfg.clone()).run();
         cfg.serving.fleet = None;
         let bare = ClusterSim::new(cfg).run();
@@ -185,7 +185,7 @@ fn every_router_policy_replays_deterministically() {
     {
         let mut cfg = base_cfg(24.0, 20.0);
         cfg.arrivals = ArrivalPattern::Bursty { period_s: 10.0, duty: 0.25, mult: 3.0 };
-        cfg.serving.fleet = Some(FleetConfig { groups: 3, router, autoscale: None });
+        cfg.serving.fleet = Some(FleetConfig { groups: 3, router, ..FleetConfig::default() });
         let mut runs: Vec<FleetReport> =
             parallel_map(2, |_| FleetSim::new(cfg.clone()).run());
         let b = runs.pop().expect("two runs");
@@ -215,8 +215,11 @@ fn lockstep_least_loaded_is_leap_and_par_safe() {
         cfg.arrivals = ArrivalPattern::Diurnal { period_s: 15.0, depth: 0.8 };
         cfg.serving.no_leap = no_leap;
         cfg.serving.no_par = no_par;
-        cfg.serving.fleet =
-            Some(FleetConfig { groups: 2, router: RouterPolicy::LeastLoaded, autoscale: None });
+        cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router: RouterPolicy::LeastLoaded,
+            ..FleetConfig::default()
+        });
         cfg
     };
     let on = FleetSim::new(mk(false, false)).run();
@@ -259,10 +262,11 @@ fn unreachable_thresholds_keep_the_pool_pinned() {
         groups: 2,
         router: RouterPolicy::RoundRobin,
         autoscale: Some(autoscale),
+        ..FleetConfig::default()
     });
     let with = FleetSim::new(cfg.clone()).run();
     cfg.serving.fleet =
-        Some(FleetConfig { groups: 2, router: RouterPolicy::RoundRobin, autoscale: None });
+        Some(FleetConfig { groups: 2, router: RouterPolicy::RoundRobin, ..FleetConfig::default() });
     let without = FleetSim::new(cfg).run();
     assert!(with.finished > 0);
     assert_eq!(with.scale_events, 0, "unreachable thresholds must never act");
@@ -325,6 +329,7 @@ fn aggressive_scale_down_drains_without_losing_requests() {
         groups: 2,
         router: RouterPolicy::RoundRobin,
         autoscale: Some(autoscale),
+        ..FleetConfig::default()
     });
     let r = FleetSim::new(cfg).run();
     assert!(r.arrived > 0);
@@ -366,6 +371,7 @@ fn autoscaler_tracks_a_diurnal_wave() {
         groups: 2,
         router: RouterPolicy::RoundRobin,
         autoscale: Some(autoscale),
+        ..FleetConfig::default()
     });
     let r = FleetSim::new(cfg).run();
     assert!(r.finished > 0);

@@ -1,0 +1,297 @@
+//! Heterogeneous device-profile contracts (ISSUE 9).
+//!
+//! The per-device cost plane must be *structurally inert* by default and
+//! *physically sensible* when enabled:
+//!
+//! * **Homogeneous bit-identity** — `profiles: None`, an all-`None`
+//!   [`DeviceProfiles`], and explicit whole-A100 profiles for every role
+//!   are three spellings of the same cluster; their reports must agree
+//!   bit for bit across the scenario matrix (offload on/off, both
+//!   engine paths — CI re-runs this suite under `ADRENALINE_NO_LEAP=1`,
+//!   `ADRENALINE_NO_PAR=1` and `ADRENALINE_EXACT_COSTS=1`).
+//! * **Executor monotonicity** — a standalone memory-rich executor
+//!   (arXiv 2405.01814's H20-style device) must raise Eq 1's OB_mem and
+//!   never price a purely-offloaded attention step worse than the
+//!   colocated SM share it replaces.
+//! * **Intra-GPU split** — a Nexus-style prefill/decode SM split prices
+//!   prefill on exactly `partition.rs`'s Fig 10 slowdown curve and
+//!   bandwidth on the Fig 9 superlinear curve.
+//! * **Determinism** — every heterogeneous scenario replays
+//!   bit-identically run over run.
+
+use adrenaline::config::{
+    DeviceProfile, DeviceProfiles, DeviceRole, GpuSpec, ModelSpec, OffloadPolicy,
+};
+use adrenaline::coordinator::OffloadBounds;
+use adrenaline::gpu_model::{prefill_slowdown, CostMode, CostModel, Roofline};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{ClusterSim, SimConfig, SimReport};
+use adrenaline::workload::WorkloadKind;
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Full-report bitwise equality (`fleet.rs` house style): both sides of
+/// every pairing take the same engine path, so even `events_processed`
+/// must match.
+fn assert_report_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.req_preemptions_total, b.req_preemptions_total);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert_eq!(a.events_processed, b.events_processed, "event counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert!(feq(a.offloaded_fraction, b.offloaded_fraction));
+    assert!(feq(a.prefill_hbm_capacity_util, b.prefill_hbm_capacity_util));
+    assert!(feq(a.prefill_hbm_bw_util, b.prefill_hbm_bw_util));
+    assert!(feq(a.executor_bw_util, b.executor_bw_util));
+    assert!(feq(a.executor_duty, b.executor_duty));
+    assert!(feq(a.decode_compute_util, b.decode_compute_util));
+    assert!(feq(a.ttft_slo_attainment, b.ttft_slo_attainment));
+    assert!(feq(a.tpot_slo_attainment, b.tpot_slo_attainment));
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("prefill_occupancy", &a.prefill_occupancy, &b.prefill_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.graph_selections, b.graph_selections);
+    assert_eq!(a.graph_used_slots, b.graph_used_slots);
+    assert_eq!(a.graph_padded_slots, b.graph_padded_slots);
+    assert_eq!(a.migrations_total, b.migrations_total);
+    assert_eq!(a.migration_tokens_moved, b.migration_tokens_moved);
+    assert_eq!(a.bounds_refreshes, b.bounds_refreshes);
+    assert_eq!(a.b_tpot_observations, b.b_tpot_observations);
+    assert_eq!(a.decision_counts, b.decision_counts);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+    assert_timeline_eq("prefill_pool", &a.prefill_pool_timeline, &b.prefill_pool_timeline);
+    assert_eq!(a.scale_ups, b.scale_ups);
+    assert_eq!(a.scale_downs, b.scale_downs);
+}
+
+fn base_cfg(rate: f64, duration_s: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = duration_s;
+    cfg
+}
+
+/// Explicit whole-A100 profiles for every role: a third spelling of the
+/// paper-default homogeneous cluster.
+fn explicit_homogeneous() -> DeviceProfiles {
+    let a100 = GpuSpec::a100_80g();
+    DeviceProfiles {
+        prefill: Some(DeviceProfile::whole(a100, DeviceRole::Prefill)),
+        decode: Some(DeviceProfile::whole(a100, DeviceRole::Decode)),
+        // No executor override: `Some(whole(..))` would mean a *standalone*
+        // executor device; the paper default colocates it on prefill SMs.
+        executor: None,
+    }
+}
+
+#[test]
+fn homogeneous_profiles_are_bit_identical_to_default() {
+    // `profiles: None`, all-None profiles, and explicit whole-A100
+    // prefill/decode profiles are the same cluster; the refactor must be
+    // invisible in every report field, bit for bit, with offloading both
+    // on (paper default) and off (vLLM-style baseline).
+    for offload in [None, Some(OffloadPolicy::Disabled)] {
+        let mut cfg = base_cfg(8.0, 30.0);
+        if let Some(p) = offload {
+            cfg.serving.offload = p;
+        }
+        assert!(cfg.cluster.profiles.is_none(), "paper default must not set profiles");
+        let baseline = ClusterSim::new(cfg.clone()).run();
+        assert!(baseline.finished > 0);
+
+        let mut all_none = cfg.clone();
+        all_none.cluster.profiles = Some(DeviceProfiles::default());
+        assert_report_identical(&ClusterSim::new(all_none).run(), &baseline);
+
+        let mut explicit = cfg;
+        explicit.cluster.profiles = Some(explicit_homogeneous());
+        assert_report_identical(&ClusterSim::new(explicit).run(), &baseline);
+    }
+}
+
+#[test]
+fn explicit_homogeneous_profiles_keep_the_offload_bounds() {
+    // The admission plane reads the same Eq 1–3 numbers through the
+    // profile indirection.
+    let cfg = base_cfg(8.0, 30.0);
+    let baseline =
+        OffloadBounds::compute(&cfg.cluster, &cfg.model, &cfg.serving.slo, 512);
+    let mut explicit = cfg.cluster;
+    explicit.profiles = Some(explicit_homogeneous());
+    let bounds = OffloadBounds::compute(&explicit, &cfg.model, &cfg.serving.slo, 512);
+    assert_eq!(bounds, baseline);
+    assert!(baseline.ob_mem > 0.0);
+}
+
+#[test]
+fn memory_rich_standalone_executor_raises_ob_mem() {
+    // arXiv 2405.01814's deployment: attention offloaded to a standalone
+    // H20-class device. More lendable HBM (no weights resident) and more
+    // achievable bandwidth than the colocated A100 SM share ⇒ Eq 1's
+    // OB_mem must strictly rise.
+    let cfg = base_cfg(8.0, 30.0);
+    let colocated =
+        OffloadBounds::compute(&cfg.cluster, &cfg.model, &cfg.serving.slo, 512).ob_mem;
+    let mut hetero = cfg.cluster;
+    hetero.profiles = Some(DeviceProfiles {
+        executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+        ..DeviceProfiles::default()
+    });
+    let standalone = OffloadBounds::ob_mem(&hetero, &cfg.model);
+    assert!(
+        standalone > colocated,
+        "standalone H20 executor must raise OB_mem: {standalone} vs {colocated}"
+    );
+}
+
+#[test]
+fn memory_rich_executor_prices_offloaded_attention_no_worse() {
+    // Same comparison at the priced-step level: a purely-offloaded decode
+    // step's remote attention on the H20 executor is never slower than on
+    // the colocated A100 half-partition (attention is bandwidth-bound at
+    // real context lengths, and the H20's achievable bandwidth is higher).
+    let a100 = GpuSpec::a100_80g();
+    let h20 = GpuSpec::h20_96g();
+    let m = ModelSpec::llama2_7b();
+    let mk = |rl_exec: &Roofline| {
+        CostModel::new(
+            &Roofline::whole(a100),
+            &Roofline::whole(a100),
+            rl_exec,
+            &m,
+            CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
+            CostMode::Exact,
+            None,
+            15e-6,
+            0.0,
+        )
+    };
+    let mut colocated = mk(&Roofline::partition(a100, 0.5));
+    let mut standalone = mk(&Roofline::whole(h20));
+    let mut times = Vec::new();
+    for ctx_sum in [8 * 256u64, 8 * 1024, 8 * 4096] {
+        let slow = colocated.decode_step(0, 0, &[8], &[ctx_sum], &mut times);
+        let fast = standalone.decode_step(0, 0, &[8], &[ctx_sum], &mut times);
+        assert!(
+            fast.remote_attention_s <= slow.remote_attention_s,
+            "ctx_sum {ctx_sum}: {} vs {}",
+            fast.remote_attention_s,
+            slow.remote_attention_s
+        );
+        assert!(fast.step_s <= slow.step_s, "offloaded step time must be no worse");
+    }
+}
+
+#[test]
+fn intra_gpu_split_prices_on_the_partition_curves() {
+    // A Nexus-style single-GPU prefill/decode split: prefill confined to
+    // 45% of the SMs pays exactly `prefill_slowdown(0.45)` over the
+    // whole-GPU prefill time (Fig 10), and each side's bandwidth follows
+    // the Fig 9 superlinear curve through `Roofline::partition`.
+    let a100 = GpuSpec::a100_80g();
+    let m = ModelSpec::llama2_7b();
+    let mk = |rl_prefill: &Roofline| {
+        CostModel::new(
+            rl_prefill,
+            &Roofline::whole(a100),
+            &Roofline::partition(a100, 0.25),
+            &m,
+            CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
+            CostMode::Bucketed,
+            None,
+            15e-6,
+            0.0,
+        )
+    };
+    let mut whole = mk(&Roofline::whole(a100));
+    let mut split = mk(&Roofline::partition(a100, 0.45));
+    let base = whole.prefill_time(2048, 0.0);
+    let expected = base * prefill_slowdown(0.45);
+    assert_eq!(split.prefill_time(2048, 0.0).to_bits(), expected.to_bits());
+
+    // And end-to-end: the split cluster simulates cleanly with prefill
+    // visibly slower than the whole-GPU reference.
+    let mut cfg = base_cfg(4.0, 30.0);
+    cfg.serving.offload = OffloadPolicy::Disabled;
+    let baseline = ClusterSim::new(cfg.clone()).run();
+    cfg.cluster.profiles = Some(DeviceProfiles {
+        prefill: Some(DeviceProfile::partitioned(a100, DeviceRole::Prefill, 0.45)),
+        decode: Some(DeviceProfile::partitioned(a100, DeviceRole::Decode, 0.55)),
+        executor: None,
+    });
+    let split_run = ClusterSim::new(cfg).run();
+    assert!(split_run.finished > 0);
+    assert!(split_run.tokens_conserved);
+    let (Some(b), Some(s)) = (&baseline.ttft, &split_run.ttft) else {
+        panic!("both runs must finish requests");
+    };
+    assert!(
+        s.mean > b.mean,
+        "confined prefill must slow TTFT: {} vs {}",
+        s.mean,
+        b.mean
+    );
+}
+
+#[test]
+fn heterogeneous_scenarios_replay_deterministically() {
+    // Bit-identical replays for both new scenario shapes: the standalone
+    // H20 executor and the intra-GPU SM split.
+    let a100 = GpuSpec::a100_80g();
+    let offload_profiles = DeviceProfiles {
+        executor: Some(DeviceProfile::whole(GpuSpec::h20_96g(), DeviceRole::Executor)),
+        ..DeviceProfiles::default()
+    };
+    let split_profiles = DeviceProfiles {
+        prefill: Some(DeviceProfile::partitioned(a100, DeviceRole::Prefill, 0.45)),
+        decode: Some(DeviceProfile::partitioned(a100, DeviceRole::Decode, 0.55)),
+        executor: None,
+    };
+    for (profiles, disable_offload) in [(offload_profiles, false), (split_profiles, true)] {
+        let mut cfg = base_cfg(12.0, 25.0);
+        cfg.cluster.profiles = Some(profiles);
+        if disable_offload {
+            cfg.serving.offload = OffloadPolicy::Disabled;
+        }
+        let a = ClusterSim::new(cfg.clone()).run();
+        let b = ClusterSim::new(cfg).run();
+        assert!(a.finished > 0);
+        assert_report_identical(&a, &b);
+    }
+}

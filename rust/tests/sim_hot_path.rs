@@ -186,6 +186,7 @@ fn property_bucketed_step_time_dominates_exact() {
     let mk = |mode: CostMode| {
         CostModel::new(
             &rl,
+            &rl,
             &rl_exec,
             &m,
             CostModel::build_grid(&[1, 2, 4, 8], &[1, 2, 4, 8], 256),
