@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 
 use adrenaline::config::{
     AutoscaleConfig, DeviceProfile, DeviceProfiles, DeviceRole, FaultConfig, FaultKind,
-    FleetConfig, GpuSpec, ModelSpec, RouterPolicy, ScriptedFault,
+    FleetConfig, GpuSpec, ModelSpec, OverloadConfig, RouterPolicy, ScriptedFault,
 };
 use adrenaline::sim::{ClusterSim, FleetReport, FleetSim, SimConfig, SimReport};
 use adrenaline::util::bench::{figure_row, Bench, BenchStats};
@@ -162,8 +162,10 @@ fn run_par_mode(
     (stats, last.expect("bench ran at least once"))
 }
 
-/// Run the fleet scenario (4 routed groups, diurnal trace, autoscaled
+/// Run a fleet scenario (4 routed groups, diurnal trace, autoscaled
 /// prefill pools) in one leap mode; returns (stats, last report).
+/// `customize` is the scenario's config hook, applied on top of the
+/// shared fleet base (fault plane, overload knobs, …).
 fn run_fleet_mode(
     m: ModelSpec,
     name: &str,
@@ -171,6 +173,7 @@ fn run_fleet_mode(
     duration: f64,
     iters: usize,
     no_leap: bool,
+    customize: fn(&mut SimConfig),
 ) -> (BenchStats, FleetReport) {
     let label = if no_leap {
         format!("sim_throughput/{name}_no_leap")
@@ -194,6 +197,7 @@ fn run_fleet_mode(
             }),
             ..FleetConfig::default()
         });
+        customize(&mut cfg);
         last = Some(FleetSim::new(cfg).run());
     });
     (stats, last.expect("bench ran at least once"))
@@ -239,6 +243,15 @@ fn fleet_row(
     o.insert("groups".into(), Json::Num(report.groups.len() as f64));
     o.insert("scale_events".into(), Json::Num(report.scale_events as f64));
     o.insert("fleet_goodput_tok_s".into(), Json::Num(report.fleet_goodput));
+    // Fault-tolerance counters (ISSUE 10); all zero on the plain fleet
+    // scenario, kept in every row so the schema stays uniform.
+    o.insert("requests_shed".into(), Json::Num(report.requests_shed as f64));
+    o.insert(
+        "requests_failed_over".into(),
+        Json::Num(report.requests_failed_over as f64),
+    );
+    o.insert("retries".into(), Json::Num(report.retries as f64));
+    o.insert("router_reroutes".into(), Json::Num(report.router_reroutes as f64));
     Json::Obj(o)
 }
 
@@ -263,6 +276,7 @@ fn main() {
                 instance: 0,
                 at_s: 40.0,
                 down_s: 10.0,
+                group: None,
             }],
             ..FaultConfig::default()
         });
@@ -378,17 +392,40 @@ fn main() {
         rows.push(patch(off, "par", Json::Bool(false)));
     }
 
-    // Fleet row (ISSUE 8): a 4-group diurnal fleet with per-group
-    // prefill-pool autoscaling, paired leap-on/off like every scenario.
+    // Fleet rows (ISSUE 8 + ISSUE 10): a 4-group diurnal fleet with
+    // per-group prefill-pool autoscaling, paired leap-on/off like every
+    // scenario — once plain, once with the fault-tolerance plane armed
+    // (`fleet_4grp_crash`: scripted group-0 prefill crash, health-aware
+    // routing, cross-group failover, overload admission control).
     // Informational — the CI floor gate still reads only
-    // `saturated_32rps` — but the `steps_simulated` assert doubles as
-    // the leap/fleet/autoscale composition check in the bench.
-    {
-        let name = "fleet_4grp_diurnal";
+    // `saturated_32rps` — but the `steps_simulated` asserts double as
+    // the leap/fleet/autoscale and leap/failover/overload composition
+    // checks in the bench.
+    let fleet_noop: fn(&mut SimConfig) = |_| {};
+    let fleet_crash: fn(&mut SimConfig) = |cfg| {
+        cfg.serving.fault = Some(FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::PrefillCrash,
+                instance: 0,
+                at_s: 40.0,
+                down_s: 20.0,
+                group: Some(0),
+            }],
+            ..FaultConfig::default()
+        });
+        if let Some(fleet) = cfg.serving.fleet.as_mut() {
+            fleet.overload = Some(OverloadConfig::default());
+        }
+    };
+    let fleet_scenarios: [(&str, fn(&mut SimConfig)); 2] =
+        [("fleet_4grp_diurnal", fleet_noop), ("fleet_4grp_crash", fleet_crash)];
+    for (name, customize) in fleet_scenarios {
         let rate = 64.0;
         let ref_iters = iters.clamp(1, 2);
-        let (ref_stats, ref_report) = run_fleet_mode(m, name, rate, duration, ref_iters, true);
-        let (leap_stats, leap_report) = run_fleet_mode(m, name, rate, duration, iters, false);
+        let (ref_stats, ref_report) =
+            run_fleet_mode(m, name, rate, duration, ref_iters, true, customize);
+        let (leap_stats, leap_report) =
+            run_fleet_mode(m, name, rate, duration, iters, false, customize);
         assert_eq!(
             leap_report.steps_simulated,
             ref_report.steps_simulated,

@@ -20,7 +20,10 @@
 # `fleet_4grp_diurnal` rows (ISSUE 8) get the same treatment: the
 # 4-group lockstep fleet's leap speedup is printed, never gated. So do
 # the paired `hetero_offload_16rps` rows (ISSUE 9): the standalone-
-# executor cost plane's leap speedup is printed, never gated.
+# executor cost plane's leap speedup is printed, never gated. And the
+# paired `fleet_4grp_crash` rows (ISSUE 10): the fault-tolerant fleet's
+# (health-aware routing + failover + overload shedding) leap speedup is
+# printed, never gated.
 #
 # To help the ratchet protocol along, the gate also prints a suggested
 # floor (20% of the measured saturated_32rps steps/s) — copy it into
@@ -61,6 +64,8 @@ fleet_sps = None
 fleet_ref_sps = None
 hetero_sps = None
 hetero_ref_sps = None
+crash_sps = None
+crash_ref_sps = None
 for row in rows:
     if row.get("bench") == "sim_throughput/saturated_32rps":
         sps = float(row["steps_per_second"])
@@ -78,6 +83,10 @@ for row in rows:
         hetero_sps = float(row.get("steps_per_second", 0.0))
     elif row.get("bench") == "sim_throughput/hetero_offload_16rps_no_leap":
         hetero_ref_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/fleet_4grp_crash":
+        crash_sps = float(row.get("steps_per_second", 0.0))
+    elif row.get("bench") == "sim_throughput/fleet_4grp_crash_no_leap":
+        crash_ref_sps = float(row.get("steps_per_second", 0.0))
 if sps is None:
     print(f"bench gate: saturated_32rps row missing from {path}", file=sys.stderr)
     sys.exit(1)
@@ -104,6 +113,12 @@ if hetero_sps and hetero_ref_sps:
         f"bench gate: hetero leap speedup (standalone executor) = "
         f"{hetero_sps / hetero_ref_sps:.2f}x "
         f"(leap-off reference = {hetero_ref_sps:.0f} steps/s)"
+    )
+if crash_sps and crash_ref_sps:
+    print(
+        f"bench gate: fault-tolerant fleet leap speedup (4-group crash) = "
+        f"{crash_sps / crash_ref_sps:.2f}x "
+        f"(leap-off reference = {crash_ref_sps:.0f} steps/s)"
     )
 print(f"bench gate: suggested ratchet floor = {0.2 * sps:.0f} (20% of measured)")
 if sps >= floor:

@@ -3,7 +3,8 @@
 //!
 //! Usage: `figures [fig1|fig2|fig3|fig5|fig6|fig9|fig10|fig11|fig12|
 //!                  fig13|fig14|fig15|fig16|fig17|fig18|launch|scaling|
-//!                  rebalance|buckets|feedback|faults|fleet|hetero|all]`
+//!                  rebalance|buckets|feedback|faults|fleet|fleet_faults|
+//!                  hetero|all]`
 //!
 //! Output rows are stable and grep-able:
 //!     figure=ID series=NAME x=X y=Y
@@ -27,7 +28,7 @@
 
 use adrenaline::config::{
     AutoscaleConfig, BoundsFeedbackConfig, ClusterSpec, FaultConfig, FaultKind, FleetConfig,
-    GpuSpec, ModelSpec, RebalanceConfig, RouterPolicy, ScriptedFault, SloConfig,
+    GpuSpec, ModelSpec, OverloadConfig, RebalanceConfig, RouterPolicy, ScriptedFault, SloConfig,
 };
 use adrenaline::coordinator::OffloadBounds;
 use adrenaline::gpu_model::{
@@ -66,6 +67,7 @@ const GROUPS: &[(&str, fn(&mut String))] = &[
     ("feedback", feedback),
     ("faults", faults),
     ("fleet", fleet),
+    ("fleet_faults", fleet_faults),
     ("hetero", hetero),
 ];
 
@@ -641,6 +643,7 @@ fn faults(out: &mut String) {
             instance: 0,
             at_s: 40.0,
             down_s: 10.0,
+            group: None,
         }],
         ..FaultConfig::default()
     });
@@ -762,6 +765,90 @@ fn fleet(out: &mut String) {
     let stride = (pts.len() / 60).max(1);
     for (t, v) in pts.iter().step_by(stride) {
         row(out, "fleet", "pool_size", *t, *v);
+    }
+}
+
+/// Fleet fault tolerance (ISSUE 10 / EXPERIMENTS.md §Fleet-faults):
+/// (a) graceful (health-aware routing + failover + admission control)
+/// vs naive goodput under a scripted group-0 prefill crash, per router
+/// policy, with the failover/reroute/shed counters behind the gap;
+/// (b) the graceful round-robin run's per-group availability timelines
+/// (the crash and recovery edges as the router sees them); (c) the
+/// overload admission-control sweep — a tight TTFT budget against a
+/// rising offered rate trades shed requests for SLO attainment on the
+/// admitted ones.
+fn fleet_faults(out: &mut String) {
+    let m = ModelSpec::llama2_7b();
+    let crash = |health_aware: bool| FaultConfig {
+        script: vec![ScriptedFault {
+            kind: FaultKind::PrefillCrash,
+            instance: 0,
+            at_s: 10.0,
+            down_s: 60.0,
+            group: Some(0),
+        }],
+        health_aware,
+        ..FaultConfig::default()
+    };
+
+    // (a) Graceful vs naive under a group-0 crash, all three policies.
+    let policies =
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::SessionSticky];
+    let jobs: Vec<(usize, bool)> =
+        policies.iter().enumerate().flat_map(|(p, _)| [(p, false), (p, true)]).collect();
+    let reports: Vec<FleetReport> = parallel_map(jobs.len(), |i| {
+        let (p, graceful) = jobs[i];
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, 12.0);
+        cfg.duration_s = 40.0;
+        cfg.serving.fault = Some(crash(graceful));
+        cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router: policies[p],
+            overload: graceful.then(OverloadConfig::default),
+            ..FleetConfig::default()
+        });
+        FleetSim::new(cfg).run()
+    });
+    for (i, r) in reports.iter().enumerate() {
+        let (p, graceful) = jobs[i];
+        let name = policies[p].name();
+        let mode = if graceful { "graceful" } else { "naive" };
+        let series = |metric: &str| format!("{name}_{mode}_{metric}");
+        row(out, "fleet_faults", &series("goodput_shed_aware"), 0.0, r.fleet_goodput_shed_aware);
+        row(out, "fleet_faults", &series("slo_attainment"), 0.0, r.fleet_slo_attainment);
+        row(out, "fleet_faults", &series("shed"), 0.0, r.requests_shed as f64);
+        row(out, "fleet_faults", &series("failed_over"), 0.0, r.requests_failed_over as f64);
+        row(out, "fleet_faults", &series("reroutes"), 0.0, r.router_reroutes as f64);
+    }
+
+    // (b) Availability timelines from the graceful round-robin run: the
+    // points are change-edges, so no stride is needed.
+    let rr_graceful = &reports[1];
+    for (g, tl) in rr_graceful.availability.iter().enumerate() {
+        for (t, v) in tl.points() {
+            row(out, "fleet_faults", &format!("rr_graceful_avail_g{g}"), *t, *v);
+        }
+    }
+
+    // (c) Overload admission control: a tight TTFT budget on a healthy
+    // 2-group least-loaded fleet, offered rate swept past saturation.
+    let rates = [16.0, 32.0, 48.0];
+    let ov_reports: Vec<FleetReport> = parallel_map(rates.len(), |i| {
+        let mut cfg = SimConfig::paper_default(m, WorkloadKind::ShareGpt, rates[i]);
+        cfg.duration_s = 30.0;
+        cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router: RouterPolicy::LeastLoaded,
+            overload: Some(OverloadConfig { ttft_budget_s: 0.25, ..OverloadConfig::default() }),
+            ..FleetConfig::default()
+        });
+        FleetSim::new(cfg).run()
+    });
+    for (&rate, r) in rates.iter().zip(&ov_reports) {
+        row(out, "fleet_faults", "overload_shed", rate, r.requests_shed as f64);
+        row(out, "fleet_faults", "overload_retries", rate, r.retries as f64);
+        row(out, "fleet_faults", "overload_slo_attainment", rate, r.fleet_slo_attainment);
+        row(out, "fleet_faults", "overload_goodput_shed_aware", rate, r.fleet_goodput_shed_aware);
     }
 }
 

@@ -19,5 +19,6 @@ pub use cluster::{ClusterSpec, DeviceProfile, DeviceProfiles, DeviceRole, GpuSpe
 pub use model::{ModelSpec, DTYPE_BYTES_F16, DTYPE_BYTES_F32};
 pub use serving::{
     AutoscaleConfig, BoundsFeedbackConfig, FaultConfig, FaultKind, FleetConfig, OffloadPolicy,
-    RebalanceConfig, RouterPolicy, ScriptedFault, ServingConfig, ServingConfigBuilder, SloConfig,
+    OverloadConfig, RebalanceConfig, RouterPolicy, ScriptedFault, ServingConfig,
+    ServingConfigBuilder, SloConfig,
 };

@@ -122,6 +122,11 @@ pub struct ScriptedFault {
     pub instance: usize,
     pub at_s: f64,
     pub down_s: f64,
+    /// Restrict this fault to one fleet group (ISSUE 10). `None` applies
+    /// the fault in every group (and in a bare, fleetless sim);
+    /// `Some(g)` requires `ServingConfig::fleet` with `g < groups` and
+    /// fires only inside group `g`'s fault plane.
+    pub group: Option<u32>,
 }
 
 /// Fault-injection plane (ISSUE 6). `None` on [`ServingConfig`] is
@@ -253,6 +258,44 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Router-level admission control (ISSUE 10). `None` on [`FleetConfig`]
+/// is structurally inert: no admission checks, no retry queue, runs are
+/// bit-identical to a fleet without the policy (pinned by
+/// `rust/tests/fleet_faults.rs`). When set, an arrival is *shed* if the
+/// best predicted TTFT across routable groups exceeds `ttft_budget_s` —
+/// DistServe's goodput argument applied at the fleet boundary: a request
+/// that cannot meet its SLO only burns capacity other requests need.
+/// Rejected arrivals retry with exponential backoff up to `max_retries`
+/// times before being shed for good; since predicted TTFT grows with
+/// prompt length, the largest prompts shed first (graceful degradation
+/// ordering).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadConfig {
+    /// Shed when the best predicted TTFT across routable groups exceeds
+    /// this budget, seconds.
+    pub ttft_budget_s: f64,
+    /// Re-admission attempts a rejected arrival gets before it is shed
+    /// for good (0 = shed immediately).
+    pub max_retries: u32,
+    /// Initial retry backoff, seconds; doubles per attempt.
+    pub retry_backoff_s: f64,
+    /// Backoff ceiling, seconds.
+    pub retry_backoff_cap_s: f64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            // 2.5× the default 1 s TTFT SLO: admit requests that merely
+            // queue briefly, shed the hopeless tail.
+            ttft_budget_s: 2.5,
+            max_retries: 2,
+            retry_backoff_s: 0.25,
+            retry_backoff_cap_s: 2.0,
+        }
+    }
+}
+
 /// Fleet layer (ISSUE 8). `None` on [`ServingConfig`] is structurally
 /// inert: no router, no autoscaler state, no extra events — runs are
 /// bit-identical to a simulator without the layer (pinned by
@@ -271,6 +314,9 @@ pub struct FleetConfig {
     /// the list — keep the base cluster's devices. Empty (the default) is
     /// structurally inert.
     pub group_profiles: Vec<Option<DeviceProfiles>>,
+    /// Router-level admission control (ISSUE 10). `None` = admit
+    /// everything (structurally inert, bit-identical).
+    pub overload: Option<OverloadConfig>,
 }
 
 impl Default for FleetConfig {
@@ -280,6 +326,7 @@ impl Default for FleetConfig {
             router: RouterPolicy::RoundRobin,
             autoscale: None,
             group_profiles: Vec::new(),
+            overload: None,
         }
     }
 }
@@ -579,7 +626,19 @@ impl ServingConfig {
                                 down_s.is_finite() && down_s > 0.0,
                                 "fault down_s must be positive and finite"
                             );
-                            Ok(ScriptedFault { kind, instance, at_s, down_s })
+                            // Group scoping spells "everywhere" as null
+                            // (or absence), like the plane toggles.
+                            let group = match e.get("group") {
+                                None | Some(Json::Null) => None,
+                                Some(x) => Some(
+                                    x.as_u64()
+                                        .ok_or_else(|| {
+                                            anyhow::anyhow!("bad fault group: {e}")
+                                        })?
+                                        as u32,
+                                ),
+                            };
+                            Ok(ScriptedFault { kind, instance, at_s, down_s, group })
                         })
                         .collect::<crate::Result<_>>()?;
                 }
@@ -818,6 +877,45 @@ impl ServingConfig {
                     }
                     Some(other) => anyhow::bail!("bad fleet group_profiles: {other}"),
                 }
+                // Same object-or-null discipline for admission control.
+                match fl.get("overload") {
+                    None | Some(Json::Null) => {}
+                    Some(ov @ Json::Obj(_)) => {
+                        let mut s = OverloadConfig::default();
+                        let f64_field = |key: &str, out: &mut f64| -> crate::Result<()> {
+                            if let Some(x) = ov.get(key) {
+                                *out = x
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow::anyhow!("bad overload {key}: {x}"))?;
+                            }
+                            Ok(())
+                        };
+                        f64_field("ttft_budget_s", &mut s.ttft_budget_s)?;
+                        if let Some(x) = ov.get("max_retries") {
+                            s.max_retries = x
+                                .as_u64()
+                                .ok_or_else(|| anyhow::anyhow!("bad overload max_retries: {x}"))?
+                                as u32;
+                        }
+                        f64_field("retry_backoff_s", &mut s.retry_backoff_s)?;
+                        f64_field("retry_backoff_cap_s", &mut s.retry_backoff_cap_s)?;
+                        anyhow::ensure!(
+                            s.ttft_budget_s.is_finite() && s.ttft_budget_s > 0.0,
+                            "overload ttft_budget_s must be positive and finite"
+                        );
+                        anyhow::ensure!(
+                            s.retry_backoff_s.is_finite() && s.retry_backoff_s > 0.0,
+                            "overload retry_backoff_s must be positive and finite"
+                        );
+                        anyhow::ensure!(
+                            s.retry_backoff_cap_s.is_finite()
+                                && s.retry_backoff_cap_s >= s.retry_backoff_s,
+                            "overload retry_backoff_cap_s must be finite and >= retry_backoff_s"
+                        );
+                        f.overload = Some(s);
+                    }
+                    Some(other) => anyhow::bail!("bad fleet overload config: {other}"),
+                }
                 anyhow::ensure!(f.groups >= 1, "fleet groups must be >= 1");
                 anyhow::ensure!(
                     f.group_profiles.len() <= f.groups as usize,
@@ -828,6 +926,19 @@ impl ServingConfig {
                 cfg.fleet = Some(f);
             }
             Some(other) => anyhow::bail!("bad fleet config: {other}"),
+        }
+        // Group-scoped scripted faults only make sense inside a fleet.
+        if let Some(ft) = &cfg.fault {
+            for sf in &ft.script {
+                if let Some(g) = sf.group {
+                    let groups = cfg.fleet.as_ref().map_or(0, |f| f.groups);
+                    anyhow::ensure!(
+                        g < groups,
+                        "scripted fault targets group {g} but the config has {groups} \
+                         fleet group(s)"
+                    );
+                }
+            }
         }
         Ok(cfg)
     }
@@ -904,6 +1015,9 @@ impl ServingConfig {
                                 e.insert("instance".into(), Json::Num(s.instance as f64));
                                 e.insert("at_s".into(), Json::Num(s.at_s));
                                 e.insert("down_s".into(), Json::Num(s.down_s));
+                                if let Some(g) = s.group {
+                                    e.insert("group".into(), Json::Num(g as f64));
+                                }
                                 Json::Obj(e)
                             })
                             .collect(),
@@ -979,6 +1093,14 @@ impl ServingConfig {
                     })
                     .collect();
                 fl.insert("group_profiles".into(), Json::Arr(entries));
+            }
+            if let Some(s) = f.overload {
+                let mut ov = BTreeMap::new();
+                ov.insert("ttft_budget_s".into(), Json::Num(s.ttft_budget_s));
+                ov.insert("max_retries".into(), Json::Num(s.max_retries as f64));
+                ov.insert("retry_backoff_s".into(), Json::Num(s.retry_backoff_s));
+                ov.insert("retry_backoff_cap_s".into(), Json::Num(s.retry_backoff_cap_s));
+                fl.insert("overload".into(), Json::Obj(ov));
             }
             o.insert("fleet".into(), Json::Obj(fl));
         }
@@ -1144,6 +1266,33 @@ impl ServingConfigBuilder {
                     "autoscale cooldown_s must be finite and >= 0"
                 );
             }
+            if let Some(s) = &f.overload {
+                anyhow::ensure!(
+                    s.ttft_budget_s.is_finite() && s.ttft_budget_s > 0.0,
+                    "overload ttft_budget_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    s.retry_backoff_s.is_finite() && s.retry_backoff_s > 0.0,
+                    "overload retry_backoff_s must be positive and finite"
+                );
+                anyhow::ensure!(
+                    s.retry_backoff_cap_s.is_finite()
+                        && s.retry_backoff_cap_s >= s.retry_backoff_s,
+                    "overload retry_backoff_cap_s must be finite and >= retry_backoff_s"
+                );
+            }
+        }
+        if let Some(ft) = &cfg.fault {
+            for sf in &ft.script {
+                if let Some(g) = sf.group {
+                    let groups = cfg.fleet.as_ref().map_or(0, |f| f.groups);
+                    anyhow::ensure!(
+                        g < groups,
+                        "scripted fault targets group {g} but the config has {groups} \
+                         fleet group(s)"
+                    );
+                }
+            }
         }
         if let Some(r) = &cfg.rebalance {
             anyhow::ensure!(
@@ -1223,12 +1372,14 @@ mod tests {
                             instance: 0,
                             at_s: 10.0,
                             down_s: 5.0,
+                            group: None,
                         },
                         ScriptedFault {
                             kind: FaultKind::Straggler,
                             instance: 1,
                             at_s: 20.0,
                             down_s: 8.0,
+                            group: None,
                         },
                     ],
                     prefill_mtbf_s: Some(60.0),
@@ -1237,6 +1388,20 @@ mod tests {
                     health_aware: false,
                     ..Default::default()
                 }),
+                ..Default::default()
+            },
+            ServingConfig {
+                fault: Some(FaultConfig {
+                    script: vec![ScriptedFault {
+                        kind: FaultKind::PrefillCrash,
+                        instance: 0,
+                        at_s: 30.0,
+                        down_s: 60.0,
+                        group: Some(1),
+                    }],
+                    ..Default::default()
+                }),
+                fleet: Some(FleetConfig { groups: 2, ..Default::default() }),
                 ..Default::default()
             },
         ] {
@@ -1391,6 +1556,27 @@ mod tests {
             .fault
             .unwrap();
         assert!(f.prefill_mtbf_s.is_none());
+        // Group scoping (ISSUE 10): null/absent = every group; Some(g)
+        // needs a fleet with more groups than g.
+        assert!(f.script.is_empty() || f.script.iter().all(|s| s.group.is_none()));
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "prefill_crash", "instance": 0, "at_s": 1,
+                "down_s": 1, "group": 0}]}}"#
+        )
+        .is_err(), "group-scoped faults require a fleet");
+        assert!(ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "prefill_crash", "instance": 0, "at_s": 1,
+                "down_s": 1, "group": 2}]},
+                "fleet": {"groups": 2}}"#
+        )
+        .is_err(), "fault group must be < fleet groups");
+        let scoped = ServingConfig::from_json(
+            r#"{"fault": {"script": [{"kind": "prefill_crash", "instance": 0, "at_s": 1,
+                "down_s": 1, "group": 1}]},
+                "fleet": {"groups": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(scoped.fault.unwrap().script[0].group, Some(1));
     }
 
     #[test]
@@ -1449,6 +1635,53 @@ mod tests {
     }
 
     #[test]
+    fn overload_defaults_off_and_json_validates() {
+        assert!(
+            FleetConfig::default().overload.is_none(),
+            "admission control is opt-in inside the fleet object"
+        );
+        let cfg = ServingConfig::from_json(
+            r#"{"fleet": {"groups": 2, "overload": {"ttft_budget_s": 1.5}}}"#,
+        )
+        .unwrap();
+        let ov = cfg.fleet.unwrap().overload.expect("object enables admission control");
+        assert_eq!(ov.ttft_budget_s, 1.5);
+        assert_eq!(ov.max_retries, OverloadConfig::default().max_retries);
+        assert_eq!(ov.retry_backoff_s, OverloadConfig::default().retry_backoff_s);
+        // null spells "off"; malformed values are errors, never silent
+        // defaults.
+        let off = ServingConfig::from_json(r#"{"fleet": {"overload": null}}"#).unwrap();
+        assert!(off.fleet.unwrap().overload.is_none());
+        assert!(ServingConfig::from_json(r#"{"fleet": {"overload": true}}"#).is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"ttft_budget_s": 0}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"ttft_budget_s": 1e400}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"max_retries": 0.5}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"retry_backoff_s": 0}}}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"retry_backoff_s": 1.0, "retry_backoff_cap_s": 0.5}}}"#
+        )
+        .is_err());
+        // max_retries 0 is legal: shed immediately, no retry queue.
+        let strict = ServingConfig::from_json(
+            r#"{"fleet": {"overload": {"max_retries": 0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(strict.fleet.unwrap().overload.unwrap().max_retries, 0);
+    }
+
+    #[test]
     fn fleet_json_roundtrip() {
         for cfg in [
             ServingConfig { fleet: Some(FleetConfig::default()), ..Default::default() },
@@ -1461,6 +1694,20 @@ mod tests {
                         max_prefill: 3,
                         initial_prefill: Some(2),
                         ..Default::default()
+                    }),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            ServingConfig {
+                fleet: Some(FleetConfig {
+                    groups: 2,
+                    router: RouterPolicy::LeastLoaded,
+                    overload: Some(OverloadConfig {
+                        ttft_budget_s: 1.25,
+                        max_retries: 3,
+                        retry_backoff_s: 0.1,
+                        retry_backoff_cap_s: 0.8,
                     }),
                     ..Default::default()
                 }),
@@ -1591,6 +1838,49 @@ mod tests {
         // Malformed bucket grids fail at build, not mid-setup.
         assert!(ServingConfig::builder().decode_buckets(vec![4, 2]).build().is_err());
         assert!(ServingConfig::builder().max_batch(0).build().is_err());
+        // Overload knobs validate at build too (ISSUE 10).
+        assert!(ServingConfig::builder()
+            .fleet(FleetConfig {
+                groups: 2,
+                overload: Some(OverloadConfig { ttft_budget_s: 0.0, ..Default::default() }),
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        assert!(ServingConfig::builder()
+            .fleet(FleetConfig {
+                groups: 2,
+                overload: Some(OverloadConfig {
+                    retry_backoff_s: 1.0,
+                    retry_backoff_cap_s: 0.5,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        // Group-scoped scripted faults need a fleet that contains the group.
+        let scoped = FaultConfig {
+            script: vec![ScriptedFault {
+                kind: FaultKind::PrefillCrash,
+                instance: 0,
+                at_s: 1.0,
+                down_s: 1.0,
+                group: Some(1),
+            }],
+            ..Default::default()
+        };
+        assert!(ServingConfig::builder().fault(scoped.clone()).build().is_err());
+        assert!(ServingConfig::builder()
+            .fault(scoped.clone())
+            .fleet(FleetConfig { groups: 1, ..Default::default() })
+            .build()
+            .is_err());
+        assert!(ServingConfig::builder()
+            .fault(scoped)
+            .fleet(FleetConfig { groups: 2, ..Default::default() })
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -24,12 +24,15 @@ pub struct ClusterRouter {
     /// Requests routed to each group (reported as
     /// `FleetReport::router_decisions`).
     pub decisions: Vec<u64>,
+    /// Health-driven diversions (ISSUE 10): arrivals whose nominal
+    /// policy pick was masked as down and landed elsewhere.
+    pub reroutes: u64,
 }
 
 impl ClusterRouter {
     pub fn new(policy: RouterPolicy, groups: usize) -> Self {
         assert!(groups >= 1, "a fleet needs at least one group");
-        ClusterRouter { policy, groups, rr: 0, decisions: vec![0; groups] }
+        ClusterRouter { policy, groups, rr: 0, decisions: vec![0; groups], reroutes: 0 }
     }
 
     pub fn policy(&self) -> RouterPolicy {
@@ -52,19 +55,91 @@ impl ClusterRouter {
             }
             RouterPolicy::LeastLoaded => {
                 debug_assert_eq!(headroom.len(), self.groups);
-                // Argmax headroom; ties break toward the lowest index so
-                // the decision is deterministic.
-                let mut best = 0usize;
-                for (i, &h) in headroom.iter().enumerate().skip(1) {
-                    if h > headroom[best] {
-                        best = i;
-                    }
-                }
-                best
+                Self::argmax(headroom)
             }
         };
         self.decisions[g] += 1;
         g
+    }
+
+    /// Health-aware variant of [`ClusterRouter::route`] (ISSUE 10):
+    /// `up[g]` marks groups that can currently accept work, and arrivals
+    /// whose nominal pick is masked divert —
+    ///
+    /// * round-robin takes the next up group in cyclic order (the cursor
+    ///   still lands one past the chosen group, so with every group up
+    ///   this is exactly `route`);
+    /// * session-sticky falls back to the up group with the most
+    ///   headroom (the session's affinity is already lost either way);
+    /// * least-loaded takes its argmax over up groups only.
+    ///
+    /// With *no* group up, falls back to the health-blind `route` pick:
+    /// the caller decides whether that arrival queues against a future
+    /// recovery or is shed by admission control.
+    pub fn route_masked(&mut self, id: RequestId, headroom: &[f64], up: &[bool]) -> usize {
+        debug_assert_eq!(up.len(), self.groups);
+        if up.iter().all(|&u| !u) {
+            return self.route(id, headroom);
+        }
+        let (g, diverted) = match self.policy {
+            RouterPolicy::RoundRobin => {
+                let nominal = self.rr;
+                let mut g = nominal;
+                while !up[g] {
+                    g = (g + 1) % self.groups;
+                }
+                self.rr = (g + 1) % self.groups;
+                (g, g != nominal)
+            }
+            RouterPolicy::SessionSticky => {
+                let nominal = (splitmix(id / SESSION_BLOCK) % self.groups as u64) as usize;
+                if up[nominal] {
+                    (nominal, false)
+                } else {
+                    (Self::argmax_up(headroom, up), true)
+                }
+            }
+            RouterPolicy::LeastLoaded => {
+                debug_assert_eq!(headroom.len(), self.groups);
+                let nominal = Self::argmax(headroom);
+                if up[nominal] {
+                    (nominal, false)
+                } else {
+                    (Self::argmax_up(headroom, up), true)
+                }
+            }
+        };
+        self.decisions[g] += 1;
+        self.reroutes += u64::from(diverted);
+        g
+    }
+
+    /// Argmax headroom; ties break toward the lowest index so the
+    /// decision is deterministic.
+    fn argmax(headroom: &[f64]) -> usize {
+        let mut best = 0usize;
+        for (i, &h) in headroom.iter().enumerate().skip(1) {
+            if h > headroom[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Argmax headroom over up groups only (low-index ties). The caller
+    /// guarantees at least one up group.
+    fn argmax_up(headroom: &[f64], up: &[bool]) -> usize {
+        let mut best: Option<usize> = None;
+        for (i, &h) in headroom.iter().enumerate() {
+            if !up[i] {
+                continue;
+            }
+            match best {
+                Some(b) if h <= headroom[b] => {}
+                _ => best = Some(i),
+            }
+        }
+        best.expect("route_masked checked for at least one up group")
     }
 }
 
@@ -131,5 +206,77 @@ mod tests {
     #[should_panic]
     fn zero_groups_panics() {
         ClusterRouter::new(RouterPolicy::RoundRobin, 0);
+    }
+
+    #[test]
+    fn masked_route_with_all_up_equals_route() {
+        for policy in
+            [RouterPolicy::RoundRobin, RouterPolicy::SessionSticky, RouterPolicy::LeastLoaded]
+        {
+            let mut plain = ClusterRouter::new(policy, 3);
+            let mut masked = ClusterRouter::new(policy, 3);
+            let up = [true, true, true];
+            for id in 0..50 {
+                let h = [(id % 5) as f64, (id % 3) as f64, (id % 7) as f64];
+                assert_eq!(plain.route(id, &h), masked.route_masked(id, &h, &up));
+            }
+            assert_eq!(plain.decisions, masked.decisions);
+            assert_eq!(masked.reroutes, 0, "no divert when every group is up");
+        }
+    }
+
+    #[test]
+    fn masked_round_robin_skips_down_groups_and_keeps_cycling() {
+        let mut r = ClusterRouter::new(RouterPolicy::RoundRobin, 3);
+        let up = [true, false, true];
+        let picks: Vec<usize> =
+            (0..6).map(|id| r.route_masked(id, &[], &up)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2], "down group 1 is skipped in cycle order");
+        assert_eq!(r.reroutes, 3, "every landing that displaced the cursor off 1 counts");
+        // Group 1 recovers: the cycle includes it again.
+        let picks: Vec<usize> =
+            (0..3).map(|id| r.route_masked(id, &[], &[true; 3])).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn masked_session_sticky_diverts_to_best_headroom() {
+        let mut r = ClusterRouter::new(RouterPolicy::SessionSticky, 4);
+        // Find a session that nominally lands on some group n, then mask n.
+        let id = 5 * SESSION_BLOCK;
+        let nominal = {
+            let mut probe = ClusterRouter::new(RouterPolicy::SessionSticky, 4);
+            probe.route(id, &[])
+        };
+        let mut up = [true; 4];
+        up[nominal] = false;
+        let mut h = [1.0; 4];
+        let expect = (nominal + 1) % 4;
+        h[expect] = 9.0;
+        assert_eq!(r.route_masked(id, &h, &up), expect, "divert to max-headroom up group");
+        assert_eq!(r.reroutes, 1);
+        // Sticky ids on an up group never divert.
+        up[nominal] = true;
+        assert_eq!(r.route_masked(id, &h, &up), nominal);
+        assert_eq!(r.reroutes, 1);
+    }
+
+    #[test]
+    fn masked_least_loaded_takes_argmax_over_up_groups() {
+        let mut r = ClusterRouter::new(RouterPolicy::LeastLoaded, 3);
+        // The global argmax is down: take the best up group instead.
+        assert_eq!(r.route_masked(0, &[1.0, 9.0, 2.0], &[true, false, true]), 2);
+        assert_eq!(r.reroutes, 1);
+        // Ties among up groups break to the lowest index.
+        assert_eq!(r.route_masked(1, &[4.0, 9.0, 4.0], &[true, false, true]), 0);
+    }
+
+    #[test]
+    fn masked_route_with_no_up_group_falls_back_to_blind_pick() {
+        let mut r = ClusterRouter::new(RouterPolicy::RoundRobin, 2);
+        let down = [false, false];
+        assert_eq!(r.route_masked(0, &[], &down), 0);
+        assert_eq!(r.route_masked(1, &[], &down), 1, "blind fallback still cycles");
+        assert_eq!(r.reroutes, 0, "the fallback is not a divert — nothing was up");
     }
 }

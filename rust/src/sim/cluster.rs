@@ -160,6 +160,10 @@ enum Phase {
     /// rebalancing): out of the batch until `MigrationDone`.
     Migrating,
     Done,
+    /// Handed off to another fleet group via [`ClusterSim::export_pending`]
+    /// (cross-group failover, ISSUE 10): this slab entry is closed — the
+    /// request finishes under a fresh id in the destination group's slab.
+    Exported,
 }
 
 /// Executor-pool occupancy (incl. reservations) above which the rebalancer
@@ -365,6 +369,16 @@ pub struct SimReport {
     pub ttft_slo_attainment: f64,
     /// Fraction of finished requests whose *mean* TPOT met the SLO.
     pub tpot_slo_attainment: f64,
+    /// Finished requests that met BOTH SLOs — the count behind `goodput`,
+    /// exposed so fleet-level accounting can pool attainment across
+    /// groups with shed requests in the denominator (ISSUE 10).
+    pub requests_slo_met: usize,
+    /// Output tokens generated by the `requests_slo_met` requests. Feeds
+    /// the fleet's offered-timeline-normalized shed-aware goodput
+    /// (`FleetReport::fleet_goodput_shed_aware`), which deliberately
+    /// avoids the stable window: on faulted runs a post-recovery drain
+    /// burst can capture (or dilute) the window arbitrarily.
+    pub slo_met_tokens: u64,
     /// Goodput: output tokens/s counting only requests that met BOTH SLOs
     /// (the DistServe-style metric; same stable window as `throughput`).
     pub goodput: f64,
@@ -451,6 +465,11 @@ pub struct SimReport {
     pub transfer_retries: u64,
     /// Wall time with at least one fault window active.
     pub degraded_time_s: f64,
+    /// Requests handed off to another fleet group via
+    /// [`ClusterSim::export_pending`] (cross-group failover, ISSUE 10).
+    /// Their slab entries stay here as `Exported`; they arrive — and
+    /// finish — under fresh ids in the destination group.
+    pub requests_exported: u64,
     /// Fraction of instances (prefill + decode) healthy, sampled at every
     /// `HealthTick`.
     pub health_timeline: Timeline,
@@ -711,6 +730,10 @@ pub struct ClusterSim {
     trace: VecDeque<Request>,
     finished_offloaded: usize,
     finished_total: usize,
+    /// Slab entries closed by cross-group failover (ISSUE 10): they count
+    /// toward drain completion like finished ones — the destination group
+    /// owns their remaining work.
+    exported: usize,
     /// Monotone admission counter (LIFO preemption order).
     admit_counter: u64,
     events_processed: u64,
@@ -851,6 +874,14 @@ impl ClusterSim {
                     "scripted {} targets instance {} but the cluster has {limit}",
                     f.kind.as_str(),
                     f.instance
+                );
+                // Group scoping is a fleet-layer concept: FleetSim's
+                // group_config filters the script per group and rewrites
+                // retained entries to `group: None` before they get here.
+                assert!(
+                    f.group.is_none(),
+                    "scripted {} still carries a fleet group scope — run it through FleetSim",
+                    f.kind.as_str()
                 );
             }
             proxy.set_health_aware(fc.health_aware);
@@ -1039,6 +1070,7 @@ impl ClusterSim {
             trace,
             finished_offloaded: 0,
             finished_total: 0,
+            exported: 0,
             admit_counter: 0,
             events_processed: 0,
             steps_simulated: 0,
@@ -1334,20 +1366,28 @@ impl ClusterSim {
     }
 
     /// Whether periodic controllers should keep ticking: requests remain
-    /// unfinished, or the fleet may still inject more.
+    /// neither finished nor exported, or the fleet may still inject more.
     fn more_work_expected(&self) -> bool {
-        self.lockstep_open || self.finished_total < self.reqs.len()
+        self.lockstep_open || self.finished_total + self.exported < self.reqs.len()
     }
 
     /// Cluster-router load signal: free KV headroom (executor pools on
     /// routable prefill instances + decode pools on up instances) minus
     /// prompt tokens still queued for dispatch anywhere in the group.
     /// Queued work counts against the group even on non-routable
-    /// instances — it still consumes the group's capacity.
+    /// instances — it still consumes the group's capacity. Instances the
+    /// proxy currently observes as unhealthy (crashed, draining) are
+    /// masked out of the positive sums: their pools exist but cannot
+    /// absorb new work right now, and counting them let a degraded group
+    /// keep winning least-loaded routing (ISSUE 10 satellite; pinned by
+    /// `router_headroom_masks_unhealthy_instances`).
     pub(crate) fn router_headroom(&self) -> f64 {
         let mut headroom = 0.0f64;
         for pi in 0..self.prefill.len() {
-            if self.scaler_routable(pi) && !self.prefill_is_down(pi) {
+            if self.scaler_routable(pi)
+                && !self.prefill_is_down(pi)
+                && self.proxy.is_prefill_healthy(pi)
+            {
                 let p = &self.prefill[pi];
                 headroom += p
                     .executor_kv_budget
@@ -1362,12 +1402,119 @@ impl ClusterSim {
             }
         }
         for d in 0..self.decode.len() {
-            if !self.decode_is_down(d) {
+            if !self.decode_is_down(d) && self.proxy.is_decode_healthy(d) {
                 let dec = &self.decode[d];
                 headroom += dec.kv_budget().saturating_sub(dec.kv_tokens() + dec.reserved) as f64;
             }
         }
         headroom
+    }
+
+    /// True when this group cannot make forward progress on new work:
+    /// every prefill instance is crashed, inactive, or draining — or
+    /// every decode instance is down. Queued requests are stranded until
+    /// a recovery; the fleet's cross-group failover trigger (ISSUE 10).
+    /// Reads the instantaneous fault/scaler state, not the heartbeat
+    /// view: failover is a control-plane action that can afford the
+    /// ground truth, while per-request routing inside the group keeps
+    /// its heartbeat-delayed picture.
+    pub(crate) fn group_stalled(&self) -> bool {
+        let prefill_dead = (0..self.prefill.len())
+            .all(|pi| self.prefill_is_down(pi) || !self.scaler_routable(pi));
+        let decode_dead = (0..self.decode.len()).all(|d| self.decode_is_down(d));
+        prefill_dead || decode_dead
+    }
+
+    /// Observed healthy-instance fraction — the proxy's heartbeat view of
+    /// this group, surfaced to the fleet health plane so failover can
+    /// pick the *healthiest* surviving group (ISSUE 10).
+    pub(crate) fn health_fraction(&self) -> f64 {
+        let n = self.prefill.len() + self.decode.len();
+        let healthy = (0..self.prefill.len())
+            .filter(|&pi| self.proxy.is_prefill_healthy(pi))
+            .count()
+            + (0..self.decode.len()).filter(|&d| self.proxy.is_decode_healthy(d)).count();
+        healthy as f64 / n.max(1) as f64
+    }
+
+    /// Cross-group failover export (ISSUE 10): close every still-queued
+    /// (`WaitingDispatch`) request out of this group and return it as a
+    /// fresh [`Request`] ready for [`ClusterSim::inject`] into another
+    /// group, arriving at `now`. Queued requests hold no sim-side
+    /// reservations (those are taken at dispatch) — only proxy routing
+    /// metadata, released here exactly as a preemption releases it. The
+    /// exported request carries the recompute-path token ledger forward:
+    /// its prompt is the effective prompt (original prompt + tokens
+    /// already generated here, i.e. what a `Proxy::route_resumed`
+    /// re-admission would re-prefill) and its output length drops the
+    /// tokens already generated, so the destination group's ordinary
+    /// arrival path — and its `tokens_conserved` invariant — need no new
+    /// cases.
+    pub(crate) fn export_pending(&mut self, now: f64) -> Vec<Request> {
+        debug_assert!(self.lockstep_open, "export_pending requires a lockstep-built sim");
+        let mut out = Vec::new();
+        for i in 0..self.reqs.len() {
+            if self.reqs[i].phase != Phase::WaitingDispatch {
+                continue;
+            }
+            let d = self.reqs[i].decode_instance;
+            self.proxy.on_preempted(d, i as RequestId);
+            let sr = &mut self.reqs[i];
+            debug_assert_eq!(sr.effective_prompt, sr.req.prompt_len + sr.generated);
+            debug_assert!(
+                sr.generated < sr.req.output_len,
+                "a request with all output generated would have finished"
+            );
+            // Strand any stale per-request events from before the export.
+            sr.epoch = sr.epoch.wrapping_add(1);
+            sr.phase = Phase::Exported;
+            out.push(Request::new(
+                0, // renumbered by the destination's inject
+                now,
+                sr.effective_prompt,
+                sr.req.output_len - sr.generated,
+            ));
+            self.exported += 1;
+        }
+        if !out.is_empty() {
+            // Drop the exported ids from the prefill queues so pressure,
+            // headroom, and dispatch stop seeing them.
+            let reqs = &self.reqs;
+            for p in &mut self.prefill {
+                p.queue.retain(|&id| reqs[id as usize].phase != Phase::Exported);
+            }
+        }
+        out
+    }
+
+    /// Admission-control signal (ISSUE 10): the best-case queueing +
+    /// prefill delay a fresh prompt of `tokens` would see in this group
+    /// right now — min over dispatchable prefill instances of the
+    /// instance's remaining busy tail plus one priced prefill over its
+    /// queued backlog and the prompt. Infinite when no prefill instance
+    /// can dispatch. An estimate, not a bound (head-of-line order and
+    /// decode-side gating are not modeled), but it is monotone in prompt
+    /// length — which is what gives overload shedding its
+    /// largest-prompt-first degradation order. `&mut` only for the
+    /// memoized prefill cost table; observable state is untouched.
+    pub(crate) fn predicted_ttft(&mut self, now: f64, tokens: usize) -> f64 {
+        let mut best = f64::INFINITY;
+        for pi in 0..self.prefill.len() {
+            if self.prefill_is_down(pi) || !self.scaler_routable(pi) {
+                continue;
+            }
+            let mut backlog = 0u64;
+            for &id in &self.prefill[pi].queue {
+                let sr = &self.reqs[id as usize];
+                if sr.phase == Phase::WaitingDispatch {
+                    backlog += sr.effective_prompt as u64;
+                }
+            }
+            let wait = (self.prefill[pi].busy_until - now).max(0.0);
+            let cost = self.prefill_time(pi, backlog + tokens as u64);
+            best = best.min(wait + cost);
+        }
+        best
     }
 
     // ----- slab access ------------------------------------------------------
@@ -2389,7 +2536,7 @@ impl ClusterSim {
                 // The disaggregation domain: decoding elsewhere with
                 // attention KV resident in this instance's executor HBM.
                 Phase::Decoding => sr.offloaded && sr.prefill_instance == pi,
-                Phase::WaitingDispatch | Phase::Done => false,
+                Phase::WaitingDispatch | Phase::Done | Phase::Exported => false,
             };
             if hit {
                 victims.push(i as RequestId);
@@ -2428,7 +2575,9 @@ impl ClusterSim {
                 Phase::Decoding | Phase::Transferring | Phase::Migrating => {
                     sr.decode_instance == d
                 }
-                Phase::WaitingDispatch | Phase::Prefilling | Phase::Done => false,
+                Phase::WaitingDispatch | Phase::Prefilling | Phase::Done | Phase::Exported => {
+                    false
+                }
             };
             if hit {
                 victims.push(i as RequestId);
@@ -2556,7 +2705,7 @@ impl ClusterSim {
                     dec.reserved = dec.reserved.saturating_sub(kv);
                 }
             }
-            Phase::WaitingDispatch | Phase::Done => return,
+            Phase::WaitingDispatch | Phase::Done | Phase::Exported => return,
         }
         self.proxy.on_preempted(d, id);
         {
@@ -3628,6 +3777,7 @@ impl ClusterSim {
         let mut met_ttft = 0usize;
         let mut met_tpot = 0usize;
         let mut met_both = 0usize;
+        let mut slo_met_tokens = 0u64;
         let mut finished_seen = 0usize;
         let mut req_preemptions_total = 0u64;
         let mut generated_total = 0usize;
@@ -3653,6 +3803,9 @@ impl ClusterSim {
             met_ttft += usize::from(ttft_ok);
             met_tpot += usize::from(tpot_ok);
             met_both += usize::from(ttft_ok && tpot_ok);
+            if ttft_ok && tpot_ok {
+                slo_met_tokens += sr.generated as u64;
+            }
         }
         if generated_total != self.metrics.total_output_tokens() {
             tokens_conserved = false;
@@ -3723,6 +3876,8 @@ impl ClusterSim {
             decode_compute_util,
             ttft_slo_attainment: frac(met_ttft),
             tpot_slo_attainment: frac(met_tpot),
+            requests_slo_met: met_both,
+            slo_met_tokens,
             goodput: throughput * good_frac,
             decode_occupancy: self.decode_occupancy,
             prefill_occupancy: self.prefill_occupancy,
@@ -3754,6 +3909,7 @@ impl ClusterSim {
             recompute_tokens_replayed,
             transfer_retries,
             degraded_time_s,
+            requests_exported: self.exported as u64,
             health_timeline,
             prefill_pool_timeline,
             scale_ups,
@@ -4114,6 +4270,7 @@ mod tests {
                 instance: 0,
                 at_s: 10.0,
                 down_s: 8.0,
+                group: None,
             }],
             ..FaultConfig::default()
         };
@@ -4146,6 +4303,7 @@ mod tests {
                 instance: 0,
                 at_s: 10.0,
                 down_s: 6.0,
+                group: None,
             }],
             ..FaultConfig::default()
         };
@@ -4159,6 +4317,41 @@ mod tests {
         assert!(r.tokens_conserved);
         assert_eq!(r.faults_injected, 1);
         assert!(r.requests_recovered > 0, "the crash must have struck live work");
+    }
+
+    #[test]
+    fn router_headroom_masks_unhealthy_instances() {
+        // ISSUE 10 satellite: an instance the proxy observes as unhealthy
+        // (crashed, draining) must not contribute KV headroom to the
+        // cluster router's load signal — a degraded group otherwise keeps
+        // winning least-loaded routing on capacity it cannot serve.
+        let model = ModelSpec::llama2_7b();
+        let mut cfg = SimConfig::paper_default(model, WorkloadKind::ShareGpt, 1.0);
+        cfg.cluster.n_prefill = 2;
+        cfg.cluster.n_decode = 2;
+        cfg.serving.fault = Some(crate::config::FaultConfig::default());
+        let mut sim = ClusterSim::lockstep(cfg, 1024);
+        sim.prime();
+        let full = sim.router_headroom();
+        sim.proxy.set_prefill_health(1, false);
+        let lost_exec = sim.prefill[1].executor_kv_budget as f64;
+        assert!(lost_exec > 0.0, "the offload-enabled default carries executor pools");
+        assert_eq!(
+            (full - sim.router_headroom()).to_bits(),
+            lost_exec.to_bits(),
+            "an unhealthy prefill instance's executor pool leaves the sum exactly"
+        );
+        sim.proxy.set_decode_health(1, false);
+        let lost_dec = sim.decode[1].kv_budget() as f64;
+        assert_eq!(
+            (full - sim.router_headroom()).to_bits(),
+            (lost_exec + lost_dec).to_bits(),
+            "an unhealthy decode instance's KV pool leaves the sum too"
+        );
+        // Recovery restores the full signal.
+        sim.proxy.set_prefill_health(1, true);
+        sim.proxy.set_decode_health(1, true);
+        assert_eq!(sim.router_headroom().to_bits(), full.to_bits());
     }
 
     #[test]
@@ -4185,6 +4378,7 @@ mod tests {
                 instance: 0,
                 at_s: 5.0,
                 down_s: 10.0,
+                group: None,
             }],
             straggler_factor: 4.0,
             ..FaultConfig::default()

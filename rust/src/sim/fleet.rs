@@ -6,29 +6,57 @@
 //! goodput is decided by *placement above* the per-group proxies, which
 //! keep routing within their group exactly as before.
 //!
-//! Two execution strategies, chosen by the router policy:
+//! Two execution strategies:
 //!
-//! * **Pre-partition** (round-robin, session-sticky, or a single group):
-//!   the policy is a pure function of the request id, so the whole trace
+//! * **Pre-partition** (round-robin, session-sticky, or a single group,
+//!   with no health-aware fault plane and no admission control): the
+//!   policy is a pure function of the request id, so the whole trace
 //!   is routed upfront, each group's slice is renumbered onto a dense
 //!   local id space, and the groups run as completely independent sims —
 //!   one per core via [`parallel_map`], bit-identical to running them
 //!   serially. A one-group fleet is exactly `ClusterSim::with_trace`
 //!   over the generated trace, i.e. bit-identical to a bare sim (pinned
 //!   by `rust/tests/fleet.rs`).
-//! * **Lockstep co-simulation** (least-loaded with ≥ 2 groups): the
-//!   router needs every group's *live* headroom at each arrival instant,
-//!   so the groups advance together. Before injecting an arrival at
-//!   `t`, every group receives a [`ClusterSim::fence`] at `t` and is
-//!   pumped strictly past its events before `t`; the fence holds a
-//!   smaller queue `seq` than the injected arrival, so the decode leap
-//!   engine's strict next-event horizon fences every leap off the
-//!   injection with no new engine machinery. The schedule is fully
-//!   deterministic: same seed, same trace, same routing, same reports.
+//! * **Lockstep co-simulation** (least-loaded with ≥ 2 groups; any
+//!   policy once `FleetConfig::overload` or a health-aware fault plane
+//!   with ≥ 2 groups is armed): the router needs every group's *live*
+//!   state at each arrival instant, so the groups advance together.
+//!   Before injecting an arrival at `t`, every group receives a
+//!   [`ClusterSim::fence`] at `t` and is pumped strictly past its events
+//!   before `t`; the fence holds a smaller queue `seq` than the injected
+//!   arrival, so the decode leap engine's strict next-event horizon
+//!   fences every leap off the injection with no new engine machinery.
+//!   The schedule is fully deterministic: same seed, same trace, same
+//!   routing, same reports.
+//!
+//! ## Fleet fault tolerance (ISSUE 10)
+//!
+//! Three planes compose on the lockstep path, each inert unless armed:
+//!
+//! * **Health-aware routing** — at every admission instant the fleet
+//!   reads each group's ground-truth stall state
+//!   ([`ClusterSim::group_stalled`]) and masks stalled groups out of the
+//!   routing decision ([`ClusterRouter::route_masked`]); round-robin and
+//!   session-sticky arrivals whose nominal group is down divert live
+//!   instead of stranding in a pre-partitioned slice.
+//! * **Cross-group failover** — a stalled group's still-queued requests
+//!   are exported ([`ClusterSim::export_pending`]) and re-injected into
+//!   the healthiest surviving group (best observed health fraction, ties
+//!   by live headroom). The exported request carries the recompute-path
+//!   token ledger (effective prompt, remaining output), so the
+//!   destination's ordinary arrival path conserves tokens unchanged.
+//! * **Admission control** (`FleetConfig::overload`) — an arrival is
+//!   admitted only if some routable group predicts a TTFT within the
+//!   budget ([`ClusterSim::predicted_ttft`]); otherwise it retries with
+//!   exponential backoff up to `max_retries` times and is then *shed*.
+//!   Prediction grows with prompt length, so the largest prompts shed
+//!   first — graceful degradation ordering. A shed request is an SLO
+//!   miss, not a non-event: it stays in the attainment denominator
+//!   (`FleetReport::fleet_slo_attainment`).
 
 use std::sync::Mutex;
 
-use crate::config::{FleetConfig, RouterPolicy};
+use crate::config::{FleetConfig, OverloadConfig, RouterPolicy};
 use crate::coordinator::ClusterRouter;
 use crate::metrics::{LatencyStats, Timeline};
 use crate::workload::{Request, TraceGenerator};
@@ -49,7 +77,8 @@ const GROUP_SEED_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
 pub struct FleetReport {
     /// Per-group reports, group-index order.
     pub groups: Vec<SimReport>,
-    /// Requests the cluster router sent to each group.
+    /// Requests the cluster router sent to each group (re-admitted
+    /// retries and failed-over re-injections count at their new group).
     pub router_decisions: Vec<u64>,
     /// Sum of per-group stable-window throughputs, tok/s.
     pub fleet_throughput: f64,
@@ -60,6 +89,9 @@ pub struct FleetReport {
     pub fleet_ttft: Option<LatencyStats>,
     /// Count-weighted merge of per-group TPOT stats.
     pub fleet_tpot: Option<LatencyStats>,
+    /// Unique requests offered to the fleet: every trace arrival counts
+    /// exactly once — shed arrivals included, failed-over requests not
+    /// double-counted across their two slab entries.
     pub arrived: usize,
     pub finished: usize,
     pub steps_simulated: u64,
@@ -71,6 +103,56 @@ pub struct FleetReport {
     /// Total scaling actions across the fleet (scale-ups + initiated
     /// scale-downs).
     pub scale_events: u64,
+    // ----- fleet fault tolerance (ISSUE 10; all zero / empty without a
+    // health-aware fault plane or `FleetConfig::overload`) --------------
+    /// Arrivals rejected by admission control after exhausting their
+    /// retry budget.
+    pub requests_shed: u64,
+    /// Requests exported out of a stalled group and re-injected into a
+    /// surviving one (equals the sum of per-group `requests_exported`).
+    pub requests_failed_over: u64,
+    /// Re-admission attempts performed for deferred arrivals.
+    pub retries: u64,
+    /// Arrivals the router diverted off a masked (stalled) nominal group.
+    pub router_reroutes: u64,
+    /// Per-group availability (1.0 = accepting work, 0.0 = stalled),
+    /// sampled at admission instants on change. Empty without the
+    /// health-aware lockstep plane.
+    pub availability: Vec<Timeline>,
+    /// Pooled SLO attainment with shed arrivals in the denominator:
+    /// `Σ requests_slo_met / (Σ finished + requests_shed)`. A shed
+    /// request is an SLO miss, not a non-event (ISSUE 10 satellite; see
+    /// EXPERIMENTS.md §Fleet-faults).
+    pub fleet_slo_attainment: f64,
+    /// Shed-aware goodput, tok/s: `Σ slo_met_tokens / duration_s` —
+    /// output tokens of SLO-met requests over the *offered* timeline.
+    /// Deliberately not stable-window-based: on faulted runs a
+    /// post-recovery drain burst can capture or dilute the window
+    /// arbitrarily, and a window metric would let shedding inflate the
+    /// rate by serving less. Shed and stranded requests contribute
+    /// exactly zero here.
+    pub fleet_goodput_shed_aware: f64,
+}
+
+/// A deferred arrival waiting out its admission-control backoff.
+struct PendingRetry {
+    /// Re-admission instant.
+    due: f64,
+    /// Admission attempts already made (1 after the first rejection).
+    attempts: u32,
+    /// Scheduling tie-break (after due time and prompt length), in
+    /// deferral order.
+    seq: u64,
+    req: Request,
+}
+
+/// Lockstep-path fault-tolerance tallies (ISSUE 10).
+#[derive(Debug, Default)]
+struct FaultStats {
+    requests_shed: u64,
+    requests_failed_over: u64,
+    retries: u64,
+    availability: Vec<Timeline>,
 }
 
 /// The fleet simulator. Owns one [`SimConfig`] describing every group's
@@ -105,34 +187,79 @@ impl FleetSim {
         let trace = gen.trace(self.cfg.duration_s);
         let mut router = ClusterRouter::new(self.fleet.router, groups);
 
-        let reports = if groups >= 2 && self.fleet.router == RouterPolicy::LeastLoaded {
-            Self::run_lockstep(&self.cfg, trace, &mut router, groups)
+        // The lockstep co-simulation runs whenever a routing decision
+        // needs live group state: least-loaded always; any policy once
+        // admission control or a multi-group health-aware fault plane is
+        // armed. A naive (health_aware: false) faulted fleet keeps the
+        // pre-partition path — that health-blind, strand-on-crash
+        // baseline is exactly what EXPERIMENTS.md §Fleet-faults compares
+        // against.
+        let health_fleet = groups >= 2
+            && self.cfg.serving.fault.as_ref().map_or(false, |f| f.health_aware);
+        let lockstep = (groups >= 2 && self.fleet.router == RouterPolicy::LeastLoaded)
+            || self.fleet.overload.is_some()
+            || health_fleet;
+        let (reports, fx) = if lockstep {
+            Self::run_lockstep(&self.cfg, trace, &mut router, groups, &self.fleet)
         } else {
-            Self::run_partitioned(&self.cfg, trace, &mut router, groups)
+            (
+                Self::run_partitioned(&self.cfg, trace, &mut router, groups),
+                FaultStats::default(),
+            )
         };
 
         let fleet_size_timeline =
             stepwise_sum(&reports.iter().map(|r| &r.prefill_pool_timeline).collect::<Vec<_>>());
         let fleet_ttft = LatencyStats::merged(reports.iter().filter_map(|r| r.ttft.as_ref()));
         let fleet_tpot = LatencyStats::merged(reports.iter().filter_map(|r| r.tpot.as_ref()));
+        debug_assert_eq!(
+            fx.requests_failed_over,
+            reports.iter().map(|r| r.requests_exported).sum::<u64>(),
+            "every export must have been re-injected exactly once"
+        );
+        let finished: usize = reports.iter().map(|r| r.finished).sum();
+        let fleet_throughput: f64 = reports.iter().map(|r| r.throughput).sum();
+        // Shed-aware attainment (ISSUE 10 satellite): pooled across
+        // groups, with shed arrivals in the denominator as misses.
+        let slo_met: usize = reports.iter().map(|r| r.requests_slo_met).sum();
+        let slo_den = finished as u64 + fx.requests_shed;
+        let fleet_slo_attainment =
+            if slo_den == 0 { 0.0 } else { slo_met as f64 / slo_den as f64 };
+        let slo_met_tokens: u64 = reports.iter().map(|r| r.slo_met_tokens).sum();
         FleetReport {
             router_decisions: router.decisions.clone(),
-            fleet_throughput: reports.iter().map(|r| r.throughput).sum(),
+            fleet_throughput,
             fleet_goodput: reports.iter().map(|r| r.goodput).sum(),
             fleet_ttft,
             fleet_tpot,
-            arrived: reports.iter().map(|r| r.arrived).sum(),
-            finished: reports.iter().map(|r| r.finished).sum(),
+            // Per-group `arrived` counts every slab entry: subtract the
+            // failed-over duplicates, add back the shed arrivals that
+            // never entered a group.
+            arrived: reports.iter().map(|r| r.arrived).sum::<usize>()
+                + fx.requests_shed as usize
+                - fx.requests_failed_over as usize,
+            finished,
             steps_simulated: reports.iter().map(|r| r.steps_simulated).sum(),
             events_processed: reports.iter().map(|r| r.events_processed).sum(),
             fleet_size_timeline,
             scale_events: reports.iter().map(|r| r.scale_ups + r.scale_downs).sum(),
+            requests_shed: fx.requests_shed,
+            requests_failed_over: fx.requests_failed_over,
+            retries: fx.retries,
+            router_reroutes: router.reroutes,
+            availability: fx.availability,
+            fleet_slo_attainment,
+            fleet_goodput_shed_aware: slo_met_tokens as f64 / self.cfg.duration_s,
             groups: reports,
         }
     }
 
     /// Per-group config: identical topology/serving knobs; group 0 keeps
-    /// the fleet seed, others get decorrelated RNG streams.
+    /// the fleet seed, others get decorrelated RNG streams. Group-scoped
+    /// scripted faults (ISSUE 10) are resolved here: entries targeting
+    /// another group are dropped, retained entries lose their scope
+    /// marker (`ClusterSim` rejects scoped entries — scoping is a
+    /// fleet-layer concept).
     fn group_config(cfg: &SimConfig, g: usize) -> SimConfig {
         let mut c = cfg.clone();
         if g > 0 {
@@ -140,6 +267,12 @@ impl FleetSim {
         }
         if let Some(Some(p)) = cfg.serving.fleet.as_ref().and_then(|f| f.group_profiles.get(g)) {
             c.cluster.profiles = Some(*p);
+        }
+        if let Some(fc) = c.serving.fault.as_mut() {
+            fc.script.retain(|s| s.group.map_or(true, |sg| sg as usize == g));
+            for s in &mut fc.script {
+                s.group = None;
+            }
         }
         c
     }
@@ -177,14 +310,19 @@ impl FleetSim {
         })
     }
 
-    /// Least-loaded: co-simulate the groups in lockstep so every routing
-    /// decision reads each group's state *at the arrival instant*.
+    /// Live-state policies: co-simulate the groups in lockstep so every
+    /// routing, failover, and admission decision reads each group's
+    /// state *at the admission instant*.
     fn run_lockstep(
         cfg: &SimConfig,
         trace: Vec<Request>,
         router: &mut ClusterRouter,
         groups: usize,
-    ) -> Vec<SimReport> {
+        fleet: &FleetConfig,
+    ) -> (Vec<SimReport>, FaultStats) {
+        let overload = fleet.overload;
+        let health_gated =
+            groups >= 2 && cfg.serving.fault.as_ref().map_or(false, |f| f.health_aware);
         // Offload bounds derive from the mean sequence length; use the
         // full shared trace so every group prices against the same
         // bounds a whole-trace build would.
@@ -199,32 +337,220 @@ impl FleetSim {
         for sim in &mut sims {
             sim.prime();
         }
+        let mut stats = FaultStats::default();
+        if health_gated {
+            stats.availability = (0..groups).map(|_| Timeline::new()).collect();
+        }
+        let mut avail_last = vec![f64::NAN; groups];
         let mut headroom = vec![0.0f64; groups];
+        let mut up = vec![true; groups];
+        let mut retry_q: Vec<PendingRetry> = Vec::new();
+        let mut retry_seq = 0u64;
         let mut last_t = f64::NEG_INFINITY;
-        for req in trace {
-            let t = req.arrival_s;
-            debug_assert!(t >= last_t, "lockstep needs a time-sorted trace");
+
+        let mut arrivals = trace.into_iter().peekable();
+        loop {
+            // Next admission instant: the earlier of the next trace
+            // arrival and the earliest due retry (retries ordered by
+            // (due, prompt, deferral seq) — the smallest prompts
+            // re-admit first, matching the shed-largest-first
+            // degradation order; arrivals win exact-time ties).
+            let next_retry = retry_q
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (a.due, a.req.prompt_len, a.seq)
+                        .partial_cmp(&(b.due, b.req.prompt_len, b.seq))
+                        .expect("retry due times are finite")
+                })
+                .map(|(i, r)| (i, r.due));
+            let take_arrival = match (arrivals.peek(), next_retry) {
+                (Some(req), Some((_, due))) => req.arrival_s <= due,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let (req, t, attempts) = if take_arrival {
+                let req = arrivals.next().expect("peeked");
+                let t = req.arrival_s;
+                (req, t, 0)
+            } else {
+                let (i, due) = next_retry.expect("checked");
+                let pr = retry_q.swap_remove(i);
+                stats.retries += 1;
+                (pr.req, due, pr.attempts)
+            };
+            debug_assert!(t >= last_t, "lockstep needs time-ordered admission instants");
             last_t = t;
             // Fence first, then pump strictly past events before `t`:
             // after this, every group's clock is < `t` and no group has
-            // committed state at or beyond the injection instant.
+            // committed state at or beyond the admission instant.
             for sim in &mut sims {
                 sim.fence(t);
                 sim.pump(t);
             }
+            if health_gated {
+                Self::failover(&mut sims, t, &mut stats);
+            }
             for (g, sim) in sims.iter().enumerate() {
+                up[g] = !sim.group_stalled();
                 headroom[g] = sim.router_headroom();
             }
-            let g = router.route(req.id, &headroom);
-            sims[g].inject(req);
+            if health_gated {
+                Self::sample_availability(&mut stats, &mut avail_last, &up, t);
+            }
+            Self::admit_or_defer(
+                &mut sims,
+                router,
+                overload,
+                health_gated,
+                &headroom,
+                &up,
+                req,
+                t,
+                attempts,
+                &mut retry_q,
+                &mut retry_seq,
+                &mut stats,
+            );
         }
-        sims.into_iter()
+        // Final failover pass: a group that stalled after the last
+        // admission instant still hands its queued work to a survivor
+        // before the drain (recovered-in-place groups drain themselves).
+        if health_gated {
+            let t_end = cfg.duration_s.max(last_t);
+            for sim in &mut sims {
+                sim.fence(t_end);
+                sim.pump(t_end);
+            }
+            Self::failover(&mut sims, t_end, &mut stats);
+            for (g, sim) in sims.iter().enumerate() {
+                up[g] = !sim.group_stalled();
+            }
+            Self::sample_availability(&mut stats, &mut avail_last, &up, t_end);
+        }
+        let reports = sims
+            .into_iter()
             .map(|mut sim| {
                 sim.close_arrivals();
                 sim.pump(f64::INFINITY);
                 sim.report()
             })
-            .collect()
+            .collect();
+        (reports, stats)
+    }
+
+    /// Admission control + routing for one request at instant `t`.
+    /// Without `overload`, every request routes; with it, the request is
+    /// admitted only when the best predicted TTFT across up groups fits
+    /// the budget, and otherwise backs off (or is shed once its retry
+    /// budget is spent).
+    #[allow(clippy::too_many_arguments)]
+    fn admit_or_defer(
+        sims: &mut [ClusterSim],
+        router: &mut ClusterRouter,
+        overload: Option<OverloadConfig>,
+        health_gated: bool,
+        headroom: &[f64],
+        up: &[bool],
+        mut req: Request,
+        t: f64,
+        attempts: u32,
+        retry_q: &mut Vec<PendingRetry>,
+        retry_seq: &mut u64,
+        stats: &mut FaultStats,
+    ) {
+        if let Some(ov) = overload {
+            let best = sims
+                .iter_mut()
+                .enumerate()
+                .filter(|(g, _)| up[*g])
+                .map(|(_, s)| s.predicted_ttft(t, req.prompt_len))
+                .fold(f64::INFINITY, f64::min);
+            // NaN-proof negation: defer unless provably within budget.
+            if !(best <= ov.ttft_budget_s) {
+                if attempts < ov.max_retries {
+                    let backoff = (ov.retry_backoff_s * (1u64 << attempts.min(32)) as f64)
+                        .min(ov.retry_backoff_cap_s);
+                    *retry_seq += 1;
+                    retry_q.push(PendingRetry {
+                        due: t + backoff,
+                        attempts: attempts + 1,
+                        seq: *retry_seq,
+                        req,
+                    });
+                } else {
+                    stats.requests_shed += 1;
+                }
+                return;
+            }
+        }
+        // Retried arrivals re-enter at their admission instant (the
+        // deferral is visible in `retries`, not in the group's TTFT).
+        req.arrival_s = t;
+        let g = if health_gated {
+            router.route_masked(req.id, headroom, up)
+        } else {
+            router.route(req.id, headroom)
+        };
+        sims[g].inject(req);
+    }
+
+    /// Cross-group failover at instant `t`: every stalled group's queued
+    /// requests move to the healthiest surviving group. A no-op when no
+    /// group — or every group — is stalled (with nowhere to go, queued
+    /// work waits for its own group's recovery instead).
+    fn failover(sims: &mut [ClusterSim], t: f64, stats: &mut FaultStats) {
+        let stalled: Vec<bool> = sims.iter().map(|s| s.group_stalled()).collect();
+        if !stalled.iter().any(|&s| s) || stalled.iter().all(|&s| s) {
+            return;
+        }
+        for g in 0..sims.len() {
+            if !stalled[g] {
+                continue;
+            }
+            let moved = sims[g].export_pending(t);
+            if moved.is_empty() {
+                continue;
+            }
+            // Healthiest surviving group: best observed health fraction,
+            // ties by live headroom, then the lowest index.
+            let mut dest: Option<(usize, (f64, f64))> = None;
+            for (d, sim) in sims.iter().enumerate() {
+                if stalled[d] {
+                    continue;
+                }
+                let key = (sim.health_fraction(), sim.router_headroom());
+                dest = match dest {
+                    Some((_, best)) if key.0 < best.0 || (key.0 == best.0 && key.1 <= best.1) => {
+                        dest
+                    }
+                    _ => Some((d, key)),
+                };
+            }
+            let (d, _) = dest.expect("a surviving group exists");
+            stats.requests_failed_over += moved.len() as u64;
+            for r in moved {
+                sims[d].inject(r);
+            }
+        }
+    }
+
+    /// Append per-group availability samples at `t`, on change only (the
+    /// timelines stay step-functions, not per-arrival dumps).
+    fn sample_availability(
+        stats: &mut FaultStats,
+        avail_last: &mut [f64],
+        up: &[bool],
+        t: f64,
+    ) {
+        for (g, &u) in up.iter().enumerate() {
+            let v = if u { 1.0 } else { 0.0 };
+            if avail_last[g] != v {
+                avail_last[g] = v;
+                stats.availability[g].push(t, v);
+            }
+        }
     }
 }
 
@@ -297,5 +623,44 @@ mod tests {
         let s2 = FleetSim::group_config(&cfg, 2).seed;
         assert_ne!(s1, cfg.seed);
         assert_ne!(s1, s2, "groups get decorrelated RNG streams");
+    }
+
+    #[test]
+    fn group_config_scopes_fault_scripts() {
+        use crate::config::{
+            FaultConfig, FaultKind, FleetConfig, ModelSpec, ScriptedFault,
+        };
+        use crate::workload::WorkloadKind;
+        let mut cfg =
+            SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, 1.0);
+        cfg.serving.fleet = Some(FleetConfig { groups: 3, ..Default::default() });
+        cfg.serving.fault = Some(FaultConfig {
+            script: vec![
+                ScriptedFault {
+                    kind: FaultKind::PrefillCrash,
+                    instance: 0,
+                    at_s: 5.0,
+                    down_s: 2.0,
+                    group: Some(1),
+                },
+                ScriptedFault {
+                    kind: FaultKind::Straggler,
+                    instance: 0,
+                    at_s: 9.0,
+                    down_s: 3.0,
+                    group: None,
+                },
+            ],
+            ..Default::default()
+        });
+        for g in 0..3usize {
+            let script = FleetSim::group_config(&cfg, g).serving.fault.unwrap().script;
+            let expect = if g == 1 { 2 } else { 1 };
+            assert_eq!(script.len(), expect, "group {g} keeps its own + unscoped entries");
+            assert!(
+                script.iter().all(|s| s.group.is_none()),
+                "scoping is resolved before the group sim sees the script"
+            );
+        }
     }
 }

@@ -134,9 +134,9 @@ fn scripted_crash_matrix_leap_bit_identity() {
     cfg.cluster.n_decode = 2;
     cfg.serving.fault = Some(FaultConfig {
         script: vec![
-            ScriptedFault { kind: FaultKind::PrefillCrash, instance: 0, at_s: 12.0, down_s: 6.0 },
-            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 5.0 },
-            ScriptedFault { kind: FaultKind::Straggler, instance: 1, at_s: 30.0, down_s: 8.0 },
+            ScriptedFault { kind: FaultKind::PrefillCrash, instance: 0, at_s: 12.0, down_s: 6.0, group: None },
+            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 5.0, group: None },
+            ScriptedFault { kind: FaultKind::Straggler, instance: 1, at_s: 30.0, down_s: 8.0, group: None },
         ],
         ..FaultConfig::default()
     });
@@ -252,6 +252,7 @@ fn graceful_degradation_beats_naive_on_prefill_crash() {
         instance: 0,
         at_s: 45.0,
         down_s: 20.0,
+        group: None,
     }];
     let mut g_cfg = cfg.clone();
     g_cfg.serving.fault =
@@ -302,6 +303,7 @@ fn graceful_decode_crash_keeps_offloaded_kv() {
         instance: 0,
         at_s: 20.0,
         down_s: 6.0,
+        group: None,
     }];
     let mut g_cfg = cfg.clone();
     g_cfg.serving.fault =
@@ -373,6 +375,7 @@ fn property_no_request_lost_under_random_fault_schedules() {
                 instance: rng.range_usize(0, limit),
                 at_s: 2.0 + rng.f64() * (cfg.duration_s - 4.0),
                 down_s: 1.0 + rng.f64() * 8.0,
+                group: None,
             });
         }
         if rng.range_usize(0, 2) == 0 {

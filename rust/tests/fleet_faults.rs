@@ -1,0 +1,404 @@
+//! Fleet × faults cross-matrix (ISSUE 10).
+//!
+//! PR 6 built the per-group fault plane and PR 8 the fleet layer; this
+//! suite pins their composition — the fleet health plane, cross-group
+//! failover, and overload admission control — from four directions:
+//!
+//! * **Structural inertness** — `FleetConfig::overload` armed with an
+//!   unreachable budget never sheds, never retries, and leaves every
+//!   routing decision and request count exactly as the plain PR 8/9
+//!   fleet produced them, under every router policy.
+//! * **Graceful ≥ naive** — on a scripted group-0 prefill crash, the
+//!   health-aware fleet (masked routing + failover + shedding) beats the
+//!   health-blind baseline on shed-aware goodput: strictly for the
+//!   pre-partitioned policies (round-robin, session-sticky), whose naive
+//!   runs strand every post-crash arrival assigned to the dead group,
+//!   and no worse for least-loaded.
+//! * **Conservation** — no request is ever lost: exports equal
+//!   re-injections, `finished + shed` accounts for every arrival, and
+//!   every group's token ledger stays conserved through export/inject.
+//! * **Engine composition** — the faulted health-aware fleet replays
+//!   bit-identically across decode-leap and within-run-parallelism
+//!   modes (CI re-runs this suite under `ADRENALINE_NO_LEAP=1` and
+//!   `ADRENALINE_NO_PAR=1`).
+
+use adrenaline::config::{
+    FaultConfig, FaultKind, FleetConfig, ModelSpec, OverloadConfig, RouterPolicy, ScriptedFault,
+};
+use adrenaline::metrics::{LatencyStats, Timeline};
+use adrenaline::sim::{parallel_map, FleetReport, FleetSim, SimConfig, SimReport};
+use adrenaline::workload::WorkloadKind;
+
+/// NaN-tolerant exact (bitwise) float equality.
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_timeline_eq(name: &str, a: &Timeline, b: &Timeline) {
+    assert_eq!(a.len(), b.len(), "{name}: timeline lengths differ");
+    for (i, (pa, pb)) in a.points().iter().zip(b.points()).enumerate() {
+        assert!(
+            feq(pa.0, pb.0) && feq(pa.1, pb.1),
+            "{name}[{i}]: {pa:?} vs {pb:?}"
+        );
+    }
+}
+
+fn assert_stats_eq(name: &str, a: &Option<LatencyStats>, b: &Option<LatencyStats>) {
+    match (a, b) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.count, y.count, "{name} count");
+            assert!(feq(x.mean, y.mean), "{name} mean: {} vs {}", x.mean, y.mean);
+            assert!(feq(x.p50, y.p50), "{name} p50");
+            assert!(feq(x.p99, y.p99), "{name} p99");
+            assert!(feq(x.max, y.max), "{name} max");
+        }
+        (None, None) => {}
+        _ => panic!("{name} presence differs"),
+    }
+}
+
+/// Full per-group bitwise equality, fault/export fields included. Both
+/// sides of every pairing here take the same engine path, so even
+/// `events_processed` must match.
+fn assert_group_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert_eq!(a.events_processed, b.events_processed, "event counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert_eq!(a.requests_slo_met, b.requests_slo_met);
+    assert_eq!(a.slo_met_tokens, b.slo_met_tokens);
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_timeline_eq("decode_occupancy", &a.decode_occupancy, &b.decode_occupancy);
+    assert_timeline_eq("batch_size", &a.batch_size, &b.batch_size);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert_eq!(a.recompute_tokens_replayed, b.recompute_tokens_replayed);
+    assert_eq!(a.requests_exported, b.requests_exported);
+    assert!(feq(a.degraded_time_s, b.degraded_time_s));
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+}
+
+/// Leap-contract variant: identical physics, `events_processed` allowed
+/// to shrink on the leap side `a`.
+fn assert_group_leap_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.tokens_conserved, b.tokens_conserved);
+    assert_eq!(a.steps_simulated, b.steps_simulated, "step counts must agree");
+    assert!(feq(a.throughput, b.throughput), "{} vs {}", a.throughput, b.throughput);
+    assert!(feq(a.goodput, b.goodput));
+    assert_eq!(a.requests_slo_met, b.requests_slo_met);
+    assert_eq!(a.slo_met_tokens, b.slo_met_tokens);
+    assert!(feq(a.sim_end_s, b.sim_end_s), "{} vs {}", a.sim_end_s, b.sim_end_s);
+    assert_stats_eq("ttft", &a.ttft, &b.ttft);
+    assert_stats_eq("tpot", &a.tpot, &b.tpot);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.requests_recovered, b.requests_recovered);
+    assert_eq!(a.requests_exported, b.requests_exported);
+    assert_timeline_eq("health", &a.health_timeline, &b.health_timeline);
+    assert!(
+        a.events_processed <= b.events_processed,
+        "leaping must never add events: {} vs {}",
+        a.events_processed,
+        b.events_processed
+    );
+}
+
+/// The fleet-level fault counters and availability timelines must agree
+/// across engine modes too.
+fn assert_fleet_fault_fields_eq(a: &FleetReport, b: &FleetReport) {
+    assert_eq!(a.router_decisions, b.router_decisions);
+    assert_eq!(a.router_reroutes, b.router_reroutes);
+    assert_eq!(a.requests_shed, b.requests_shed);
+    assert_eq!(a.requests_failed_over, b.requests_failed_over);
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.finished, b.finished);
+    assert!(feq(a.fleet_slo_attainment, b.fleet_slo_attainment));
+    assert!(feq(a.fleet_goodput_shed_aware, b.fleet_goodput_shed_aware));
+    assert_eq!(a.availability.len(), b.availability.len());
+    for (i, (ta, tb)) in a.availability.iter().zip(&b.availability).enumerate() {
+        assert_timeline_eq(&format!("availability[{i}]"), ta, tb);
+    }
+}
+
+fn base_cfg(rate: f64, duration_s: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(ModelSpec::llama2_7b(), WorkloadKind::ShareGpt, rate);
+    cfg.duration_s = duration_s;
+    cfg
+}
+
+/// Kill group 0's entire (single-instance) prefill pool at `at_s` for
+/// `down_s` seconds.
+fn group0_crash(at_s: f64, down_s: f64, health_aware: bool) -> FaultConfig {
+    FaultConfig {
+        script: vec![ScriptedFault {
+            kind: FaultKind::PrefillCrash,
+            instance: 0,
+            at_s,
+            down_s,
+            group: Some(0),
+        }],
+        health_aware,
+        ..FaultConfig::default()
+    }
+}
+
+const POLICIES: [RouterPolicy; 3] =
+    [RouterPolicy::RoundRobin, RouterPolicy::SessionSticky, RouterPolicy::LeastLoaded];
+
+#[test]
+fn unreachable_overload_budget_is_inert_under_every_policy() {
+    // An armed admission controller whose budget can never be exceeded
+    // must change nothing observable: no sheds, no retries, identical
+    // routing and request counts vs the plain fleet — even though it
+    // forces the pre-partitioned policies onto the lockstep path.
+    for router in POLICIES {
+        let mut plain_cfg = base_cfg(12.0, 25.0);
+        plain_cfg.serving.fleet =
+            Some(FleetConfig { groups: 2, router, ..FleetConfig::default() });
+        let mut armed_cfg = plain_cfg.clone();
+        armed_cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router,
+            overload: Some(OverloadConfig { ttft_budget_s: 1e12, ..OverloadConfig::default() }),
+            ..FleetConfig::default()
+        });
+        let plain = FleetSim::new(plain_cfg).run();
+        let armed = FleetSim::new(armed_cfg.clone()).run();
+        // The plain fleet predates the fault plane: all new counters stay
+        // zeroed (the `overload: None` inertness contract).
+        assert_eq!(plain.requests_shed, 0, "{}", router.name());
+        assert_eq!(plain.requests_failed_over, 0);
+        assert_eq!(plain.retries, 0);
+        assert_eq!(plain.router_reroutes, 0);
+        assert!(plain.availability.is_empty());
+        // The unreachable budget admits everything, first try.
+        assert_eq!(armed.requests_shed, 0, "{}", router.name());
+        assert_eq!(armed.retries, 0);
+        assert_eq!(armed.requests_failed_over, 0);
+        assert_eq!(armed.router_reroutes, 0);
+        // Routing and request accounting are unperturbed. (Physics are
+        // not bitwise-comparable for the static policies — the lockstep
+        // build prices offload bounds from the shared trace rather than
+        // each partition slice — but every placement decision is.)
+        assert_eq!(armed.router_decisions, plain.router_decisions, "{}", router.name());
+        assert_eq!(armed.arrived, plain.arrived);
+        assert_eq!(armed.finished, plain.finished);
+        assert_eq!(armed.finished, armed.arrived, "everything must drain");
+        for (ga, gb) in armed.groups.iter().zip(&plain.groups) {
+            assert_eq!(ga.arrived, gb.arrived);
+            assert_eq!(ga.finished, gb.finished);
+            assert!(ga.tokens_conserved && gb.tokens_conserved);
+        }
+        // And the armed path replays bit-identically run over run.
+        let mut runs: Vec<FleetReport> =
+            parallel_map(2, |_| FleetSim::new(armed_cfg.clone()).run());
+        let rb = runs.pop().expect("two runs");
+        let ra = runs.pop().expect("two runs");
+        assert_fleet_fault_fields_eq(&ra, &rb);
+        for (ga, gb) in ra.groups.iter().zip(&rb.groups) {
+            assert_group_identical(ga, gb);
+        }
+    }
+}
+
+#[test]
+fn group_crash_graceful_beats_naive_under_every_policy() {
+    // Scripted group-0 prefill crash at t=10s that outlives the 40s
+    // arrival window (recovery at t=70s). The naive baseline keeps its
+    // health-blind routing — the pre-partitioned policies strand every
+    // post-crash group-0 arrival until recovery, a guaranteed TTFT-SLO
+    // miss. The graceful fleet masks the dead group, fails its queue
+    // over, and sheds what no group can serve in budget.
+    for router in POLICIES {
+        let mut naive_cfg = base_cfg(12.0, 40.0);
+        naive_cfg.serving.fault = Some(group0_crash(10.0, 60.0, false));
+        naive_cfg.serving.fleet =
+            Some(FleetConfig { groups: 2, router, ..FleetConfig::default() });
+        let mut graceful_cfg = naive_cfg.clone();
+        graceful_cfg.serving.fault = Some(group0_crash(10.0, 60.0, true));
+        graceful_cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router,
+            overload: Some(OverloadConfig::default()),
+            ..FleetConfig::default()
+        });
+        let naive = FleetSim::new(naive_cfg).run();
+        let graceful = FleetSim::new(graceful_cfg).run();
+
+        // The scoped script fires in group 0 only, in both modes.
+        assert_eq!(naive.groups[0].faults_injected, 1, "{}", router.name());
+        assert_eq!(naive.groups[1].faults_injected, 0);
+        assert_eq!(graceful.groups[0].faults_injected, 1);
+        assert_eq!(graceful.groups[1].faults_injected, 0);
+
+        // Naive never sheds or fails over; it still drains everything
+        // eventually (recovery fires after close, during the drain).
+        assert_eq!(naive.requests_shed + naive.requests_failed_over, 0);
+        assert_eq!(naive.finished, naive.arrived, "{}: naive must drain", router.name());
+
+        // Graceful conservation: every arrival is finished or shed, every
+        // export was re-injected exactly once, tokens conserved per group.
+        assert_eq!(
+            graceful.finished + graceful.requests_shed as usize,
+            graceful.arrived,
+            "{}: finished + shed must cover every offered request",
+            router.name()
+        );
+        assert_eq!(
+            graceful.groups.iter().map(|g| g.requests_exported).sum::<u64>(),
+            graceful.requests_failed_over,
+            "exports must equal re-injections"
+        );
+        for g in graceful.groups.iter().chain(&naive.groups) {
+            assert!(g.tokens_conserved, "{}: token ledger must survive failover", router.name());
+        }
+        assert_eq!(naive.arrived, graceful.arrived, "same offered trace");
+
+        // Availability: the graceful lockstep saw group 0 go down and
+        // stay down through the close; group 1 stayed up throughout.
+        assert_eq!(graceful.availability.len(), 2);
+        let g0 = graceful.availability[0].points();
+        assert_eq!(g0.first().map(|p| p.1), Some(1.0), "group 0 starts up");
+        assert_eq!(g0.last().map(|p| p.1), Some(0.0), "group 0 is down at close");
+        assert!(
+            graceful.availability[1].points().iter().all(|&(_, v)| v == 1.0),
+            "group 1 never stalls"
+        );
+        assert!(naive.availability.is_empty(), "naive runs record no health plane");
+
+        // The headline comparison, on the window-free shed-aware goodput.
+        // Round-robin and session-sticky strand ~40% of the trace in the
+        // naive run — graceful is strictly better. Least-loaded's naive
+        // baseline already dodges the dead group via live headroom, so
+        // only no-worse is guaranteed there.
+        match router {
+            RouterPolicy::RoundRobin | RouterPolicy::SessionSticky => {
+                assert!(
+                    graceful.fleet_goodput_shed_aware > naive.fleet_goodput_shed_aware,
+                    "{}: graceful {} must strictly beat naive {}",
+                    router.name(),
+                    graceful.fleet_goodput_shed_aware,
+                    naive.fleet_goodput_shed_aware
+                );
+                assert!(
+                    graceful.fleet_slo_attainment > naive.fleet_slo_attainment,
+                    "{}: attainment {} vs {}",
+                    router.name(),
+                    graceful.fleet_slo_attainment,
+                    naive.fleet_slo_attainment
+                );
+                assert!(
+                    graceful.router_reroutes > 0,
+                    "{}: post-crash arrivals must divert off the dead group",
+                    router.name()
+                );
+            }
+            RouterPolicy::LeastLoaded => {
+                assert!(
+                    graceful.fleet_goodput_shed_aware >= naive.fleet_goodput_shed_aware,
+                    "least_loaded: graceful {} must be no worse than naive {}",
+                    graceful.fleet_goodput_shed_aware,
+                    naive.fleet_goodput_shed_aware
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_health_aware_fleet_is_leap_and_par_safe() {
+    // The full graceful stack — masking, failover, admission control —
+    // rides the same fence/pump/inject surface as PR 8's lockstep, so it
+    // must stay bit-identical across both engines (the acceptance gate;
+    // CI re-runs this suite with each engine forced off).
+    let mk = |no_leap: bool, no_par: bool| {
+        let mut cfg = base_cfg(16.0, 30.0);
+        cfg.serving.no_leap = no_leap;
+        cfg.serving.no_par = no_par;
+        cfg.serving.fault = Some(group0_crash(8.0, 40.0, true));
+        cfg.serving.fleet = Some(FleetConfig {
+            groups: 2,
+            router: RouterPolicy::RoundRobin,
+            overload: Some(OverloadConfig {
+                ttft_budget_s: 0.5,
+                max_retries: 2,
+                retry_backoff_s: 0.1,
+                retry_backoff_cap_s: 0.4,
+            }),
+            ..FleetConfig::default()
+        });
+        cfg
+    };
+    let on = FleetSim::new(mk(false, false)).run();
+    let no_leap = FleetSim::new(mk(true, false)).run();
+    let no_par = FleetSim::new(mk(false, true)).run();
+    assert!(on.finished > 0);
+    assert!(on.requests_failed_over > 0, "the crash must actually trigger failover");
+    assert_fleet_fault_fields_eq(&on, &no_par);
+    assert_fleet_fault_fields_eq(&on, &no_leap);
+    for (ga, gb) in on.groups.iter().zip(&no_leap.groups) {
+        assert_group_leap_identical(ga, gb);
+    }
+    for (ga, gb) in on.groups.iter().zip(&no_par.groups) {
+        assert_group_identical(ga, gb);
+    }
+}
+
+#[test]
+fn saturating_overload_sheds_retries_and_keeps_the_books() {
+    // A trace far past fleet capacity against a tight TTFT budget: the
+    // admission controller must actually shed, every shed request must
+    // stay in the attainment denominator, and the whole thing must
+    // replay deterministically.
+    let mut cfg = base_cfg(48.0, 30.0);
+    cfg.serving.fleet = Some(FleetConfig {
+        groups: 2,
+        router: RouterPolicy::LeastLoaded,
+        overload: Some(OverloadConfig {
+            ttft_budget_s: 0.05,
+            max_retries: 1,
+            retry_backoff_s: 0.1,
+            retry_backoff_cap_s: 0.2,
+        }),
+        ..FleetConfig::default()
+    });
+    let mut runs: Vec<FleetReport> = parallel_map(2, |_| FleetSim::new(cfg.clone()).run());
+    let b = runs.pop().expect("two runs");
+    let a = runs.pop().expect("two runs");
+    assert!(a.requests_shed > 0, "a saturating trace against 50ms must shed");
+    assert!(a.retries > 0, "rejected arrivals must get their retry");
+    assert!(a.finished > 0, "admitted work still finishes");
+    assert_eq!(
+        a.finished + a.requests_shed as usize,
+        a.arrived,
+        "finished + shed must cover every offered request"
+    );
+    assert_eq!(
+        a.router_decisions.iter().sum::<u64>() + a.requests_shed,
+        a.arrived as u64,
+        "every arrival either routed or shed — never both, never neither"
+    );
+    // Shed requests drag pooled attainment below the finished-only
+    // fraction: they are misses, not non-events.
+    let met: usize = a.groups.iter().map(|g| g.requests_slo_met).sum();
+    let finished_only = met as f64 / a.finished as f64;
+    assert!(
+        a.fleet_slo_attainment < finished_only,
+        "shed requests must count against attainment: {} !< {}",
+        a.fleet_slo_attainment,
+        finished_only
+    );
+    assert_fleet_fault_fields_eq(&a, &b);
+    for (ga, gb) in a.groups.iter().zip(&b.groups) {
+        assert_group_identical(ga, gb);
+    }
+}

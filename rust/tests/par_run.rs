@@ -292,8 +292,8 @@ fn fault_straggler_par_bit_identity() {
     cfg.duration_s = 45.0;
     cfg.serving.fault = Some(FaultConfig {
         script: vec![
-            ScriptedFault { kind: FaultKind::Straggler, instance: 0, at_s: 8.0, down_s: 12.0 },
-            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 6.0 },
+            ScriptedFault { kind: FaultKind::Straggler, instance: 0, at_s: 8.0, down_s: 12.0, group: None },
+            ScriptedFault { kind: FaultKind::DecodeCrash, instance: 1, at_s: 20.0, down_s: 6.0, group: None },
         ],
         straggler_factor: 2.5,
         ..FaultConfig::default()
